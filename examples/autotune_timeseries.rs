@@ -1,0 +1,76 @@
+//! Autotuning across simulation time-steps (§V-F of the paper).
+//!
+//!     cargo run --release --example autotune_timeseries
+//!
+//! Shows (a) the exhaustive (block size × lane width) landscape for one
+//! field, (b) how the sampling autotuner finds a near-peak configuration at
+//! a fraction of the cost, and (c) the paper's amortization argument: the
+//! winning configuration is stable across time-steps, so tuning once and
+//! narrowing to the top-2 configs covers almost every step.
+
+use vecsz::autotune::{autotune, exhaustive_full, top_k_stability, TuneSettings};
+use vecsz::data::{suite, Scale};
+use vecsz::padding::PaddingPolicy;
+
+fn main() {
+    let ds = suite("hurricane", Scale::Small, 11).unwrap();
+    let field = vecsz::figures::subsample(&ds.fields[0], 1 << 20);
+    let eb = 1e-3 * vecsz::metrics::value_range(&field.data);
+    println!("field {} ({:.1} MB), eb {:.3e}\n", field.name, field.size_mb(), eb);
+
+    // (a) ground truth: full-field bandwidth of every configuration
+    println!("exhaustive landscape (full-field P&Q bandwidth):");
+    let full = exhaustive_full(&field, eb, 512, PaddingPolicy::ZERO, &[8, 16], 1);
+    let peak = full.iter().map(|p| p.mb_per_s).fold(f64::MIN, f64::max);
+    for p in &full {
+        let bar = "#".repeat((40.0 * p.mb_per_s / peak) as usize);
+        println!(
+            "  bs={:<3} w={:<2} {:>8.0} MB/s {}",
+            p.config.block_size, p.config.width, p.mb_per_s, bar
+        );
+    }
+
+    // (b) the sampling autotuner at increasing effort
+    println!("\nautotuner (sample% x iterations -> % of peak, tuning cost):");
+    for (sp, it) in [(1.0, 1), (5.0, 2), (10.0, 4), (20.0, 8)] {
+        let r = autotune(
+            &field,
+            eb,
+            512,
+            PaddingPolicy::ZERO,
+            &[8, 16],
+            TuneSettings { sample_pct: sp, iterations: it, seed: 5 },
+        );
+        let chosen = full
+            .iter()
+            .find(|p| p.config == r.best)
+            .map(|p| p.mb_per_s)
+            .unwrap_or(0.0);
+        println!(
+            "  sample {:>4.0}% iters {:<2} -> bs{:<3} w{:<2} = {:>5.1}% of peak  ({:.0} ms tuning)",
+            sp,
+            it,
+            r.best.block_size,
+            r.best.width,
+            100.0 * chosen / peak,
+            r.tune_seconds * 1e3
+        );
+    }
+
+    // (c) stability across "time-steps" (fresh sampling per step)
+    println!("\nstability across 16 time-steps (fresh random sample each):");
+    let runs: Vec<_> = (0..16)
+        .map(|s| {
+            autotune(
+                &field,
+                eb,
+                512,
+                PaddingPolicy::ZERO,
+                &[8, 16],
+                TuneSettings { sample_pct: 5.0, iterations: 2, seed: 100 + s },
+            )
+        })
+        .collect();
+    println!("  top-1 coverage: {:>5.1}%", 100.0 * top_k_stability(&runs, 1));
+    println!("  top-2 coverage: {:>5.1}%  (paper: ~80% for Hurricane)", 100.0 * top_k_stability(&runs, 2));
+}

@@ -1,0 +1,55 @@
+//! Backend comparison: the paper's Fig 3 in miniature, plus the §Perf
+//! halo-vs-halo-free ablation.
+//!
+//!     cargo run --release --example backend_comparison
+//!
+//! Benchmarks every P&Q backend (SZ-1.4, pSZ, vecSZ at widths 8/16, both
+//! implementations) on identical block batches for 1D/2D/3D shapes.
+
+use vecsz::bench::{bench, BenchOpts};
+use vecsz::blocks::BlockShape;
+use vecsz::padding::{PadGranularity, PadScalars, PadValue, PaddingPolicy};
+use vecsz::quant::psz::PszBackend;
+use vecsz::quant::sz14::Sz14Backend;
+use vecsz::quant::vectorized::VecBackend;
+use vecsz::quant::{DqConfig, PqBackend};
+use vecsz::util::prng::Pcg32;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let mut rng = Pcg32::seeded(1);
+    for (ndim, bs) in [(1usize, 256usize), (2, 16), (3, 8)] {
+        let shape = BlockShape::new(ndim, bs);
+        let elems = shape.elems();
+        let nbb = (1 << 22) / elems;
+        let mut blocks = vec![0.0f32; nbb * elems];
+        let mut x = 0.0f32;
+        for v in blocks.iter_mut() {
+            x += (rng.next_f32() - 0.5) * 0.1;
+            *v = x;
+        }
+        let pads = PadScalars {
+            policy: PaddingPolicy::new(PadValue::Zero, PadGranularity::Global),
+            scalars: vec![0.0],
+            ndim,
+        };
+        let cfg = DqConfig::new(1e-3, 512, shape);
+        let mut codes = vec![0u16; blocks.len()];
+        let mut outv = vec![0.0f32; blocks.len()];
+        println!("-- {ndim}D, block size {bs}, {} blocks --", nbb);
+        for be in [
+            &Sz14Backend as &dyn PqBackend,
+            &PszBackend,
+            &VecBackend::with_halo(8),
+            &VecBackend::new(8),
+            &VecBackend::with_halo(16),
+            &VecBackend::new(16),
+        ] {
+            let s = bench(&format!("{ndim}D [{}]", be.name()), blocks.len() * 4, opts, || {
+                be.run(&cfg, &blocks, 0, &pads, &mut codes, &mut outv);
+                std::hint::black_box(&codes);
+            });
+            println!("{}", s.row());
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! END-TO-END DRIVER — the full system on a real small workload.
+//!
+//!     cargo run --release --example end_to_end
+//!
+//! Exercises every layer in one run and proves they compose:
+//!   L1/L2  AOT XLA/Pallas artifact executed via PJRT (when artifacts/ is
+//!          built) cross-checked bit-exactly against the native backend;
+//!   L3     the streaming coordinator compressing a 24-time-step synthetic
+//!          climate simulation with autotuning, backpressure and per-stage
+//!          metrics; then decompressing and verifying every step.
+//!
+//! Reports the paper's headline metric (prediction/quantization bandwidth)
+//! plus compression ratio and PSNR per step. Recorded in EXPERIMENTS.md.
+
+use std::path::Path;
+
+use vecsz::blocks::BlockShape;
+use vecsz::compressor::{decompress, Config, EbMode};
+use vecsz::coordinator::pipeline::{run_stream, PipelineConfig};
+use vecsz::data::{suite, Scale};
+use vecsz::metrics::distortion;
+use vecsz::padding::{PadGranularity, PadScalars, PadValue, PaddingPolicy};
+use vecsz::quant::psz::PszBackend;
+use vecsz::quant::{DqConfig, PqBackend};
+use vecsz::util::prng::Pcg32;
+
+const STEPS: usize = 24;
+
+fn main() -> vecsz::Result<()> {
+    println!("== vecSZ end-to-end driver ==\n");
+
+    // ---- Layer 1/2: PJRT artifact cross-check --------------------------
+    if Path::new("artifacts/manifest.json").exists() {
+        let rt = vecsz::runtime::PjrtRuntime::new(Path::new("artifacts"))?;
+        println!("[L1/L2] PJRT platform: {}", rt.platform());
+        let shape = BlockShape::new(2, 16);
+        let cfg = DqConfig::new(1e-3, 512, shape);
+        let pjrt = vecsz::runtime::PjrtBackend::new(&rt, 2, 16, 8)?;
+        let (blocks, pads) = sample_blocks(shape, 64);
+        let elems = shape.elems();
+        let mut cn = vec![0u16; blocks.len()];
+        let mut vn = vec![0.0f32; blocks.len()];
+        PszBackend.run(&cfg, &blocks, 0, &pads, &mut cn, &mut vn);
+        let mut cp = vec![0u16; blocks.len()];
+        let mut vp = vec![0.0f32; blocks.len()];
+        pjrt.run(&cfg, &blocks, 0, &pads, &mut cp, &mut vp);
+        assert_eq!(cn, cp, "PJRT and native quant codes must be bit-identical");
+        assert_eq!(vn, vp);
+        println!(
+            "[L1/L2] AOT artifact ({}) == native backend on {} blocks x {} elems ✔\n",
+            pjrt.name(),
+            blocks.len() / elems,
+            elems
+        );
+    } else {
+        println!("[L1/L2] artifacts/ not built (run `make artifacts`); skipping PJRT check\n");
+    }
+
+    // ---- Layer 3: streaming 24-step simulation -------------------------
+    println!("[L3] streaming {STEPS}-step CESM-like simulation through the coordinator");
+    let pcfg = PipelineConfig {
+        base: Config {
+            eb: EbMode::Rel(1e-4),
+            padding: PaddingPolicy::new(PadValue::Avg, PadGranularity::Global),
+            threads: 1,
+            ..Config::default()
+        },
+        retune_every: 12,
+        widths: [8, 16],
+        queue_depth: 2,
+        ..PipelineConfig::default()
+    };
+    let mut blobs: Vec<Vec<u8>> = Vec::new();
+    let report = {
+        let sink_blobs: *mut Vec<Vec<u8>> = &mut blobs;
+        run_stream(
+            |i| {
+                if i >= STEPS {
+                    return None;
+                }
+                // evolved field per step: seed drift models simulation time
+                suite("cesm", Scale::Small, 4242 + i as u64).map(|ds| {
+                    let mut f = ds.fields.into_iter().next().unwrap();
+                    f = vecsz::figures::subsample(&f, 1 << 19);
+                    f.name = format!("CLDHGH_t{i:02}");
+                    f
+                })
+            },
+            pcfg,
+            |_, bytes| {
+                // single-threaded sink; raw pointer keeps the closure Fn-only
+                unsafe { (*sink_blobs).push(bytes) };
+                Ok(())
+            },
+        )?
+    };
+
+    println!("{:<14} {:>8} {:>10} {:>9} {:>8}  {}", "step", "CR", "P&Q MB/s", "outl %", "stall ms", "tuned");
+    for s in &report.steps {
+        println!(
+            "{:<14} {:>7.2}x {:>10.0} {:>8.3}% {:>8.1}  {}",
+            s.field_name,
+            s.stats.size.ratio(),
+            s.stats.pq_bandwidth_mbs(),
+            s.stats.outlier_pct(),
+            s.stall_seconds * 1e3,
+            s.tuned.map(|t| format!("bs{} w{}", t.block_size, t.width)).unwrap_or_default()
+        );
+    }
+
+    // ---- verify every step decompresses within bound -------------------
+    let mut worst_psnr = f64::INFINITY;
+    for (i, b) in blobs.iter().enumerate() {
+        let rec = decompress(b, 1)?;
+        let orig = {
+            let ds = suite("cesm", Scale::Small, 4242 + i as u64).unwrap();
+            vecsz::figures::subsample(&ds.fields[0], 1 << 19)
+        };
+        let d = distortion(&orig.data, &rec.data);
+        let eb = report.steps[i].stats.eb;
+        assert!(
+            d.max_abs_err <= vecsz::metrics::roundtrip_tolerance(eb, d.value_range),
+            "step {i}: bound violated"
+        );
+        worst_psnr = worst_psnr.min(d.psnr_db);
+    }
+
+    println!("\n== summary ==");
+    println!("steps                 : {}", report.steps.len());
+    println!("wall time             : {:.2} s", report.total_seconds);
+    println!("overall ratio         : {:.2}x", report.overall_ratio());
+    println!("mean P&Q bandwidth    : {:.0} MB/s (paper headline metric)", report.mean_pq_mbs());
+    println!("autotune overhead     : {:.2}% of wall", report.tune_overhead_pct());
+    println!("worst-step PSNR       : {:.1} dB", worst_psnr);
+    println!("error bound           : verified on all {} steps ✔", report.steps.len());
+    Ok(())
+}
+
+fn sample_blocks(shape: BlockShape, nb: usize) -> (Vec<f32>, PadScalars) {
+    let elems = shape.elems();
+    let mut rng = Pcg32::seeded(7);
+    let mut blocks = vec![0.0f32; nb * elems];
+    let mut x = 0.0f32;
+    for v in blocks.iter_mut() {
+        x += (rng.next_f32() - 0.5) * 0.1;
+        *v = x;
+    }
+    let scalars = (0..nb)
+        .map(|b| {
+            let s = &blocks[b * elems..(b + 1) * elems];
+            s.iter().sum::<f32>() / elems as f32
+        })
+        .collect();
+    (
+        blocks,
+        PadScalars {
+            policy: PaddingPolicy::new(PadValue::Avg, PadGranularity::Block),
+            scalars,
+            ndim: shape.ndim,
+        },
+    )
+}

@@ -1,0 +1,77 @@
+//! Alternative block padding (§IV / §V-I): why zero padding hurts offset
+//! fields and how statistical padding repairs the block borders.
+//!
+//!     cargo run --release --example padding_study
+//!
+//! Compresses the CESM-like surface-temperature field (values ~230-310, the
+//! Fig 2 situation) under every padding policy and reports outliers,
+//! compression ratio and rate-distortion, then sweeps the error bound to
+//! show the paper's observation that border outliers dominate at large eb.
+
+use vecsz::compressor::{compress, decompress, BackendChoice, Config, EbMode};
+use vecsz::data::{suite, Scale};
+use vecsz::metrics::distortion;
+use vecsz::padding::{study_policies, PaddingPolicy};
+
+fn main() -> vecsz::Result<()> {
+    let ds = suite("cesm", Scale::Small, 9).unwrap();
+    let ts = vecsz::figures::subsample(&ds.fields[1], 1 << 19); // TS field
+    let mean = ts.data.iter().map(|&x| x as f64).sum::<f64>() / ts.data.len() as f64;
+    println!("field {} — mean {:.1} (non-zero-centred: the Fig 2 case)\n", ts.name, mean);
+
+    let eb = 0.05; // generous bound: interior predicts perfectly, borders dominate
+    println!("policy grid at eb={eb} (outliers / reduction vs zero / CR / PSNR):");
+    let mut zero_out = None;
+    for policy in study_policies() {
+        let cfg = Config {
+            eb: EbMode::Abs(eb),
+            padding: policy,
+            backend: BackendChoice::Vec { width: 16 },
+            ..Config::default()
+        };
+        let (bytes, stats) = compress(&ts, &cfg)?;
+        let rec = decompress(&bytes, 1)?;
+        let d = distortion(&ts.data, &rec.data);
+        let z = *zero_out.get_or_insert(stats.n_outliers);
+        let red = if z == 0 { 0.0 } else { 100.0 * (z - stats.n_outliers.min(z)) as f64 / z as f64 };
+        println!(
+            "  {:<11} {:>8} outliers  {:>6.1}% fewer  CR {:>6.2}x  PSNR {:>6.1} dB",
+            policy.name(),
+            stats.n_outliers,
+            red,
+            stats.size.ratio(),
+            d.psnr_db
+        );
+    }
+
+    println!("\nerror-bound sweep (zero vs avg-global, % of values that are outliers):");
+    println!("{:>10} {:>12} {:>12} {:>12}", "eb", "zero", "avg-global", "reduction");
+    for eb in [0.001, 0.005, 0.02, 0.05, 0.2] {
+        let run = |padding: PaddingPolicy| {
+            let cfg = Config {
+                eb: EbMode::Abs(eb),
+                padding,
+                backend: BackendChoice::Vec { width: 16 },
+                ..Config::default()
+            };
+            compress(&ts, &cfg).unwrap().1
+        };
+        let z = run(PaddingPolicy::ZERO);
+        let a = run(PaddingPolicy::parse("avg-global").unwrap());
+        let red = if z.n_outliers == 0 {
+            0.0
+        } else {
+            100.0 * (z.n_outliers - a.n_outliers.min(z.n_outliers)) as f64 / z.n_outliers as f64
+        };
+        println!(
+            "{:>10} {:>11.3}% {:>11.3}% {:>11.1}%",
+            eb,
+            z.outlier_pct(),
+            a.outlier_pct(),
+            red
+        );
+    }
+    println!("\n(paper: avg padding removes up to 100% of outliers at large eb,");
+    println!(" improving rate-distortion by up to 32% on Hurricane / 18.9% on CESM)");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: compress one field, decompress it, verify the error bound.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Walks the whole public API surface in ~40 lines: synthetic data,
+//! configuration, compression stats, reconstruction quality.
+
+use vecsz::compressor::{compress, decompress, BackendChoice, Config, EbMode};
+use vecsz::data::{suite, Scale};
+use vecsz::metrics::distortion;
+use vecsz::padding::{PadGranularity, PadValue, PaddingPolicy};
+
+fn main() -> vecsz::Result<()> {
+    // 1. get a field (CESM-like 2D climate data; use your own Vec<f32> +
+    //    Dims in real code — see vecsz::data::io for raw-file loading)
+    let dataset = suite("cesm", Scale::Small, 42).unwrap();
+    let field = &dataset.fields[0];
+    println!("field {} ({:.1} MB)", field.name, field.size_mb());
+
+    // 2. configure: absolute error bound, vectorized backend (16 lanes),
+    //    average-value padding at global granularity (the paper's Fig 10
+    //    configuration)
+    let cfg = Config {
+        eb: EbMode::Abs(1e-4),
+        backend: BackendChoice::Vec { width: 16 },
+        padding: PaddingPolicy::new(PadValue::Avg, PadGranularity::Global),
+        ..Config::default()
+    };
+
+    // 3. compress
+    let (bytes, stats) = compress(field, &cfg)?;
+    println!(
+        "compressed: {:.2}x ratio, {:.2} bits/value, P&Q stage at {:.0} MB/s, {:.3}% outliers",
+        stats.size.ratio(),
+        stats.size.bit_rate(),
+        stats.pq_bandwidth_mbs(),
+        stats.outlier_pct()
+    );
+
+    // 4. decompress + verify
+    let restored = decompress(&bytes, 1)?;
+    let d = distortion(&field.data, &restored.data);
+    println!("max |err| = {:.3e} (bound {:.3e}), PSNR {:.1} dB", d.max_abs_err, stats.eb, d.psnr_db);
+    assert!(d.max_abs_err <= vecsz::metrics::roundtrip_tolerance(stats.eb, d.value_range));
+    println!("error bound verified ✔");
+    Ok(())
+}

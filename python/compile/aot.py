@@ -1,0 +1,129 @@
+"""AOT pipeline: lower the Layer-2 graphs to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the xla_extension 0.5.1
+shipped with the rust ``xla`` crate rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--quick]
+
+Emits one ``dq_{ndim}d_b{bs}_l{lanes}_{impl}.hlo.txt`` per artifact point
+plus ``manifest.json`` describing every executable's shapes so the Rust
+runtime can pick and batch without re-deriving the matrix.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import input_specs, make_fn
+
+RADIUS = 512
+
+# (ndim, block-size) points from the paper's block-size study (§III-D):
+# traditional SZ sizes (256 for 1D, 16x16, and 8^3/16^3 near 6^3) plus the
+# vector-register multiples the paper concentrates on.
+MATRIX = {
+    1: [64, 256],
+    2: [16, 32],
+    3: [8, 16],
+}
+LANES = [8, 16]  # AVX2-class and AVX-512-class lane tiles
+
+# Superbatch sizes: nb * bs^d ~= 1Mi elements (4 MiB f32) per call, so one
+# executable invocation amortizes PJRT dispatch without blowing the cache.
+TARGET_ELEMS = 1 << 20
+MIN_NB = 64
+
+
+def superbatch(ndim: int, bs: int) -> int:
+    per_block = bs**ndim
+    nb = max(MIN_NB, TARGET_ELEMS // per_block)
+    # round down to a power of two so every lane tile divides it
+    p = 1
+    while p * 2 <= nb:
+        p *= 2
+    return p
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_points(quick: bool = False):
+    """Yield (impl, ndim, bs, lanes, nb) for the full matrix.
+
+    The production (jnp) flavour covers the whole matrix; the pallas flavour
+    covers one point per ndim (smallest block, 8 lanes) purely as the
+    L1-vs-L2 numerics certificate — interpret-mode pallas inside an HLO
+    while-loop is not a performance path on CPU.
+    """
+    for ndim, sizes in MATRIX.items():
+        for bs in sizes if not quick else sizes[:1]:
+            nb = superbatch(ndim, bs)
+            for lanes in LANES if not quick else LANES[:1]:
+                yield ("jnp", ndim, bs, lanes, nb)
+        bs = sizes[0]
+        yield ("pallas", ndim, bs, 8, superbatch(ndim, bs))
+
+
+def build(out_dir: str, quick: bool = False) -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for impl, ndim, bs, lanes, nb in artifact_points(quick):
+        name = f"dq_{ndim}d_b{bs}_l{lanes}_{impl}"
+        fn = make_fn(impl, ndim, bs, lanes, nb)
+        specs = input_specs(ndim, bs, nb)
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "impl": impl,
+                "ndim": ndim,
+                "block_size": bs,
+                "lanes": lanes,
+                "superbatch": nb,
+                "radius": RADIUS,
+                "inputs": [
+                    {"name": "blocks", "dtype": "f32", "shape": [nb] + [bs] * ndim},
+                    {"name": "pads", "dtype": "f32", "shape": [nb, 1]},
+                    {"name": "ebs", "dtype": "f32", "shape": [1, 3]},
+                ],
+                "outputs": [
+                    {"name": "codes", "dtype": "i32", "shape": [nb] + [bs] * ndim},
+                    {"name": "outv", "dtype": "f32", "shape": [nb] + [bs] * ndim},
+                ],
+            }
+        )
+        print(f"  lowered {name}: {len(text)} chars")
+    manifest = {"version": 1, "radius": RADIUS, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="subset matrix (CI smoke)")
+    args = ap.parse_args()
+    build(args.out_dir, args.quick)
+
+
+if __name__ == "__main__":
+    main()

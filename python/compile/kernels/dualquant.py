@@ -1,0 +1,125 @@
+"""Layer-1 Pallas dual-quantization kernel.
+
+One kernel instance processes ``lanes`` blocks per grid step (the lane tile
+is the SIMD-width analog of the paper's AVX2/AVX-512 vector registers: 8
+lanes ≈ 256-bit, 16 lanes ≈ 512-bit registers over f32).  The grid walks the
+superbatch of ``nb`` blocks, so the HBM→VMEM schedule the paper expressed
+with cache blocking is expressed here with a BlockSpec.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and correctness is what the Pallas path certifies (see
+DESIGN.md §Hardware-Adaptation; TPU-perf is estimated structurally from the
+VMEM footprint, not from interpret-mode wallclock).
+
+Inputs (per call):
+  blocks f32[nb, bs^d]   raw data gathered into padded blocks
+  pads   f32[nb, 1]      per-block padding scalar (data units)
+  ebs    f32[1, 3]       [2*eb, 0.5/eb, radius]
+Outputs:
+  codes  i32[nb, bs^d]   quant codes, 0 == outlier
+  outv   f32[nb, bs^d]   pre-quantized value where outlier, else 0
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shift_with_pad(x: jax.Array, axis: int, padq: jax.Array) -> jax.Array:
+    """Shift x by +1 along ``axis`` (a spatial axis >= 1), filling the
+    vacated border hyperplane with the per-block padding scalar ``padq``
+    (shape [lanes] broadcast across spatial dims)."""
+    border_shape = list(x.shape)
+    border_shape[axis] = 1
+    pad_col = jnp.broadcast_to(
+        padq.reshape((x.shape[0],) + (1,) * (x.ndim - 1)), tuple(border_shape)
+    )
+    body = jax.lax.slice_in_dim(x, 0, x.shape[axis] - 1, axis=axis)
+    return jnp.concatenate([pad_col, body], axis=axis)
+
+
+def lorenzo_predict(dq: jax.Array, padq: jax.Array) -> jax.Array:
+    """Inclusion-exclusion Lorenzo predictor over the spatial axes of
+    dq[lanes, bs^d]; borders read the padding scalar."""
+    nd = dq.ndim - 1  # spatial dims
+    pred = jnp.zeros_like(dq)
+    for mask in range(1, 1 << nd):
+        shifted = dq
+        bits = 0
+        for a in range(nd):
+            if (mask >> a) & 1:
+                shifted = _shift_with_pad(shifted, a + 1, padq)
+                bits += 1
+        sign = 1.0 if bits % 2 == 1 else -1.0
+        pred = pred + sign * shifted
+    return pred
+
+
+def dualquant_math(blocks, pads, ebs):
+    """The shared dual-quant arithmetic (Algorithm 2): pre-quant, Lorenzo
+    predict on pre-quantized values, post-quant with outlier split.
+
+    Also used verbatim by the L2 jnp production graph so the Pallas kernel
+    and the jnp artifact cannot drift."""
+    half_inv_eb = ebs[1]
+    radius = ebs[2]
+    dq = jnp.round(blocks * half_inv_eb)
+    padq = jnp.round(pads.reshape(pads.shape[0]) * half_inv_eb)
+    pred = lorenzo_predict(dq, padq)
+    delta = dq - pred
+    in_cap = jnp.abs(delta) < radius
+    codes = jnp.where(in_cap, delta + radius, 0.0).astype(jnp.int32)
+    outv = jnp.where(in_cap, jnp.float32(0.0), dq)
+    return codes, outv
+
+
+def _dq_kernel(blocks_ref, pads_ref, ebs_ref, codes_ref, outv_ref):
+    ebs = ebs_ref[0, :]
+    codes, outv = dualquant_math(blocks_ref[...], pads_ref[...], ebs)
+    codes_ref[...] = codes
+    outv_ref[...] = outv
+
+
+@functools.partial(jax.jit, static_argnames=("ndim", "bs", "lanes", "nb"))
+def dualquant_pallas(blocks, pads, ebs, *, ndim: int, bs: int, lanes: int, nb: int):
+    """Pallas dual-quant over a superbatch of nb blocks, lanes blocks per
+    grid step."""
+    assert nb % lanes == 0, "superbatch must be a multiple of the lane tile"
+    spatial = (bs,) * ndim
+    grid = (nb // lanes,)
+    zeros = (0,) * ndim
+
+    return pl.pallas_call(
+        _dq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((lanes,) + spatial, lambda i: (i,) + zeros),
+            pl.BlockSpec((lanes, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((lanes,) + spatial, lambda i: (i,) + zeros),
+            pl.BlockSpec((lanes,) + spatial, lambda i: (i,) + zeros),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb,) + spatial, jnp.int32),
+            jax.ShapeDtypeStruct((nb,) + spatial, jnp.float32),
+        ],
+        interpret=True,
+    )(blocks, pads, ebs)
+
+
+def make_ebs(eb: float, radius: int = 512):
+    """Pack the runtime scalars the kernels expect: [[2eb, 0.5/eb, radius]]."""
+    return jnp.asarray([[2.0 * eb, 0.5 / eb, float(radius)]], dtype=jnp.float32)
+
+
+def vmem_footprint_bytes(ndim: int, bs: int, lanes: int) -> int:
+    """Structural VMEM estimate per grid step (see DESIGN.md §8): input tile
+    + 2 output tiles + ~2 temporaries for the shift/predict chain."""
+    tile = lanes * bs**ndim * 4
+    return tile * 5

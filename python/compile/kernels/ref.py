@@ -1,0 +1,119 @@
+"""Pure-numpy reference oracle for the dual-quantization kernel.
+
+This is the *independent* correctness reference: explicit Python loops over
+block elements, written directly from Algorithm 2 of the paper (vecSZ,
+CS.DC'22), with none of the vectorized shift tricks used by the production
+graph in ``model.py`` or the Pallas kernel in ``dualquant.py``.  pytest
+checks both implementations against this oracle.
+
+Conventions (normative, mirrored by the Rust implementation):
+
+* pre-quantization: ``d_q = round(d / (2*eb))`` computed in float32.
+* Lorenzo prediction inside a block uses the *pre-quantized* neighbour
+  values; neighbours that fall outside the block read the block's padding
+  scalar (itself pre-quantized).
+* post-quantization: ``delta = d_q - pred``; if ``|delta| < radius`` the
+  quant-code is ``delta + radius`` (so code 0 is reserved for outliers),
+  otherwise code 0 and the pre-quantized value is recorded verbatim.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+DEFAULT_RADIUS = 512
+
+
+def prequant(data: np.ndarray, eb: float) -> np.ndarray:
+    """d° = round(d / (2 eb)), float32.
+
+    np.rint rounds half-to-even, matching jnp.round; exact .5 ties are
+    avoided by the test generators (they are measure-zero on real data).
+    """
+    return np.rint(np.float32(data) * np.float32(0.5 / eb)).astype(np.float32)
+
+
+def _neighbor(dq_block: np.ndarray, idx: tuple, off: tuple, pad: np.float32):
+    """Value of the neighbour at idx-off, or the padding scalar if any
+    coordinate leaves the block."""
+    coord = tuple(i - o for i, o in zip(idx, off))
+    if any(c < 0 for c in coord):
+        return pad
+    return dq_block[coord]
+
+
+def _ie_offsets(nd: int):
+    """Inclusion-exclusion (offset, sign) pairs for the Lorenzo predictor."""
+    out = []
+    for mask in range(1, 1 << nd):
+        off = tuple((mask >> a) & 1 for a in range(nd))
+        sign = np.float32(1.0 if (sum(off) % 2 == 1) else -1.0)
+        out.append((off, sign))
+    return out
+
+
+def lorenzo_predict_block(dq_block: np.ndarray, pad: float) -> np.ndarray:
+    """Lorenzo prediction for every element of one block (any ndim 1..3).
+
+    1D: p[i]     = W
+    2D: p[i,j]   = W + N - NW
+    3D: p[i,j,k] = (W + N + U) - (NW + NU + WU) + NWU
+    computed by inclusion-exclusion over non-empty subsets of axes.
+    """
+    pad = np.float32(pad)
+    pred = np.zeros_like(dq_block, dtype=np.float32)
+    offsets = _ie_offsets(dq_block.ndim)
+    for idx in np.ndindex(*dq_block.shape):
+        acc = np.float32(0.0)
+        for off, sign in offsets:
+            acc += sign * _neighbor(dq_block, idx, off, pad)
+        pred[idx] = acc
+    return pred
+
+
+def dualquant_block(data_block, pad_value, eb, radius=DEFAULT_RADIUS):
+    """Full dual-quant of one block. Returns (codes i32, outlier_vals f32).
+
+    ``codes[i] == 0`` marks an outlier whose pre-quantized value is stored in
+    ``outlier_vals[i]`` (0.0 elsewhere).
+    """
+    dq = prequant(data_block, eb)
+    padq = prequant(np.asarray(pad_value, dtype=np.float32), eb)
+    pred = lorenzo_predict_block(dq, padq)
+    codes = np.zeros(dq.shape, dtype=np.int32)
+    outv = np.zeros(dq.shape, dtype=np.float32)
+    for idx in np.ndindex(*dq.shape):
+        delta = np.float32(dq[idx] - pred[idx])
+        if abs(delta) < radius:
+            codes[idx] = np.int32(delta) + radius
+        else:
+            codes[idx] = 0
+            outv[idx] = dq[idx]
+    return codes, outv
+
+
+def dualquant_batch(blocks, pads, eb, radius=DEFAULT_RADIUS):
+    """Oracle over a batch of blocks: blocks [NB, bs^d], pads [NB]."""
+    codes = np.zeros(blocks.shape, dtype=np.int32)
+    outv = np.zeros(blocks.shape, dtype=np.float32)
+    for b in range(blocks.shape[0]):
+        codes[b], outv[b] = dualquant_block(blocks[b], pads[b], eb, radius)
+    return codes, outv
+
+
+def reconstruct_block(codes, outlier_vals, pad_value, eb, radius=DEFAULT_RADIUS):
+    """Sequential (cascading) decompression of one block — the RAW-dependent
+    reverse path, matching the Rust decompressor.  Returns d̂ = 2·eb·d°."""
+    shape = codes.shape
+    padq = prequant(np.asarray(pad_value, dtype=np.float32), eb)
+    dq = np.zeros(shape, dtype=np.float32)
+    offsets = _ie_offsets(codes.ndim)
+    for idx in np.ndindex(*shape):
+        if codes[idx] == 0:
+            dq[idx] = outlier_vals[idx]
+            continue
+        pred = np.float32(0.0)
+        for off, sign in offsets:
+            pred += sign * _neighbor(dq, idx, off, padq)
+        dq[idx] = pred + np.float32(int(codes[idx]) - radius)
+    return dq * np.float32(2.0 * eb)

@@ -1,0 +1,77 @@
+"""Layer-2 JAX compression graph.
+
+Two artifact flavours per (ndim, block-size, lanes) point:
+
+* ``jnp``    — the production graph: ``dualquant_math`` applied directly to
+  the whole superbatch.  XLA fuses the round/shift/select chain into one
+  vectorized elementwise region; this is the artifact the Rust hot path
+  executes.
+* ``pallas`` — the same math routed through the Layer-1 Pallas kernel
+  (interpret=True), used to certify that the kernel and the production
+  graph lower to identical numerics.
+
+Both flavours share ``dualquant_math`` from the kernel module, so the only
+difference is the HBM→VMEM schedule (BlockSpec grid vs whole-array fusion).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.dualquant import dualquant_math, dualquant_pallas
+
+
+def dualquant_jnp(blocks: jax.Array, pads: jax.Array, ebs: jax.Array):
+    """Production dual-quant graph over a superbatch [nb, bs^d]."""
+    return dualquant_math(blocks, pads, ebs[0, :])
+
+
+def make_fn(impl: str, ndim: int, bs: int, lanes: int, nb: int):
+    """Return the traced-callable for one artifact point; the returned
+    function takes (blocks, pads, ebs) and returns a tuple (codes, outv)."""
+    if impl == "jnp":
+
+        def fn(blocks, pads, ebs):
+            codes, outv = dualquant_jnp(blocks, pads, ebs)
+            return (codes, outv)
+
+        return fn
+    if impl == "pallas":
+
+        def fn(blocks, pads, ebs):
+            codes, outv = dualquant_pallas(
+                blocks, pads, ebs, ndim=ndim, bs=bs, lanes=lanes, nb=nb
+            )
+            return (codes, outv)
+
+        return fn
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def input_specs(ndim: int, bs: int, nb: int):
+    """ShapeDtypeStructs for (blocks, pads, ebs) of one artifact point."""
+    spatial = (bs,) * ndim
+    return (
+        jax.ShapeDtypeStruct((nb,) + spatial, jnp.float32),
+        jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        jax.ShapeDtypeStruct((1, 3), jnp.float32),
+    )
+
+
+def reconstruct_batch(codes, outv, pads, eb: float, radius: int = 512):
+    """Vectorized-across-blocks, sequential-within-block reconstruction
+    reference (mirrors the Rust decompressor; test-only, never lowered).
+
+    Works element-by-element with lax.fori_loop over the flattened block in
+    row-major order, which preserves the cascading RAW dependence."""
+    import numpy as np
+
+    from compile.kernels.ref import reconstruct_block
+
+    out = np.zeros(codes.shape, dtype=np.float32)
+    for b in range(codes.shape[0]):
+        out[b] = reconstruct_block(
+            np.asarray(codes[b]), np.asarray(outv[b]), float(pads[b, 0]), eb, radius
+        )
+    return out

@@ -1,0 +1,164 @@
+"""Kernel-vs-oracle correctness: the CORE numerics signal of the repo.
+
+Checks, over shape/eb/value-distribution sweeps (hypothesis):
+  * L2 jnp production graph  == numpy oracle (ref.py)
+  * L1 pallas kernel         == numpy oracle and == jnp graph (bit-exact)
+  * error-bound invariant: reconstruct(dualquant(x)) is within eb
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.dualquant import dualquant_pallas, make_ebs
+from compile.model import dualquant_jnp, reconstruct_batch
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def gen_blocks(nb, shape, scale=1.0, kind="smooth", rng=RNG):
+    """Block batch with controllable character: smooth fields predict well,
+    rough ones stress the outlier path."""
+    full = (nb,) + shape
+    if kind == "smooth":
+        x = rng.normal(size=full).astype(np.float32)
+        for ax in range(1, len(full)):
+            for _ in range(3):
+                x = (x + np.roll(x, 1, axis=ax)) * 0.5
+        x *= scale
+    elif kind == "rough":
+        x = (rng.normal(size=full) * scale).astype(np.float32)
+    elif kind == "const":
+        x = np.full(full, scale, dtype=np.float32)
+    else:
+        raise ValueError(kind)
+    return x.astype(np.float32)
+
+
+def run_jnp(blocks, pads, eb):
+    codes, outv = dualquant_jnp(
+        jnp.asarray(blocks), jnp.asarray(pads).reshape(-1, 1), make_ebs(eb)
+    )
+    return np.asarray(codes), np.asarray(outv)
+
+
+CASES = [
+    (1, 8, "smooth", 1.0, 1e-3),
+    (1, 64, "smooth", 10.0, 1e-3),
+    (2, 8, "smooth", 1.0, 1e-3),
+    (2, 16, "rough", 0.5, 1e-2),
+    (3, 8, "smooth", 2.0, 1e-3),
+    (3, 8, "rough", 1.0, 1e-2),
+]
+
+
+@pytest.mark.parametrize("ndim,bs,kind,scale,eb", CASES)
+def test_jnp_matches_oracle(ndim, bs, kind, scale, eb):
+    nb = 4
+    blocks = gen_blocks(nb, (bs,) * ndim, scale, kind)
+    pads = blocks.reshape(nb, -1).mean(axis=1)
+    codes, outv = run_jnp(blocks, pads, eb)
+    rcodes, routv = ref.dualquant_batch(blocks, pads, eb)
+    np.testing.assert_array_equal(codes, rcodes)
+    np.testing.assert_array_equal(outv, routv)
+
+
+@pytest.mark.parametrize(
+    "ndim,bs,lanes", [(1, 8, 2), (1, 64, 8), (2, 8, 4), (2, 16, 8), (3, 8, 2)]
+)
+def test_pallas_matches_oracle_and_jnp(ndim, bs, lanes):
+    nb = 2 * lanes
+    eb = 1e-3
+    blocks = gen_blocks(nb, (bs,) * ndim, 1.0, "smooth")
+    pads = np.zeros(nb, dtype=np.float32)
+    pcodes, poutv = dualquant_pallas(
+        jnp.asarray(blocks),
+        jnp.asarray(pads).reshape(-1, 1),
+        make_ebs(eb),
+        ndim=ndim,
+        bs=bs,
+        lanes=lanes,
+        nb=nb,
+    )
+    jcodes, joutv = run_jnp(blocks, pads, eb)
+    np.testing.assert_array_equal(np.asarray(pcodes), jcodes)
+    np.testing.assert_array_equal(np.asarray(poutv), joutv)
+    rcodes, routv = ref.dualquant_batch(blocks, pads, eb)
+    np.testing.assert_array_equal(np.asarray(pcodes), rcodes)
+    np.testing.assert_array_equal(np.asarray(poutv), routv)
+
+
+@pytest.mark.parametrize("ndim,bs,kind,scale,eb", CASES)
+def test_error_bound_roundtrip(ndim, bs, kind, scale, eb):
+    nb = 4
+    blocks = gen_blocks(nb, (bs,) * ndim, scale, kind)
+    pads = blocks.reshape(nb, -1).mean(axis=1)
+    codes, outv = run_jnp(blocks, pads, eb)
+    rec = reconstruct_batch(codes, outv, pads.reshape(-1, 1), eb)
+    # exact-arithmetic bound is eb; the f32 2*eb*d° multiply adds <= 2 ulp
+    tol = eb + 2 * np.spacing(np.max(np.abs(blocks)))
+    assert np.max(np.abs(rec - blocks)) <= tol
+
+
+def test_outlier_split_is_exclusive():
+    """code==0 <=> outlier value recorded; in-cap codes never carry values."""
+    blocks = gen_blocks(4, (16, 16), 100.0, "rough")
+    pads = np.zeros(4, dtype=np.float32)
+    codes, outv = run_jnp(blocks, pads, 1e-4)
+    assert np.all((codes == 0) == (outv != 0.0) | (codes == 0) & (outv == 0.0))
+    # in-cap positions carry no outlier payload
+    assert np.all(outv[codes != 0] == 0.0)
+    # rough data at tiny eb must actually produce outliers (test is live)
+    assert (codes == 0).any()
+
+
+def test_constant_field_all_predictable():
+    """A constant block is perfectly predicted everywhere except where the
+    padding scalar misses; with avg padding even borders predict."""
+    blocks = gen_blocks(2, (16, 16), 7.25, "const")
+    pads = np.full(2, 7.25, dtype=np.float32)
+    codes, outv = run_jnp(blocks, pads, 1e-3)
+    assert np.all(codes != 0)
+    # interior deltas are exactly 0 -> code == radius
+    assert np.all(codes == 512)
+
+
+def test_zero_vs_avg_padding_outliers():
+    """The paper's §V-I claim in miniature: on an offset (non-zero-centred)
+    field, zero padding produces border outliers that avg padding removes."""
+    blocks = gen_blocks(4, (16, 16), 1.0, "smooth") + 50.0
+    zcodes, _ = run_jnp(blocks, np.zeros(4, np.float32), 1e-2)
+    acodes, _ = run_jnp(blocks, blocks.reshape(4, -1).mean(axis=1), 1e-2)
+    assert (zcodes == 0).sum() > 0
+    assert (acodes == 0).sum() < (zcodes == 0).sum()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ndim=st.integers(1, 3),
+    bs_pow=st.integers(1, 3),
+    eb_exp=st.integers(-4, -1),
+    scale_exp=st.integers(-1, 2),
+    seed=st.integers(0, 2**31 - 1),
+    kind=st.sampled_from(["smooth", "rough"]),
+)
+def test_property_jnp_equals_oracle(ndim, bs_pow, eb_exp, scale_exp, seed, kind):
+    """hypothesis sweep: arbitrary shape/eb/scale/distribution, jnp graph
+    must agree with the loop oracle exactly and respect the error bound."""
+    bs = 2 ** (bs_pow + 1)  # 4..16
+    eb = 10.0**eb_exp
+    rng = np.random.default_rng(seed)
+    blocks = gen_blocks(2, (bs,) * ndim, 10.0**scale_exp, kind, rng)
+    pads = blocks.reshape(2, -1).mean(axis=1)
+    codes, outv = run_jnp(blocks, pads, eb)
+    rcodes, routv = ref.dualquant_batch(blocks, pads, eb)
+    np.testing.assert_array_equal(codes, rcodes)
+    np.testing.assert_array_equal(outv, routv)
+    rec = reconstruct_batch(codes, outv, pads.reshape(-1, 1), eb)
+    tol = eb + 2 * np.spacing(np.max(np.abs(blocks)))
+    assert np.max(np.abs(rec - blocks)) <= tol

@@ -1,0 +1,9 @@
+//! `cargo bench --bench fig10_rate_distortion` — regenerates Fig 10
+//! (rate-distortion, vecSZ avg-padding vs SZ-1.4) and the §V-I padding
+//! study table.
+fn main() {
+    let quick = std::env::var("VECSZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    vecsz::figures::run("fig10", "results", quick).expect("fig10");
+    println!();
+    vecsz::figures::run("padding", "results", quick).expect("padding");
+}

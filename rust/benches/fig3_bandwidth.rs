@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig3_bandwidth` — regenerates Fig 3 (P&Q bandwidth
+//! of SZ-1.4 vs pSZ vs vecSZ per dataset, both modeled CPU configs).
+//! Honours VECSZ_BENCH_QUICK=1.
+fn main() {
+    let quick = std::env::var("VECSZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    vecsz::figures::run("fig3", "results", quick).expect("fig3");
+}

@@ -1,0 +1,10 @@
+//! `cargo bench --bench fig5_blocksize` — regenerates Fig 5 (bandwidth vs
+//! block size x vector length) and Fig 1/4 roofline placements.
+fn main() {
+    let quick = std::env::var("VECSZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    vecsz::figures::run("fig1", "results", quick).expect("fig1");
+    println!();
+    vecsz::figures::run("fig4", "results", quick).expect("fig4");
+    println!();
+    vecsz::figures::run("fig5", "results", quick).expect("fig5");
+}

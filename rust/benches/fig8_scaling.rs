@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig8_scaling` — regenerates Figs 8/9 (thread
+//! scaling, measured on this host + modeled for the paper's testbeds) and
+//! the Fig 6/7 autotuning heatmaps.
+fn main() {
+    let quick = std::env::var("VECSZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    vecsz::figures::run("fig8", "results", quick).expect("fig8");
+    println!();
+    vecsz::figures::run("fig9", "results", quick).expect("fig9");
+    println!();
+    vecsz::figures::run("fig6_7", "results", quick).expect("fig6_7");
+    println!();
+    vecsz::figures::run("stability", "results", quick).expect("stability");
+}

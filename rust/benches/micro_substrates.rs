@@ -1,0 +1,132 @@
+//! `cargo bench --bench micro_substrates` — microbenchmarks of the
+//! substrate stages surrounding the dual-quant hot path: Huffman encode/
+//! decode, the lossless pass, block gather/scatter and sequential block
+//! decode. These locate the non-P&Q bottlenecks that Table III's Amdahl
+//! analysis attributes the residual runtime to.
+
+use vecsz::bench::{bench, BenchOpts};
+use vecsz::blocks::{gather_block, BlockShape, Dims, HaloBlock};
+use vecsz::huffman;
+use vecsz::lossless;
+use vecsz::padding::{PadGranularity, PadScalars, PadValue, PaddingPolicy};
+use vecsz::quant::decode::decode_block_dualquant;
+use vecsz::quant::psz::PszBackend;
+use vecsz::quant::vectorized::VecBackend;
+use vecsz::quant::{DqConfig, PqBackend};
+use vecsz::util::prng::Pcg32;
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let mut rng = Pcg32::seeded(1);
+
+    // quant-code-like stream (skewed around radius)
+    let n = 4_000_000usize;
+    let codes: Vec<u16> = (0..n)
+        .map(|_| {
+            let r = rng.next_f32();
+            if r < 0.85 {
+                512
+            } else if r < 0.97 {
+                510 + rng.bounded(5) as u16
+            } else {
+                490 + rng.bounded(44) as u16
+            }
+        })
+        .collect();
+
+    let s = bench("huffman encode (4M skewed codes)", n * 2, opts, || {
+        std::hint::black_box(huffman::compress_u16(&codes, 1024));
+    });
+    println!("{}", s.row());
+
+    let blob = huffman::compress_u16(&codes, 1024);
+    println!("    (compressed to {:.2} bits/code)", blob.len() as f64 * 8.0 / n as f64);
+    let s = bench("huffman decode", n * 2, opts, || {
+        std::hint::black_box(huffman::decompress_u16(&blob).unwrap());
+    });
+    println!("{}", s.row());
+
+    // outlier-value-like f32 stream for the lossless pass
+    let vals: Vec<f32> = (0..500_000).map(|_| 270.0 + rng.next_f32() * 2.0).collect();
+    let bytes = vecsz::util::f32_as_bytes(&vals);
+    let s = bench("lossless compress (2MB f32 outliers)", bytes.len(), opts, || {
+        std::hint::black_box(lossless::compress(bytes));
+    });
+    println!("{}", s.row());
+    let lz = lossless::compress(bytes);
+    println!("    (ratio {:.2}x)", bytes.len() as f64 / lz.len() as f64);
+    let s = bench("lossless decompress", bytes.len(), opts, || {
+        std::hint::black_box(lossless::decompress(&lz).unwrap());
+    });
+    println!("{}", s.row());
+
+    // block gather (2D)
+    let dims = Dims::d2(1024, 1024);
+    let field: Vec<f32> = (0..dims.len()).map(|_| rng.next_f32()).collect();
+    let bs = 16usize;
+    let nb = dims.num_blocks(bs);
+    let mut block = vec![0.0f32; bs * bs];
+    let s = bench("gather 1Mi-elem 2D field into 16x16 blocks", dims.len() * 4, opts, || {
+        for b in 0..nb {
+            gather_block(&field, &dims, bs, b, 0.0, &mut block);
+            std::hint::black_box(&block);
+        }
+    });
+    println!("{}", s.row());
+
+    // P&Q backends head-to-head on identical batch (the Fig 3 kernel view)
+    let shape = BlockShape::new(2, 16);
+    let elems = shape.elems();
+    let nbb = 4096usize;
+    let mut blocks = vec![0.0f32; nbb * elems];
+    let mut x = 0.0f32;
+    for v in blocks.iter_mut() {
+        x += (rng.next_f32() - 0.5) * 0.1;
+        *v = x;
+    }
+    let pads = PadScalars {
+        policy: PaddingPolicy::new(PadValue::Zero, PadGranularity::Global),
+        scalars: vec![0.0],
+        ndim: 2,
+    };
+    let cfg = DqConfig::new(1e-3, 512, shape);
+    let mut qcodes = vec![0u16; blocks.len()];
+    let mut outv = vec![0.0f32; blocks.len()];
+    for be in [
+        &PszBackend as &dyn PqBackend,
+        &VecBackend::with_halo(8), // ablation: original halo-copy path
+        &VecBackend::new(8),
+        &VecBackend::with_halo(16),
+        &VecBackend::new(16),
+    ] {
+        let s = bench(
+            &format!("dual-quant kernel [{}] 4Mi elems 2D", be.name()),
+            blocks.len() * 4,
+            opts,
+            || {
+                be.run(&cfg, &blocks, 0, &pads, &mut qcodes, &mut outv);
+                std::hint::black_box(&qcodes);
+            },
+        );
+        println!("{}", s.row());
+    }
+
+    // sequential block decode (the decompression hot path)
+    let mut halo = HaloBlock::new(shape);
+    let mut rec = vec![0.0f32; elems];
+    let s = bench("decode (cascading Lorenzo reverse) 4Mi elems", blocks.len() * 4, opts, || {
+        for b in 0..nbb {
+            decode_block_dualquant(
+                &cfg,
+                &qcodes[b * elems..(b + 1) * elems],
+                &outv[b * elems..(b + 1) * elems],
+                &pads,
+                b,
+                &mut halo,
+                &mut rec,
+            );
+            std::hint::black_box(&rec);
+        }
+    });
+    println!("{}", s.row());
+}

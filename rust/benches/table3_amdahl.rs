@@ -1,0 +1,10 @@
+//! `cargo bench --bench table3_amdahl` — regenerates Tables I-III
+//! (testbed description, dataset attributes, Amdahl speedup analysis).
+fn main() {
+    let quick = std::env::var("VECSZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    vecsz::figures::run("table1", "results", quick).expect("table1");
+    println!();
+    vecsz::figures::run("table2", "results", quick).expect("table2");
+    println!();
+    vecsz::figures::run("table3", "results", quick).expect("table3");
+}

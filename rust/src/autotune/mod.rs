@@ -1,0 +1,322 @@
+//! Autotuning of (block size × vector length) — §III-E / §V-F.
+//!
+//! Before compressing, sample a fixed percentage of blocks, run the
+//! dual-quant stage on the sample under every candidate configuration for
+//! `iterations` repetitions, and pick the configuration with the best
+//! average P&Q bandwidth. The paper amortizes this cost across simulation
+//! time-steps because the winning configuration is stable in time (§V-F);
+//! [`top_k_stability`] reproduces that analysis.
+
+use crate::blocks::{gather_block, BlockShape};
+use crate::compressor::default_block_size;
+use crate::data::Field;
+use crate::padding::{compute_scalars, PaddingPolicy};
+use crate::quant::vectorized::VecBackend;
+use crate::quant::{DqConfig, PqBackend};
+use crate::util::prng::Pcg32;
+use crate::util::timer::{mb_per_s, Timer};
+
+/// One candidate configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TuneConfig {
+    pub block_size: usize,
+    /// Lane width (the paper's vector-register length: 8 ≈ 256-bit,
+    /// 16 ≈ 512-bit).
+    pub width: usize,
+}
+
+/// Candidate grid per dimensionality (§III-D: multiples of the vector
+/// register; 128/256 showed no improvement in the paper's study).
+pub fn candidate_grid(ndim: usize, widths: &[usize]) -> Vec<TuneConfig> {
+    let sizes: &[usize] = match ndim {
+        1 => &[8, 16, 32, 64],
+        2 => &[8, 16, 32, 64],
+        _ => &[8, 16, 32],
+    };
+    let mut out = Vec::new();
+    for &bs in sizes {
+        for &w in widths {
+            out.push(TuneConfig { block_size: bs, width: w });
+        }
+    }
+    out
+}
+
+/// Measured performance of one configuration on the sampled blocks.
+#[derive(Clone, Copy, Debug)]
+pub struct TunePoint {
+    pub config: TuneConfig,
+    pub mb_per_s: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: TuneConfig,
+    pub table: Vec<TunePoint>,
+    /// Wall time spent tuning (Fig 7's numerator).
+    pub tune_seconds: f64,
+    pub sampled_blocks: usize,
+}
+
+/// Autotune settings: the Fig 6/7 axes.
+#[derive(Clone, Copy, Debug)]
+pub struct TuneSettings {
+    /// Percentage of blocks to sample (1.0 = 1%).
+    pub sample_pct: f64,
+    /// Repetitions averaged per configuration.
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl Default for TuneSettings {
+    fn default() -> Self {
+        Self { sample_pct: 5.0, iterations: 2, seed: 0xA1170 }
+    }
+}
+
+/// Measure one configuration on a sample of block indices; returns MB/s of
+/// the full P&Q stage (gather + dual-quant), mirroring what `pq_stage`
+/// does on the whole field — gathering inside the timed loop keeps the
+/// sample's memory-access pattern honest (a cache-warm pre-gathered batch
+/// systematically favours large blocks and mispicks; §V-F measures the
+/// operation as it will actually run).
+#[allow(clippy::too_many_arguments)]
+fn measure_config(
+    cfg: TuneConfig,
+    field: &Field,
+    idx: &[usize],
+    eb: f64,
+    radius: u16,
+    pads: &crate::padding::PadScalars,
+    sample_pads: &crate::padding::PadScalars,
+    iterations: usize,
+) -> f64 {
+    let ndim = field.dims.ndim;
+    let shape = BlockShape::new(ndim, cfg.block_size);
+    let elems = shape.elems();
+    let dq = DqConfig::new(eb, radius, shape);
+    let backend = VecBackend::new(cfg.width);
+    let mut blocks = vec![0.0f32; idx.len() * elems];
+    let mut codes = vec![0u16; blocks.len()];
+    let mut outv = vec![0.0f32; blocks.len()];
+    let mut run_once = || {
+        for (s, &b) in idx.iter().enumerate() {
+            gather_block(
+                &field.data,
+                &field.dims,
+                cfg.block_size,
+                b,
+                pads.block_scalar(b),
+                &mut blocks[s * elems..(s + 1) * elems],
+            );
+        }
+        backend.run(&dq, &blocks, 0, sample_pads, &mut codes, &mut outv);
+    };
+    // warmup once (page-in, branch training), then timed iterations
+    run_once();
+    let t = Timer::start();
+    for _ in 0..iterations.max(1) {
+        run_once();
+    }
+    // Normalize by *useful field bytes*, not gathered bytes: boundary
+    // blocks are padded, and large block sizes can more than double the
+    // gathered volume on shallow fields — counting padding would inflate
+    // their apparent bandwidth relative to the full-field ground truth.
+    let nb_total = field.dims.num_blocks(cfg.block_size);
+    let useful_bytes_per_block = field.data.len() as f64 * 4.0 / nb_total as f64;
+    let useful = useful_bytes_per_block * idx.len() as f64 * iterations.max(1) as f64;
+    useful / 1e6 / t.elapsed_s().max(f64::MIN_POSITIVE)
+}
+
+/// Run the autotuner on `field`.
+pub fn autotune(
+    field: &Field,
+    eb: f64,
+    radius: u16,
+    padding: PaddingPolicy,
+    widths: &[usize],
+    settings: TuneSettings,
+) -> TuneResult {
+    let ndim = field.dims.ndim;
+    let t_total = Timer::start();
+    let grid = candidate_grid(ndim, widths);
+    let mut table = Vec::with_capacity(grid.len());
+    let mut rng = Pcg32::seeded(settings.seed);
+    let mut sampled_blocks = 0usize;
+
+    for cfg in &grid {
+        let bs = cfg.block_size;
+        let shape = BlockShape::new(ndim, bs);
+        let elems = shape.elems();
+        let nb = field.dims.num_blocks(bs);
+        let k = ((nb as f64 * settings.sample_pct / 100.0).ceil() as usize).clamp(1, nb);
+        sampled_blocks = sampled_blocks.max(k);
+        let idx = rng.sample_indices(nb, k);
+        // per-config pads (block scalars depend on bs); sampled blocks are
+        // re-based to 0..k so the scalars vector is compacted to the sample.
+        let full_pads = compute_scalars(&field.data, &field.dims, bs, padding);
+        let scalars: Vec<f32> = idx.iter().map(|&b| full_pads.block_scalar(b)).collect();
+        let sample_pads = crate::padding::PadScalars {
+            policy: PaddingPolicy::new(
+                crate::padding::PadValue::Avg,
+                crate::padding::PadGranularity::Block,
+            ),
+            scalars,
+            ndim,
+        };
+        let mbs = measure_config(
+            *cfg,
+            field,
+            &idx,
+            eb,
+            radius,
+            &full_pads,
+            &sample_pads,
+            settings.iterations,
+        );
+        table.push(TunePoint { config: *cfg, mb_per_s: mbs });
+    }
+
+    let best = table
+        .iter()
+        .max_by(|a, b| a.mb_per_s.total_cmp(&b.mb_per_s))
+        .map(|p| p.config)
+        .unwrap_or(TuneConfig { block_size: default_block_size(ndim), width: 8 });
+    TuneResult { best, table, tune_seconds: t_total.elapsed_s(), sampled_blocks }
+}
+
+/// Exhaustive *full-field* measurement of every configuration (ground truth
+/// for Fig 5 / the "peak" of Fig 6).
+pub fn exhaustive_full(
+    field: &Field,
+    eb: f64,
+    radius: u16,
+    padding: PaddingPolicy,
+    widths: &[usize],
+    backend_threads: usize,
+) -> Vec<TunePoint> {
+    let ndim = field.dims.ndim;
+    candidate_grid(ndim, widths)
+        .into_iter()
+        .map(|cfg| {
+            let c = crate::compressor::Config {
+                eb: crate::compressor::EbMode::Abs(eb),
+                radius,
+                block_size: cfg.block_size,
+                padding,
+                backend: crate::compressor::BackendChoice::Vec { width: cfg.width },
+                threads: backend_threads,
+            };
+            let backend = c.backend.instantiate();
+            let (_, _, _, secs) = crate::compressor::pq_stage(field, &c, backend.as_ref());
+            TunePoint { config: cfg, mb_per_s: mb_per_s(field.data.len() * 4, secs) }
+        })
+        .collect()
+}
+
+/// §V-F time-series analysis: fraction of `results` whose best config is
+/// within the top-k configs of the aggregate ranking.
+pub fn top_k_stability(results: &[TuneResult], k: usize) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    // aggregate mean bandwidth per config
+    let mut agg: Vec<(TuneConfig, f64, usize)> = Vec::new();
+    for r in results {
+        for p in &r.table {
+            if let Some(e) = agg.iter_mut().find(|e| e.0 == p.config) {
+                e.1 += p.mb_per_s;
+                e.2 += 1;
+            } else {
+                agg.push((p.config, p.mb_per_s, 1));
+            }
+        }
+    }
+    for e in agg.iter_mut() {
+        e.1 /= e.2 as f64;
+    }
+    agg.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let top: Vec<TuneConfig> = agg.iter().take(k).map(|e| e.0).collect();
+    let hits = results.iter().filter(|r| top.contains(&r.best)).count();
+    hits as f64 / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::Dims;
+    use crate::data::Field;
+
+    fn test_field() -> Field {
+        let dims = Dims::d2(96, 96);
+        let mut rng = Pcg32::seeded(4);
+        let mut x = 0.0f32;
+        let data: Vec<f32> = (0..dims.len())
+            .map(|_| {
+                x += (rng.next_f32() - 0.5) * 0.05;
+                x
+            })
+            .collect();
+        Field::new("t", dims, data)
+    }
+
+    #[test]
+    fn grid_shape_matches_paper_counts() {
+        // Intel: 8 configs of (bs x vector len) for 2D per §V-F (4 sizes x 2)
+        assert_eq!(candidate_grid(2, &[8, 16]).len(), 8);
+        // AMD: 4 configs (4 sizes x 1 width)
+        assert_eq!(candidate_grid(1, &[8]).len(), 4);
+        assert_eq!(candidate_grid(3, &[8, 16]).len(), 6);
+    }
+
+    #[test]
+    fn autotune_returns_a_grid_member_and_timings() {
+        let f = test_field();
+        let r = autotune(
+            &f,
+            1e-3,
+            512,
+            PaddingPolicy::ZERO,
+            &[8, 16],
+            TuneSettings { sample_pct: 10.0, iterations: 1, seed: 1 },
+        );
+        assert!(candidate_grid(2, &[8, 16]).contains(&r.best));
+        assert_eq!(r.table.len(), 8);
+        assert!(r.tune_seconds > 0.0);
+        assert!(r.table.iter().all(|p| p.mb_per_s > 0.0));
+    }
+
+    #[test]
+    fn higher_sample_pct_samples_more_blocks() {
+        let f = test_field();
+        let lo = autotune(&f, 1e-3, 512, PaddingPolicy::ZERO, &[8],
+            TuneSettings { sample_pct: 2.0, iterations: 1, seed: 1 });
+        let hi = autotune(&f, 1e-3, 512, PaddingPolicy::ZERO, &[8],
+            TuneSettings { sample_pct: 50.0, iterations: 1, seed: 1 });
+        assert!(hi.sampled_blocks > lo.sampled_blocks);
+    }
+
+    #[test]
+    fn stability_metric_bounds() {
+        let f = test_field();
+        let runs: Vec<TuneResult> = (0..4)
+            .map(|s| {
+                autotune(&f, 1e-3, 512, PaddingPolicy::ZERO, &[8, 16],
+                    TuneSettings { sample_pct: 10.0, iterations: 1, seed: s })
+            })
+            .collect();
+        let s1 = top_k_stability(&runs, 1);
+        let s2 = top_k_stability(&runs, 2);
+        let s_all = top_k_stability(&runs, 8);
+        assert!((0.0..=1.0).contains(&s1));
+        assert!(s2 >= s1);
+        assert_eq!(s_all, 1.0);
+    }
+
+    #[test]
+    fn exhaustive_covers_grid() {
+        let f = test_field();
+        let pts = exhaustive_full(&f, 1e-3, 512, PaddingPolicy::ZERO, &[8], 1);
+        assert_eq!(pts.len(), 4);
+    }
+}

@@ -1,0 +1,170 @@
+//! Criterion-like benchmark harness (substrate — criterion is not in the
+//! vendored set).
+//!
+//! Measures a closure until a time budget or sample count is reached,
+//! reports mean/σ/min and MB/s, and renders aligned table rows — the
+//! format every `benches/*.rs` target and the figure harness use.
+
+use crate::util::timer::Timer;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub bytes: usize,
+}
+
+impl BenchStats {
+    pub fn mean_mb_s(&self) -> f64 {
+        self.bytes as f64 / 1e6 / self.mean_s.max(f64::MIN_POSITIVE)
+    }
+
+    pub fn best_mb_s(&self) -> f64 {
+        self.bytes as f64 / 1e6 / self.min_s.max(f64::MIN_POSITIVE)
+    }
+
+    /// σ of the MB/s estimate (first-order propagation).
+    pub fn std_mb_s(&self) -> f64 {
+        self.mean_mb_s() * (self.std_s / self.mean_s.max(f64::MIN_POSITIVE))
+    }
+
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>7} samples  {:>11.4} ms ±{:>8.4}  {:>10.1} MB/s",
+            self.name,
+            self.samples,
+            self.mean_s * 1e3,
+            self.std_s * 1e3,
+            self.mean_mb_s()
+        )
+    }
+}
+
+/// Harness settings.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup: usize,
+    pub min_samples: usize,
+    pub max_samples: usize,
+    pub budget_s: f64,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { warmup: 1, min_samples: 5, max_samples: 50, budget_s: 2.0 }
+    }
+}
+
+impl BenchOpts {
+    /// Fast settings for CI / `cargo test`.
+    pub fn quick() -> Self {
+        Self { warmup: 1, min_samples: 2, max_samples: 5, budget_s: 0.2 }
+    }
+
+    /// Honour `VECSZ_BENCH_QUICK=1` (used by `cargo bench` in CI).
+    pub fn from_env() -> Self {
+        if std::env::var("VECSZ_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Run `f` under the harness; `bytes` is the logical payload per call
+/// (throughput denominator).
+pub fn bench(name: &str, bytes: usize, opts: BenchOpts, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(opts.max_samples);
+    let budget = Timer::start();
+    loop {
+        let t = Timer::start();
+        f();
+        times.push(t.elapsed_s());
+        if times.len() >= opts.max_samples {
+            break;
+        }
+        if times.len() >= opts.min_samples && budget.elapsed_s() > opts.budget_s {
+            break;
+        }
+    }
+    let n = times.len() as f64;
+    let mean = times.iter().sum::<f64>() / n;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+    BenchStats {
+        name: name.to_string(),
+        samples: times.len(),
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: times.iter().copied().fold(f64::INFINITY, f64::min),
+        bytes,
+    }
+}
+
+/// Minimal CSV writer for results/ (figure harness output).
+pub struct CsvWriter {
+    path: std::path::PathBuf,
+    rows: Vec<String>,
+}
+
+impl CsvWriter {
+    pub fn new(path: impl Into<std::path::PathBuf>, header: &str) -> Self {
+        Self { path: path.into(), rows: vec![header.to_string()] }
+    }
+
+    pub fn row(&mut self, cols: &[String]) {
+        self.rows.push(cols.join(","));
+    }
+
+    pub fn finish(self) -> std::io::Result<std::path::PathBuf> {
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(&self.path, self.rows.join("\n") + "\n")?;
+        Ok(self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn harness_collects_samples_and_stats() {
+        let mut count = 0;
+        let s = bench("noop", 1_000_000, BenchOpts::quick(), || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert!(s.samples >= 2);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.min_s <= s.mean_s + 1e-12);
+        assert!(s.mean_mb_s() > 0.0);
+        assert!(s.row().contains("noop"));
+    }
+
+    #[test]
+    fn throughput_accounts_bytes() {
+        let s = bench("sleepy", 10_000_000, BenchOpts::quick(), || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        // 10 MB in >= 1ms -> <= 10 GB/s, >= 1 GB/s plausible band
+        assert!(s.mean_mb_s() < 11_000.0);
+    }
+
+    #[test]
+    fn csv_writer_roundtrip() {
+        let p = std::env::temp_dir().join("vecsz_csv_test/out.csv");
+        let mut w = CsvWriter::new(&p, "a,b");
+        w.row(&["1".into(), "2".into()]);
+        let path = w.finish().unwrap();
+        let txt = std::fs::read_to_string(path).unwrap();
+        assert_eq!(txt, "a,b\n1,2\n");
+    }
+}

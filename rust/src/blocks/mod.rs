@@ -1,0 +1,423 @@
+//! Block decomposition: fields ⇄ fixed-size compression blocks.
+//!
+//! SZ decomposes a field into `bs^d` blocks compressed independently
+//! (§II-B). Blocks that straddle the field boundary are padded with the
+//! block's padding scalar — matching the paper's vectorization strategy of
+//! computing on out-of-bounds lanes instead of branching per element
+//! (§III-C).
+//!
+//! [`HaloBlock`] is the kernel-facing layout: a `(bs+1)^d` buffer whose
+//! low-side halo planes hold the (pre-quantized) padding scalars, so the
+//! Lorenzo neighbour reads `[i-1]` never branch.
+
+/// Field dimensionality + shape. `shape[0..ndim]` are significant; unused
+/// trailing entries are 1 so `len()` is always the plain product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dims {
+    pub shape: [usize; 3],
+    pub ndim: usize,
+}
+
+impl Dims {
+    pub fn d1(n: usize) -> Self {
+        Self { shape: [n, 1, 1], ndim: 1 }
+    }
+    pub fn d2(rows: usize, cols: usize) -> Self {
+        Self { shape: [rows, cols, 1], ndim: 2 }
+    }
+    pub fn d3(planes: usize, rows: usize, cols: usize) -> Self {
+        Self { shape: [planes, rows, cols], ndim: 3 }
+    }
+
+    /// Total number of elements.
+    pub fn len(&self) -> usize {
+        self.shape[0] * self.shape[1] * self.shape[2]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocks along each axis for block size `bs` (ceil division).
+    pub fn block_grid(&self, bs: usize) -> [usize; 3] {
+        let mut g = [1usize; 3];
+        for a in 0..self.ndim {
+            g[a] = self.shape[a].div_ceil(bs);
+        }
+        g
+    }
+
+    /// Total number of blocks.
+    pub fn num_blocks(&self, bs: usize) -> usize {
+        let g = self.block_grid(bs);
+        g[0] * g[1] * g[2]
+    }
+
+    /// Linear block index -> block coordinates in the block grid.
+    pub fn block_coords(&self, bs: usize, b: usize) -> [usize; 3] {
+        let g = self.block_grid(bs);
+        match self.ndim {
+            1 => [b, 0, 0],
+            2 => [b / g[1], b % g[1], 0],
+            3 => [b / (g[1] * g[2]), (b / g[2]) % g[1], b % g[2]],
+            _ => unreachable!("ndim must be 1..=3"),
+        }
+    }
+
+    /// Row-major linear index of an element coordinate.
+    #[inline]
+    pub fn linear(&self, c: [usize; 3]) -> usize {
+        match self.ndim {
+            1 => c[0],
+            2 => c[0] * self.shape[1] + c[1],
+            3 => (c[0] * self.shape[1] + c[1]) * self.shape[2] + c[2],
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// Per-(ndim, bs) block geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockShape {
+    pub ndim: usize,
+    pub bs: usize,
+}
+
+impl BlockShape {
+    pub fn new(ndim: usize, bs: usize) -> Self {
+        assert!((1..=3).contains(&ndim), "ndim must be 1..=3");
+        assert!(bs >= 2, "block size must be >= 2");
+        Self { ndim, bs }
+    }
+
+    /// Elements per block.
+    pub fn elems(&self) -> usize {
+        self.bs.pow(self.ndim as u32)
+    }
+
+    /// Halo-buffer side length and total size.
+    pub fn halo_side(&self) -> usize {
+        self.bs + 1
+    }
+    pub fn halo_elems(&self) -> usize {
+        self.halo_side().pow(self.ndim as u32)
+    }
+}
+
+/// Gather block `b` of `field` into `out` (length `bs^d`, row-major within
+/// the block). Out-of-field elements are filled with `fill`.
+pub fn gather_block(field: &[f32], dims: &Dims, bs: usize, b: usize, fill: f32, out: &mut [f32]) {
+    let shape = BlockShape::new(dims.ndim, bs);
+    debug_assert_eq!(out.len(), shape.elems());
+    let bc = dims.block_coords(bs, b);
+    match dims.ndim {
+        1 => {
+            let base = bc[0] * bs;
+            let n = dims.shape[0];
+            let valid = n.saturating_sub(base).min(bs);
+            out[..valid].copy_from_slice(&field[base..base + valid]);
+            out[valid..].fill(fill);
+        }
+        2 => {
+            let (r0, c0) = (bc[0] * bs, bc[1] * bs);
+            let (nr, nc) = (dims.shape[0], dims.shape[1]);
+            for i in 0..bs {
+                let row = &mut out[i * bs..(i + 1) * bs];
+                let r = r0 + i;
+                if r >= nr {
+                    row.fill(fill);
+                    continue;
+                }
+                let valid = nc.saturating_sub(c0).min(bs);
+                let src = r * nc + c0;
+                row[..valid].copy_from_slice(&field[src..src + valid]);
+                row[valid..].fill(fill);
+            }
+        }
+        3 => {
+            let (p0, r0, c0) = (bc[0] * bs, bc[1] * bs, bc[2] * bs);
+            let (np, nr, nc) = (dims.shape[0], dims.shape[1], dims.shape[2]);
+            for k in 0..bs {
+                for i in 0..bs {
+                    let row = &mut out[(k * bs + i) * bs..(k * bs + i + 1) * bs];
+                    let (p, r) = (p0 + k, r0 + i);
+                    if p >= np || r >= nr {
+                        row.fill(fill);
+                        continue;
+                    }
+                    let valid = nc.saturating_sub(c0).min(bs);
+                    let src = (p * nr + r) * nc + c0;
+                    row[..valid].copy_from_slice(&field[src..src + valid]);
+                    row[valid..].fill(fill);
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Scatter block `b` back into `field`, skipping out-of-field elements.
+pub fn scatter_block(block: &[f32], dims: &Dims, bs: usize, b: usize, field: &mut [f32]) {
+    let bc = dims.block_coords(bs, b);
+    match dims.ndim {
+        1 => {
+            let base = bc[0] * bs;
+            let n = dims.shape[0];
+            let valid = n.saturating_sub(base).min(bs);
+            field[base..base + valid].copy_from_slice(&block[..valid]);
+        }
+        2 => {
+            let (r0, c0) = (bc[0] * bs, bc[1] * bs);
+            let (nr, nc) = (dims.shape[0], dims.shape[1]);
+            for i in 0..bs {
+                let r = r0 + i;
+                if r >= nr {
+                    break;
+                }
+                let valid = nc.saturating_sub(c0).min(bs);
+                let dst = r * nc + c0;
+                field[dst..dst + valid].copy_from_slice(&block[i * bs..i * bs + valid]);
+            }
+        }
+        3 => {
+            let (p0, r0, c0) = (bc[0] * bs, bc[1] * bs, bc[2] * bs);
+            let (np, nr, nc) = (dims.shape[0], dims.shape[1], dims.shape[2]);
+            for k in 0..bs {
+                let p = p0 + k;
+                if p >= np {
+                    break;
+                }
+                for i in 0..bs {
+                    let r = r0 + i;
+                    if r >= nr {
+                        break;
+                    }
+                    let valid = nc.saturating_sub(c0).min(bs);
+                    let dst = (p * nr + r) * nc + c0;
+                    field[dst..dst + valid]
+                        .copy_from_slice(&block[(k * bs + i) * bs..(k * bs + i) * bs + valid]);
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// `(bs+1)^d` working buffer whose low-side halo planes carry padding
+/// scalars; the interior holds the block payload. Neighbour reads in the
+/// Lorenzo predictor are then branch-free.
+pub struct HaloBlock {
+    pub buf: Vec<f32>,
+    pub shape: BlockShape,
+}
+
+impl HaloBlock {
+    pub fn new(shape: BlockShape) -> Self {
+        Self { buf: vec![0.0; shape.halo_elems()], shape }
+    }
+
+    /// Halo-buffer strides (row-major over side `bs+1`).
+    #[inline]
+    pub fn strides(&self) -> [usize; 3] {
+        let s = self.shape.halo_side();
+        match self.shape.ndim {
+            1 => [1, 0, 0],
+            2 => [s, 1, 0],
+            3 => [s * s, s, 1],
+            _ => unreachable!(),
+        }
+    }
+
+    /// Linear halo index of interior element coordinates (each +1 shifted).
+    #[inline]
+    pub fn interior_index(&self, c: [usize; 3]) -> usize {
+        let st = self.strides();
+        match self.shape.ndim {
+            1 => c[0] + 1,
+            2 => (c[0] + 1) * st[0] + (c[1] + 1),
+            3 => (c[0] + 1) * st[0] + (c[1] + 1) * st[1] + (c[2] + 1),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Fill every halo plane. `edge_pad(axis)` supplies the scalar for the
+    /// low-side plane orthogonal to `axis`; planes are written in ascending
+    /// axis order, so shared halo cells (corners/edges) take the scalar of
+    /// the **highest-numbered axis** — the decompressor uses the identical
+    /// rule, so prediction is reproducible.
+    pub fn fill_halo(&mut self, edge_pad: impl Fn(usize) -> f32) {
+        let side = self.shape.halo_side();
+        match self.shape.ndim {
+            1 => self.buf[0] = edge_pad(0),
+            2 => {
+                let p0 = edge_pad(0);
+                for j in 0..side {
+                    self.buf[j] = p0; // row 0
+                }
+                let p1 = edge_pad(1);
+                for i in 0..side {
+                    self.buf[i * side] = p1; // col 0
+                }
+            }
+            3 => {
+                let p0 = edge_pad(0);
+                for i in 0..side * side {
+                    self.buf[i] = p0; // plane k=0
+                }
+                let p1 = edge_pad(1);
+                for k in 0..side {
+                    for j in 0..side {
+                        self.buf[k * side * side + j] = p1; // row i=0 per plane
+                    }
+                }
+                let p2 = edge_pad(2);
+                for k in 0..side {
+                    for i in 0..side {
+                        self.buf[(k * side + i) * side] = p2; // col j=0
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Copy a gathered `bs^d` block into the interior, applying `f` to each
+    /// element (used to pre-quantize during the copy).
+    pub fn load_interior(&mut self, block: &[f32], f: impl Fn(f32) -> f32) {
+        let bs = self.shape.bs;
+        let side = self.shape.halo_side();
+        match self.shape.ndim {
+            1 => {
+                for i in 0..bs {
+                    self.buf[i + 1] = f(block[i]);
+                }
+            }
+            2 => {
+                for i in 0..bs {
+                    let src = &block[i * bs..(i + 1) * bs];
+                    let dst = (i + 1) * side + 1;
+                    for j in 0..bs {
+                        self.buf[dst + j] = f(src[j]);
+                    }
+                }
+            }
+            3 => {
+                for k in 0..bs {
+                    for i in 0..bs {
+                        let src = &block[(k * bs + i) * bs..(k * bs + i + 1) * bs];
+                        let dst = ((k + 1) * side + i + 1) * side + 1;
+                        for j in 0..bs {
+                            self.buf[dst + j] = f(src[j]);
+                        }
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn dims_basics() {
+        let d = Dims::d2(10, 7);
+        assert_eq!(d.len(), 70);
+        assert_eq!(d.block_grid(4), [3, 2, 1]);
+        assert_eq!(d.num_blocks(4), 6);
+        assert_eq!(d.block_coords(4, 5), [2, 1, 0]);
+        assert_eq!(d.linear([2, 3, 0]), 17);
+    }
+
+    #[test]
+    fn dims_3d_coords_roundtrip() {
+        let d = Dims::d3(5, 6, 7);
+        let bs = 4;
+        let g = d.block_grid(bs);
+        assert_eq!(g, [2, 2, 2]);
+        for b in 0..d.num_blocks(bs) {
+            let c = d.block_coords(bs, b);
+            let lin = (c[0] * g[1] + c[1]) * g[2] + c[2];
+            assert_eq!(lin, b);
+        }
+    }
+
+    #[test]
+    fn gather_exact_block() {
+        // 4x4 field, bs=2, block 3 = bottom-right
+        let field: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        let dims = Dims::d2(4, 4);
+        let mut out = [0.0f32; 4];
+        gather_block(&field, &dims, 2, 3, -1.0, &mut out);
+        assert_eq!(out, [10.0, 11.0, 14.0, 15.0]);
+    }
+
+    #[test]
+    fn gather_pads_boundary_blocks() {
+        // 3x3 field, bs=2 -> grid 2x2; block 3 covers only element (2,2)
+        let field: Vec<f32> = (0..9).map(|x| x as f32).collect();
+        let dims = Dims::d2(3, 3);
+        let mut out = [0.0f32; 4];
+        gather_block(&field, &dims, 2, 3, 99.0, &mut out);
+        assert_eq!(out, [8.0, 99.0, 99.0, 99.0]);
+    }
+
+    #[test]
+    fn prop_gather_scatter_identity() {
+        check("gather-scatter", 100, |g| {
+            let ndim = 1 + g.rng.bounded(3) as usize;
+            let bs = *g.choose(&[2usize, 3, 4, 8]);
+            let mut shape = [1usize; 3];
+            for a in shape.iter_mut().take(ndim) {
+                *a = 1 + g.rng.bounded(17) as usize;
+            }
+            let dims = Dims { shape, ndim };
+            let field = g.f32_vec(dims.len(), 10.0);
+            let mut rebuilt = vec![f32::NAN; dims.len()];
+            let mut block = vec![0.0f32; bs.pow(ndim as u32)];
+            for b in 0..dims.num_blocks(bs) {
+                gather_block(&field, &dims, bs, b, 0.0, &mut block);
+                scatter_block(&block, &dims, bs, b, &mut rebuilt);
+            }
+            if rebuilt == field {
+                Ok(())
+            } else {
+                Err(format!("mismatch ndim={ndim} bs={bs} shape={shape:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn halo_fill_and_interior_2d() {
+        let shape = BlockShape::new(2, 3);
+        let mut h = HaloBlock::new(shape);
+        h.fill_halo(|axis| if axis == 0 { 1.0 } else { 2.0 });
+        // corner (0,0) written by axis 1 last
+        assert_eq!(h.buf[0], 2.0);
+        assert_eq!(h.buf[1], 1.0); // row 0 body
+        assert_eq!(h.buf[4], 2.0); // col 0 body
+        let block = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        h.load_interior(&block, |x| x * 2.0);
+        assert_eq!(h.buf[h.interior_index([0, 0, 0])], 2.0);
+        assert_eq!(h.buf[h.interior_index([2, 2, 0])], 18.0);
+    }
+
+    #[test]
+    fn halo_fill_3d_precedence() {
+        let shape = BlockShape::new(3, 2);
+        let mut h = HaloBlock::new(shape);
+        h.fill_halo(|axis| axis as f32);
+        let side = shape.halo_side();
+        // cell (0,0,0): written by plane-0 (axis0), then row (axis1), then col (axis2)
+        assert_eq!(h.buf[0], 2.0);
+        // cell (0, 1, 1): only in plane k=0 -> axis 0 scalar
+        assert_eq!(h.buf[side + 1], 0.0);
+        // cell (1, 0, 1): row halo of plane 1 -> axis 1
+        assert_eq!(h.buf[side * side + 1], 1.0);
+        // cell (1, 1, 0): col halo -> axis 2
+        assert_eq!(h.buf[side * side + side], 2.0);
+    }
+}

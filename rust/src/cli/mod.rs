@@ -1,0 +1,166 @@
+//! Command-line argument parsing (substrate — clap is not in the vendored
+//! set).
+//!
+//! Grammar: `vecsz <subcommand> [--flag value] [--switch] [positional...]`.
+//! Flags may also be written `--flag=value`. Typed getters validate and
+//! produce `VszError::Config` with a helpful message.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Result, VszError};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Flags consumed by getters — unknown-flag detection.
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+/// Known boolean switches (no value).
+const SWITCHES: &[&str] = &["help", "quick", "full", "verbose", "no-lossless", "csv"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if SWITCHES.contains(&stripped) {
+                    a.switches.push(stripped.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| VszError::config(format!("--{stripped} needs a value")))?;
+                    a.flags.insert(stripped.to_string(), v.clone());
+                }
+            } else if a.subcommand.is_empty() {
+                a.subcommand = tok.clone();
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().push(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| VszError::config(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| VszError::config(format!("--{key}: '{v}' is not a number")))
+            }
+        }
+    }
+
+    /// List of comma-separated usizes.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| VszError::config(format!("--{key}: bad entry '{p}'")))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if flags were supplied that no getter asked about.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                return Err(VszError::config(format!("unknown flag --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let v: Vec<String> = s.split_whitespace().map(|x| x.to_string()).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_positionals() {
+        let a = parse("compress input.f32 --eb 1e-4 --dims 512x512 --quick out.vsz");
+        assert_eq!(a.subcommand, "compress");
+        assert_eq!(a.positional, vec!["input.f32", "out.vsz"]);
+        assert_eq!(a.get("eb"), Some("1e-4"));
+        assert_eq!(a.get("dims"), Some("512x512"));
+        assert!(a.has("quick"));
+        assert!(!a.has("full"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("bench --threads=8 --backend=vec16");
+        assert_eq!(a.usize_or("threads", 1).unwrap(), 8);
+        assert_eq!(a.str_or("backend", "psz"), "vec16");
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --threads abc");
+        assert!(a.usize_or("threads", 1).is_err());
+        let b = parse("x --eb zz");
+        assert!(b.f64_or("eb", 1.0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let v: Vec<String> = vec!["c".into(), "--eb".into()];
+        assert!(Args::parse(&v).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse("x --sizes 8,16,32");
+        assert_eq!(a.usize_list_or("sizes", &[]).unwrap(), vec![8, 16, 32]);
+        assert_eq!(parse("x").usize_list_or("sizes", &[64]).unwrap(), vec![64]);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("x --known 1 --mystery 2");
+        let _ = a.usize_or("known", 0);
+        assert!(a.reject_unknown().is_err());
+        let b = parse("x --known 1");
+        let _ = b.usize_or("known", 0);
+        assert!(b.reject_unknown().is_ok());
+    }
+}

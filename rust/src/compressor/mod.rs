@@ -1,0 +1,530 @@
+//! Public compression API: configuration, `compress`, `decompress`, and
+//! the per-run statistics the benchmarks report.
+//!
+//! `compress` runs the full SZ pipeline:
+//! gather blocks → P&Q backend (dual-quant or SZ-1.4) → Huffman codes →
+//! outlier streams (delta-varint positions + lossless values) → container.
+//!
+//! `decompress` reverses it; the block scan is sequential *within* a block
+//! (the cascading Lorenzo reverse) and parallel *across* blocks.
+
+use crate::bitio::{get_uvarint, put_uvarint};
+use crate::blocks::{gather_block, scatter_block, BlockShape, HaloBlock};
+use crate::coordinator::pool::parallel_chunks_mut;
+use crate::data::Field;
+use crate::error::{Result, VszError};
+use crate::format::{self, tag, Header, Section};
+use crate::huffman;
+use crate::lossless;
+use crate::metrics::{value_range, SizeStats};
+use crate::padding::{compute_scalars, PadScalars, PaddingPolicy};
+use crate::quant::decode::decode_block;
+use crate::quant::psz::PszBackend;
+use crate::quant::sz14::Sz14Backend;
+use crate::quant::vectorized::VecBackend;
+use crate::quant::{DqConfig, PqBackend, OUTLIER_CODE};
+use crate::util::timer::{mb_per_s, StageProfile, Timer};
+use crate::util::{bytes_to_f32, f32_as_bytes};
+
+/// How the error bound is specified.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EbMode {
+    /// Absolute bound.
+    Abs(f64),
+    /// Value-range-relative bound: eb = rel * (max - min).
+    Rel(f64),
+}
+
+impl EbMode {
+    pub fn resolve(&self, data: &[f32]) -> f64 {
+        match *self {
+            EbMode::Abs(e) => e,
+            EbMode::Rel(r) => r * value_range(data).max(f64::MIN_POSITIVE),
+        }
+    }
+}
+
+/// Which P&Q backend compresses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// SZ-1.4 baseline (Algorithm 1).
+    Sz14,
+    /// Serial dual-quant (Algorithm 2, scalar).
+    Psz,
+    /// Lane-chunked dual-quant — the vecSZ contribution.
+    Vec { width: usize },
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sz14" => Some(BackendChoice::Sz14),
+            "psz" => Some(BackendChoice::Psz),
+            "vec4" => Some(BackendChoice::Vec { width: 4 }),
+            "vec8" | "vec" => Some(BackendChoice::Vec { width: 8 }),
+            "vec16" => Some(BackendChoice::Vec { width: 16 }),
+            _ => None,
+        }
+    }
+
+    pub fn instantiate(&self) -> Box<dyn PqBackend> {
+        match *self {
+            BackendChoice::Sz14 => Box::new(Sz14Backend),
+            BackendChoice::Psz => Box::new(PszBackend),
+            BackendChoice::Vec { width } => Box::new(VecBackend::new(width)),
+        }
+    }
+}
+
+/// Full compression configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub eb: EbMode,
+    pub radius: u16,
+    /// Block size; 0 = per-dimension default (256 / 16 / 8, §III-D).
+    pub block_size: usize,
+    pub padding: PaddingPolicy,
+    pub backend: BackendChoice,
+    pub threads: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            eb: EbMode::Abs(1e-4),
+            radius: 512,
+            block_size: 0,
+            padding: PaddingPolicy::ZERO,
+            backend: BackendChoice::Vec { width: 8 },
+            threads: 1,
+        }
+    }
+}
+
+/// Traditional SZ block sizes per dimensionality (§III-D).
+pub fn default_block_size(ndim: usize) -> usize {
+    match ndim {
+        1 => 256,
+        2 => 16,
+        _ => 8,
+    }
+}
+
+/// Statistics of one compression run.
+#[derive(Clone, Debug)]
+pub struct CompressStats {
+    pub n_elements: usize,
+    pub n_blocks: usize,
+    pub n_outliers: usize,
+    pub eb: f64,
+    pub block_size: usize,
+    pub backend: String,
+    /// Wall time of the prediction+quantization stage only — the paper's
+    /// "P&Q bandwidth" numerator (input bytes / this).
+    pub pq_seconds: f64,
+    pub profile: StageProfile,
+    pub size: SizeStats,
+}
+
+impl CompressStats {
+    pub fn outlier_pct(&self) -> f64 {
+        100.0 * self.n_outliers as f64 / self.n_elements.max(1) as f64
+    }
+
+    pub fn pq_bandwidth_mbs(&self) -> f64 {
+        mb_per_s(self.n_elements * 4, self.pq_seconds)
+    }
+
+    pub fn total_bandwidth_mbs(&self) -> f64 {
+        mb_per_s(self.n_elements * 4, self.profile.total())
+    }
+}
+
+/// Run the P&Q stage only (no encoding) — the unit the paper benchmarks in
+/// Figs 3/5/8. Returns (codes, outv, pads, pq_seconds).
+pub fn pq_stage(
+    field: &Field,
+    cfg: &Config,
+    backend: &dyn PqBackend,
+) -> (Vec<u16>, Vec<f32>, PadScalars, f64) {
+    let bs = if cfg.block_size == 0 { default_block_size(field.dims.ndim) } else { cfg.block_size };
+    let shape = BlockShape::new(field.dims.ndim, bs);
+    let eb = cfg.eb.resolve(&field.data);
+    let dq = DqConfig::new(eb, cfg.radius, shape);
+    let nb = field.dims.num_blocks(bs);
+    let elems = shape.elems();
+    let pads = compute_scalars(&field.data, &field.dims, bs, cfg.padding);
+
+    let mut codes = vec![0u16; nb * elems];
+    let mut outv = vec![0.0f32; nb * elems];
+
+    let t = Timer::start();
+    // Parallel over contiguous block ranges; each worker gathers its own
+    // blocks and runs the backend on a batch (64 blocks per gather batch
+    // bounds the scratch buffer).
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    impl SendPtr {
+        fn get(&self) -> *mut f32 {
+            self.0
+        }
+    }
+    let outv_ptr = SendPtr(outv.as_mut_ptr());
+    let field_ref = &field.data;
+    let pads_ref = &pads;
+    parallel_chunks_mut(&mut codes, elems, cfg.threads, |_, item0, span| {
+        let n_my_blocks = span.len() / elems;
+        let mut batch = vec![0.0f32; 64 * elems];
+        let mut done = 0usize;
+        while done < n_my_blocks {
+            let take = (n_my_blocks - done).min(64);
+            let b0 = item0 + done;
+            for k in 0..take {
+                gather_block(
+                    field_ref,
+                    &field.dims,
+                    bs,
+                    b0 + k,
+                    pads_ref.block_scalar(b0 + k),
+                    &mut batch[k * elems..(k + 1) * elems],
+                );
+            }
+            // SAFETY: span covers blocks [item0, item0 + n_my_blocks); the
+            // matching outv region is disjoint between workers by the same
+            // split. Raw pointer used because parallel_chunks_mut owns the
+            // codes split only.
+            let my_outv = unsafe {
+                std::slice::from_raw_parts_mut(outv_ptr.get().add(b0 * elems), take * elems)
+            };
+            backend.run(
+                &dq,
+                &batch[..take * elems],
+                b0,
+                pads_ref,
+                &mut span[done * elems..(done + take) * elems],
+                my_outv,
+            );
+            done += take;
+        }
+    });
+    let pq_seconds = t.elapsed_s();
+    (codes, outv, pads, pq_seconds)
+}
+
+/// Compress one field to a `.vsz` container.
+pub fn compress(field: &Field, cfg: &Config) -> Result<(Vec<u8>, CompressStats)> {
+    if field.data.is_empty() {
+        return Err(VszError::config("empty field"));
+    }
+    let backend = cfg.backend.instantiate();
+    let bs = if cfg.block_size == 0 { default_block_size(field.dims.ndim) } else { cfg.block_size };
+    let eb = cfg.eb.resolve(&field.data);
+    let mut profile = StageProfile::new();
+
+    let (codes, outv, pads, pq_seconds) = pq_stage(field, cfg, backend.as_ref());
+    profile.add("pq", pq_seconds);
+
+    // --- outlier streams: delta-varint positions + f32 values ---
+    let mut t = Timer::start();
+    let mut pos_bytes = Vec::new();
+    let mut out_values: Vec<f32> = Vec::new();
+    let mut prev = 0u64;
+    let mut n_outliers = 0usize;
+    for (i, &c) in codes.iter().enumerate() {
+        if c == OUTLIER_CODE {
+            put_uvarint(&mut pos_bytes, i as u64 - prev);
+            prev = i as u64;
+            out_values.push(outv[i]);
+            n_outliers += 1;
+        }
+    }
+    profile.add("outlier-scan", t.lap_s());
+
+    // --- entropy coding ---
+    let codes_payload = huffman::compress_u16(&codes, 2 * cfg.radius as usize);
+    profile.add("huffman", t.lap_s());
+    let pos_payload = lossless::compress(&pos_bytes);
+    let val_payload = lossless::compress(f32_as_bytes(&out_values));
+    let pad_payload = lossless::compress(f32_as_bytes(&pads.scalars));
+    profile.add("lossless", t.lap_s());
+
+    let header = Header {
+        dims: field.dims,
+        codes_kind: backend.kind(),
+        eb,
+        radius: cfg.radius,
+        block_size: bs as u32,
+        padding: pads.policy,
+    };
+    let sections = vec![
+        Section { tag: tag::CODES, raw_len: (codes.len() * 2) as u64, payload: codes_payload },
+        Section { tag: tag::OUTLIER_POS, raw_len: pos_bytes.len() as u64, payload: pos_payload },
+        Section {
+            tag: tag::OUTLIER_VAL,
+            raw_len: (out_values.len() * 4) as u64,
+            payload: val_payload,
+        },
+        Section {
+            tag: tag::PAD_SCALARS,
+            raw_len: (pads.scalars.len() * 4) as u64,
+            payload: pad_payload,
+        },
+    ];
+    let bytes = format::write_container(&header, &sections);
+    profile.add("container", t.lap_s());
+
+    let stats = CompressStats {
+        n_elements: field.data.len(),
+        n_blocks: field.dims.num_blocks(bs),
+        n_outliers,
+        eb,
+        block_size: bs,
+        backend: backend.name(),
+        pq_seconds,
+        profile,
+        size: SizeStats { raw_bytes: field.data.len() * 4, compressed_bytes: bytes.len() },
+    };
+    Ok((bytes, stats))
+}
+
+/// Decompress a `.vsz` container.
+pub fn decompress(bytes: &[u8], threads: usize) -> Result<Field> {
+    let (header, sections) = format::read_container(bytes)?;
+    let dims = header.dims;
+    let bs = header.block_size as usize;
+    let shape = BlockShape::new(dims.ndim, bs);
+    let elems = shape.elems();
+    let nb = dims.num_blocks(bs);
+    let dq = DqConfig::new(header.eb, header.radius, shape);
+
+    // sections
+    let codes = huffman::decompress_u16(&format::find_section(&sections, tag::CODES)?.payload)?;
+    if codes.len() != nb * elems {
+        return Err(VszError::format("codes length mismatch"));
+    }
+    let pos_bytes = lossless::decompress(&format::find_section(&sections, tag::OUTLIER_POS)?.payload)?;
+    let val_bytes = lossless::decompress(&format::find_section(&sections, tag::OUTLIER_VAL)?.payload)?;
+    let out_values = bytes_to_f32(&val_bytes);
+    let pad_bytes = lossless::decompress(&format::find_section(&sections, tag::PAD_SCALARS)?.payload)?;
+    let pad_scalars = bytes_to_f32(&pad_bytes);
+    let pads = PadScalars { policy: header.padding, scalars: pad_scalars, ndim: dims.ndim };
+
+    // outlier expansion
+    let mut outv = vec![0.0f32; nb * elems];
+    {
+        let mut pos = 0usize;
+        let mut idx = 0u64;
+        for (k, v) in out_values.iter().enumerate() {
+            let (delta, n) = get_uvarint(&pos_bytes[pos..])
+                .ok_or_else(|| VszError::format("outlier positions truncated"))?;
+            pos += n;
+            idx = if k == 0 { delta } else { idx + delta };
+            *outv
+                .get_mut(idx as usize)
+                .ok_or_else(|| VszError::format("outlier position out of range"))? = *v;
+        }
+    }
+
+    // block-parallel reconstruction
+    let mut out_field = vec![0.0f32; dims.len()];
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    impl SendPtr {
+        fn get(&self) -> *mut f32 {
+            self.0
+        }
+    }
+    let fp = SendPtr(out_field.as_mut_ptr());
+    let codes_ref = &codes;
+    let outv_ref = &outv;
+    let pads_ref = &pads;
+    // Workers write to disjoint field regions because blocks partition the
+    // field; a shared &mut would alias at the slice level though, so each
+    // worker re-derives its region through the raw pointer.
+    let mut block_ids: Vec<usize> = (0..nb).collect();
+    parallel_chunks_mut(&mut block_ids, 1, threads, |_, _, my_blocks| {
+        let mut halo = HaloBlock::new(shape);
+        let mut rec = vec![0.0f32; elems];
+        // SAFETY: scatter_block writes only the elements of block b, and
+        // blocks are disjoint by construction.
+        let field_mut = unsafe { std::slice::from_raw_parts_mut(fp.get(), dims.len()) };
+        for &b in my_blocks.iter() {
+            decode_block(
+                header.codes_kind,
+                &dq,
+                &codes_ref[b * elems..(b + 1) * elems],
+                &outv_ref[b * elems..(b + 1) * elems],
+                pads_ref,
+                b,
+                &mut halo,
+                &mut rec,
+            );
+            scatter_block(&rec, &dims, bs, b, field_mut);
+        }
+    });
+
+    Ok(Field::new("decompressed", dims, out_field))
+}
+
+/// Compress + decompress + verify the bound in one call (CLI `verify`).
+pub fn verify_roundtrip(field: &Field, cfg: &Config) -> Result<(CompressStats, f64)> {
+    let (bytes, stats) = compress(field, cfg)?;
+    let rec = decompress(&bytes, cfg.threads)?;
+    let mut max_err = 0.0f64;
+    for (o, r) in field.data.iter().zip(&rec.data) {
+        max_err = max_err.max((*o as f64 - *r as f64).abs());
+    }
+    let tol = crate::metrics::roundtrip_tolerance(stats.eb, value_range(&field.data));
+    if max_err > tol {
+        return Err(VszError::Integrity(format!(
+            "error bound violated: max err {max_err:.3e} > eb {:.3e}",
+            stats.eb
+        )));
+    }
+    Ok((stats, max_err))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::Dims;
+    use crate::data::{suite, Scale};
+    use crate::padding::{PadGranularity, PadValue};
+    use crate::util::prng::Pcg32;
+
+    fn smooth_field(dims: Dims, seed: u64) -> Field {
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = 1.0f32;
+        let data: Vec<f32> = (0..dims.len())
+            .map(|_| {
+                x += (rng.next_f32() - 0.5) * 0.1;
+                x
+            })
+            .collect();
+        Field::new("t", dims, data)
+    }
+
+    fn roundtrip_max_err(field: &Field, cfg: &Config) -> (CompressStats, f64) {
+        let (bytes, stats) = compress(field, cfg).unwrap();
+        let rec = decompress(&bytes, cfg.threads).unwrap();
+        assert_eq!(rec.dims, field.dims);
+        let mut max_err = 0.0f64;
+        for (o, r) in field.data.iter().zip(&rec.data) {
+            max_err = max_err.max((*o as f64 - *r as f64).abs());
+        }
+        (stats, max_err)
+    }
+
+    #[test]
+    fn roundtrip_all_backends_all_dims() {
+        for dims in [Dims::d1(1000), Dims::d2(37, 41), Dims::d3(11, 13, 17)] {
+            let field = smooth_field(dims, 7);
+            for backend in [
+                BackendChoice::Psz,
+                BackendChoice::Vec { width: 8 },
+                BackendChoice::Vec { width: 16 },
+                BackendChoice::Sz14,
+            ] {
+                let cfg = Config { backend, eb: EbMode::Abs(1e-3), ..Config::default() };
+                let (stats, err) = roundtrip_max_err(&field, &cfg);
+                assert!(err <= 1e-3 + 1e-6, "{:?} {dims:?}: err {err}", backend);
+                assert!(stats.size.ratio() > 1.0, "no compression for {backend:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_with_threads_matches_serial() {
+        let field = smooth_field(Dims::d2(100, 100), 9);
+        let cfg1 = Config { threads: 1, ..Config::default() };
+        let cfg4 = Config { threads: 4, ..Config::default() };
+        let (b1, _) = compress(&field, &cfg1).unwrap();
+        let (b4, _) = compress(&field, &cfg4).unwrap();
+        assert_eq!(b1, b4, "threading must not change the bitstream");
+        let r4 = decompress(&b4, 4).unwrap();
+        let r1 = decompress(&b1, 1).unwrap();
+        assert_eq!(r1.data, r4.data);
+    }
+
+    #[test]
+    fn padding_policies_roundtrip() {
+        let field = smooth_field(Dims::d2(50, 60), 11);
+        for value in [PadValue::Zero, PadValue::Min, PadValue::Max, PadValue::Avg] {
+            for gran in [PadGranularity::Global, PadGranularity::Block, PadGranularity::Edge] {
+                let cfg = Config {
+                    padding: PaddingPolicy::new(value, gran),
+                    eb: EbMode::Abs(1e-3),
+                    ..Config::default()
+                };
+                let (_, err) = roundtrip_max_err(&field, &cfg);
+                assert!(err <= 1e-3 + 1e-6, "{value:?}/{gran:?}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_error_bound_resolves_to_range() {
+        let field = smooth_field(Dims::d1(5000), 13);
+        let range = value_range(&field.data);
+        let cfg = Config { eb: EbMode::Rel(1e-3), ..Config::default() };
+        let (stats, err) = roundtrip_max_err(&field, &cfg);
+        assert!((stats.eb - 1e-3 * range).abs() < 1e-12);
+        assert!(err as f64 <= stats.eb * 1.0001 + 1e-9);
+    }
+
+    #[test]
+    fn verify_roundtrip_api() {
+        let field = smooth_field(Dims::d3(8, 9, 10), 17);
+        let cfg = Config::default();
+        let (stats, err) = verify_roundtrip(&field, &cfg).unwrap();
+        assert!(err <= stats.eb * 1.0001);
+    }
+
+    #[test]
+    fn real_suite_field_compresses_well() {
+        let ds = suite("cesm", Scale::Small, 3).unwrap();
+        // shrink to keep the test fast: take the first field rows
+        let f = &ds.fields[0];
+        let sub_dims = Dims::d2(128, 256);
+        let mut sub = Vec::with_capacity(sub_dims.len());
+        for i in 0..128 {
+            sub.extend_from_slice(&f.data[i * f.dims.shape[1]..i * f.dims.shape[1] + 256]);
+        }
+        let field = Field::new("CLDHGH-sub", sub_dims, sub);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (stats, err) = roundtrip_max_err(&field, &cfg);
+        assert!(err <= 1e-3 + 1e-6);
+        assert!(stats.size.ratio() > 4.0, "smooth climate field should compress >4x, got {:.2}", stats.size.ratio());
+    }
+
+    #[test]
+    fn nonuniform_dims_with_partial_blocks() {
+        // dims deliberately not multiples of bs
+        let field = smooth_field(Dims::d2(33, 45), 19);
+        let cfg = Config { block_size: 16, ..Config::default() };
+        let (_, err) = roundtrip_max_err(&field, &cfg);
+        assert!(err <= 1e-4 + 1e-6);
+    }
+
+    #[test]
+    fn stats_are_coherent() {
+        let field = smooth_field(Dims::d1(4096), 23);
+        let (_, stats) = compress(&field, &Config::default()).unwrap();
+        assert_eq!(stats.n_elements, 4096);
+        assert_eq!(stats.n_blocks, 16);
+        assert!(stats.pq_seconds > 0.0);
+        assert!(stats.profile.total() >= stats.pq_seconds);
+        assert!(stats.outlier_pct() >= 0.0 && stats.outlier_pct() <= 100.0);
+    }
+
+    #[test]
+    fn corrupt_container_is_rejected() {
+        let field = smooth_field(Dims::d1(100), 29);
+        let (mut bytes, _) = compress(&field, &Config::default()).unwrap();
+        let n = bytes.len();
+        bytes[n - 2] ^= 0x55;
+        assert!(decompress(&bytes, 1).is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! Layer-3 coordination: thread pool / parallel-for (the paper's OpenMP
+//! analog) and the streaming compression pipeline (see `pipeline`).
+
+pub mod pipeline;
+pub mod pool;

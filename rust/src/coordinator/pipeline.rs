@@ -1,0 +1,288 @@
+//! Streaming compression pipeline — the Layer-3 coordinator proper.
+//!
+//! Scientific simulations emit one field-set per time-step; the pipeline
+//! overlaps production (I/O / simulation), compression (CPU-parallel) and
+//! the sink (storage) with bounded queues for backpressure, and autotunes
+//! the (block size × lane width) configuration on the first step, re-tuning
+//! every `retune_every` steps (§V-F: the winning configuration is stable
+//! across time-steps, so tuning amortizes).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+
+use crate::autotune::{autotune, TuneConfig, TuneSettings};
+use crate::compressor::{compress, BackendChoice, Config, CompressStats};
+use crate::data::Field;
+use crate::error::{Result, VszError};
+use crate::util::timer::Timer;
+
+/// Pipeline configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    pub base: Config,
+    /// Autotune on step 0 and every `retune_every` steps (0 = never tune).
+    pub retune_every: usize,
+    pub tune: TuneSettings,
+    /// Lane widths to consider (host capability).
+    pub widths: [usize; 2],
+    /// Bounded queue depth between stages (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            base: Config::default(),
+            retune_every: 16,
+            tune: TuneSettings::default(),
+            widths: [8, 16],
+            queue_depth: 2,
+        }
+    }
+}
+
+/// Per-time-step report.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    pub step: usize,
+    pub field_name: String,
+    pub stats: CompressStats,
+    pub tuned: Option<TuneConfig>,
+    pub tune_seconds: f64,
+    /// Seconds the compressor stage waited for input (pipeline bubble).
+    pub stall_seconds: f64,
+}
+
+/// Output of a pipeline run.
+#[derive(Debug, Default)]
+pub struct PipelineReport {
+    pub steps: Vec<StepReport>,
+    pub total_seconds: f64,
+}
+
+impl PipelineReport {
+    pub fn total_raw_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.stats.size.raw_bytes).sum()
+    }
+    pub fn total_compressed_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.stats.size.compressed_bytes).sum()
+    }
+    pub fn overall_ratio(&self) -> f64 {
+        self.total_raw_bytes() as f64 / self.total_compressed_bytes().max(1) as f64
+    }
+    pub fn mean_pq_mbs(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.stats.pq_bandwidth_mbs()).sum::<f64>()
+            / self.steps.len() as f64
+    }
+    pub fn tune_overhead_pct(&self) -> f64 {
+        let tune: f64 = self.steps.iter().map(|s| s.tune_seconds).sum();
+        100.0 * tune / self.total_seconds.max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Run the pipeline over a producer of time-step fields, handing each
+/// compressed container to `sink`.
+///
+/// The producer runs on its own thread; the bounded channel gives the
+/// paper-style backpressure (a slow sink throttles production instead of
+/// buffering unboundedly).
+pub fn run_stream(
+    producer: impl FnMut(usize) -> Option<Field> + Send + 'static,
+    cfg: PipelineConfig,
+    mut sink: impl FnMut(usize, Vec<u8>) -> Result<()>,
+) -> Result<PipelineReport> {
+    let t_total = Timer::start();
+    let rx = spawn_producer(producer, cfg.queue_depth);
+
+    let mut report = PipelineReport::default();
+    let mut current: Option<TuneConfig> = None;
+    let mut step = 0usize;
+    loop {
+        let t_wait = Timer::start();
+        let field = match rx.recv() {
+            Ok(Some(f)) => f,
+            Ok(None) | Err(_) => break,
+        };
+        let stall_seconds = t_wait.elapsed_s();
+
+        // resolve eb once per field for tuning purposes
+        let eb = cfg.base.eb.resolve(&field.data);
+        let mut tuned = None;
+        let mut tune_seconds = 0.0;
+        let retune = cfg.retune_every > 0
+            && (step % cfg.retune_every == 0 || current.is_none());
+        if retune {
+            let r = autotune(&field, eb, cfg.base.radius, cfg.base.padding, &cfg.widths, cfg.tune);
+            tune_seconds = r.tune_seconds;
+            tuned = Some(r.best);
+            current = Some(r.best);
+        }
+        let mut c = cfg.base;
+        if let Some(tc) = current {
+            c.block_size = tc.block_size;
+            c.backend = BackendChoice::Vec { width: tc.width };
+        }
+        let (bytes, stats) = compress(&field, &c)?;
+        sink(step, bytes)?;
+        report.steps.push(StepReport {
+            step,
+            field_name: field.name.clone(),
+            stats,
+            tuned,
+            tune_seconds,
+            stall_seconds,
+        });
+        step += 1;
+    }
+    report.total_seconds = t_total.elapsed_s();
+    Ok(report)
+}
+
+fn spawn_producer(
+    mut producer: impl FnMut(usize) -> Option<Field> + Send + 'static,
+    depth: usize,
+) -> Receiver<Option<Field>> {
+    let (tx, rx) = sync_channel::<Option<Field>>(depth.max(1));
+    std::thread::spawn(move || {
+        let mut i = 0usize;
+        loop {
+            let item = producer(i);
+            let done = item.is_none();
+            if tx.send(item).is_err() {
+                break; // consumer gone
+            }
+            if done {
+                break;
+            }
+            i += 1;
+        }
+    });
+    rx
+}
+
+/// Convenience: compress a whole dataset (all fields) as one "time-step"
+/// batch, returning per-field stats — the CLI `compress --suite` path.
+pub fn compress_dataset(
+    fields: &[Field],
+    cfg: &Config,
+) -> Result<Vec<(String, Vec<u8>, CompressStats)>> {
+    fields
+        .iter()
+        .map(|f| {
+            let (bytes, stats) = compress(f, cfg)?;
+            Ok((f.name.clone(), bytes, stats))
+        })
+        .collect::<Result<Vec<_>>>()
+        .map_err(|e: VszError| e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::Dims;
+    use crate::compressor::EbMode;
+    use crate::util::prng::Pcg32;
+
+    fn step_field(step: usize) -> Field {
+        // slowly-evolving time series: base field + step-dependent drift
+        let dims = Dims::d2(64, 64);
+        let mut rng = Pcg32::seeded(1234);
+        let mut x = 0.0f32;
+        let data: Vec<f32> = (0..dims.len())
+            .map(|_| {
+                x += (rng.next_f32() - 0.5) * 0.05;
+                x + step as f32 * 0.01
+            })
+            .collect();
+        Field::new(format!("ts{step}"), dims, data)
+    }
+
+    #[test]
+    fn pipeline_compresses_all_steps_in_order() {
+        let cfg = PipelineConfig {
+            base: Config { eb: EbMode::Abs(1e-3), ..Config::default() },
+            retune_every: 4,
+            tune: TuneSettings { sample_pct: 20.0, iterations: 1, seed: 2 },
+            widths: [8, 16],
+            queue_depth: 2,
+        };
+        let mut received = Vec::new();
+        let report = run_stream(
+            |i| if i < 6 { Some(step_field(i)) } else { None },
+            cfg,
+            |step, bytes| {
+                received.push((step, bytes.len()));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(report.steps.len(), 6);
+        assert_eq!(received.len(), 6);
+        assert!(received.windows(2).all(|w| w[0].0 + 1 == w[1].0), "in order");
+        // tuned at steps 0 and 4 only
+        assert!(report.steps[0].tuned.is_some());
+        assert!(report.steps[1].tuned.is_none());
+        assert!(report.steps[4].tuned.is_some());
+        assert!(report.overall_ratio() > 1.0);
+        assert!(report.tune_overhead_pct() < 100.0);
+    }
+
+    #[test]
+    fn pipeline_without_tuning_uses_base_config() {
+        let cfg = PipelineConfig { retune_every: 0, ..PipelineConfig::default() };
+        let report = run_stream(
+            |i| if i < 2 { Some(step_field(i)) } else { None },
+            cfg,
+            |_, _| Ok(()),
+        )
+        .unwrap();
+        assert!(report.steps.iter().all(|s| s.tuned.is_none()));
+    }
+
+    #[test]
+    fn sink_error_propagates() {
+        let cfg = PipelineConfig { retune_every: 0, ..PipelineConfig::default() };
+        let err = run_stream(
+            |i| if i < 3 { Some(step_field(i)) } else { None },
+            cfg,
+            |step, _| {
+                if step == 1 {
+                    Err(VszError::runtime("disk full"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn decompressed_steps_respect_bound() {
+        let cfg = PipelineConfig {
+            base: Config { eb: EbMode::Abs(1e-3), ..Config::default() },
+            retune_every: 1,
+            tune: TuneSettings { sample_pct: 10.0, iterations: 1, seed: 3 },
+            widths: [8, 16],
+            queue_depth: 1,
+        };
+        let mut blobs = Vec::new();
+        run_stream(
+            |i| if i < 2 { Some(step_field(i)) } else { None },
+            cfg,
+            |_, b| {
+                blobs.push(b);
+                Ok(())
+            },
+        )
+        .unwrap();
+        for (i, b) in blobs.iter().enumerate() {
+            let rec = crate::compressor::decompress(b, 1).unwrap();
+            let orig = step_field(i);
+            for (o, r) in orig.data.iter().zip(&rec.data) {
+                assert!((o - r).abs() <= 1e-3 + 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Thread pool + scoped parallel-for (substrate — the paper's OpenMP
+//! analog, §III-F).
+//!
+//! Two tools:
+//! * [`parallel_chunks_mut`] — scoped fork/join over disjoint mutable
+//!   chunks (the `#pragma omp parallel for` of the block loops). Thread
+//!   affinity: like the paper's `OMP_PLACES=cores / OMP_PROC_BIND=close`,
+//!   work is dealt in contiguous ranges so neighbouring blocks stay on the
+//!   same worker.
+//! * [`ThreadPool`] — a persistent pool with a shared injector queue for
+//!   the streaming coordinator (decode side, pipeline stages).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Scoped parallel iteration over `data` in `nthreads` contiguous spans.
+/// `f(span_index, start_item, items)` runs on its own thread (or inline for
+/// nthreads <= 1). Items are `chunk`-sized groups: `data.len()` must be a
+/// multiple of `chunk` except possibly the tail.
+pub fn parallel_chunks_mut<T: Send, R: Send>(
+    data: &mut [T],
+    chunk: usize,
+    nthreads: usize,
+    f: impl Fn(usize, usize, &mut [T]) -> R + Sync,
+) -> Vec<R> {
+    assert!(chunk > 0);
+    let n_items = data.len().div_ceil(chunk);
+    let nthreads = nthreads.max(1).min(n_items.max(1));
+    if nthreads <= 1 || n_items <= 1 {
+        return vec![f(0, 0, data)];
+    }
+    // contiguous item ranges per thread ("close" affinity analog)
+    let per = n_items.div_ceil(nthreads);
+    let mut results: Vec<Option<R>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut rest = data;
+        let mut item0 = 0usize;
+        let mut t = 0usize;
+        while !rest.is_empty() {
+            let take = (per * chunk).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let fref = &f;
+            let my_t = t;
+            let my_item0 = item0;
+            handles.push(s.spawn(move || fref(my_t, my_item0, head)));
+            item0 += take / chunk;
+            t += 1;
+        }
+        for h in handles {
+            results.push(Some(h.join().expect("worker panicked")));
+        }
+    });
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolShared {
+    queue: Mutex<std::collections::VecDeque<Job>>,
+    available: Condvar,
+    shutdown: Mutex<bool>,
+}
+
+/// Persistent worker pool with FIFO dispatch. Used by the streaming
+/// coordinator; block-parallel hot loops prefer [`parallel_chunks_mut`]
+/// (no queue overhead, contiguous ranges).
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(nthreads: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(std::collections::VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: Mutex::new(false),
+        });
+        let workers = (0..nthreads.max(1))
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let mut q = sh.queue.lock().unwrap();
+                        loop {
+                            if let Some(j) = q.pop_front() {
+                                break j;
+                            }
+                            if *sh.shutdown.lock().unwrap() {
+                                return;
+                            }
+                            q = sh.available.wait(q).unwrap();
+                        }
+                    };
+                    job();
+                })
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.shared.queue.lock().unwrap().push_back(Box::new(job));
+        self.shared.available.notify_one();
+    }
+
+    /// Submit `n` indexed jobs and wait for all of them.
+    pub fn scatter_gather<R: Send + 'static>(
+        &self,
+        n: usize,
+        f: impl Fn(usize) -> R + Send + Sync + 'static,
+    ) -> Vec<R> {
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        for i in 0..n {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.submit(move || {
+                let r = f(i);
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.expect("missing result")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_chunks_cover_everything_once() {
+        let mut data = vec![0u32; 1000];
+        parallel_chunks_mut(&mut data, 7, 4, |_, item0, span| {
+            for (k, v) in span.iter_mut().enumerate() {
+                *v += (item0 * 7 + k) as u32 + 1;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1, "at {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_single_thread_inline() {
+        let mut data = vec![1u8; 10];
+        let r = parallel_chunks_mut(&mut data, 3, 1, |t, _, span| (t, span.len()));
+        assert_eq!(r, vec![(0, 10)]);
+    }
+
+    #[test]
+    fn parallel_chunks_more_threads_than_items() {
+        let mut data = vec![0u8; 6];
+        let r = parallel_chunks_mut(&mut data, 3, 64, |t, _, span| (t, span.len()));
+        // 2 items, so at most 2 spans
+        assert!(r.len() <= 2);
+        assert_eq!(r.iter().map(|x| x.1).sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&counter);
+        let results = pool.scatter_gather(100, move |i| {
+            c.fetch_add(1, Ordering::SeqCst);
+            i * 2
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(results[17], 34);
+        assert_eq!(results.len(), 100);
+    }
+
+    #[test]
+    fn pool_shutdown_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| {});
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,89 @@
+//! Raw-binary field I/O (SDRBench's `.f32`/`.dat` convention: bare
+//! little-endian f32 streams, dimensions supplied out of band).
+
+use std::fs;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::blocks::Dims;
+use crate::data::Field;
+use crate::error::{Result, VszError};
+use crate::util::{bytes_to_f32, f32_as_bytes};
+
+/// Write a field's payload as bare little-endian f32.
+pub fn write_f32_file(path: &Path, data: &[f32]) -> Result<()> {
+    let mut f = fs::File::create(path)?;
+    f.write_all(f32_as_bytes(data))?;
+    Ok(())
+}
+
+/// Read a bare f32 file; length must match `dims`.
+pub fn read_f32_file(path: &Path, dims: Dims, name: &str) -> Result<Field> {
+    let mut f = fs::File::open(path)?;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    if bytes.len() != dims.len() * 4 {
+        return Err(VszError::format(format!(
+            "{}: file has {} bytes, dims {:?} need {}",
+            path.display(),
+            bytes.len(),
+            &dims.shape[..dims.ndim],
+            dims.len() * 4
+        )));
+    }
+    Ok(Field::new(name, dims, bytes_to_f32(&bytes)))
+}
+
+/// Parse "NxMxK" / "NxM" / "N" into [`Dims`].
+pub fn parse_dims(s: &str) -> Result<Dims> {
+    let parts: Vec<&str> = s.split('x').collect();
+    let mut vals = Vec::with_capacity(parts.len());
+    for p in &parts {
+        vals.push(
+            p.parse::<usize>()
+                .map_err(|_| VszError::config(format!("bad dimension '{p}' in '{s}'")))?,
+        );
+    }
+    match vals.len() {
+        1 => Ok(Dims::d1(vals[0])),
+        2 => Ok(Dims::d2(vals[0], vals[1])),
+        3 => Ok(Dims::d3(vals[0], vals[1], vals[2])),
+        n => Err(VszError::config(format!("{n} dimensions unsupported (1-3)"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_file() {
+        let dir = std::env::temp_dir().join("vecsz_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.f32");
+        let data = vec![1.0f32, -2.5, 3.25, 0.0];
+        write_f32_file(&p, &data).unwrap();
+        let f = read_f32_file(&p, Dims::d2(2, 2), "t").unwrap();
+        assert_eq!(f.data, data);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("vecsz_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("short.f32");
+        write_f32_file(&p, &[1.0, 2.0]).unwrap();
+        assert!(read_f32_file(&p, Dims::d1(3), "s").is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn dims_parsing() {
+        assert_eq!(parse_dims("100").unwrap(), Dims::d1(100));
+        assert_eq!(parse_dims("4x5").unwrap(), Dims::d2(4, 5));
+        assert_eq!(parse_dims("2x3x4").unwrap(), Dims::d3(2, 3, 4));
+        assert!(parse_dims("2x3x4x5").is_err());
+        assert!(parse_dims("abc").is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! Datasets: field representation, raw-binary I/O and the synthetic
+//! SDRBench-like suites (Table II substitution — see DESIGN.md).
+
+pub mod io;
+pub mod noise;
+pub mod synthetic;
+
+use crate::blocks::Dims;
+
+/// One scalar field of a dataset (the unit SZ compresses).
+#[derive(Clone, Debug)]
+pub struct Field {
+    pub name: String,
+    pub dims: Dims,
+    pub data: Vec<f32>,
+}
+
+impl Field {
+    pub fn new(name: impl Into<String>, dims: Dims, data: Vec<f32>) -> Self {
+        let f = Self { name: name.into(), dims, data };
+        assert_eq!(f.dims.len(), f.data.len(), "dims/data mismatch for {}", f.name);
+        f
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn size_mb(&self) -> f64 {
+        self.size_bytes() as f64 / 1e6
+    }
+}
+
+/// A named dataset = fields + the paper's error bound for it (§V-B: 1e-5
+/// for CESM-ATM, 1e-4 for the rest).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub fields: Vec<Field>,
+    pub default_eb: f64,
+}
+
+impl Dataset {
+    pub fn total_bytes(&self) -> usize {
+        self.fields.iter().map(|f| f.size_bytes()).sum()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.fields.first().map(|f| f.dims.ndim).unwrap_or(0)
+    }
+}
+
+/// The five suites of Table II.
+pub const SUITE_NAMES: [&str; 5] = ["hacc", "cesm", "hurricane", "nyx", "qmcpack"];
+
+/// Scale of a generated suite. `Small` targets the testbed (a few MB per
+/// field); `Full` reproduces the paper's Table II dimensions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Small,
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "small" => Some(Scale::Small),
+            "full" => Some(Scale::Full),
+            _ => None,
+        }
+    }
+}
+
+/// Generate a suite by name.
+pub fn suite(name: &str, scale: Scale, seed: u64) -> Option<Dataset> {
+    match name {
+        "hacc" => Some(synthetic::hacc(scale, seed)),
+        "cesm" => Some(synthetic::cesm(scale, seed)),
+        "hurricane" => Some(synthetic::hurricane(scale, seed)),
+        "nyx" => Some(synthetic::nyx(scale, seed)),
+        "qmcpack" => Some(synthetic::qmcpack(scale, seed)),
+        _ => None,
+    }
+}
+
+/// All suites (the Fig 3/5/8 workload set).
+pub fn all_suites(scale: Scale, seed: u64) -> Vec<Dataset> {
+    SUITE_NAMES.iter().map(|n| suite(n, scale, seed).unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_invariants() {
+        let f = Field::new("x", Dims::d2(4, 8), vec![0.0; 32]);
+        assert_eq!(f.size_bytes(), 128);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims/data mismatch")]
+    fn field_length_checked() {
+        Field::new("bad", Dims::d1(10), vec![0.0; 5]);
+    }
+
+    #[test]
+    fn suite_lookup() {
+        assert!(suite("cesm", Scale::Small, 1).is_some());
+        assert!(suite("nope", Scale::Small, 1).is_none());
+    }
+}

@@ -1,0 +1,103 @@
+//! Lattice value-noise (fractal/multi-octave) in 1/2/3 dimensions —
+//! substrate for the synthetic dataset generators.
+//!
+//! Deterministic: gradients come from hashing lattice coordinates with
+//! SplitMix64, so a (seed, coordinate) pair always yields the same value.
+//! Octave stacking gives the multi-scale smoothness of real scientific
+//! fields (climate/cosmology data are smooth at large scales with
+//! small-scale detail — exactly what Lorenzo prediction sees in SDRBench).
+
+use crate::util::prng::mix64;
+
+#[inline]
+fn lattice(seed: u64, c: [i64; 3]) -> f32 {
+    let h = mix64(
+        seed ^ (c[0] as u64).wrapping_mul(0x8DA6B343)
+            ^ (c[1] as u64).wrapping_mul(0xD8163841)
+            ^ (c[2] as u64).wrapping_mul(0xCB1AB31F),
+    );
+    // map to [-1, 1)
+    ((h >> 40) as f32) * (1.0 / (1u64 << 23) as f32) - 1.0
+}
+
+#[inline]
+fn smoothstep(t: f32) -> f32 {
+    t * t * (3.0 - 2.0 * t)
+}
+
+/// Single-octave trilinear value noise at continuous point `p` (unused
+/// dimensions pass 0.0).
+pub fn value_noise(seed: u64, p: [f32; 3]) -> f32 {
+    let cell = [p[0].floor(), p[1].floor(), p[2].floor()];
+    let f = [
+        smoothstep(p[0] - cell[0]),
+        smoothstep(p[1] - cell[1]),
+        smoothstep(p[2] - cell[2]),
+    ];
+    let c = [cell[0] as i64, cell[1] as i64, cell[2] as i64];
+    let mut acc = 0.0f32;
+    for corner in 0..8u32 {
+        let o = [(corner & 1) as i64, ((corner >> 1) & 1) as i64, ((corner >> 2) & 1) as i64];
+        let w = (0..3).map(|a| if o[a] == 1 { f[a] } else { 1.0 - f[a] }).product::<f32>();
+        acc += w * lattice(seed, [c[0] + o[0], c[1] + o[1], c[2] + o[2]]);
+    }
+    acc
+}
+
+/// Fractal (fBm) noise: `octaves` stacked value-noise layers, each at
+/// double frequency and `gain` amplitude of the previous.
+pub fn fbm(seed: u64, p: [f32; 3], octaves: u32, gain: f32) -> f32 {
+    let mut amp = 1.0f32;
+    let mut freq = 1.0f32;
+    let mut acc = 0.0f32;
+    let mut norm = 0.0f32;
+    for o in 0..octaves {
+        acc += amp * value_noise(seed.wrapping_add(o as u64 * 0x9E37), [p[0] * freq, p[1] * freq, p[2] * freq]);
+        norm += amp;
+        amp *= gain;
+        freq *= 2.0;
+    }
+    acc / norm.max(f32::MIN_POSITIVE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = value_noise(7, [1.3, 2.7, 0.0]);
+        let b = value_noise(7, [1.3, 2.7, 0.0]);
+        assert_eq!(a, b);
+        assert_ne!(a, value_noise(8, [1.3, 2.7, 0.0]));
+    }
+
+    #[test]
+    fn bounded_output() {
+        for i in 0..1000 {
+            let p = [i as f32 * 0.173, i as f32 * 0.311, i as f32 * 0.057];
+            let v = fbm(3, p, 5, 0.5);
+            assert!(v.abs() <= 1.5, "fbm out of expected envelope: {v}");
+        }
+    }
+
+    #[test]
+    fn continuity_small_steps_small_changes() {
+        // value noise must be continuous: eps steps move the value by O(eps)
+        let mut prev = value_noise(11, [0.0, 0.5, 0.25]);
+        for i in 1..=1000 {
+            let x = i as f32 * 1e-3;
+            let cur = value_noise(11, [x, 0.5, 0.25]);
+            assert!((cur - prev).abs() < 0.05, "jump at {x}: {prev} -> {cur}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn lattice_agrees_at_integer_points() {
+        // at integer coordinates the interpolation collapses to the lattice value
+        let v = value_noise(5, [3.0, 4.0, 5.0]);
+        let l = lattice(5, [3, 4, 5]);
+        assert!((v - l).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,331 @@
+//! Synthetic SDRBench-like suites (Table II substitution).
+//!
+//! We do not have the proprietary SDRBench downloads in this environment,
+//! so each suite is generated to match the *character that drives
+//! prediction/quantization behaviour* of its namesake: dimensionality,
+//! value range, large-scale smoothness vs small-scale roughness, zero
+//! fraction and outlier structure (see DESIGN.md §Substitutions):
+//!
+//! * **HACC** (1D particles): positions = sorted cluster centres + jitter
+//!   (piecewise-smooth as a stream); velocities = Gaussian mixtures.
+//! * **CESM-ATM** (2D climate): cloud fraction in [0,1] with flat zero
+//!   decks + fronts; TS-like field offset ~270 K (the non-zero-centred
+//!   field of Fig 2 that motivates alternative padding).
+//! * **Hurricane** (3D climate): vortex wind field + smooth thermodynamic
+//!   fields.
+//! * **NYX** (3D cosmology): log-normal baryon density (heavy tailed!),
+//!   smooth temperature, filamentary velocity.
+//! * **QMCPACK** (3D quantum): oscillatory orbitals under a Gaussian
+//!   envelope.
+
+use super::{noise::fbm, Dataset, Field, Scale};
+use crate::blocks::Dims;
+use crate::util::prng::Pcg32;
+
+fn scaled(scale: Scale, small: [usize; 3], full: [usize; 3], ndim: usize) -> Dims {
+    let s = match scale {
+        Scale::Small => small,
+        Scale::Full => full,
+    };
+    Dims { shape: s, ndim }
+}
+
+/// HACC-like 1D particle suite: 6 fields (xx, yy, zz, vx, vy, vz).
+pub fn hacc(scale: Scale, seed: u64) -> Dataset {
+    let n = match scale {
+        Scale::Small => 1 << 21,      // 2 Mi particles, 8 MB/field
+        Scale::Full => 280_953_867,   // Table II
+    };
+    let dims = Dims::d1(n);
+    let box_size = 256.0f32;
+    let n_clusters = (n / 4096).max(8);
+
+    let mut fields = Vec::new();
+    for (fi, name) in ["xx", "yy", "zz"].iter().enumerate() {
+        let mut r = Pcg32::seeded(seed.wrapping_add(fi as u64));
+        // cluster centres; particles appear cluster-by-cluster (as HACC's
+        // rank-ordered output does), giving a piecewise-clustered stream.
+        let centres: Vec<f32> = (0..n_clusters).map(|_| r.next_f32() * box_size).collect();
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            let c = centres[(i * n_clusters) / n];
+            let jitter = r.next_normal() * 2.5;
+            data.push((c + jitter).rem_euclid(box_size));
+        }
+        fields.push(Field::new(*name, dims, data));
+    }
+    for (fi, name) in ["vx", "vy", "vz"].iter().enumerate() {
+        let mut r = Pcg32::seeded(seed.wrapping_add(100 + fi as u64));
+        // Gaussian mixture: bulk flow per cluster + thermal spread
+        let flows: Vec<f32> = (0..n_clusters).map(|_| r.next_normal() * 300.0).collect();
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            let f = flows[(i * n_clusters) / n];
+            data.push(f + r.next_normal() * 120.0);
+        }
+        fields.push(Field::new(*name, dims, data));
+    }
+    Dataset { name: "hacc".into(), fields, default_eb: 1e-4 }
+}
+
+/// CESM-ATM-like 2D climate suite: 3 fields.
+pub fn cesm(scale: Scale, seed: u64) -> Dataset {
+    let dims = scaled(scale, [900, 1800, 1], [1800, 3600, 1], 2);
+    let (nr, nc) = (dims.shape[0], dims.shape[1]);
+    let mut fields = Vec::new();
+
+    // CLDHGH: cloud fraction in [0, 1]; decks (plateaus at 0/1) + fronts.
+    {
+        let mut data = Vec::with_capacity(nr * nc);
+        for i in 0..nr {
+            for j in 0..nc {
+                let p = [j as f32 / nc as f32 * 24.0, i as f32 / nr as f32 * 12.0, 0.0];
+                let v = fbm(seed ^ 0xC1D, p, 5, 0.55) * 1.4 + 0.3;
+                data.push(v.clamp(0.0, 1.0));
+            }
+        }
+        fields.push(Field::new("CLDHGH", dims, data));
+    }
+    // TS: surface temperature, 230–310 K — the offset field of Fig 2.
+    {
+        let mut data = Vec::with_capacity(nr * nc);
+        for i in 0..nr {
+            for j in 0..nc {
+                let lat = (i as f32 / nr as f32 - 0.5) * std::f32::consts::PI;
+                let base = 287.0 - 55.0 * lat.sin().powi(2);
+                let p = [j as f32 / nc as f32 * 16.0, i as f32 / nr as f32 * 8.0, 0.0];
+                data.push(base + 8.0 * fbm(seed ^ 0x75, p, 4, 0.5));
+            }
+        }
+        fields.push(Field::new("TS", dims, data));
+    }
+    // FSNTOA: net solar flux, 0–420 with sharp cloud shadows.
+    {
+        let mut data = Vec::with_capacity(nr * nc);
+        for i in 0..nr {
+            for j in 0..nc {
+                let lat = (i as f32 / nr as f32 - 0.5) * std::f32::consts::PI;
+                let insol = 340.0 * lat.cos().max(0.0);
+                let p = [j as f32 / nc as f32 * 24.0, i as f32 / nr as f32 * 12.0, 0.0];
+                let cloud = (fbm(seed ^ 0xF50, p, 5, 0.55) * 1.4 + 0.3).clamp(0.0, 1.0);
+                data.push(insol * (1.0 - 0.7 * cloud));
+            }
+        }
+        fields.push(Field::new("FSNTOA", dims, data));
+    }
+    Dataset { name: "cesm".into(), fields, default_eb: 1e-5 }
+}
+
+/// Hurricane-Isabel-like 3D suite: wind speed (vortex), temperature,
+/// pressure.
+pub fn hurricane(scale: Scale, seed: u64) -> Dataset {
+    let dims = scaled(scale, [25, 250, 250], [100, 500, 500], 3);
+    let (np, nr, nc) = (dims.shape[0], dims.shape[1], dims.shape[2]);
+    let mut fields = Vec::new();
+    let eye = (nr as f32 * 0.5, nc as f32 * 0.55);
+
+    // Uf: tangential wind of a vortex + turbulence.
+    {
+        let mut data = Vec::with_capacity(np * nr * nc);
+        for k in 0..np {
+            let height = k as f32 / np as f32;
+            for i in 0..nr {
+                for j in 0..nc {
+                    let dy = i as f32 - eye.0;
+                    let dx = j as f32 - eye.1;
+                    let r = (dx * dx + dy * dy).sqrt() + 4.0;
+                    // Rankine-like vortex profile
+                    let vmax = 65.0 * (1.0 - 0.6 * height);
+                    let rm = 22.0;
+                    let vt = if r < rm { vmax * r / rm } else { vmax * (rm / r).powf(0.6) };
+                    let swirl = -dy / r * vt;
+                    let p = [j as f32 / 24.0, i as f32 / 24.0, k as f32 / 6.0];
+                    data.push(swirl + 6.0 * fbm(seed ^ 0x0F, p, 4, 0.5));
+                }
+            }
+        }
+        fields.push(Field::new("Uf", dims, data));
+    }
+    // TCf: temperature, decreasing with height, warm core.
+    {
+        let mut data = Vec::with_capacity(np * nr * nc);
+        for k in 0..np {
+            let lapse = 25.0 - 70.0 * (k as f32 / np as f32);
+            for i in 0..nr {
+                for j in 0..nc {
+                    let dy = i as f32 - eye.0;
+                    let dx = j as f32 - eye.1;
+                    let r2 = dx * dx + dy * dy;
+                    let core = 6.0 * (-r2 / 800.0).exp();
+                    let p = [j as f32 / 32.0, i as f32 / 32.0, k as f32 / 8.0];
+                    data.push(lapse + core + 1.5 * fbm(seed ^ 0x7C, p, 4, 0.5));
+                }
+            }
+        }
+        fields.push(Field::new("TCf", dims, data));
+    }
+    // Pf: pressure perturbation — very smooth, low at the eye.
+    {
+        let mut data = Vec::with_capacity(np * nr * nc);
+        for k in 0..np {
+            for i in 0..nr {
+                for j in 0..nc {
+                    let dy = i as f32 - eye.0;
+                    let dx = j as f32 - eye.1;
+                    let r2 = dx * dx + dy * dy;
+                    let dip = -4500.0 * (-r2 / 3000.0).exp() * (1.0 - k as f32 / np as f32);
+                    let p = [j as f32 / 64.0, i as f32 / 64.0, k as f32 / 12.0];
+                    data.push(dip + 300.0 * fbm(seed ^ 0x9F, p, 3, 0.5));
+                }
+            }
+        }
+        fields.push(Field::new("Pf", dims, data));
+    }
+    Dataset { name: "hurricane".into(), fields, default_eb: 1e-4 }
+}
+
+/// NYX-like 3D cosmology suite.
+pub fn nyx(scale: Scale, seed: u64) -> Dataset {
+    let dims = scaled(scale, [96, 96, 96], [512, 512, 512], 3);
+    let (np, nr, nc) = (dims.shape[0], dims.shape[1], dims.shape[2]);
+    let mut fields = Vec::new();
+
+    // baryon_density: exp of a smooth Gaussian field -> log-normal with
+    // heavy tails (the hardest SDRBench field for SZ).
+    {
+        let mut data = Vec::with_capacity(np * nr * nc);
+        for k in 0..np {
+            for i in 0..nr {
+                for j in 0..nc {
+                    let p = [j as f32 / 12.0, i as f32 / 12.0, k as f32 / 12.0];
+                    let g = fbm(seed ^ 0xBA, p, 5, 0.6);
+                    data.push((3.2 * g).exp() * 1.2e8);
+                }
+            }
+        }
+        fields.push(Field::new("baryon_density", dims, data));
+    }
+    // temperature: smooth, correlated with density.
+    {
+        let mut data = Vec::with_capacity(np * nr * nc);
+        for k in 0..np {
+            for i in 0..nr {
+                for j in 0..nc {
+                    let p = [j as f32 / 12.0, i as f32 / 12.0, k as f32 / 12.0];
+                    let g = fbm(seed ^ 0xBA, p, 4, 0.55);
+                    data.push(1.0e4 * (1.0 + 1.5 * g).max(0.05));
+                }
+            }
+        }
+        fields.push(Field::new("temperature", dims, data));
+    }
+    // velocity_x: large-scale flows.
+    {
+        let mut data = Vec::with_capacity(np * nr * nc);
+        for k in 0..np {
+            for i in 0..nr {
+                for j in 0..nc {
+                    let p = [j as f32 / 20.0, i as f32 / 20.0, k as f32 / 20.0];
+                    data.push(3.0e7 * fbm(seed ^ 0x7E, p, 4, 0.5));
+                }
+            }
+        }
+        fields.push(Field::new("velocity_x", dims, data));
+    }
+    Dataset { name: "nyx".into(), fields, default_eb: 1e-4 }
+}
+
+/// QMCPACK-like 3D suite: oscillatory einspline orbitals.
+pub fn qmcpack(scale: Scale, seed: u64) -> Dataset {
+    // full-scale note: the real layout is 288x115x69x69 (4D, Table II); we
+    // fold the two trailing spatial axes (69*69 = 4761) to stay 3D, which
+    // preserves the per-orbital oscillatory structure the predictor sees.
+    let dims = scaled(scale, [64, 69, 69], [288, 115, 4761], 3);
+    let (np, nr, nc) = (dims.shape[0], dims.shape[1], dims.shape[2]);
+    let mut fields = Vec::new();
+    for (fi, name) in ["einspline_real", "einspline_imag"].iter().enumerate() {
+        let phase0 = if fi == 0 { 0.0 } else { std::f32::consts::FRAC_PI_2 };
+        let mut data = Vec::with_capacity(np * nr * nc);
+        for k in 0..np {
+            for i in 0..nr {
+                for j in 0..nc {
+                    let (x, y, z) =
+                        (j as f32 / nc as f32, i as f32 / nr as f32, k as f32 / np as f32);
+                    // plane-wave-like oscillation under a soft envelope
+                    let osc = (14.0 * x + 9.0 * y + 6.0 * z + phase0).sin()
+                        * (11.0 * y - 4.0 * x).cos();
+                    let env = (-((x - 0.5).powi(2) + (y - 0.5).powi(2) + (z - 0.5).powi(2)) * 4.0)
+                        .exp();
+                    let p = [x * 30.0, y * 30.0, z * 30.0];
+                    data.push(osc * env + 0.02 * fbm(seed ^ 0x0AC, p, 3, 0.5));
+                }
+            }
+        }
+        fields.push(Field::new(*name, dims, data));
+    }
+    Dataset { name: "qmcpack".into(), fields, default_eb: 1e-4 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_have_expected_shapes_small() {
+        let h = hacc(Scale::Small, 1);
+        assert_eq!(h.fields.len(), 6);
+        assert_eq!(h.fields[0].dims.ndim, 1);
+        let c = cesm(Scale::Small, 1);
+        assert_eq!(c.fields.len(), 3);
+        assert_eq!(c.fields[0].dims.ndim, 2);
+        for d in [hurricane(Scale::Small, 1), nyx(Scale::Small, 1), qmcpack(Scale::Small, 1)] {
+            assert_eq!(d.ndim(), 3, "{}", d.name);
+            assert!(!d.fields.is_empty());
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = cesm(Scale::Small, 7);
+        let b = cesm(Scale::Small, 7);
+        assert_eq!(a.fields[0].data[..100], b.fields[0].data[..100]);
+        let c = cesm(Scale::Small, 8);
+        assert_ne!(a.fields[0].data[..100], c.fields[0].data[..100]);
+    }
+
+    #[test]
+    fn cesm_cloud_fraction_in_unit_interval() {
+        let d = cesm(Scale::Small, 3);
+        let cld = &d.fields[0];
+        assert!(cld.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // decks: a meaningful share of exact 0/1 plateaus
+        let flat = cld.data.iter().filter(|&&v| v == 0.0 || v == 1.0).count();
+        assert!(flat > cld.data.len() / 50, "flat fraction {}", flat);
+    }
+
+    #[test]
+    fn cesm_ts_is_offset_like_fig2() {
+        let d = cesm(Scale::Small, 3);
+        let ts = &d.fields[1];
+        let mean = ts.data.iter().map(|&x| x as f64).sum::<f64>() / ts.data.len() as f64;
+        assert!(mean > 200.0, "TS mean {mean} should be far from zero");
+    }
+
+    #[test]
+    fn nyx_density_heavy_tailed() {
+        let d = nyx(Scale::Small, 5);
+        let rho = &d.fields[0];
+        let mean = rho.data.iter().map(|&x| x as f64).sum::<f64>() / rho.data.len() as f64;
+        let max = rho.data.iter().copied().fold(0.0f32, f32::max) as f64;
+        assert!(max / mean > 10.0, "log-normal tail expected: max/mean {}", max / mean);
+        assert!(rho.data.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn hacc_positions_within_box() {
+        let d = hacc(Scale::Small, 2);
+        for f in &d.fields[..3] {
+            assert!(f.data.iter().all(|&x| (0.0..=256.0).contains(&x)), "{}", f.name);
+        }
+    }
+}

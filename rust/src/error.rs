@@ -1,0 +1,73 @@
+//! Error type shared across the vecSZ crate.
+//!
+//! A single lightweight enum instead of an external error-handling crate:
+//! every layer (container parsing, PJRT runtime, CLI) maps into it so public
+//! APIs expose one `vecsz::Result<T>`.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, VszError>;
+
+/// Unified error for all vecSZ operations.
+#[derive(Debug)]
+pub enum VszError {
+    /// Malformed or truncated `.vsz` container / artifact manifest.
+    Format(String),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+    /// Invalid user configuration (CLI flags, config file, API misuse).
+    Config(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Data integrity check failed (checksum, error-bound verification).
+    Integrity(String),
+}
+
+impl fmt::Display for VszError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VszError::Format(m) => write!(f, "format error: {m}"),
+            VszError::Io(e) => write!(f, "io error: {e}"),
+            VszError::Config(m) => write!(f, "config error: {m}"),
+            VszError::Runtime(m) => write!(f, "runtime error: {m}"),
+            VszError::Integrity(m) => write!(f, "integrity error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for VszError {}
+
+impl From<std::io::Error> for VszError {
+    fn from(e: std::io::Error) -> Self {
+        VszError::Io(e)
+    }
+}
+
+impl VszError {
+    /// Shorthand constructor for format errors.
+    pub fn format(msg: impl Into<String>) -> Self {
+        VszError::Format(msg.into())
+    }
+    /// Shorthand constructor for config errors.
+    pub fn config(msg: impl Into<String>) -> Self {
+        VszError::Config(msg.into())
+    }
+    /// Shorthand constructor for runtime errors.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        VszError::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        assert!(VszError::format("bad magic").to_string().contains("bad magic"));
+        assert!(VszError::config("x").to_string().starts_with("config"));
+        let io: VszError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("gone"));
+    }
+}

@@ -1,0 +1,742 @@
+//! Figure/table harness: regenerates every table and figure of the paper's
+//! evaluation section (§V) on this testbed. Each generator prints the
+//! series the paper plots and writes `results/<id>.csv`.
+//!
+//! See DESIGN.md §3 for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured records (including the documented substitutions: one
+//! host models the paper's two CPUs as lane-width configs; thread scaling
+//! beyond this host's cores is reported from the calibrated Amdahl model
+//! next to the measured points).
+
+use std::sync::OnceLock;
+
+use crate::autotune::{autotune, exhaustive_full, top_k_stability, TuneSettings};
+use crate::bench::{bench, BenchOpts, CsvWriter};
+use crate::blocks::Dims;
+use crate::compressor::{compress, pq_stage, BackendChoice, Config, EbMode};
+use crate::data::{all_suites, Field, Scale};
+use crate::error::Result;
+use crate::metrics::distortion;
+use crate::padding::{study_policies, PadGranularity, PadValue, PaddingPolicy};
+use crate::roofline::{
+    dualquant_gflops, evaluate, host_info, measure_ceilings, oi_model, Ceilings,
+};
+
+/// The two "machines" of the paper, modeled as lane-width configs on this
+/// host (see DESIGN.md §Substitutions).
+#[derive(Clone, Copy, Debug)]
+pub struct CpuModel {
+    pub name: &'static str,
+    pub widths: &'static [usize],
+    /// Paper-testbed core counts for the scaling model (Fig 8/9).
+    pub physical_cores: usize,
+    pub hw_threads: usize,
+}
+
+pub const ROME_CLASS: CpuModel =
+    CpuModel { name: "rome-class(w8)", widths: &[8], physical_cores: 32, hw_threads: 64 };
+pub const GOLD_CLASS: CpuModel =
+    CpuModel { name: "gold-class(w16)", widths: &[8, 16], physical_cores: 16, hw_threads: 64 };
+
+/// Representative field per suite (first field), subsampled in quick mode.
+fn field_set(quick: bool) -> &'static Vec<(String, Field, f64)> {
+    static CACHE: OnceLock<Vec<(String, Field, f64)>> = OnceLock::new();
+    static CACHE_QUICK: OnceLock<Vec<(String, Field, f64)>> = OnceLock::new();
+    let cell = if quick { &CACHE_QUICK } else { &CACHE };
+    cell.get_or_init(|| {
+        all_suites(Scale::Small, 0xDA7A)
+            .into_iter()
+            .map(|ds| {
+                let mut f = ds.fields.into_iter().next().unwrap();
+                if quick {
+                    f = subsample(&f, 1 << 18);
+                }
+                // paper §V-B: absolute eb 1e-5 for CESM, 1e-4 elsewhere —
+                // as value-range-relative equivalents for our synthetic
+                // ranges (documented substitution).
+                let eb = ds.default_eb;
+                (ds.name, f, eb)
+            })
+            .collect()
+    })
+}
+
+/// Prefix-slice a field, preserving dimensionality.
+pub fn subsample(field: &Field, max_elems: usize) -> Field {
+    let d = field.dims;
+    if d.len() <= max_elems {
+        return field.clone();
+    }
+    match d.ndim {
+        1 => Field::new(field.name.clone(), Dims::d1(max_elems), field.data[..max_elems].to_vec()),
+        2 => {
+            let rows = (max_elems / d.shape[1]).max(8).min(d.shape[0]);
+            Field::new(
+                field.name.clone(),
+                Dims::d2(rows, d.shape[1]),
+                field.data[..rows * d.shape[1]].to_vec(),
+            )
+        }
+        _ => {
+            let planes = (max_elems / (d.shape[1] * d.shape[2])).max(8).min(d.shape[0]);
+            Field::new(
+                field.name.clone(),
+                Dims::d3(planes, d.shape[1], d.shape[2]),
+                field.data[..planes * d.shape[1] * d.shape[2]].to_vec(),
+            )
+        }
+    }
+}
+
+fn eb_for(field: &Field, eb_paper: f64) -> f64 {
+    // Our synthetic fields are rougher at fine scales than SDRBench's, so
+    // transplanting the paper's absolute bounds verbatim would push the
+    // outlier rate far outside the regime the paper operates in (sub-1%,
+    // §V-I) and make the lossless outlier pass dominate the profile.
+    // Instead we keep the paper's per-dataset bound as a *value-range
+    // relative* bound (CESM 1e-5, others 1e-4), which reproduces the
+    // paper's outlier/compression regime on these suites (documented in
+    // EXPERIMENTS.md).
+    let range = crate::metrics::value_range(&field.data);
+    eb_paper * range.max(1e-30)
+}
+
+/// P&Q bandwidth of one (backend, block size, threads) point.
+fn pq_mbs(field: &Field, backend: BackendChoice, bs: usize, eb: f64, threads: usize, opts: BenchOpts) -> f64 {
+    let cfg = Config {
+        eb: EbMode::Abs(eb),
+        block_size: bs,
+        backend,
+        threads,
+        ..Config::default()
+    };
+    let be = backend.instantiate();
+    let stats = bench(
+        &format!("{:?}", backend),
+        field.data.len() * 4,
+        opts,
+        || {
+            let _ = pq_stage(field, &cfg, be.as_ref());
+        },
+    );
+    stats.best_mb_s()
+}
+
+fn ceilings(quick: bool) -> Ceilings {
+    static C: OnceLock<Ceilings> = OnceLock::new();
+    *C.get_or_init(|| measure_ceilings(quick))
+}
+
+// ---------------------------------------------------------------- table 1
+
+pub fn table1(out_dir: &str, quick: bool) -> Result<()> {
+    let h = host_info();
+    let c = ceilings(quick);
+    println!("TABLE I — testbed (paper: AMD EPYC 7452 / Intel Xeon Gold 6142)");
+    println!("  model        : {}", h.model);
+    println!("  cores        : {}", h.cores);
+    println!("  cache        : {} KB", h.cache_kb);
+    println!("  AVX2 / AVX512: {} / {}", h.has_avx2, h.has_avx512);
+    println!("  stream triad : {:.2} GB/s", c.dram_gb_s);
+    println!("  peak f32 FMA : {:.2} GFLOP/s", c.peak_gflop_s);
+    println!("  modeled CPUs : {} and {} (lane-width analogs)", ROME_CLASS.name, GOLD_CLASS.name);
+    let mut w = CsvWriter::new(format!("{out_dir}/table1.csv"), "key,value");
+    w.row(&["model".into(), h.model.clone()]);
+    w.row(&["cores".into(), h.cores.to_string()]);
+    w.row(&["cache_kb".into(), h.cache_kb.to_string()]);
+    w.row(&["avx2".into(), h.has_avx2.to_string()]);
+    w.row(&["avx512".into(), h.has_avx512.to_string()]);
+    w.row(&["stream_gb_s".into(), format!("{:.3}", c.dram_gb_s)]);
+    w.row(&["peak_gflop_s".into(), format!("{:.3}", c.peak_gflop_s)]);
+    w.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------- table 2
+
+pub fn table2(out_dir: &str, _quick: bool) -> Result<()> {
+    println!("TABLE II — synthetic suite attributes (paper dims in DESIGN.md)");
+    println!("{:<11} {:<10} {:>6} {:>24} {:>10}", "dataset", "domain", "fields", "dims", "size(MB)");
+    let mut w = CsvWriter::new(format!("{out_dir}/table2.csv"), "dataset,domain,fields,dims,mb");
+    let domains = ["Cosmology", "Climate", "Climate", "Cosmology", "Quantum"];
+    for (ds, dom) in all_suites(Scale::Small, 0xDA7A).iter().zip(domains) {
+        let d = &ds.fields[0].dims;
+        let dims_s = match d.ndim {
+            1 => format!("{}", d.shape[0]),
+            2 => format!("{}x{}", d.shape[0], d.shape[1]),
+            _ => format!("{}x{}x{}", d.shape[0], d.shape[1], d.shape[2]),
+        };
+        let mb = ds.total_bytes() as f64 / 1e6;
+        println!("{:<11} {:<10} {:>6} {:>24} {:>10.2}", ds.name, dom, ds.fields.len(), dims_s, mb);
+        w.row(&[ds.name.clone(), dom.into(), ds.fields.len().to_string(), dims_s, format!("{mb:.2}")]);
+    }
+    w.finish()?;
+    Ok(())
+}
+
+// ------------------------------------------------------------------ fig 1
+
+pub fn fig1(out_dir: &str, quick: bool) -> Result<()> {
+    let c = ceilings(quick);
+    println!("FIG 1 — roofline, sequential pSZ dual-quant (per dimensionality)");
+    println!("ceilings: DRAM {:.1} GB/s, peak {:.1} GFLOP/s", c.dram_gb_s, c.peak_gflop_s);
+    let mut w = CsvWriter::new(
+        format!("{out_dir}/fig1.csv"),
+        "ndim,dataset,oi_cons,oi_len,gflops_cons,gflops_len,frac_roof_cons,pct_peak_paper_range",
+    );
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::from_env() };
+    for (name, field, eb_p) in field_set(quick) {
+        let ndim = field.dims.ndim;
+        let eb = eb_for(field, *eb_p);
+        let cfg = Config { eb: EbMode::Abs(eb), backend: BackendChoice::Psz, ..Config::default() };
+        let be = cfg.backend.instantiate();
+        let s = bench("psz", field.data.len() * 4, opts, || {
+            let _ = pq_stage(field, &cfg, be.as_ref());
+        });
+        let m = oi_model(ndim);
+        let g_cons = dualquant_gflops(ndim, field.data.len(), s.min_s, false);
+        let g_len = dualquant_gflops(ndim, field.data.len(), s.min_s, true);
+        let p = evaluate(c, m.oi_conservative(), g_cons);
+        println!(
+            "  {name:<10} {ndim}D  OI=[{:.2},{:.2}]  {:.2}-{:.2} GFLOP/s  {:.0}% of roof ({})",
+            m.oi_conservative(),
+            m.oi_lenient(),
+            g_cons,
+            g_len,
+            100.0 * p.fraction_of_roof,
+            if p.memory_bound { "memory-bound" } else { "compute-bound" }
+        );
+        w.row(&[
+            ndim.to_string(),
+            name.clone(),
+            format!("{:.4}", m.oi_conservative()),
+            format!("{:.4}", m.oi_lenient()),
+            format!("{:.3}", g_cons),
+            format!("{:.3}", g_len),
+            format!("{:.4}", p.fraction_of_roof),
+            format!("{:.1}", 100.0 * p.fraction_of_roof),
+        ]);
+    }
+    println!("  (paper: sequential dual-quant reaches 10-25% of peak)");
+    w.finish()?;
+    Ok(())
+}
+
+// ------------------------------------------------------------------ fig 3
+
+pub fn fig3(out_dir: &str, quick: bool) -> Result<()> {
+    println!("FIG 3 — P&Q bandwidth (MB/s): SZ-1.4 vs pSZ vs vecSZ (best config)");
+    let mut w = CsvWriter::new(
+        format!("{out_dir}/fig3.csv"),
+        "cpu_model,dataset,sz14_mbs,psz_mbs,vecsz_mbs,vec_bs,vec_width,speedup_vs_sz14,speedup_vs_psz",
+    );
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::from_env() };
+    for cpu in [ROME_CLASS, GOLD_CLASS] {
+        println!("-- {}", cpu.name);
+        println!(
+            "{:<11} {:>10} {:>10} {:>10}  {:>9} {:>14}",
+            "dataset", "SZ-1.4", "pSZ", "vecSZ", "best cfg", "speedup(sz14)"
+        );
+        for (name, field, eb_p) in field_set(quick) {
+            let eb = eb_for(field, *eb_p);
+            let bs0 = crate::compressor::default_block_size(field.dims.ndim);
+            let sz14 = pq_mbs(field, BackendChoice::Sz14, bs0, eb, 1, opts);
+            let psz = pq_mbs(field, BackendChoice::Psz, bs0, eb, 1, opts);
+            // best (bs, width) for this cpu model from the exhaustive grid
+            let grid = exhaustive_full(field, eb, 512, PaddingPolicy::ZERO, cpu.widths, 1);
+            let best = grid.iter().max_by(|a, b| a.mb_per_s.total_cmp(&b.mb_per_s)).unwrap();
+            let vec_mbs =
+                pq_mbs(field, BackendChoice::Vec { width: best.config.width }, best.config.block_size, eb, 1, opts);
+            println!(
+                "{:<11} {:>10.0} {:>10.0} {:>10.0}  bs{:<3} w{:<2} {:>10.1}x",
+                name, sz14, psz, vec_mbs, best.config.block_size, best.config.width,
+                vec_mbs / sz14.max(1e-9)
+            );
+            w.row(&[
+                cpu.name.into(),
+                name.clone(),
+                format!("{sz14:.1}"),
+                format!("{psz:.1}"),
+                format!("{vec_mbs:.1}"),
+                best.config.block_size.to_string(),
+                best.config.width.to_string(),
+                format!("{:.2}", vec_mbs / sz14.max(1e-9)),
+                format!("{:.2}", vec_mbs / psz.max(1e-9)),
+            ]);
+        }
+    }
+    w.finish()?;
+    Ok(())
+}
+
+// ------------------------------------------------------------------ fig 4
+
+pub fn fig4(out_dir: &str, quick: bool) -> Result<()> {
+    let c = ceilings(quick);
+    println!("FIG 4 — roofline with vecSZ (O3+vec) vs pSZ (O3) points");
+    let mut w = CsvWriter::new(
+        format!("{out_dir}/fig4.csv"),
+        "dataset,ndim,psz_gflops,vec_gflops,improvement,psz_frac_roof,vec_frac_roof",
+    );
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::from_env() };
+    for (name, field, eb_p) in field_set(quick) {
+        let ndim = field.dims.ndim;
+        let eb = eb_for(field, *eb_p);
+        let bs0 = crate::compressor::default_block_size(ndim);
+        let time_of = |backend| {
+            let cfg = Config { eb: EbMode::Abs(eb), block_size: bs0, backend, ..Config::default() };
+            let be: Box<dyn crate::quant::PqBackend> = cfg.backend.instantiate();
+            bench("x", field.data.len() * 4, opts, || {
+                let _ = pq_stage(field, &cfg, be.as_ref());
+            })
+            .min_s
+        };
+        let t_psz = time_of(BackendChoice::Psz);
+        let t_vec = time_of(BackendChoice::Vec { width: 16 });
+        let m = oi_model(ndim);
+        let g_psz = dualquant_gflops(ndim, field.data.len(), t_psz, false);
+        let g_vec = dualquant_gflops(ndim, field.data.len(), t_vec, false);
+        let p_psz = evaluate(c, m.oi_conservative(), g_psz);
+        let p_vec = evaluate(c, m.oi_conservative(), g_vec);
+        println!(
+            "  {name:<10} pSZ {:.2} GF/s ({:.0}% roof) -> vecSZ {:.2} GF/s ({:.0}% roof)  {:.1}x",
+            g_psz,
+            100.0 * p_psz.fraction_of_roof,
+            g_vec,
+            100.0 * p_vec.fraction_of_roof,
+            g_vec / g_psz.max(1e-12)
+        );
+        w.row(&[
+            name.clone(),
+            ndim.to_string(),
+            format!("{g_psz:.3}"),
+            format!("{g_vec:.3}"),
+            format!("{:.2}", g_vec / g_psz.max(1e-12)),
+            format!("{:.4}", p_psz.fraction_of_roof),
+            format!("{:.4}", p_vec.fraction_of_roof),
+        ]);
+    }
+    println!("  (paper: vecSZ reaches 47-61% of DRAM roof on AMD, 57-107% on Intel)");
+    w.finish()?;
+    Ok(())
+}
+
+// ------------------------------------------------------------------ fig 5
+
+pub fn fig5(out_dir: &str, quick: bool) -> Result<()> {
+    println!("FIG 5 — P&Q bandwidth vs (block size x vector length)");
+    let mut w =
+        CsvWriter::new(format!("{out_dir}/fig5.csv"), "dataset,block_size,width,mb_per_s");
+    for (name, field, eb_p) in field_set(quick) {
+        let eb = eb_for(field, *eb_p);
+        let pts = exhaustive_full(field, eb, 512, PaddingPolicy::ZERO, &[8, 16], 1);
+        println!("-- {name}");
+        for p in &pts {
+            println!("   bs={:<3} w={:<2} {:>9.0} MB/s", p.config.block_size, p.config.width, p.mb_per_s);
+            w.row(&[
+                name.clone(),
+                p.config.block_size.to_string(),
+                p.config.width.to_string(),
+                format!("{:.1}", p.mb_per_s),
+            ]);
+        }
+        let best = pts.iter().max_by(|a, b| a.mb_per_s.total_cmp(&b.mb_per_s)).unwrap();
+        let worst = pts.iter().min_by(|a, b| a.mb_per_s.total_cmp(&b.mb_per_s)).unwrap();
+        println!(
+            "   spread: best bs{} w{} / worst bs{} w{} = {:.0}%",
+            best.config.block_size,
+            best.config.width,
+            worst.config.block_size,
+            worst.config.width,
+            100.0 * (best.mb_per_s / worst.mb_per_s - 1.0)
+        );
+    }
+    w.finish()?;
+    Ok(())
+}
+
+// -------------------------------------------------------------- figs 6, 7
+
+pub fn fig6_7(out_dir: &str, quick: bool) -> Result<()> {
+    println!("FIG 6/7 — autotuning: % of peak achieved and % runtime spent tuning");
+    let sample_pcts: &[f64] = if quick { &[5.0, 20.0] } else { &[1.0, 5.0, 10.0, 20.0] };
+    let iterations: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    let mut w6 = CsvWriter::new(
+        format!("{out_dir}/fig6.csv"),
+        "cpu_model,sample_pct,iterations,pct_of_peak",
+    );
+    let mut w7 = CsvWriter::new(
+        format!("{out_dir}/fig7.csv"),
+        "cpu_model,sample_pct,iterations,pct_runtime_tuning",
+    );
+    for cpu in [ROME_CLASS, GOLD_CLASS] {
+        println!("-- {}", cpu.name);
+        println!("{:>8} {:>6} {:>12} {:>16}", "sample%", "iters", "% of peak", "% runtime tune");
+        for &sp in sample_pcts {
+            for &it in iterations {
+                let mut pct_sum = 0.0;
+                let mut overhead_sum = 0.0;
+                let mut n = 0.0;
+                for (_, field, eb_p) in field_set(quick) {
+                    let eb = eb_for(field, *eb_p);
+                    // ground truth: full-field bandwidth of each config
+                    let full = exhaustive_full(field, eb, 512, PaddingPolicy::ZERO, cpu.widths, 1);
+                    let peak =
+                        full.iter().map(|p| p.mb_per_s).fold(f64::MIN, f64::max);
+                    let r = autotune(
+                        field,
+                        eb,
+                        512,
+                        PaddingPolicy::ZERO,
+                        cpu.widths,
+                        TuneSettings { sample_pct: sp, iterations: it, seed: 7 },
+                    );
+                    let chosen = full
+                        .iter()
+                        .find(|p| p.config == r.best)
+                        .map(|p| p.mb_per_s)
+                        .unwrap_or(0.0);
+                    let optimal_runtime = field.data.len() as f64 * 4.0 / 1e6 / peak;
+                    pct_sum += 100.0 * chosen / peak;
+                    overhead_sum += 100.0 * r.tune_seconds / (r.tune_seconds + optimal_runtime);
+                    n += 1.0;
+                }
+                let pct = pct_sum / n;
+                let ovh = overhead_sum / n;
+                println!("{:>8} {:>6} {:>11.1}% {:>15.1}%", sp, it, pct, ovh);
+                w6.row(&[cpu.name.into(), sp.to_string(), it.to_string(), format!("{pct:.2}")]);
+                w7.row(&[cpu.name.into(), sp.to_string(), it.to_string(), format!("{ovh:.2}")]);
+            }
+        }
+    }
+    w6.finish()?;
+    w7.finish()?;
+    Ok(())
+}
+
+// -------------------------------------------------------------- figs 8, 9
+
+/// Calibrated scaling model (see DESIGN.md §Substitutions): the P&Q stage
+/// is block-parallel (p ~= 1) with per-thread dispatch overhead; SMT lanes
+/// contribute ~35% of a physical core (the paper's 32->64 downtick).
+pub fn modeled_speedup(threads: usize, cpu: CpuModel) -> f64 {
+    let p = 0.99;
+    let o = 0.004; // per-thread sync overhead
+    let phys = cpu.physical_cores.min(threads) as f64;
+    let smt = (threads.min(cpu.hw_threads).saturating_sub(cpu.physical_cores)) as f64;
+    let eff = if threads <= cpu.physical_cores {
+        threads as f64
+    } else {
+        // oversubscribed cores lose some of their base throughput to the
+        // second hardware thread, netting +35% per SMT lane used
+        phys - smt * 0.12 + smt * 0.35
+    };
+    1.0 / ((1.0 - p) + p / eff + o * (threads as f64 - 1.0).max(0.0) / 64.0)
+}
+
+pub fn fig8(out_dir: &str, quick: bool) -> Result<()> {
+    println!("FIG 8 — OpenMP-analog thread scaling of the P&Q stage");
+    let threads: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8, 16, 32, 64] };
+    let mut w = CsvWriter::new(
+        format!("{out_dir}/fig8.csv"),
+        "dataset,threads,measured_speedup,model_rome,model_gold",
+    );
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::from_env() };
+    let host_cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("  (host has {host_cores} core(s); measured beyond that is oversubscription —");
+    println!("   the modeled columns replay the paper's 32c/16c testbeds, see DESIGN.md)");
+    for (name, field, eb_p) in field_set(quick) {
+        let eb = eb_for(field, *eb_p);
+        let bs0 = crate::compressor::default_block_size(field.dims.ndim);
+        let base = pq_mbs(field, BackendChoice::Vec { width: 8 }, bs0, eb, 1, opts);
+        println!("-- {name} (1-thread: {base:.0} MB/s)");
+        for &t in threads {
+            let mbs = pq_mbs(field, BackendChoice::Vec { width: 8 }, bs0, eb, t, opts);
+            let meas = mbs / base.max(1e-9);
+            let mr = modeled_speedup(t, ROME_CLASS);
+            let mg = modeled_speedup(t, GOLD_CLASS);
+            println!(
+                "   t={:<3} measured {:>5.2}x   model[rome] {:>5.2}x  model[gold] {:>5.2}x",
+                t, meas, mr, mg
+            );
+            w.row(&[
+                name.clone(),
+                t.to_string(),
+                format!("{meas:.3}"),
+                format!("{mr:.3}"),
+                format!("{mg:.3}"),
+            ]);
+        }
+    }
+    w.finish()?;
+    Ok(())
+}
+
+pub fn fig9(out_dir: &str, quick: bool) -> Result<()> {
+    println!("FIG 9 — threaded P&Q bandwidth: vecSZ vs SZ-1.4 (3D datasets)");
+    let threads: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8, 16] };
+    let mut w = CsvWriter::new(
+        format!("{out_dir}/fig9.csv"),
+        "dataset,threads,vecsz_mbs,sz14_mbs,ratio",
+    );
+    let opts = if quick { BenchOpts::quick() } else { BenchOpts::from_env() };
+    for (name, field, eb_p) in field_set(quick) {
+        if field.dims.ndim != 3 {
+            continue;
+        }
+        let eb = eb_for(field, *eb_p);
+        println!("-- {name}");
+        for &t in threads {
+            let v = pq_mbs(field, BackendChoice::Vec { width: 8 }, 8, eb, t, opts);
+            let s = pq_mbs(field, BackendChoice::Sz14, 8, eb, t, opts);
+            println!("   t={:<3} vecSZ {:>8.0} MB/s   SZ-1.4 {:>8.0} MB/s   {:>5.2}x", t, v, s, v / s.max(1e-9));
+            w.row(&[name.clone(), t.to_string(), format!("{v:.1}"), format!("{s:.1}"), format!("{:.2}", v / s.max(1e-9))]);
+        }
+    }
+    w.finish()?;
+    Ok(())
+}
+
+// ----------------------------------------------------------------- fig 10
+
+pub fn fig10(out_dir: &str, quick: bool) -> Result<()> {
+    println!("FIG 10 — rate-distortion: vecSZ (avg-global padding) vs SZ-1.4 (zero)");
+    let rel_ebs: &[f64] =
+        if quick { &[1e-2, 1e-4] } else { &[1e-1, 1e-2, 1e-3, 1e-4, 1e-5, 1e-6] };
+    let mut w = CsvWriter::new(
+        format!("{out_dir}/fig10.csv"),
+        "dataset,rel_eb,variant,bit_rate,psnr_db",
+    );
+    for (name, field, _) in field_set(quick) {
+        println!("-- {name}");
+        for &rel in rel_ebs {
+            for (variant, backend, padding) in [
+                ("vecSZ", BackendChoice::Vec { width: 8 },
+                 PaddingPolicy::new(PadValue::Avg, PadGranularity::Global)),
+                ("SZ-1.4", BackendChoice::Sz14, PaddingPolicy::ZERO),
+            ] {
+                let cfg = Config { eb: EbMode::Rel(rel), backend, padding, ..Config::default() };
+                let (bytes, stats) = compress(field, &cfg)?;
+                let rec = crate::compressor::decompress(&bytes, 1)?;
+                let d = distortion(&field.data, &rec.data);
+                println!(
+                    "   rel={rel:<8e} {variant:<7} rate {:>6.3} bits  PSNR {:>7.2} dB  (CR {:>7.1}x)",
+                    stats.size.bit_rate(),
+                    d.psnr_db,
+                    stats.size.ratio()
+                );
+                w.row(&[
+                    name.clone(),
+                    format!("{rel:e}"),
+                    variant.into(),
+                    format!("{:.4}", stats.size.bit_rate()),
+                    format!("{:.3}", d.psnr_db),
+                ]);
+            }
+        }
+    }
+    w.finish()?;
+    Ok(())
+}
+
+// ----------------------------------------------------- padding study §V-I
+
+pub fn padding_study(out_dir: &str, quick: bool) -> Result<()> {
+    println!("PADDING STUDY (§V-I) — outliers per policy (reduction vs zero)");
+    let mut w = CsvWriter::new(
+        format!("{out_dir}/padding.csv"),
+        "dataset,policy,outliers,reduction_pct,extra_scalars",
+    );
+    for (name, field, eb_p) in field_set(quick) {
+        let eb = eb_for(field, *eb_p) * 10.0; // generous bound: border-dominated outliers
+        println!("-- {name}");
+        let mut zero_outliers = None;
+        for policy in study_policies() {
+            let cfg = Config {
+                eb: EbMode::Abs(eb),
+                padding: policy,
+                backend: BackendChoice::Vec { width: 8 },
+                ..Config::default()
+            };
+            let (_, stats) = compress(field, &cfg)?;
+            let z = *zero_outliers.get_or_insert(stats.n_outliers);
+            let red = if z == 0 {
+                0.0
+            } else {
+                100.0 * (z as f64 - stats.n_outliers as f64) / z as f64
+            };
+            let scalars = crate::padding::compute_scalars(
+                &field.data,
+                &field.dims,
+                stats.block_size,
+                policy,
+            )
+            .storage_values();
+            println!(
+                "   {:<11} outliers {:>9}  reduction {:>6.1}%  (+{} scalars)",
+                policy.name(),
+                stats.n_outliers,
+                red,
+                scalars
+            );
+            w.row(&[
+                name.clone(),
+                policy.name(),
+                stats.n_outliers.to_string(),
+                format!("{red:.2}"),
+                scalars.to_string(),
+            ]);
+        }
+    }
+    w.finish()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------- table 3
+
+pub fn table3(out_dir: &str, quick: bool) -> Result<()> {
+    println!("TABLE III — Amdahl: dual-quant share, theoretical vs actual speedup");
+    let mut w = CsvWriter::new(
+        format!("{out_dir}/table3.csv"),
+        "cpu_model,dq_pct_of_runtime,theoretical,actual,pct_of_theoretical",
+    );
+    for (cpu, s_lanes) in [(ROME_CLASS, 8.0f64), (GOLD_CLASS, 16.0f64)] {
+        let mut frac_sum = 0.0;
+        let mut actual_sum = 0.0;
+        let mut n = 0.0;
+        for (_, field, eb_p) in field_set(quick) {
+            let eb = eb_for(field, *eb_p);
+            let run = |backend| {
+                let cfg = Config { eb: EbMode::Abs(eb), backend, ..Config::default() };
+                compress(field, &cfg).unwrap().1
+            };
+            let base = run(BackendChoice::Psz);
+            let vec = run(BackendChoice::Vec { width: s_lanes as usize });
+            frac_sum += base.profile.fraction("pq");
+            actual_sum += base.profile.total() / vec.profile.total();
+            n += 1.0;
+        }
+        let p = frac_sum / n;
+        let theoretical = 1.0 / ((1.0 - p) + p / s_lanes);
+        let actual = actual_sum / n;
+        let pct = 100.0 * actual / theoretical;
+        println!(
+            "  {:<16} dual-quant {:>5.1}% of runtime  theo {:.2}x  actual {:.2}x  ({:.1}% of theo)",
+            cpu.name,
+            100.0 * p,
+            theoretical,
+            actual,
+            pct
+        );
+        w.row(&[
+            cpu.name.into(),
+            format!("{:.2}", 100.0 * p),
+            format!("{theoretical:.3}"),
+            format!("{actual:.3}"),
+            format!("{pct:.1}"),
+        ]);
+    }
+    println!("  (paper: 46.9%/42.9% of runtime, theo 1.70x/1.67x, actual 1.51x/1.47x)");
+    w.finish()?;
+    Ok(())
+}
+
+// --------------------------------------------------------- V-F stability
+
+pub fn stability(out_dir: &str, quick: bool) -> Result<()> {
+    println!("§V-F — autotune stability across time-steps (top-2 coverage)");
+    let steps = if quick { 4 } else { 16 };
+    let mut w = CsvWriter::new(format!("{out_dir}/stability.csv"), "dataset,steps,top1,top2");
+    for (name, field, eb_p) in field_set(quick) {
+        let eb = eb_for(field, *eb_p);
+        let runs: Vec<_> = (0..steps)
+            .map(|s| {
+                // time-step analog: identical field, fresh sampling each step
+                autotune(
+                    field,
+                    eb,
+                    512,
+                    PaddingPolicy::ZERO,
+                    &[8, 16],
+                    TuneSettings { sample_pct: 5.0, iterations: 1, seed: 1000 + s as u64 },
+                )
+            })
+            .collect();
+        let t1 = top_k_stability(&runs, 1);
+        let t2 = top_k_stability(&runs, 2);
+        println!("  {name:<11} top-1 {:>5.0}%  top-2 {:>5.0}%", t1 * 100.0, t2 * 100.0);
+        w.row(&[name.clone(), steps.to_string(), format!("{:.3}", t1), format!("{:.3}", t2)]);
+    }
+    println!("  (paper: ~80% of Hurricane time-step runs land in the top-2 configs)");
+    w.finish()?;
+    Ok(())
+}
+
+/// Dispatch by figure id.
+pub fn run(id: &str, out_dir: &str, quick: bool) -> Result<bool> {
+    match id {
+        "table1" => table1(out_dir, quick)?,
+        "table2" => table2(out_dir, quick)?,
+        "fig1" => fig1(out_dir, quick)?,
+        "fig3" => fig3(out_dir, quick)?,
+        "fig4" => fig4(out_dir, quick)?,
+        "fig5" => fig5(out_dir, quick)?,
+        "fig6" | "fig7" | "fig6_7" => fig6_7(out_dir, quick)?,
+        "fig8" => fig8(out_dir, quick)?,
+        "fig9" => fig9(out_dir, quick)?,
+        "fig10" => fig10(out_dir, quick)?,
+        "padding" => padding_study(out_dir, quick)?,
+        "table3" => table3(out_dir, quick)?,
+        "stability" => stability(out_dir, quick)?,
+        "all" => {
+            for f in ALL_IDS {
+                if *f != "all" {
+                    println!();
+                    run(f, out_dir, quick)?;
+                }
+            }
+        }
+        _ => return Ok(false),
+    }
+    Ok(true)
+}
+
+pub const ALL_IDS: &[&str] = &[
+    "table1", "table2", "fig1", "fig3", "fig4", "fig5", "fig6_7", "fig8", "fig9", "fig10",
+    "padding", "table3", "stability",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_speedup_has_paper_shape() {
+        // near-linear at low counts
+        assert!(modeled_speedup(2, ROME_CLASS) > 1.8);
+        assert!(modeled_speedup(4, ROME_CLASS) > 3.4);
+        // plateaus by core count
+        let s32 = modeled_speedup(32, ROME_CLASS);
+        let s16 = modeled_speedup(16, ROME_CLASS);
+        assert!(s32 > s16);
+        // SMT downtick: 64 threads on 32 cores <= peak x 1.2 and shows the
+        // paper's "downtick vs linear" shape
+        let s64 = modeled_speedup(64, ROME_CLASS);
+        assert!(s64 < s32 * 1.5);
+        // paper: max ~24x at 64 threads
+        assert!(s64 > 10.0 && s64 < 40.0, "s64 = {s64}");
+    }
+
+    #[test]
+    fn subsample_preserves_ndim() {
+        let f = Field::new("x", Dims::d3(10, 10, 10), vec![0.0; 1000]);
+        let s = subsample(&f, 500);
+        assert_eq!(s.dims.ndim, 3);
+        assert!(s.data.len() <= 1000);
+    }
+
+    #[test]
+    fn run_rejects_unknown_id() {
+        assert!(!run("nope", "/tmp/vecsz_results_test", true).unwrap());
+    }
+}

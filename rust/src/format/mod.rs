@@ -1,0 +1,274 @@
+//! `.vsz` container format.
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic "VSZ1" | u16 version | u8 ndim | u8 codes_kind | u64 dims[3]
+//! f64 eb | u16 radius | u32 block_size
+//! u8 pad_value | u8 pad_granularity
+//! u8 n_sections, then per section:
+//!   u8 tag | uvarint raw_len | uvarint enc_len | u32 crc32(payload) | bytes
+//! ```
+//! Section payloads are already entropy-coded by their producers (Huffman
+//! for codes, lossless for outlier streams); the container adds integrity
+//! and framing only.
+
+use crate::bitio::{put_uvarint, Cursor};
+use crate::blocks::Dims;
+use crate::error::{Result, VszError};
+use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
+use crate::quant::CodesKind;
+use crate::util::crc32;
+
+pub const MAGIC: &[u8; 4] = b"VSZ1";
+pub const VERSION: u16 = 1;
+
+/// Section tags.
+pub mod tag {
+    /// Huffman-coded quant codes.
+    pub const CODES: u8 = 1;
+    /// Outlier positions (delta varints, lossless-compressed).
+    pub const OUTLIER_POS: u8 = 2;
+    /// Outlier values (f32 LE bytes, lossless-compressed).
+    pub const OUTLIER_VAL: u8 = 3;
+    /// Padding scalars (f32 LE bytes, lossless-compressed).
+    pub const PAD_SCALARS: u8 = 4;
+}
+
+/// Parsed container header.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Header {
+    pub dims: Dims,
+    pub codes_kind: CodesKind,
+    pub eb: f64,
+    pub radius: u16,
+    pub block_size: u32,
+    pub padding: PaddingPolicy,
+}
+
+/// One framed section.
+#[derive(Clone, Debug)]
+pub struct Section {
+    pub tag: u8,
+    pub raw_len: u64,
+    pub payload: Vec<u8>,
+}
+
+fn kind_to_u8(k: CodesKind) -> u8 {
+    match k {
+        CodesKind::DualQuant => 0,
+        CodesKind::Sz14 => 1,
+    }
+}
+
+fn kind_from_u8(v: u8) -> Result<CodesKind> {
+    match v {
+        0 => Ok(CodesKind::DualQuant),
+        1 => Ok(CodesKind::Sz14),
+        _ => Err(VszError::format(format!("unknown codes kind {v}"))),
+    }
+}
+
+fn pad_value_to_u8(v: PadValue) -> u8 {
+    match v {
+        PadValue::Zero => 0,
+        PadValue::Min => 1,
+        PadValue::Max => 2,
+        PadValue::Avg => 3,
+    }
+}
+
+fn pad_value_from_u8(v: u8) -> Result<PadValue> {
+    Ok(match v {
+        0 => PadValue::Zero,
+        1 => PadValue::Min,
+        2 => PadValue::Max,
+        3 => PadValue::Avg,
+        _ => return Err(VszError::format(format!("unknown pad value {v}"))),
+    })
+}
+
+fn pad_gran_to_u8(g: PadGranularity) -> u8 {
+    match g {
+        PadGranularity::Global => 0,
+        PadGranularity::Block => 1,
+        PadGranularity::Edge => 2,
+    }
+}
+
+fn pad_gran_from_u8(v: u8) -> Result<PadGranularity> {
+    Ok(match v {
+        0 => PadGranularity::Global,
+        1 => PadGranularity::Block,
+        2 => PadGranularity::Edge,
+        _ => return Err(VszError::format(format!("unknown pad granularity {v}"))),
+    })
+}
+
+/// Serialize a container.
+pub fn write_container(header: &Header, sections: &[Section]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + sections.iter().map(|s| s.payload.len() + 16).sum::<usize>());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(header.dims.ndim as u8);
+    out.push(kind_to_u8(header.codes_kind));
+    for d in header.dims.shape {
+        out.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    out.extend_from_slice(&header.eb.to_bits().to_le_bytes());
+    out.extend_from_slice(&header.radius.to_le_bytes());
+    out.extend_from_slice(&header.block_size.to_le_bytes());
+    out.push(pad_value_to_u8(header.padding.value));
+    out.push(pad_gran_to_u8(header.padding.granularity));
+    out.push(sections.len() as u8);
+    for s in sections {
+        out.push(s.tag);
+        put_uvarint(&mut out, s.raw_len);
+        put_uvarint(&mut out, s.payload.len() as u64);
+        out.extend_from_slice(&crc32(&s.payload).to_le_bytes());
+        out.extend_from_slice(&s.payload);
+    }
+    out
+}
+
+/// Parse and integrity-check a container.
+pub fn read_container(data: &[u8]) -> Result<(Header, Vec<Section>)> {
+    let mut c = Cursor::new(data);
+    let magic = c.take(4).ok_or_else(|| VszError::format("truncated magic"))?;
+    if magic != MAGIC {
+        return Err(VszError::format("bad magic (not a .vsz container)"));
+    }
+    let version = c.u16().ok_or_else(|| VszError::format("truncated version"))?;
+    if version != VERSION {
+        return Err(VszError::format(format!("unsupported version {version}")));
+    }
+    let ndim = c.u8().ok_or_else(|| VszError::format("truncated ndim"))? as usize;
+    if !(1..=3).contains(&ndim) {
+        return Err(VszError::format(format!("bad ndim {ndim}")));
+    }
+    let codes_kind = kind_from_u8(c.u8().ok_or_else(|| VszError::format("truncated kind"))?)?;
+    let mut shape = [1usize; 3];
+    for s in shape.iter_mut() {
+        *s = c.u64().ok_or_else(|| VszError::format("truncated dims"))? as usize;
+    }
+    let dims = Dims { shape, ndim };
+    let eb = c.f64().ok_or_else(|| VszError::format("truncated eb"))?;
+    if !(eb.is_finite() && eb > 0.0) {
+        return Err(VszError::format("invalid error bound"));
+    }
+    let radius = c.u16().ok_or_else(|| VszError::format("truncated radius"))?;
+    let block_size = c.u32().ok_or_else(|| VszError::format("truncated block size"))?;
+    let pv = pad_value_from_u8(c.u8().ok_or_else(|| VszError::format("truncated pad value"))?)?;
+    let pg = pad_gran_from_u8(c.u8().ok_or_else(|| VszError::format("truncated pad gran"))?)?;
+    let n_sections = c.u8().ok_or_else(|| VszError::format("truncated section count"))? as usize;
+    let mut sections = Vec::with_capacity(n_sections);
+    for _ in 0..n_sections {
+        let tag = c.u8().ok_or_else(|| VszError::format("truncated section tag"))?;
+        let raw_len = c.uvarint().ok_or_else(|| VszError::format("truncated raw_len"))?;
+        let enc_len = c.uvarint().ok_or_else(|| VszError::format("truncated enc_len"))? as usize;
+        let crc = c.u32().ok_or_else(|| VszError::format("truncated crc"))?;
+        let payload = c
+            .take(enc_len)
+            .ok_or_else(|| VszError::format("truncated section payload"))?
+            .to_vec();
+        if crc32(&payload) != crc {
+            return Err(VszError::Integrity(format!("section {tag}: crc mismatch")));
+        }
+        sections.push(Section { tag, raw_len, payload });
+    }
+    let header = Header {
+        dims,
+        codes_kind,
+        eb,
+        radius,
+        block_size,
+        padding: PaddingPolicy::new(pv, pg),
+    };
+    Ok((header, sections))
+}
+
+/// Find a section by tag.
+pub fn find_section<'a>(sections: &'a [Section], t: u8) -> Result<&'a Section> {
+    sections
+        .iter()
+        .find(|s| s.tag == t)
+        .ok_or_else(|| VszError::format(format!("missing section {t}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_header() -> Header {
+        Header {
+            dims: Dims::d2(180, 360),
+            codes_kind: CodesKind::DualQuant,
+            eb: 1e-4,
+            radius: 512,
+            block_size: 16,
+            padding: PaddingPolicy::new(PadValue::Avg, PadGranularity::Global),
+        }
+    }
+
+    #[test]
+    fn roundtrip_header_and_sections() {
+        let h = sample_header();
+        let secs = vec![
+            Section { tag: tag::CODES, raw_len: 1000, payload: vec![1, 2, 3, 4] },
+            Section { tag: tag::OUTLIER_POS, raw_len: 5, payload: vec![9] },
+            Section { tag: tag::PAD_SCALARS, raw_len: 4, payload: vec![0, 0, 128, 63] },
+        ];
+        let blob = write_container(&h, &secs);
+        let (h2, secs2) = read_container(&blob).unwrap();
+        assert_eq!(h, h2);
+        assert_eq!(secs2.len(), 3);
+        assert_eq!(secs2[0].payload, vec![1, 2, 3, 4]);
+        assert_eq!(secs2[0].raw_len, 1000);
+        assert_eq!(find_section(&secs2, tag::OUTLIER_POS).unwrap().payload, vec![9]);
+        assert!(find_section(&secs2, tag::OUTLIER_VAL).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut blob = write_container(&sample_header(), &[]);
+        blob[0] = b'X';
+        assert!(matches!(read_container(&blob), Err(VszError::Format(_))));
+    }
+
+    #[test]
+    fn rejects_corrupt_payload() {
+        let secs =
+            vec![Section { tag: tag::CODES, raw_len: 8, payload: vec![1, 2, 3, 4, 5, 6] }];
+        let mut blob = write_container(&sample_header(), &secs);
+        let n = blob.len();
+        blob[n - 1] ^= 0xFF;
+        assert!(matches!(read_container(&blob), Err(VszError::Integrity(_))));
+    }
+
+    #[test]
+    fn rejects_truncation_anywhere() {
+        let secs = vec![Section { tag: tag::CODES, raw_len: 8, payload: vec![7; 32] }];
+        let blob = write_container(&sample_header(), &secs);
+        for cut in [3usize, 5, 8, 20, blob.len() - 1] {
+            assert!(read_container(&blob[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_nonsense_eb_and_ndim() {
+        let mut h = sample_header();
+        h.eb = -1.0;
+        let blob = write_container(&h, &[]);
+        assert!(read_container(&blob).is_err());
+        let mut blob2 = write_container(&sample_header(), &[]);
+        blob2[6] = 7; // ndim byte
+        assert!(read_container(&blob2).is_err());
+    }
+
+    #[test]
+    fn sz14_kind_roundtrips() {
+        let mut h = sample_header();
+        h.codes_kind = CodesKind::Sz14;
+        let (h2, _) = read_container(&write_container(&h, &[])).unwrap();
+        assert_eq!(h2.codes_kind, CodesKind::Sz14);
+    }
+}

@@ -1,0 +1,430 @@
+//! Canonical, length-limited Huffman coding (substrate).
+//!
+//! The paper's encoding stage compresses the dual-quant integer codes with
+//! Huffman coding; outlier/value streams reuse the same coder over bytes.
+//!
+//! Design:
+//! * code lengths from a heap-built Huffman tree, then clamped to
+//!   `MAX_BITS` with a Kraft-sum repair pass (zlib-style),
+//! * canonical code assignment (sorted by length, then symbol), so the
+//!   header only stores lengths,
+//! * sparse header: varint (symbol, length) pairs for non-zero lengths,
+//! * decode through a flat `2^max_len` lookup table (symbol + length per
+//!   entry) — one peek/consume per symbol on the hot path.
+
+use crate::bitio::{BitReader, BitWriter, get_uvarint, put_uvarint};
+use crate::error::{Result, VszError};
+
+/// Maximum code length; 2^15 table = 32K entries keeps the LUT inside L2.
+pub const MAX_BITS: u32 = 15;
+
+/// Frequency histogram over a u16-symbol stream.
+pub fn histogram(symbols: &[u16], alphabet: usize) -> Vec<u64> {
+    let mut h = vec![0u64; alphabet];
+    for &s in symbols {
+        h[s as usize] += 1;
+    }
+    h
+}
+
+/// Compute Huffman code lengths for `freqs` (0-freq symbols get length 0),
+/// limited to `max_bits`.
+pub fn code_lengths(freqs: &[u64], max_bits: u32) -> Vec<u8> {
+    let n = freqs.len();
+    let mut lens = vec![0u8; n];
+    let present: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    match present.len() {
+        0 => return lens,
+        1 => {
+            lens[present[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+
+    // Heap Huffman over (weight, node). Nodes 0..n are leaves, >= n internal.
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut parent = vec![usize::MAX; n + present.len()];
+    let mut next_internal = n;
+    for &i in &present {
+        heap.push(Reverse((freqs[i], i)));
+    }
+    while heap.len() > 1 {
+        let Reverse((wa, a)) = heap.pop().unwrap();
+        let Reverse((wb, b)) = heap.pop().unwrap();
+        let p = next_internal;
+        next_internal += 1;
+        parent[a] = p;
+        parent[b] = p;
+        heap.push(Reverse((wa + wb, p)));
+    }
+    let root = heap.pop().unwrap().0 .1;
+
+    // Depth of each leaf = code length.
+    for &i in &present {
+        let mut d = 0u32;
+        let mut node = i;
+        while node != root {
+            node = parent[node];
+            d += 1;
+        }
+        lens[i] = d.min(255) as u8;
+    }
+
+    // Length-limit repair: clamp, then restore Kraft sum <= 1 by lengthening
+    // the deepest still-extendable codes (cheapest distortion).
+    let mut over = false;
+    for &i in &present {
+        if lens[i] as u32 > max_bits {
+            lens[i] = max_bits as u8;
+            over = true;
+        }
+    }
+    if over {
+        let kraft = |lens: &[u8]| -> u64 {
+            // scaled by 2^max_bits to stay integral
+            present.iter().map(|&i| 1u64 << (max_bits - lens[i] as u32)).sum()
+        };
+        let budget = 1u64 << max_bits;
+        while kraft(&lens) > budget {
+            // lengthen the symbol with the largest length < max_bits
+            let mut best: Option<usize> = None;
+            for &i in &present {
+                if (lens[i] as u32) < max_bits
+                    && best.map_or(true, |b| lens[i] > lens[b])
+                {
+                    best = Some(i);
+                }
+            }
+            let b = best.expect("kraft repair: no extendable symbol");
+            lens[b] += 1;
+        }
+    }
+    lens
+}
+
+/// Canonical code assignment: returns per-symbol (code, len) with codes in
+/// MSB-first canonical order. Symbols with len 0 get (0, 0).
+pub fn canonical_codes(lens: &[u8]) -> Vec<(u32, u8)> {
+    let max_len = lens.iter().copied().max().unwrap_or(0) as u32;
+    let mut bl_count = vec![0u32; max_len as usize + 1];
+    for &l in lens {
+        if l > 0 {
+            bl_count[l as usize] += 1;
+        }
+    }
+    let mut next_code = vec![0u32; max_len as usize + 2];
+    let mut code = 0u32;
+    for bits in 1..=max_len as usize {
+        code = (code + bl_count[bits - 1]) << 1;
+        next_code[bits] = code;
+    }
+    // canonical order = (len, symbol) ascending; iterating symbols in order
+    // per length achieves that.
+    let mut out = vec![(0u32, 0u8); lens.len()];
+    for bits in 1..=max_len as usize {
+        for (sym, &l) in lens.iter().enumerate() {
+            if l as usize == bits {
+                out[sym] = (next_code[bits], l);
+                next_code[bits] += 1;
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn reverse_bits(v: u32, n: u8) -> u32 {
+    v.reverse_bits() >> (32 - n as u32)
+}
+
+/// Encoder: symbol -> (LSB-first reversed code, length).
+pub struct Encoder {
+    table: Vec<(u32, u8)>,
+}
+
+impl Encoder {
+    pub fn from_lengths(lens: &[u8]) -> Self {
+        let codes = canonical_codes(lens);
+        let table = codes
+            .iter()
+            .map(|&(c, l)| if l == 0 { (0, 0) } else { (reverse_bits(c, l), l) })
+            .collect();
+        Self { table }
+    }
+
+    #[inline]
+    pub fn encode_symbol(&self, w: &mut BitWriter, sym: u16) {
+        let (code, len) = self.table[sym as usize];
+        debug_assert!(len > 0, "encoding symbol {sym} with no code");
+        w.put(code as u64, len as u32);
+    }
+
+    pub fn encode_all(&self, symbols: &[u16]) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity(symbols.len() / 2 + 16);
+        for &s in symbols {
+            self.encode_symbol(&mut w, s);
+        }
+        w.finish()
+    }
+
+    /// Exact bit cost of a stream under this code (for ratio estimates).
+    pub fn cost_bits(&self, hist: &[u64]) -> u64 {
+        hist.iter()
+            .zip(&self.table)
+            .map(|(&f, &(_, l))| f * l as u64)
+            .sum()
+    }
+}
+
+/// Decoder: flat LUT of 2^max_len entries, each (symbol, length).
+pub struct Decoder {
+    lut: Vec<u32>, // sym in low 16, len in bits 16..24
+    max_len: u32,
+}
+
+impl Decoder {
+    pub fn from_lengths(lens: &[u8]) -> Result<Self> {
+        let max_len = lens.iter().copied().max().unwrap_or(0) as u32;
+        if max_len == 0 {
+            return Ok(Self { lut: vec![], max_len: 0 });
+        }
+        if max_len > MAX_BITS {
+            return Err(VszError::format(format!("huffman length {max_len} > {MAX_BITS}")));
+        }
+        let codes = canonical_codes(lens);
+        let mut lut = vec![u32::MAX; 1usize << max_len];
+        for (sym, &(code, len)) in codes.iter().enumerate() {
+            if len == 0 {
+                continue;
+            }
+            let rev = reverse_bits(code, len) as usize;
+            let step = 1usize << len;
+            let entry = (sym as u32) | ((len as u32) << 16);
+            let mut idx = rev;
+            while idx < lut.len() {
+                if lut[idx] != u32::MAX {
+                    return Err(VszError::format("huffman: overlapping codes (bad lengths)"));
+                }
+                lut[idx] = entry;
+                idx += step;
+            }
+        }
+        Ok(Self { lut, max_len })
+    }
+
+    /// Decode exactly `count` symbols.
+    pub fn decode_all(&self, bytes: &[u8], count: usize) -> Result<Vec<u16>> {
+        let mut out = Vec::with_capacity(count);
+        let mut r = BitReader::new(bytes);
+        for _ in 0..count {
+            let idx = r.peek(self.max_len) as usize;
+            let entry = *self
+                .lut
+                .get(idx)
+                .ok_or_else(|| VszError::format("huffman: truncated stream"))?;
+            if entry == u32::MAX {
+                return Err(VszError::format("huffman: invalid code"));
+            }
+            let len = entry >> 16;
+            if r.remaining_bits() < len as u64 {
+                return Err(VszError::format("huffman: stream underrun"));
+            }
+            r.consume(len);
+            out.push(entry as u16);
+        }
+        Ok(out)
+    }
+}
+
+/// Serialize code lengths sparsely: varint n_pairs, then (delta-sym, len).
+pub fn write_lengths(out: &mut Vec<u8>, lens: &[u8]) {
+    let pairs: Vec<(usize, u8)> =
+        lens.iter().enumerate().filter(|(_, &l)| l > 0).map(|(s, &l)| (s, l)).collect();
+    put_uvarint(out, lens.len() as u64);
+    put_uvarint(out, pairs.len() as u64);
+    let mut prev = 0usize;
+    for (s, l) in pairs {
+        put_uvarint(out, (s - prev) as u64);
+        out.push(l);
+        prev = s;
+    }
+}
+
+/// Parse lengths written by [`write_lengths`]; returns (lens, bytes read).
+pub fn read_lengths(data: &[u8]) -> Result<(Vec<u8>, usize)> {
+    let mut pos = 0usize;
+    let varint = |pos: &mut usize| -> Result<u64> {
+        let (v, n) =
+            get_uvarint(&data[*pos..]).ok_or_else(|| VszError::format("huffman header EOF"))?;
+        *pos += n;
+        Ok(v)
+    };
+    let alphabet = varint(&mut pos)? as usize;
+    let npairs = varint(&mut pos)? as usize;
+    if alphabet > 1 << 20 {
+        return Err(VszError::format("huffman: absurd alphabet size"));
+    }
+    let mut lens = vec![0u8; alphabet];
+    let mut sym = 0usize;
+    for i in 0..npairs {
+        let delta = varint(&mut pos)? as usize;
+        sym = if i == 0 { delta } else { sym + delta };
+        let l = *data.get(pos).ok_or_else(|| VszError::format("huffman header EOF"))?;
+        pos += 1;
+        if sym >= alphabet || l as u32 > MAX_BITS {
+            return Err(VszError::format("huffman: bad (symbol,length) pair"));
+        }
+        lens[sym] = l;
+    }
+    Ok((lens, pos))
+}
+
+/// One-call stream compression: header (lengths) + varint count + payload.
+pub fn compress_u16(symbols: &[u16], alphabet: usize) -> Vec<u8> {
+    let hist = histogram(symbols, alphabet);
+    let lens = code_lengths(&hist, MAX_BITS);
+    let enc = Encoder::from_lengths(&lens);
+    let mut out = Vec::new();
+    write_lengths(&mut out, &lens);
+    put_uvarint(&mut out, symbols.len() as u64);
+    let payload = enc.encode_all(symbols);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Inverse of [`compress_u16`].
+pub fn decompress_u16(data: &[u8]) -> Result<Vec<u16>> {
+    let (lens, mut pos) = read_lengths(data)?;
+    let (count, n) =
+        get_uvarint(&data[pos..]).ok_or_else(|| VszError::format("huffman count EOF"))?;
+    pos += n;
+    if count == 0 {
+        return Ok(Vec::new());
+    }
+    let dec = Decoder::from_lengths(&lens)?;
+    dec.decode_all(&data[pos..], count as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn lengths_satisfy_kraft() {
+        let freqs = vec![100u64, 50, 20, 10, 5, 2, 1, 1];
+        let lens = code_lengths(&freqs, MAX_BITS);
+        let kraft: f64 = lens.iter().filter(|&&l| l > 0).map(|&l| 2f64.powi(-(l as i32))).sum();
+        assert!(kraft <= 1.0 + 1e-12);
+        // optimal Huffman on this distribution is exactly Kraft-tight
+        assert!((kraft - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_symbol_stream() {
+        let syms = vec![7u16; 1000];
+        let blob = compress_u16(&syms, 16);
+        assert!(blob.len() < 200); // ~1 bit per symbol
+        assert_eq!(decompress_u16(&blob).unwrap(), syms);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let blob = compress_u16(&[], 16);
+        assert_eq!(decompress_u16(&blob).unwrap(), Vec::<u16>::new());
+    }
+
+    #[test]
+    fn skewed_quant_code_stream_compresses_hard() {
+        // mimic dual-quant output: mass at `radius`, tails around it
+        let mut rng = Pcg32::seeded(9);
+        let radius = 512u16;
+        let syms: Vec<u16> = (0..100_000)
+            .map(|_| {
+                let r = rng.next_f32();
+                if r < 0.8 {
+                    radius
+                } else if r < 0.95 {
+                    radius + 1 - (rng.bounded(3) as u16)
+                } else {
+                    radius - 8 + rng.bounded(16) as u16
+                }
+            })
+            .collect();
+        let blob = compress_u16(&syms, 1024);
+        // entropy of this distribution is ~1.2 bits/sym; 16-bit raw = 200KB
+        assert!(blob.len() < 40_000, "blob {} bytes", blob.len());
+        assert_eq!(decompress_u16(&blob).unwrap(), syms);
+    }
+
+    #[test]
+    fn length_limit_enforced_on_pathological_freqs() {
+        // fibonacci-ish frequencies force long codes without a limit
+        let mut freqs = vec![0u64; 40];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let lens = code_lengths(&freqs, MAX_BITS);
+        assert!(lens.iter().all(|&l| l as u32 <= MAX_BITS));
+        let kraft: f64 = lens.iter().filter(|&&l| l > 0).map(|&l| 2f64.powi(-(l as i32))).sum();
+        assert!(kraft <= 1.0 + 1e-12);
+        // still decodable end-to-end
+        let mut syms = Vec::new();
+        for (s, &f) in freqs.iter().enumerate() {
+            for _ in 0..(f.min(50)) {
+                syms.push(s as u16);
+            }
+        }
+        let blob = compress_u16(&syms, 40);
+        assert_eq!(decompress_u16(&blob).unwrap(), syms);
+    }
+
+    #[test]
+    fn header_roundtrip_sparse() {
+        let mut lens = vec![0u8; 1024];
+        lens[0] = 3;
+        lens[511] = 2;
+        lens[512] = 1;
+        lens[1023] = 3;
+        let mut buf = Vec::new();
+        write_lengths(&mut buf, &lens);
+        let (got, used) = read_lengths(&buf).unwrap();
+        assert_eq!(got, lens);
+        assert_eq!(used, buf.len());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_streams() {
+        check("huffman-roundtrip", 60, |g| {
+            let n = g.len() * 50;
+            let alphabet = *g.choose(&[2usize, 17, 256, 1024]);
+            let syms: Vec<u16> = (0..n)
+                .map(|_| {
+                    // zipf-ish skew: square the uniform
+                    let u = g.rng.next_f32();
+                    ((u * u * (alphabet as f32 - 1.0)) as u16).min(alphabet as u16 - 1)
+                })
+                .collect();
+            let blob = compress_u16(&syms, alphabet);
+            let back = decompress_u16(&blob).map_err(|e| e.to_string())?;
+            if back == syms {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    fn decoder_rejects_garbage() {
+        assert!(decompress_u16(&[0xFF, 0xFF, 0xFF]).is_err());
+    }
+}

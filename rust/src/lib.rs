@@ -1,0 +1,43 @@
+//! # vecSZ — SIMD lossy compression for scientific data
+//!
+//! A three-layer reproduction of the vecSZ paper (CS.DC 2022): an
+//! error-bounded lossy compression framework whose prediction/quantization
+//! hot path uses the RAW-dependence-free *dual-quantization* algorithm,
+//! executed either as a lane-chunked native Rust kernel (the paper's
+//! CPU-SIMD contribution) or as an AOT-compiled XLA/Pallas artifact via
+//! PJRT.
+//!
+//! Public entry points:
+//! * [`compressor`] — the `Compressor` trait plus `VecSz`, `PSz`, `Sz14`.
+//! * [`data`] — synthetic SDRBench-like dataset suites.
+//! * [`metrics`] — PSNR / rate-distortion evaluation.
+//! * [`autotune`] — block-size/lane-width autotuning.
+//! * [`roofline`] — ERT-like machine characterization.
+
+pub mod autotune;
+pub mod bench;
+pub mod bitio;
+pub mod blocks;
+pub mod cli;
+pub mod compressor;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod figures;
+pub mod format;
+pub mod metrics;
+pub mod roofline;
+pub mod huffman;
+pub mod lorenzo;
+pub mod lossless;
+pub mod padding;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Result, VszError};
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

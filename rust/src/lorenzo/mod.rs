@@ -1,0 +1,157 @@
+//! Lorenzo prediction (Ibarria et al. [23]) over halo-buffered blocks.
+//!
+//! The predictor estimates each element from its already-visited neighbours
+//! by inclusion-exclusion over the axis subsets:
+//!   1D: p = W
+//!   2D: p = W + N − NW
+//!   3D: p = (W + N + U) − (NW + NU + WU) + NWU
+//! Working on a [`HaloBlock`] makes every neighbour read branch-free: border
+//! neighbours land in the halo planes, which hold the padding scalar.
+//!
+//! This module provides the *scalar* predictor shared by the pSZ baseline,
+//! the SZ-1.4 baseline and the decompressor; the vectorized backend inlines
+//! its own lane-parallel version (bit-identical, tested in `quant`).
+
+use crate::blocks::BlockShape;
+
+/// Scalar Lorenzo prediction at interior coordinate `c` of a halo buffer.
+/// `buf` has side `bs+1` per axis; `c` is the *interior* coordinate (0-based
+/// within the block); the halo offset (+1) is applied here.
+#[inline]
+pub fn predict_halo(buf: &[f32], shape: BlockShape, c: [usize; 3]) -> f32 {
+    let side = shape.halo_side();
+    match shape.ndim {
+        1 => buf[c[0]], // (c0+1)-1
+        2 => {
+            let i = c[0] + 1;
+            let j = c[1] + 1;
+            let w = buf[i * side + (j - 1)];
+            let n = buf[(i - 1) * side + j];
+            let nw = buf[(i - 1) * side + (j - 1)];
+            w + n - nw
+        }
+        3 => {
+            let k = c[0] + 1;
+            let i = c[1] + 1;
+            let j = c[2] + 1;
+            let at = |k: usize, i: usize, j: usize| buf[(k * side + i) * side + j];
+            let w = at(k, i, j - 1);
+            let n = at(k, i - 1, j);
+            let u = at(k - 1, i, j);
+            let nw = at(k, i - 1, j - 1);
+            let wu = at(k - 1, i, j - 1);
+            let nu = at(k - 1, i - 1, j);
+            let nwu = at(k - 1, i - 1, j - 1);
+            (w + n + u) - (nw + nu + wu) + nwu
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// Iterate interior coordinates of a block in row-major order, calling
+/// `f(linear_index_within_block, coords)`.
+#[inline]
+pub fn for_each_coord(shape: BlockShape, mut f: impl FnMut(usize, [usize; 3])) {
+    let bs = shape.bs;
+    match shape.ndim {
+        1 => {
+            for x in 0..bs {
+                f(x, [x, 0, 0]);
+            }
+        }
+        2 => {
+            let mut l = 0;
+            for i in 0..bs {
+                for j in 0..bs {
+                    f(l, [i, j, 0]);
+                    l += 1;
+                }
+            }
+        }
+        3 => {
+            let mut l = 0;
+            for k in 0..bs {
+                for i in 0..bs {
+                    for j in 0..bs {
+                        f(l, [k, i, j]);
+                        l += 1;
+                    }
+                }
+            }
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::HaloBlock;
+
+    #[test]
+    fn predict_1d_is_west_neighbor() {
+        let shape = BlockShape::new(1, 4);
+        let mut h = HaloBlock::new(shape);
+        h.fill_halo(|_| 7.0);
+        h.load_interior(&[1.0, 2.0, 3.0, 4.0], |x| x);
+        assert_eq!(predict_halo(&h.buf, shape, [0, 0, 0]), 7.0); // pad
+        assert_eq!(predict_halo(&h.buf, shape, [1, 0, 0]), 1.0);
+        assert_eq!(predict_halo(&h.buf, shape, [3, 0, 0]), 3.0);
+    }
+
+    #[test]
+    fn predict_2d_plane_is_exact_for_bilinear() {
+        // f(i,j) = 3 + 2i + 5j is predicted exactly by W+N-NW everywhere
+        // (away from padding); check interior element (1,1)..(3,3).
+        let bs = 4;
+        let shape = BlockShape::new(2, bs);
+        let mut h = HaloBlock::new(shape);
+        h.fill_halo(|_| 0.0);
+        let block: Vec<f32> = (0..bs * bs)
+            .map(|l| {
+                let (i, j) = (l / bs, l % bs);
+                3.0 + 2.0 * i as f32 + 5.0 * j as f32
+            })
+            .collect();
+        h.load_interior(&block, |x| x);
+        for i in 1..bs {
+            for j in 1..bs {
+                let p = predict_halo(&h.buf, shape, [i, j, 0]);
+                let actual = 3.0 + 2.0 * i as f32 + 5.0 * j as f32;
+                assert!((p - actual).abs() < 1e-5, "({i},{j}): {p} vs {actual}");
+            }
+        }
+    }
+
+    #[test]
+    fn predict_3d_exact_for_trilinear() {
+        let bs = 3;
+        let shape = BlockShape::new(3, bs);
+        let mut h = HaloBlock::new(shape);
+        h.fill_halo(|_| 0.0);
+        let f = |k: usize, i: usize, j: usize| 1.0 + 2.0 * k as f32 - 3.0 * i as f32 + 0.5 * j as f32;
+        let mut block = vec![0.0f32; bs * bs * bs];
+        for_each_coord(shape, |l, c| block[l] = f(c[0], c[1], c[2]));
+        h.load_interior(&block, |x| x);
+        for k in 1..bs {
+            for i in 1..bs {
+                for j in 1..bs {
+                    let p = predict_halo(&h.buf, shape, [k, i, j]);
+                    assert!((p - f(k, i, j)).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coord_iteration_order_is_row_major() {
+        let shape = BlockShape::new(3, 2);
+        let mut seen = Vec::new();
+        for_each_coord(shape, |l, c| seen.push((l, c)));
+        assert_eq!(seen[0], (0, [0, 0, 0]));
+        assert_eq!(seen[1], (1, [0, 0, 1]));
+        assert_eq!(seen[2], (2, [0, 1, 0]));
+        assert_eq!(seen[7], (7, [1, 1, 1]));
+        assert_eq!(seen.len(), 8);
+    }
+}

@@ -1,0 +1,339 @@
+//! General-purpose lossless byte compressor (substrate).
+//!
+//! SZ's final stage passes outlier values and auxiliary streams through a
+//! dictionary coder (GZip/Zstd in the paper). We implement our own
+//! "deflate-lite": LZSS with a hash-chain match finder, optionally followed
+//! by an order-0 Huffman pass over the token bytes, plus an RLE mode and a
+//! stored mode. `compress` picks whichever mode is smallest, so it never
+//! expands input by more than the 6-byte header.
+//!
+//! Container: `tag u8 | uvarint raw_len | payload`.
+
+use crate::bitio::{get_uvarint, put_uvarint};
+use crate::error::{Result, VszError};
+use crate::huffman;
+
+const TAG_STORE: u8 = 0;
+const TAG_RLE: u8 = 1;
+const TAG_LZSS: u8 = 2;
+const TAG_LZSS_HUFF: u8 = 3;
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = 258;
+const WINDOW: usize = 1 << 16;
+const HASH_BITS: u32 = 15;
+const MAX_CHAIN: usize = 48;
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+    (v.wrapping_mul(0x9E3779B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Raw LZSS token stream:
+///   literal run : uvarint (len << 1) | 0, then `len` raw bytes
+///   match       : uvarint ((len - MIN_MATCH) << 1) | 1, then uvarint dist
+fn lzss_tokens(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 16);
+    let n = data.len();
+    let mut head = vec![usize::MAX; 1 << HASH_BITS];
+    let mut prev = vec![usize::MAX; n.max(1)];
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+
+    let flush_literals = |out: &mut Vec<u8>, from: usize, to: usize| {
+        let mut s = from;
+        while s < to {
+            let run = (to - s).min(1 << 20);
+            put_uvarint(out, (run as u64) << 1);
+            out.extend_from_slice(&data[s..s + run]);
+            s += run;
+        }
+    };
+
+    while i + MIN_MATCH <= n {
+        let h = hash4(data, i);
+        let mut cand = head[h];
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        let limit = i.saturating_sub(WINDOW - 1);
+        let mut chain = 0usize;
+        while cand != usize::MAX && cand >= limit && chain < MAX_CHAIN {
+            // extend match
+            let max_len = (n - i).min(MAX_MATCH);
+            let mut l = 0usize;
+            while l < max_len && data[cand + l] == data[i + l] {
+                l += 1;
+            }
+            if l > best_len {
+                best_len = l;
+                best_dist = i - cand;
+                if l >= max_len {
+                    break;
+                }
+            }
+            cand = prev[cand];
+            chain += 1;
+        }
+        if best_len >= MIN_MATCH {
+            flush_literals(&mut out, lit_start, i);
+            put_uvarint(&mut out, (((best_len - MIN_MATCH) as u64) << 1) | 1);
+            put_uvarint(&mut out, best_dist as u64);
+            // index all covered positions (cheap skip for long matches)
+            let end = (i + best_len).min(n.saturating_sub(MIN_MATCH - 1));
+            let step = if best_len > 64 { 4 } else { 1 };
+            let mut j = i;
+            while j < end {
+                let hj = hash4(data, j);
+                prev[j] = head[hj];
+                head[hj] = j;
+                j += step;
+            }
+            i += best_len;
+            lit_start = i;
+        } else {
+            prev[i] = head[h];
+            head[h] = i;
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, lit_start, n);
+    out
+}
+
+fn lzss_expand(tokens: &[u8], raw_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(raw_len);
+    let mut pos = 0usize;
+    let err = || VszError::format("lzss: truncated token stream");
+    while out.len() < raw_len {
+        let (ctrl, n) = get_uvarint(&tokens[pos..]).ok_or_else(err)?;
+        pos += n;
+        if ctrl & 1 == 0 {
+            let run = (ctrl >> 1) as usize;
+            if pos + run > tokens.len() || out.len() + run > raw_len {
+                return Err(VszError::format("lzss: literal run out of range"));
+            }
+            out.extend_from_slice(&tokens[pos..pos + run]);
+            pos += run;
+        } else {
+            let len = (ctrl >> 1) as usize + MIN_MATCH;
+            let (dist, n2) = get_uvarint(&tokens[pos..]).ok_or_else(err)?;
+            pos += n2;
+            let dist = dist as usize;
+            if dist == 0 || dist > out.len() || out.len() + len > raw_len {
+                return Err(VszError::format("lzss: bad match"));
+            }
+            let start = out.len() - dist;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn rle_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < data.len() {
+        let b = data[i];
+        let mut run = 1usize;
+        while i + run < data.len() && data[i + run] == b && run < (1 << 24) {
+            run += 1;
+        }
+        put_uvarint(&mut out, run as u64);
+        out.push(b);
+        i += run;
+    }
+    out
+}
+
+fn rle_decode(data: &[u8], raw_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(raw_len);
+    let mut pos = 0usize;
+    while out.len() < raw_len {
+        let (run, n) =
+            get_uvarint(&data[pos..]).ok_or_else(|| VszError::format("rle: truncated"))?;
+        pos += n;
+        let b = *data.get(pos).ok_or_else(|| VszError::format("rle: truncated"))?;
+        pos += 1;
+        if out.len() + run as usize > raw_len {
+            return Err(VszError::format("rle: run exceeds length"));
+        }
+        out.extend(std::iter::repeat(b).take(run as usize));
+    }
+    Ok(out)
+}
+
+fn huff_bytes(data: &[u8]) -> Vec<u8> {
+    let syms: Vec<u16> = data.iter().map(|&b| b as u16).collect();
+    huffman::compress_u16(&syms, 256)
+}
+
+fn unhuff_bytes(data: &[u8]) -> Result<Vec<u8>> {
+    Ok(huffman::decompress_u16(data)?.into_iter().map(|s| s as u8).collect())
+}
+
+/// Compress `data`, choosing the smallest of {store, rle, lzss, lzss+huff}.
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut candidates: Vec<(u8, Vec<u8>)> = Vec::with_capacity(4);
+    candidates.push((TAG_STORE, data.to_vec()));
+    let rle = rle_encode(data);
+    if rle.len() < data.len() {
+        candidates.push((TAG_RLE, rle));
+    }
+    if data.len() >= MIN_MATCH {
+        let tokens = lzss_tokens(data);
+        let hufftok = huff_bytes(&tokens);
+        if hufftok.len() < tokens.len() {
+            candidates.push((TAG_LZSS_HUFF, hufftok));
+        }
+        candidates.push((TAG_LZSS, tokens));
+    }
+    let (tag, payload) = candidates.into_iter().min_by_key(|(_, p)| p.len()).unwrap();
+    let mut out = Vec::with_capacity(payload.len() + 6);
+    out.push(tag);
+    put_uvarint(&mut out, data.len() as u64);
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Inverse of [`compress`].
+pub fn decompress(blob: &[u8]) -> Result<Vec<u8>> {
+    if blob.is_empty() {
+        return Err(VszError::format("lossless: empty blob"));
+    }
+    let tag = blob[0];
+    let (raw_len, n) =
+        get_uvarint(&blob[1..]).ok_or_else(|| VszError::format("lossless: bad header"))?;
+    let raw_len = raw_len as usize;
+    let payload = &blob[1 + n..];
+    match tag {
+        TAG_STORE => {
+            if payload.len() != raw_len {
+                return Err(VszError::format("store: length mismatch"));
+            }
+            Ok(payload.to_vec())
+        }
+        TAG_RLE => rle_decode(payload, raw_len),
+        TAG_LZSS => lzss_expand(payload, raw_len),
+        TAG_LZSS_HUFF => {
+            let tokens = unhuff_bytes(payload)?;
+            lzss_expand(&tokens, raw_len)
+        }
+        _ => Err(VszError::format(format!("lossless: unknown tag {tag}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::prng::Pcg32;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let blob = compress(data);
+        decompress(&blob).unwrap()
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        assert_eq!(roundtrip(b""), b"");
+        assert_eq!(roundtrip(b"a"), b"a");
+        assert_eq!(roundtrip(b"abc"), b"abc");
+    }
+
+    #[test]
+    fn constant_buffer_uses_rle_or_better() {
+        let data = vec![42u8; 100_000];
+        let blob = compress(&data);
+        assert!(blob.len() < 200, "constant run should collapse, got {}", blob.len());
+        assert_eq!(decompress(&blob).unwrap(), data);
+    }
+
+    #[test]
+    fn repetitive_text_compresses() {
+        let data: Vec<u8> =
+            b"the quick brown fox jumps over the lazy dog. ".repeat(500).to_vec();
+        let blob = compress(&data);
+        assert!(blob.len() < data.len() / 5, "got {} of {}", blob.len(), data.len());
+        assert_eq!(decompress(&blob).unwrap(), data);
+    }
+
+    #[test]
+    fn incompressible_random_does_not_blow_up() {
+        let mut rng = Pcg32::seeded(123);
+        let data: Vec<u8> = (0..50_000).map(|_| rng.next_u32() as u8).collect();
+        let blob = compress(&data);
+        assert!(blob.len() <= data.len() + 8);
+        assert_eq!(decompress(&blob).unwrap(), data);
+    }
+
+    #[test]
+    fn f32_outlier_stream_shape() {
+        // outlier values share exponent bytes -> lzss+huff should win space
+        let mut rng = Pcg32::seeded(7);
+        let vals: Vec<f32> = (0..20_000).map(|_| 100.0 + rng.next_f32()).collect();
+        let bytes = crate::util::f32_as_bytes(&vals);
+        let blob = compress(bytes);
+        assert!(blob.len() < bytes.len(), "got {} of {}", blob.len(), bytes.len());
+        assert_eq!(decompress(&blob).unwrap(), bytes);
+    }
+
+    #[test]
+    fn long_matches_beyond_max_match() {
+        let mut data = vec![0u8; 4096];
+        for (i, b) in data.iter_mut().enumerate() {
+            *b = (i % 7) as u8;
+        }
+        let mut doubled = data.clone();
+        doubled.extend_from_slice(&data);
+        assert_eq!(roundtrip(&doubled), doubled);
+    }
+
+    #[test]
+    fn rejects_corrupt_blobs() {
+        let blob = compress(b"hello world hello world hello world");
+        let mut bad = blob.clone();
+        bad[0] = 99; // unknown tag
+        assert!(decompress(&bad).is_err());
+        assert!(decompress(&[]).is_err());
+        // truncation
+        assert!(decompress(&blob[..blob.len().saturating_sub(3)]).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_mixed_content() {
+        check("lossless-roundtrip", 80, |g| {
+            let n = g.len() * 64;
+            let mode = g.rng.bounded(3);
+            let data: Vec<u8> = match mode {
+                0 => g.bytes(n),
+                1 => {
+                    // runs
+                    let mut v = Vec::with_capacity(n);
+                    while v.len() < n {
+                        let b = g.rng.next_u32() as u8;
+                        let run = 1 + g.rng.bounded(32) as usize;
+                        v.extend(std::iter::repeat(b).take(run.min(n - v.len())));
+                    }
+                    v
+                }
+                _ => {
+                    // repeated motifs
+                    let mlen = 1 + g.rng.bounded(24) as usize;
+                    let motif = g.bytes(mlen);
+                    motif.iter().cycle().take(n).copied().collect()
+                }
+            };
+            let blob = compress(&data);
+            let back = decompress(&blob).map_err(|e| e.to_string())?;
+            if back == data {
+                Ok(())
+            } else {
+                Err(format!("mismatch mode={mode} n={n}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,370 @@
+//! vecSZ command-line launcher.
+//!
+//! Subcommands:
+//!   compress    raw f32 file or synthetic suite -> .vsz container(s)
+//!   decompress  .vsz -> raw f32 file
+//!   verify      compress + decompress + check the error bound
+//!   bench       P&Q bandwidth of one configuration
+//!   autotune    pick best (block size x lane width) for an input
+//!   roofline    machine ceilings + dual-quant OI model
+//!   figure      regenerate a paper table/figure (see `figure list`)
+//!   gen-data    write a synthetic suite to raw f32 files
+//!   pipeline    streaming time-series compression demo
+//!   info        artifact manifest + host summary
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use vecsz::autotune::{autotune, TuneSettings};
+use vecsz::bench::{bench, BenchOpts};
+use vecsz::cli::Args;
+use vecsz::compressor::{
+    compress, decompress, pq_stage, verify_roundtrip, BackendChoice, Config, EbMode,
+};
+use vecsz::data::{io as dio, suite, Field, Scale};
+use vecsz::error::{Result, VszError};
+use vecsz::padding::PaddingPolicy;
+use vecsz::roofline;
+use vecsz::util::human_bytes;
+
+const USAGE: &str = "vecsz — SIMD lossy compression for scientific data (paper reproduction)
+
+USAGE: vecsz <command> [flags]
+
+COMMANDS
+  compress   --input F --dims NxM [--out F.vsz] | --suite NAME [--out-dir D]
+             flags: --eb 1e-4 | --rel-eb 1e-4, --block N, --backend
+             sz14|psz|vec8|vec16, --padding zero|avg-global|..., --threads N
+  decompress --input F.vsz --out F.f32 [--threads N]
+  verify     same flags as compress; checks the error bound end to end
+  bench      --suite NAME [--backend ...] [--block N] [--threads N]
+  autotune   --suite NAME [--sample-pct P] [--iterations N]
+  roofline   [--quick]
+  figure     <table1|table2|fig1|fig3|fig4|fig5|fig6_7|fig8|fig9|fig10|
+              padding|table3|stability|all> [--out-dir results] [--quick]
+  gen-data   --suite NAME --out-dir D [--full]
+  pipeline   --suite NAME --steps N [--out-dir D]
+  info       [--artifacts DIR]
+";
+
+fn parse_common(a: &Args) -> Result<Config> {
+    let mut cfg = Config::default();
+    if let Some(e) = a.get("eb") {
+        cfg.eb = EbMode::Abs(e.parse().map_err(|_| VszError::config("bad --eb"))?);
+    }
+    if let Some(e) = a.get("rel-eb") {
+        cfg.eb = EbMode::Rel(e.parse().map_err(|_| VszError::config("bad --rel-eb"))?);
+    }
+    cfg.block_size = a.usize_or("block", 0)?;
+    cfg.radius = a.usize_or("radius", 512)? as u16;
+    cfg.threads = a.usize_or("threads", 1)?;
+    let be = a.str_or("backend", "vec16");
+    cfg.backend =
+        BackendChoice::parse(be).ok_or_else(|| VszError::config(format!("bad --backend {be}")))?;
+    let pad = a.str_or("padding", "zero");
+    cfg.padding = PaddingPolicy::parse(pad)
+        .ok_or_else(|| VszError::config(format!("bad --padding {pad}")))?;
+    Ok(cfg)
+}
+
+fn load_inputs(a: &Args) -> Result<Vec<Field>> {
+    if let Some(name) = a.get("suite") {
+        let scale = if a.has("full") { Scale::Full } else { Scale::Small };
+        let ds = suite(name, scale, a.usize_or("seed", 0xDA7A)? as u64)
+            .ok_or_else(|| VszError::config(format!("unknown suite '{name}'")))?;
+        Ok(ds.fields)
+    } else if let Some(path) = a.get("input") {
+        let dims = dio::parse_dims(
+            a.get("dims").ok_or_else(|| VszError::config("--dims required with --input"))?,
+        )?;
+        let name = Path::new(path)
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_else(|| "field".into());
+        Ok(vec![dio::read_f32_file(Path::new(path), dims, &name)?])
+    } else {
+        Err(VszError::config("need --suite NAME or --input FILE --dims NxM"))
+    }
+}
+
+fn cmd_compress(a: &Args) -> Result<()> {
+    let cfg = parse_common(a)?;
+    let fields = load_inputs(a)?;
+    let out_dir = a.str_or("out-dir", ".");
+    let single_out = a.get("out").map(|s| s.to_string());
+    for f in &fields {
+        let (bytes, stats) = compress(f, &cfg)?;
+        let path = match (&single_out, fields.len()) {
+            (Some(p), 1) => p.clone(),
+            _ => format!("{out_dir}/{}.vsz", f.name),
+        };
+        std::fs::create_dir_all(Path::new(&path).parent().unwrap_or(Path::new(".")))?;
+        std::fs::write(&path, &bytes)?;
+        println!(
+            "{:<16} {:>10} -> {:>10}  CR {:>6.2}x  rate {:>5.2} b/val  P&Q {:>8.0} MB/s  outliers {:>6.3}%  -> {path}",
+            f.name,
+            human_bytes(stats.size.raw_bytes as u64),
+            human_bytes(stats.size.compressed_bytes as u64),
+            stats.size.ratio(),
+            stats.size.bit_rate(),
+            stats.pq_bandwidth_mbs(),
+            stats.outlier_pct(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_decompress(a: &Args) -> Result<()> {
+    let input = a.get("input").ok_or_else(|| VszError::config("--input required"))?;
+    let out = a.get("out").ok_or_else(|| VszError::config("--out required"))?;
+    let threads = a.usize_or("threads", 1)?;
+    let bytes = std::fs::read(input)?;
+    let field = decompress(&bytes, threads)?;
+    dio::write_f32_file(Path::new(out), &field.data)?;
+    println!(
+        "decompressed {} -> {} ({} values, dims {:?})",
+        input,
+        out,
+        field.data.len(),
+        &field.dims.shape[..field.dims.ndim]
+    );
+    Ok(())
+}
+
+fn cmd_verify(a: &Args) -> Result<()> {
+    let cfg = parse_common(a)?;
+    for f in load_inputs(a)? {
+        let (stats, max_err) = verify_roundtrip(&f, &cfg)?;
+        println!(
+            "{:<16} OK  eb {:.3e}  max err {:.3e}  CR {:.2}x  outliers {:.3}%",
+            f.name,
+            stats.eb,
+            max_err,
+            stats.size.ratio(),
+            stats.outlier_pct()
+        );
+    }
+    println!("error bound holds for all fields");
+    Ok(())
+}
+
+fn cmd_bench(a: &Args) -> Result<()> {
+    let cfg = parse_common(a)?;
+    let opts = if a.has("quick") { BenchOpts::quick() } else { BenchOpts::from_env() };
+    for f in load_inputs(a)? {
+        let be = cfg.backend.instantiate();
+        let stats = bench(
+            &format!("{} [{}] pq", f.name, be.name()),
+            f.data.len() * 4,
+            opts,
+            || {
+                let _ = pq_stage(&f, &cfg, be.as_ref());
+            },
+        );
+        println!("{}", stats.row());
+    }
+    Ok(())
+}
+
+fn cmd_autotune(a: &Args) -> Result<()> {
+    let cfg = parse_common(a)?;
+    let settings = TuneSettings {
+        sample_pct: a.f64_or("sample-pct", 5.0)?,
+        iterations: a.usize_or("iterations", 2)?,
+        seed: a.usize_or("seed", 7)? as u64,
+    };
+    for f in load_inputs(a)? {
+        let eb = cfg.eb.resolve(&f.data);
+        let r = autotune(&f, eb, cfg.radius, cfg.padding, &[8, 16], settings);
+        println!("{}: sampled {} blocks in {:.3}s", f.name, r.sampled_blocks, r.tune_seconds);
+        for p in &r.table {
+            let mark = if p.config == r.best { " <== best" } else { "" };
+            println!(
+                "   bs={:<3} w={:<2} {:>9.0} MB/s{mark}",
+                p.config.block_size, p.config.width, p.mb_per_s
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_roofline(a: &Args) -> Result<()> {
+    let quick = a.has("quick");
+    let h = roofline::host_info();
+    println!("host: {} ({} cores, cache {} KB, avx2={} avx512={})",
+        h.model, h.cores, h.cache_kb, h.has_avx2, h.has_avx512);
+    let c = roofline::measure_ceilings(quick);
+    println!("stream triad : {:.2} GB/s", c.dram_gb_s);
+    println!("peak f32 FMA : {:.2} GFLOP/s", c.peak_gflop_s);
+    for ndim in 1..=3 {
+        let m = roofline::oi_model(ndim);
+        let p = roofline::evaluate(c, m.oi_conservative(), 0.0);
+        println!(
+            "dual-quant {ndim}D: OI [{:.2}, {:.2}] flop/B -> attainable {:.1} GFLOP/s ({})",
+            m.oi_conservative(),
+            m.oi_lenient(),
+            p.attainable_gflop_s,
+            if p.memory_bound { "memory-bound" } else { "compute-bound" }
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figure(a: &Args) -> Result<()> {
+    let id = a.positional.first().map(|s| s.as_str()).unwrap_or("list");
+    let out_dir = a.str_or("out-dir", "results").to_string();
+    let quick = a.has("quick");
+    if id == "list" {
+        println!("available: {}", vecsz::figures::ALL_IDS.join(" "));
+        return Ok(());
+    }
+    if !vecsz::figures::run(id, &out_dir, quick)? {
+        return Err(VszError::config(format!(
+            "unknown figure '{id}' (try: {})",
+            vecsz::figures::ALL_IDS.join(" ")
+        )));
+    }
+    println!("\ncsv written under {out_dir}/");
+    Ok(())
+}
+
+fn cmd_gen_data(a: &Args) -> Result<()> {
+    let name = a.get("suite").ok_or_else(|| VszError::config("--suite required"))?;
+    let out_dir = a.str_or("out-dir", "data");
+    let scale = if a.has("full") { Scale::Full } else { Scale::Small };
+    let ds = suite(name, scale, a.usize_or("seed", 0xDA7A)? as u64)
+        .ok_or_else(|| VszError::config(format!("unknown suite '{name}'")))?;
+    std::fs::create_dir_all(out_dir)?;
+    for f in &ds.fields {
+        let dims_s: Vec<String> =
+            f.dims.shape[..f.dims.ndim].iter().map(|d| d.to_string()).collect();
+        let path = format!("{out_dir}/{}_{}_{}.f32", ds.name, f.name, dims_s.join("x"));
+        dio::write_f32_file(Path::new(&path), &f.data)?;
+        println!("wrote {path} ({})", human_bytes(f.size_bytes() as u64));
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(a: &Args) -> Result<()> {
+    use vecsz::coordinator::pipeline::{run_stream, PipelineConfig};
+    let cfg = parse_common(a)?;
+    let name = a.str_or("suite", "cesm").to_string();
+    let steps = a.usize_or("steps", 8)?;
+    let out_dir = a.str_or("out-dir", "").to_string();
+    let seed = a.usize_or("seed", 42)? as u64;
+    let pcfg = PipelineConfig {
+        base: cfg,
+        retune_every: a.usize_or("retune-every", 16)?,
+        tune: TuneSettings::default(),
+        widths: [8, 16],
+        queue_depth: 2,
+    };
+    let nm = name.clone();
+    let report = run_stream(
+        move |i| {
+            if i >= steps {
+                return None;
+            }
+            // time-step analog: re-seeded suite = evolved field
+            suite(&nm, Scale::Small, seed + i as u64).map(|ds| {
+                let mut f = ds.fields.into_iter().next().unwrap();
+                f.name = format!("{}_t{:03}", f.name, i);
+                f
+            })
+        },
+        pcfg,
+        |step, bytes| {
+            if !out_dir.is_empty() {
+                std::fs::create_dir_all(&out_dir)?;
+                std::fs::write(format!("{out_dir}/step{step:03}.vsz"), &bytes)?;
+            }
+            Ok(())
+        },
+    )?;
+    for s in &report.steps {
+        let tune = s
+            .tuned
+            .map(|t| format!("tuned bs{} w{}", t.block_size, t.width))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "step {:>3} {:<20} CR {:>6.2}x  P&Q {:>8.0} MB/s  stall {:>6.1} ms  {}",
+            s.step,
+            s.field_name,
+            s.stats.size.ratio(),
+            s.stats.pq_bandwidth_mbs(),
+            s.stall_seconds * 1e3,
+            tune
+        );
+    }
+    println!(
+        "pipeline: {} steps in {:.2}s, overall CR {:.2}x, mean P&Q {:.0} MB/s, tuning {:.1}% of wall",
+        report.steps.len(),
+        report.total_seconds,
+        report.overall_ratio(),
+        report.mean_pq_mbs(),
+        report.tune_overhead_pct()
+    );
+    Ok(())
+}
+
+fn cmd_info(a: &Args) -> Result<()> {
+    println!("vecsz {}", vecsz::version());
+    let h = roofline::host_info();
+    println!("host: {} ({} cores)", h.model, h.cores);
+    let dir = a.str_or("artifacts", "artifacts");
+    match vecsz::runtime::Manifest::load(Path::new(dir)) {
+        Ok(m) => {
+            println!("artifacts ({}):", dir);
+            for art in &m.artifacts {
+                println!(
+                    "  {:<24} {}D bs={:<4} lanes={:<3} superbatch={:<6} [{}]",
+                    art.name, art.ndim, art.block_size, art.lanes, art.superbatch, art.impl_kind
+                );
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+    Ok(())
+}
+
+fn dispatch(a: &Args) -> Result<()> {
+    match a.subcommand.as_str() {
+        "compress" => cmd_compress(a),
+        "decompress" => cmd_decompress(a),
+        "verify" => cmd_verify(a),
+        "bench" => cmd_bench(a),
+        "autotune" => cmd_autotune(a),
+        "roofline" => cmd_roofline(a),
+        "figure" => cmd_figure(a),
+        "gen-data" => cmd_gen_data(a),
+        "pipeline" => cmd_pipeline(a),
+        "info" => cmd_info(a),
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(VszError::config(format!("unknown command '{other}'\n{USAGE}"))),
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if args.has("help") {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Quality and size metrics: PSNR, NRMSE, max error, compression ratio,
+//! bit-rate — the quantities of the paper's rate-distortion study (Fig 10)
+//! and the padding study (§V-I).
+
+/// Distortion statistics of a reconstruction against the original.
+#[derive(Clone, Copy, Debug)]
+pub struct Distortion {
+    pub max_abs_err: f64,
+    pub mse: f64,
+    pub nrmse: f64,
+    /// Peak signal-to-noise ratio in dB, using the value range as peak
+    /// (the SZ convention).
+    pub psnr_db: f64,
+    pub value_range: f64,
+}
+
+/// Compare reconstruction vs original.
+pub fn distortion(orig: &[f32], rec: &[f32]) -> Distortion {
+    assert_eq!(orig.len(), rec.len(), "length mismatch");
+    assert!(!orig.is_empty(), "empty field");
+    let mut max_err = 0.0f64;
+    let mut sq = 0.0f64;
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for (&o, &r) in orig.iter().zip(rec) {
+        let o = o as f64;
+        let e = (o - r as f64).abs();
+        max_err = max_err.max(e);
+        sq += e * e;
+        lo = lo.min(o);
+        hi = hi.max(o);
+    }
+    let mse = sq / orig.len() as f64;
+    let range = (hi - lo).max(f64::MIN_POSITIVE);
+    let rmse = mse.sqrt();
+    let psnr = 20.0 * (range / rmse.max(f64::MIN_POSITIVE)).log10();
+    Distortion { max_abs_err: max_err, mse, nrmse: rmse / range, psnr_db: psnr, value_range: hi - lo }
+}
+
+/// Size statistics of a compression run.
+#[derive(Clone, Copy, Debug)]
+pub struct SizeStats {
+    pub raw_bytes: usize,
+    pub compressed_bytes: usize,
+}
+
+impl SizeStats {
+    pub fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+
+    /// Bits per value (raw values are f32 = 32 bits).
+    pub fn bit_rate(&self) -> f64 {
+        32.0 / self.ratio()
+    }
+}
+
+/// One point of a rate-distortion curve (Fig 10 axes).
+#[derive(Clone, Copy, Debug)]
+pub struct RdPoint {
+    pub eb: f64,
+    pub bit_rate: f64,
+    pub psnr_db: f64,
+}
+
+/// Honest f32 round-trip tolerance: the algorithmic guarantee is `eb`, but
+/// pre-quantization (`x * (0.5/eb)` in f32) and the final `2*eb*d°` multiply
+/// each add O(ulp(value-scale)); callers verifying the bound must allow it.
+pub fn roundtrip_tolerance(eb: f64, range: f64) -> f64 {
+    eb * 1.0001 + 4.0 * f32::EPSILON as f64 * range.abs()
+}
+
+/// Value range of a field (used by relative error bounds).
+pub fn value_range(xs: &[f32]) -> f64 {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &x in xs {
+        lo = lo.min(x as f64);
+        hi = hi.max(x as f64);
+    }
+    (hi - lo).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_arrays_have_infinite_psnr_like_values() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let d = distortion(&a, &a);
+        assert_eq!(d.max_abs_err, 0.0);
+        assert_eq!(d.mse, 0.0);
+        assert!(d.psnr_db > 300.0); // effectively infinite
+    }
+
+    #[test]
+    fn known_psnr_case() {
+        // orig range 1.0, constant error 0.1 -> rmse 0.1 -> psnr = 20 dB
+        let orig = vec![0.0f32, 1.0];
+        let rec = vec![0.1f32, 1.1];
+        let d = distortion(&orig, &rec);
+        assert!((d.psnr_db - 20.0).abs() < 1e-4, "psnr {}", d.psnr_db);
+        assert!((d.max_abs_err - 0.1).abs() < 1e-7);
+        assert!((d.nrmse - 0.1).abs() < 1e-7);
+    }
+
+    #[test]
+    fn size_stats_math() {
+        let s = SizeStats { raw_bytes: 4000, compressed_bytes: 500 };
+        assert_eq!(s.ratio(), 8.0);
+        assert_eq!(s.bit_rate(), 4.0);
+    }
+
+    #[test]
+    fn value_range_basics() {
+        assert_eq!(value_range(&[3.0, -1.0, 2.0]), 4.0);
+        assert_eq!(value_range(&[5.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        distortion(&[1.0], &[1.0, 2.0]);
+    }
+}

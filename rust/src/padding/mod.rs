@@ -1,0 +1,295 @@
+//! Block-padding policies (§IV of the paper).
+//!
+//! Values without preceding neighbours (block borders) are predicted from
+//! the padding scalar. The original SZ/cuSZ use zero padding; vecSZ's
+//! contribution is choosing a *statistical* padding value (min/max/avg) at
+//! one of three granularities (global / per-block / per-edge), trading
+//! scalar-storage overhead against border predictability.
+
+use crate::blocks::{Dims, gather_block};
+
+/// Which statistic supplies the padding scalar.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PadValue {
+    /// Constant 0 — the cuSZ baseline.
+    Zero,
+    Min,
+    Max,
+    Avg,
+}
+
+/// At what granularity scalars are computed & stored (§IV-B).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PadGranularity {
+    /// One scalar for the whole field (1 extra value stored).
+    Global,
+    /// One scalar per block (`nblocks` extra values).
+    Block,
+    /// One scalar per block border axis (`nblocks * ndim` extra values).
+    Edge,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PaddingPolicy {
+    pub value: PadValue,
+    pub granularity: PadGranularity,
+}
+
+impl PaddingPolicy {
+    pub const ZERO: PaddingPolicy =
+        PaddingPolicy { value: PadValue::Zero, granularity: PadGranularity::Global };
+
+    pub fn new(value: PadValue, granularity: PadGranularity) -> Self {
+        Self { value, granularity }
+    }
+
+    /// Parse "zero", "avg-global", "min-block", "max-edge", ...
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "zero" {
+            return Some(Self::ZERO);
+        }
+        let (v, g) = s.split_once('-')?;
+        let value = match v {
+            "zero" => PadValue::Zero,
+            "min" => PadValue::Min,
+            "max" => PadValue::Max,
+            "avg" => PadValue::Avg,
+            _ => return None,
+        };
+        let granularity = match g {
+            "global" => PadGranularity::Global,
+            "block" => PadGranularity::Block,
+            "edge" => PadGranularity::Edge,
+            _ => return None,
+        };
+        Some(Self { value, granularity })
+    }
+
+    pub fn name(&self) -> String {
+        let v = match self.value {
+            PadValue::Zero => "zero",
+            PadValue::Min => "min",
+            PadValue::Max => "max",
+            PadValue::Avg => "avg",
+        };
+        let g = match self.granularity {
+            PadGranularity::Global => "global",
+            PadGranularity::Block => "block",
+            PadGranularity::Edge => "edge",
+        };
+        if self.value == PadValue::Zero {
+            "zero".to_string()
+        } else {
+            format!("{v}-{g}")
+        }
+    }
+}
+
+/// Computed padding scalars for one field; stored in the container so the
+/// decompressor reproduces predictions exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PadScalars {
+    pub policy: PaddingPolicy,
+    /// Global: 1 scalar. Block: nblocks. Edge: nblocks * ndim (axis-major
+    /// within block: `scalars[b * ndim + axis]`).
+    pub scalars: Vec<f32>,
+    pub ndim: usize,
+}
+
+impl PadScalars {
+    /// Scalar used to gather-fill and (for Global/Block) all halo planes of
+    /// block `b`.
+    #[inline]
+    pub fn block_scalar(&self, b: usize) -> f32 {
+        match self.policy.granularity {
+            PadGranularity::Global => self.scalars[0],
+            PadGranularity::Block => self.scalars[b],
+            // edge granularity: representative = axis-0 scalar
+            PadGranularity::Edge => self.scalars[b * self.ndim],
+        }
+    }
+
+    /// Scalar for the halo plane orthogonal to `axis` of block `b`.
+    #[inline]
+    pub fn edge_scalar(&self, b: usize, axis: usize) -> f32 {
+        match self.policy.granularity {
+            PadGranularity::Global => self.scalars[0],
+            PadGranularity::Block => self.scalars[b],
+            PadGranularity::Edge => self.scalars[b * self.ndim + axis],
+        }
+    }
+
+    /// Storage overhead in raw f32 values (Table in §IV-B).
+    pub fn storage_values(&self) -> usize {
+        self.scalars.len()
+    }
+}
+
+fn stat(value: PadValue, xs: &[f32]) -> f32 {
+    match value {
+        PadValue::Zero => 0.0,
+        PadValue::Min => xs.iter().copied().fold(f32::INFINITY, f32::min),
+        PadValue::Max => xs.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+        PadValue::Avg => {
+            // f64 accumulator: stable for large fields
+            (xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len().max(1) as f64) as f32
+        }
+    }
+}
+
+/// Statistic over the border hyperplane of a gathered block orthogonal to
+/// `axis` (the elements the halo plane predicts).
+fn edge_stat(value: PadValue, block: &[f32], bs: usize, ndim: usize, axis: usize) -> f32 {
+    let mut vals: Vec<f32> = Vec::with_capacity(bs * bs);
+    match ndim {
+        1 => vals.push(block[0]),
+        2 => match axis {
+            0 => vals.extend_from_slice(&block[..bs]), // first row
+            _ => vals.extend((0..bs).map(|i| block[i * bs])), // first col
+        },
+        3 => match axis {
+            0 => vals.extend_from_slice(&block[..bs * bs]), // first plane
+            1 => vals.extend((0..bs).flat_map(|k| (0..bs).map(move |j| (k * bs) * bs + j)).map(|i| block[i])),
+            _ => vals.extend((0..bs).flat_map(|k| (0..bs).map(move |i| (k * bs + i) * bs)).map(|i| block[i])),
+        },
+        _ => unreachable!(),
+    }
+    stat(value, &vals)
+}
+
+/// Compute padding scalars for `field` under `policy`.
+pub fn compute_scalars(field: &[f32], dims: &Dims, bs: usize, policy: PaddingPolicy) -> PadScalars {
+    let ndim = dims.ndim;
+    let scalars = match (policy.value, policy.granularity) {
+        (PadValue::Zero, _) => vec![0.0],
+        (v, PadGranularity::Global) => vec![stat(v, field)],
+        (v, PadGranularity::Block) => {
+            let nb = dims.num_blocks(bs);
+            let mut out = Vec::with_capacity(nb);
+            let mut block = vec![0.0f32; bs.pow(ndim as u32)];
+            for b in 0..nb {
+                // fill value irrelevant for stats over valid region only:
+                // gather with NAN then filter
+                gather_block(field, dims, bs, b, f32::NAN, &mut block);
+                let valid: Vec<f32> = block.iter().copied().filter(|x| !x.is_nan()).collect();
+                out.push(stat(v, &valid));
+            }
+            out
+        }
+        (v, PadGranularity::Edge) => {
+            let nb = dims.num_blocks(bs);
+            let mut out = Vec::with_capacity(nb * ndim);
+            let mut block = vec![0.0f32; bs.pow(ndim as u32)];
+            for b in 0..nb {
+                gather_block(field, dims, bs, b, f32::NAN, &mut block);
+                // NaNs (out-of-field) replaced by block mean of valid region
+                let valid: Vec<f32> = block.iter().copied().filter(|x| !x.is_nan()).collect();
+                let fallback = stat(PadValue::Avg, &valid);
+                let clean: Vec<f32> =
+                    block.iter().map(|&x| if x.is_nan() { fallback } else { x }).collect();
+                for axis in 0..ndim {
+                    out.push(edge_stat(v, &clean, bs, ndim, axis));
+                }
+            }
+            out
+        }
+    };
+    // Zero policy normalizes to Global granularity (1 scalar)
+    let policy = if policy.value == PadValue::Zero {
+        PaddingPolicy::ZERO
+    } else {
+        policy
+    };
+    PadScalars { policy, scalars, ndim }
+}
+
+/// All policies of the paper's padding study (§IV/§V-I grid).
+pub fn study_policies() -> Vec<PaddingPolicy> {
+    let mut v = vec![PaddingPolicy::ZERO];
+    for value in [PadValue::Min, PadValue::Max, PadValue::Avg] {
+        for gran in [PadGranularity::Global, PadGranularity::Block, PadGranularity::Edge] {
+            v.push(PaddingPolicy::new(value, gran));
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn field_2d() -> (Vec<f32>, Dims) {
+        // 4x4 ramp offset by 50 (non-zero-centred, like CESM in Fig 2)
+        let f: Vec<f32> = (0..16).map(|x| 50.0 + x as f32).collect();
+        (f, Dims::d2(4, 4))
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        for p in study_policies() {
+            assert_eq!(PaddingPolicy::parse(&p.name()), Some(p));
+        }
+        assert_eq!(PaddingPolicy::parse("zero"), Some(PaddingPolicy::ZERO));
+        assert_eq!(PaddingPolicy::parse("bogus"), None);
+        assert_eq!(PaddingPolicy::parse("avg-bogus"), None);
+    }
+
+    #[test]
+    fn global_scalars() {
+        let (f, dims) = field_2d();
+        let s = compute_scalars(&f, &dims, 2, PaddingPolicy::new(PadValue::Avg, PadGranularity::Global));
+        assert_eq!(s.scalars.len(), 1);
+        assert!((s.scalars[0] - 57.5).abs() < 1e-4);
+        let s = compute_scalars(&f, &dims, 2, PaddingPolicy::new(PadValue::Min, PadGranularity::Global));
+        assert_eq!(s.scalars[0], 50.0);
+        let s = compute_scalars(&f, &dims, 2, PaddingPolicy::new(PadValue::Max, PadGranularity::Global));
+        assert_eq!(s.scalars[0], 65.0);
+    }
+
+    #[test]
+    fn block_scalars_ignore_out_of_field() {
+        // 3x3 field, bs=2: corner block has 1 valid element = 8+50
+        let f: Vec<f32> = (0..9).map(|x| 50.0 + x as f32).collect();
+        let dims = Dims::d2(3, 3);
+        let s = compute_scalars(&f, &dims, 2, PaddingPolicy::new(PadValue::Avg, PadGranularity::Block));
+        assert_eq!(s.scalars.len(), 4);
+        assert_eq!(s.block_scalar(3), 58.0);
+    }
+
+    #[test]
+    fn edge_scalars_shape_and_values() {
+        let (f, dims) = field_2d();
+        let s = compute_scalars(&f, &dims, 2, PaddingPolicy::new(PadValue::Avg, PadGranularity::Edge));
+        assert_eq!(s.scalars.len(), 4 * 2);
+        // block 0 = [[50,51],[54,55]]: axis0 edge (first row) avg = 50.5,
+        // axis1 edge (first col) avg = 52
+        assert!((s.edge_scalar(0, 0) - 50.5).abs() < 1e-5);
+        assert!((s.edge_scalar(0, 1) - 52.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn zero_policy_single_scalar() {
+        let (f, dims) = field_2d();
+        let s = compute_scalars(&f, &dims, 2, PaddingPolicy::new(PadValue::Zero, PadGranularity::Edge));
+        assert_eq!(s.scalars, vec![0.0]);
+        assert_eq!(s.block_scalar(3), 0.0);
+        assert_eq!(s.edge_scalar(2, 1), 0.0);
+    }
+
+    #[test]
+    fn storage_overhead_ordering() {
+        // paper §IV-B: global < block < edge overhead
+        let (f, dims) = field_2d();
+        let g = compute_scalars(&f, &dims, 2, PaddingPolicy::new(PadValue::Avg, PadGranularity::Global));
+        let b = compute_scalars(&f, &dims, 2, PaddingPolicy::new(PadValue::Avg, PadGranularity::Block));
+        let e = compute_scalars(&f, &dims, 2, PaddingPolicy::new(PadValue::Avg, PadGranularity::Edge));
+        assert!(g.storage_values() < b.storage_values());
+        assert!(b.storage_values() < e.storage_values());
+    }
+
+    #[test]
+    fn study_grid_size() {
+        // zero + 3 values x 3 granularities
+        assert_eq!(study_policies().len(), 10);
+    }
+}

@@ -1,0 +1,211 @@
+//! Decompression of quant-code streams — the sequential (cascading)
+//! reverse path of both algorithms.
+//!
+//! Decompression keeps the RAW dependence (each element needs its already-
+//! reconstructed neighbours), which is why the paper vectorizes compression
+//! only (§III-A). Blocks are still independent, so the coordinator
+//! parallelizes *across* blocks.
+
+use super::{CodesKind, DqConfig, OUTLIER_CODE};
+use crate::blocks::HaloBlock;
+use crate::lorenzo::{for_each_coord, predict_halo};
+use crate::padding::PadScalars;
+
+/// Reconstruct one block from its code/outlier streams into `out` (length
+/// `bs^d`, data units).
+pub fn decode_block(
+    kind: CodesKind,
+    cfg: &DqConfig,
+    codes: &[u16],
+    outv: &[f32],
+    pads: &PadScalars,
+    b: usize,
+    halo: &mut HaloBlock,
+    out: &mut [f32],
+) {
+    match kind {
+        CodesKind::DualQuant => decode_block_dualquant(cfg, codes, outv, pads, b, halo, out),
+        CodesKind::Sz14 => decode_block_sz14(cfg, codes, outv, pads, b, halo, out),
+    }
+}
+
+/// Dual-quant reverse (Algorithm 2 decompress): reconstruct d° exactly by
+/// the cascading Lorenzo scan in the pre-quantized domain, then scale.
+pub fn decode_block_dualquant(
+    cfg: &DqConfig,
+    codes: &[u16],
+    outv: &[f32],
+    pads: &PadScalars,
+    b: usize,
+    halo: &mut HaloBlock,
+    out: &mut [f32],
+) {
+    let shape = cfg.shape;
+    let hie = cfg.half_inv_eb();
+    let twice_eb = cfg.twice_eb();
+    let radius = cfg.radius as i32;
+    halo.fill_halo(|axis| super::prequant(pads.edge_scalar(b, axis), hie));
+    for_each_coord(shape, |l, c| {
+        let dq = if codes[l] == OUTLIER_CODE {
+            outv[l]
+        } else {
+            let pred = predict_halo(&halo.buf, shape, c);
+            pred + (codes[l] as i32 - radius) as f32
+        };
+        let hidx = halo.interior_index(c);
+        halo.buf[hidx] = dq;
+        out[l] = dq * twice_eb;
+    });
+}
+
+/// SZ-1.4 reverse (Algorithm 1 decompress): cascade in data units; outliers
+/// are verbatim originals.
+pub fn decode_block_sz14(
+    cfg: &DqConfig,
+    codes: &[u16],
+    outv: &[f32],
+    pads: &PadScalars,
+    b: usize,
+    halo: &mut HaloBlock,
+    out: &mut [f32],
+) {
+    let shape = cfg.shape;
+    let twice_eb = cfg.twice_eb();
+    let radius = cfg.radius as i32;
+    halo.fill_halo(|axis| pads.edge_scalar(b, axis));
+    for_each_coord(shape, |l, c| {
+        let v = if codes[l] == OUTLIER_CODE {
+            outv[l]
+        } else {
+            let pred = predict_halo(&halo.buf, shape, c);
+            pred + (codes[l] as i32 - radius) as f32 * twice_eb
+        };
+        let hidx = halo.interior_index(c);
+        halo.buf[hidx] = v;
+        out[l] = v;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::quant::psz::PszBackend;
+    use crate::quant::sz14::Sz14Backend;
+    use crate::quant::test_support::random_batch;
+    use crate::quant::vectorized::VecBackend;
+    use crate::quant::PqBackend;
+    use crate::util::proptest::check;
+    use crate::util::prng::Pcg32;
+
+    /// Max |rec - orig| over a full encode/decode roundtrip of a batch.
+    fn roundtrip_max_err(be: &dyn PqBackend, cfg: &DqConfig, blocks: &[f32], pads: &PadScalars) -> f32 {
+        let elems = cfg.shape.elems();
+        let nb = blocks.len() / elems;
+        let mut codes = vec![0u16; blocks.len()];
+        let mut outv = vec![0.0f32; blocks.len()];
+        be.run(cfg, blocks, 0, pads, &mut codes, &mut outv);
+        let mut halo = HaloBlock::new(cfg.shape);
+        let mut rec = vec![0.0f32; elems];
+        let mut max_err = 0.0f32;
+        for b in 0..nb {
+            decode_block(
+                be.kind(),
+                cfg,
+                &codes[b * elems..(b + 1) * elems],
+                &outv[b * elems..(b + 1) * elems],
+                pads,
+                b,
+                &mut halo,
+                &mut rec,
+            );
+            for (r, d) in rec.iter().zip(&blocks[b * elems..(b + 1) * elems]) {
+                max_err = max_err.max((r - d).abs());
+            }
+        }
+        max_err
+    }
+
+    #[test]
+    fn dualquant_roundtrip_bound_all_dims() {
+        let mut rng = Pcg32::seeded(21);
+        for &(ndim, bs) in &[(1usize, 64usize), (2, 16), (3, 8)] {
+            for &eb in &[1e-2f64, 1e-3, 1e-4] {
+                let shape = BlockShape::new(ndim, bs);
+                let cfg = DqConfig::new(eb, 512, shape);
+                let (blocks, pads) = random_batch(&mut rng, shape, 4, 3.0, true);
+                let tol = (eb + 1e-6) as f32;
+                for be in [&PszBackend as &dyn PqBackend, &VecBackend::new(8)] {
+                    let err = roundtrip_max_err(be, &cfg, &blocks, &pads);
+                    assert!(err <= tol, "{} ndim={ndim} bs={bs} eb={eb}: err {err}", be.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sz14_roundtrip_bound() {
+        let mut rng = Pcg32::seeded(22);
+        for &(ndim, bs) in &[(1usize, 32usize), (2, 8), (3, 8)] {
+            let shape = BlockShape::new(ndim, bs);
+            let cfg = DqConfig::new(1e-3, 512, shape);
+            let (blocks, pads) = random_batch(&mut rng, shape, 3, 2.0, true);
+            let err = roundtrip_max_err(&Sz14Backend, &cfg, &blocks, &pads);
+            assert!(err <= 1e-3 + 1e-6, "sz14 err {err}");
+        }
+    }
+
+    #[test]
+    fn dualquant_reconstruction_is_exact_in_prequant_domain() {
+        // decode must reproduce d° EXACTLY (integer cascade), so the only
+        // error is the final scale — verify on rough data with outliers.
+        let shape = BlockShape::new(2, 8);
+        let cfg = DqConfig::new(1e-4, 16, shape); // small radius: many outliers
+        let mut rng = Pcg32::seeded(33);
+        let (blocks, pads) = random_batch(&mut rng, shape, 3, 10.0, false);
+        let elems = shape.elems();
+        let mut codes = vec![0u16; blocks.len()];
+        let mut outv = vec![0.0f32; blocks.len()];
+        PszBackend.run(&cfg, &blocks, 0, &pads, &mut codes, &mut outv);
+        let mut halo = HaloBlock::new(shape);
+        let mut rec = vec![0.0f32; elems];
+        for b in 0..3 {
+            decode_block_dualquant(
+                &cfg,
+                &codes[b * elems..(b + 1) * elems],
+                &outv[b * elems..(b + 1) * elems],
+                &pads,
+                b,
+                &mut halo,
+                &mut rec,
+            );
+            for (l, r) in rec.iter().enumerate() {
+                let dq_expected =
+                    super::super::prequant(blocks[b * elems + l], cfg.half_inv_eb());
+                assert_eq!(*r, dq_expected * cfg.twice_eb(), "block {b} elem {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_bound_random() {
+        check("decode-roundtrip-bound", 40, |g| {
+            let ndim = 1 + g.rng.bounded(3) as usize;
+            let bs = *g.choose(&[4usize, 8]);
+            let shape = BlockShape::new(ndim, bs);
+            let eb = *g.choose(&[1e-2f64, 1e-3]);
+            let cfg = DqConfig::new(eb, 512, shape);
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let smooth = g.rng.next_f32() < 0.5;
+            let (blocks, pads) = random_batch(&mut rng, shape, 2, 4.0, smooth);
+            let tol = (eb + 1e-6) as f32;
+            for be in [&PszBackend as &dyn PqBackend, &VecBackend::new(16), &Sz14Backend] {
+                let err = roundtrip_max_err(be, &cfg, &blocks, &pads);
+                if err > tol {
+                    return Err(format!("{} err {err} > {tol}", be.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,296 @@
+//! Prediction + quantization backends — the paper's hot path.
+//!
+//! Three implementations of the P&Q stage share one trait so the bench
+//! harness, the coordinator and the figure generators can swap them:
+//!
+//! * [`sz14::Sz14Backend`] — Algorithm 1: predict on *reconstructed*
+//!   values, linear-scale quantization. Carries the loop RAW dependence;
+//!   the paper's `SZ-1.4` baseline.
+//! * [`psz::PszBackend`] — Algorithm 2 (dual-quant) written as the
+//!   straightforward scalar loop with a data-dependent branch; the paper's
+//!   `pSZ` (serial dual-quant, `-O3`) baseline.
+//! * [`vectorized::VecBackend`] — the contribution: dual-quant with
+//!   branchless, lane-chunked inner loops (width 8 ≈ AVX2 class, width 16 ≈
+//!   AVX-512 class) that LLVM lowers to SIMD.
+//!
+//! A fourth implementation lives in `runtime::PjrtBackend`: the same math
+//! as an AOT-compiled XLA artifact. All dual-quant backends are bit-exact
+//! against each other and against the Python oracle.
+
+pub mod decode;
+pub mod psz;
+pub mod sz14;
+pub mod vectorized;
+pub mod vectorized2;
+
+use crate::blocks::{BlockShape, HaloBlock};
+use crate::padding::PadScalars;
+
+/// Code stream semantics (stored in the container header; decode dispatches
+/// on it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodesKind {
+    /// Codes are pre-quantized-domain Lorenzo deltas (Algorithm 2).
+    DualQuant,
+    /// Codes are linear-quantized prediction errors in data units
+    /// (Algorithm 1); outlier values are verbatim originals.
+    Sz14,
+}
+
+/// Reserved quant code marking an outlier.
+pub const OUTLIER_CODE: u16 = 0;
+
+/// Configuration of one P&Q run.
+#[derive(Clone, Copy, Debug)]
+pub struct DqConfig {
+    /// Absolute error bound.
+    pub eb: f64,
+    /// Quantization radius: codes span [1, 2*radius-1]; cap = 2*radius.
+    pub radius: u16,
+    pub shape: BlockShape,
+}
+
+impl DqConfig {
+    pub fn new(eb: f64, radius: u16, shape: BlockShape) -> Self {
+        assert!(eb > 0.0, "error bound must be positive");
+        assert!(radius >= 2, "radius must be >= 2");
+        Self { eb, radius, shape }
+    }
+
+    #[inline]
+    pub fn half_inv_eb(&self) -> f32 {
+        (0.5 / self.eb) as f32
+    }
+
+    #[inline]
+    pub fn twice_eb(&self) -> f32 {
+        (2.0 * self.eb) as f32
+    }
+
+    /// Alphabet size for the Huffman stage (codes are < 2*radius).
+    pub fn alphabet(&self) -> usize {
+        2 * self.radius as usize
+    }
+}
+
+/// Pre-quantization: d° = round(d / (2 eb)); ties-to-even matches the
+/// Python (numpy/jax) kernels bit-for-bit.
+#[inline(always)]
+pub fn prequant(x: f32, half_inv_eb: f32) -> f32 {
+    (x * half_inv_eb).round_ties_even()
+}
+
+/// The prediction + quantization stage over a batch of gathered blocks.
+///
+/// `blocks` holds `nb = codes.len() / shape.elems()` blocks back-to-back in
+/// row-major block layout; `block_base` is the global index of the first
+/// block (padding scalars are indexed globally). Outputs are written in the
+/// same layout: `codes[b * elems + l]`, `outv` likewise (0.0 unless the
+/// element is an outlier).
+pub trait PqBackend: Send + Sync {
+    fn name(&self) -> String;
+    fn kind(&self) -> CodesKind;
+    /// Lane width the backend models (1 for scalar backends) — used by the
+    /// Amdahl analysis (Table III).
+    fn lanes(&self) -> usize;
+    fn run(
+        &self,
+        cfg: &DqConfig,
+        blocks: &[f32],
+        block_base: usize,
+        pads: &PadScalars,
+        codes: &mut [u16],
+        outv: &mut [f32],
+    );
+}
+
+/// Build the pre-quantized halo for block `b`: halo planes carry the
+/// pre-quantized edge padding scalars, interior the pre-quantized payload.
+pub(crate) fn prep_halo_dq(
+    halo: &mut HaloBlock,
+    block: &[f32],
+    cfg: &DqConfig,
+    pads: &PadScalars,
+    b: usize,
+) {
+    let hie = cfg.half_inv_eb();
+    halo.fill_halo(|axis| prequant(pads.edge_scalar(b, axis), hie));
+    halo.load_interior(block, |x| prequant(x, hie));
+}
+
+/// Shape-checked batch entry used by all backends' `run` implementations.
+pub(crate) fn check_batch(shape: BlockShape, blocks: &[f32], codes: &[u16], outv: &[f32]) -> usize {
+    let elems = shape.elems();
+    assert_eq!(blocks.len() % elems, 0, "blocks not a whole number of blocks");
+    let nb = blocks.len() / elems;
+    assert_eq!(codes.len(), nb * elems);
+    assert_eq!(outv.len(), nb * elems);
+    nb
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+    use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
+    use crate::util::prng::Pcg32;
+
+    /// Random gathered-block batch + matching pad scalars.
+    pub fn random_batch(
+        rng: &mut Pcg32,
+        shape: BlockShape,
+        nb: usize,
+        scale: f32,
+        smooth: bool,
+    ) -> (Vec<f32>, PadScalars) {
+        let elems = shape.elems();
+        let mut blocks = vec![0.0f32; nb * elems];
+        if smooth {
+            let mut x = 0.0f32;
+            for v in blocks.iter_mut() {
+                x += (rng.next_f32() * 2.0 - 1.0) * scale * 0.05;
+                *v = x;
+            }
+        } else {
+            for v in blocks.iter_mut() {
+                *v = (rng.next_f32() * 2.0 - 1.0) * scale;
+            }
+        }
+        let scalars: Vec<f32> = (0..nb)
+            .map(|b| {
+                let s = &blocks[b * elems..(b + 1) * elems];
+                s.iter().sum::<f32>() / elems as f32
+            })
+            .collect();
+        let pads = PadScalars {
+            policy: PaddingPolicy::new(PadValue::Avg, PadGranularity::Block),
+            scalars,
+            ndim: shape.ndim,
+        };
+        (blocks, pads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::psz::PszBackend;
+    use crate::quant::sz14::Sz14Backend;
+    use crate::quant::vectorized::VecBackend;
+    use crate::util::proptest::check;
+    use crate::util::prng::Pcg32;
+    use test_support::random_batch;
+
+    fn run_backend(
+        be: &dyn PqBackend,
+        cfg: &DqConfig,
+        blocks: &[f32],
+        pads: &crate::padding::PadScalars,
+    ) -> (Vec<u16>, Vec<f32>) {
+        let mut codes = vec![0u16; blocks.len()];
+        let mut outv = vec![0.0f32; blocks.len()];
+        be.run(cfg, blocks, 0, pads, &mut codes, &mut outv);
+        (codes, outv)
+    }
+
+    #[test]
+    fn all_dualquant_backends_agree_bit_exact() {
+        let mut rng = Pcg32::seeded(42);
+        for &(ndim, bs) in &[(1usize, 64usize), (1, 8), (2, 8), (2, 16), (3, 8)] {
+            let shape = BlockShape::new(ndim, bs);
+            let cfg = DqConfig::new(1e-3, 512, shape);
+            for smooth in [true, false] {
+                let (blocks, pads) = random_batch(&mut rng, shape, 6, 3.0, smooth);
+                let (c0, v0) = run_backend(&PszBackend, &cfg, &blocks, &pads);
+                let (c8, v8) = run_backend(&VecBackend::new(8), &cfg, &blocks, &pads);
+                let (c16, v16) = run_backend(&VecBackend::new(16), &cfg, &blocks, &pads);
+                assert_eq!(c0, c8, "psz vs vec8 ndim={ndim} bs={bs} smooth={smooth}");
+                assert_eq!(v0, v8);
+                assert_eq!(c0, c16, "psz vs vec16 ndim={ndim} bs={bs}");
+                assert_eq!(v0, v16);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_backend_equivalence_random_shapes() {
+        check("dq-backend-equivalence", 60, |g| {
+            let ndim = 1 + g.rng.bounded(3) as usize;
+            let bs = *g.choose(&[4usize, 8, 12, 16]);
+            let shape = BlockShape::new(ndim, bs);
+            let eb = *g.choose(&[1e-2f64, 1e-3, 1e-4]);
+            let cfg = DqConfig::new(eb, 512, shape);
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let (blocks, pads) = random_batch(&mut rng, shape, 3, 5.0, g.rng.next_f32() < 0.5);
+            let (c0, v0) = run_backend(&PszBackend, &cfg, &blocks, &pads);
+            let w = *g.choose(&[8usize, 16]);
+            let (c1, v1) = run_backend(&VecBackend::new(w), &cfg, &blocks, &pads);
+            if c0 == c1 && v0 == v1 {
+                Ok(())
+            } else {
+                Err(format!("vec{w} diverged ndim={ndim} bs={bs} eb={eb}"))
+            }
+        });
+    }
+
+    #[test]
+    fn constant_blocks_have_no_outliers_with_avg_padding() {
+        let shape = BlockShape::new(2, 8);
+        let cfg = DqConfig::new(1e-3, 512, shape);
+        let blocks = vec![13.5f32; 2 * shape.elems()];
+        let pads = crate::padding::PadScalars {
+            policy: crate::padding::PaddingPolicy::new(
+                crate::padding::PadValue::Avg,
+                crate::padding::PadGranularity::Block,
+            ),
+            scalars: vec![13.5, 13.5],
+            ndim: 2,
+        };
+        for be in [&PszBackend as &dyn PqBackend, &VecBackend::new(8), &Sz14Backend] {
+            let (codes, _) = run_backend(be, &cfg, &blocks, &pads);
+            assert!(
+                codes.iter().all(|&c| c == cfg.radius),
+                "{}: expected all-exact codes",
+                be.name()
+            );
+        }
+    }
+
+    #[test]
+    fn rough_data_tiny_eb_produces_outliers() {
+        let shape = BlockShape::new(1, 64);
+        let cfg = DqConfig::new(1e-6, 512, shape);
+        let mut rng = Pcg32::seeded(3);
+        let (blocks, pads) = random_batch(&mut rng, shape, 4, 100.0, false);
+        let (codes, outv) = run_backend(&PszBackend, &cfg, &blocks, &pads);
+        let n_out = codes.iter().filter(|&&c| c == OUTLIER_CODE).count();
+        assert!(n_out > 0, "expected outliers");
+        // outlier exclusivity
+        for (c, v) in codes.iter().zip(&outv) {
+            if *c != OUTLIER_CODE {
+                assert_eq!(*v, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sz14_codes_differ_from_dualquant_but_both_bounded() {
+        // the two algorithms produce different code streams (different
+        // prediction domains) yet identical error-bound guarantees — the
+        // roundtrip bound is asserted in decode::tests.
+        let shape = BlockShape::new(2, 8);
+        let cfg = DqConfig::new(1e-3, 512, shape);
+        let mut rng = Pcg32::seeded(11);
+        let (blocks, pads) = random_batch(&mut rng, shape, 4, 2.0, true);
+        let (c_dq, _) = run_backend(&PszBackend, &cfg, &blocks, &pads);
+        let (c_14, _) = run_backend(&Sz14Backend, &cfg, &blocks, &pads);
+        assert_eq!(c_dq.len(), c_14.len());
+    }
+
+    #[test]
+    fn dqconfig_accessors() {
+        let cfg = DqConfig::new(1e-2, 512, BlockShape::new(1, 8));
+        assert!((cfg.half_inv_eb() - 50.0).abs() < 1e-6);
+        assert!((cfg.twice_eb() - 0.02).abs() < 1e-9);
+        assert_eq!(cfg.alphabet(), 1024);
+    }
+}

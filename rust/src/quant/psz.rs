@@ -1,0 +1,128 @@
+//! pSZ — the serial dual-quantization baseline (Algorithm 2, scalar).
+//!
+//! A direct transcription of the paper's Algorithm 2: pre-quantize the
+//! block, then for each element predict with Lorenzo on the pre-quantized
+//! values and quantize the delta, with a data-dependent `if` on the outlier
+//! path. The branch (and the per-element scalar structure) is exactly what
+//! keeps this implementation off the SIMD units — it is the paper's `pSZ`
+//! comparison point, compiled `-O3`.
+
+use super::{check_batch, prep_halo_dq, DqConfig, PqBackend, CodesKind, OUTLIER_CODE};
+use crate::blocks::HaloBlock;
+use crate::lorenzo::{for_each_coord, predict_halo};
+use crate::padding::PadScalars;
+
+pub struct PszBackend;
+
+impl PqBackend for PszBackend {
+    fn name(&self) -> String {
+        "psz".to_string()
+    }
+
+    fn kind(&self) -> CodesKind {
+        CodesKind::DualQuant
+    }
+
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn run(
+        &self,
+        cfg: &DqConfig,
+        blocks: &[f32],
+        block_base: usize,
+        pads: &PadScalars,
+        codes: &mut [u16],
+        outv: &mut [f32],
+    ) {
+        let shape = cfg.shape;
+        let elems = shape.elems();
+        let nb = check_batch(shape, blocks, codes, outv);
+        let radius_f = cfg.radius as f32;
+        let radius = cfg.radius;
+        let mut halo = HaloBlock::new(shape);
+
+        for b in 0..nb {
+            let block = &blocks[b * elems..(b + 1) * elems];
+            prep_halo_dq(&mut halo, block, cfg, pads, block_base + b);
+            let ccodes = &mut codes[b * elems..(b + 1) * elems];
+            let coutv = &mut outv[b * elems..(b + 1) * elems];
+            for_each_coord(shape, |l, c| {
+                let dq = halo.buf[halo.interior_index(c)];
+                let pred = predict_halo(&halo.buf, shape, c);
+                let delta = dq - pred;
+                // Algorithm 2 lines 8-12: IN-CAP vs OUTLIER
+                if delta.abs() < radius_f {
+                    ccodes[l] = delta as i32 as u16 + radius;
+                    coutv[l] = 0.0;
+                } else {
+                    ccodes[l] = OUTLIER_CODE;
+                    coutv[l] = dq;
+                }
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
+
+    #[test]
+    fn known_small_1d_case() {
+        // eb = 0.5 -> prequant = round(x); pad 0
+        // data [1, 2, 4, 4]: dq = [1,2,4,4]; preds = [0,1,2,4]
+        // deltas = [1,1,2,0] -> codes = 513, 513, 514, 512
+        let shape = BlockShape::new(1, 4);
+        let cfg = DqConfig::new(0.5, 512, shape);
+        let pads = PadScalars {
+            policy: PaddingPolicy::new(PadValue::Zero, PadGranularity::Global),
+            scalars: vec![0.0],
+            ndim: 1,
+        };
+        let blocks = vec![1.0f32, 2.0, 4.0, 4.0];
+        let mut codes = vec![0u16; 4];
+        let mut outv = vec![0.0f32; 4];
+        PszBackend.run(&cfg, &blocks, 0, &pads, &mut codes, &mut outv);
+        assert_eq!(codes, vec![513, 513, 514, 512]);
+        assert_eq!(outv, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn negative_delta_encodes_below_radius() {
+        let shape = BlockShape::new(1, 2);
+        let cfg = DqConfig::new(0.5, 512, shape);
+        let pads = PadScalars {
+            policy: PaddingPolicy::ZERO,
+            scalars: vec![0.0],
+            ndim: 1,
+        };
+        // dq = [5, 2] -> deltas [5, -3] -> codes [517, 509]
+        let blocks = vec![5.0f32, 2.0];
+        let mut codes = vec![0u16; 2];
+        let mut outv = vec![0.0f32; 2];
+        PszBackend.run(&cfg, &blocks, 0, &pads, &mut codes, &mut outv);
+        assert_eq!(codes, vec![517, 509]);
+    }
+
+    #[test]
+    fn outlier_records_prequantized_value() {
+        let shape = BlockShape::new(1, 2);
+        let cfg = DqConfig::new(0.5, 4, shape); // tiny radius of 4
+        let pads = PadScalars {
+            policy: PaddingPolicy::ZERO,
+            scalars: vec![0.0],
+            ndim: 1,
+        };
+        let blocks = vec![100.0f32, 101.0];
+        let mut codes = vec![0u16; 2];
+        let mut outv = vec![0.0f32; 2];
+        PszBackend.run(&cfg, &blocks, 0, &pads, &mut codes, &mut outv);
+        assert_eq!(codes[0], OUTLIER_CODE); // delta 100 >= 4
+        assert_eq!(outv[0], 100.0);
+        assert_eq!(codes[1], 4 + 1); // delta 1 vs radius 4 -> code 5
+    }
+}

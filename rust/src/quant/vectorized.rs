@@ -1,0 +1,341 @@
+//! vecSZ — the lane-chunked, branchless dual-quantization backend.
+//!
+//! The paper's contribution (§III-C): with the RAW dependence removed by
+//! dual-quantization, the post-quantization loop is data-parallel. Here the
+//! inner row loops are written as fixed-width lane chunks over `[f32; W]`
+//! stack arrays with a branchless outlier select, which LLVM lowers to
+//! packed SIMD (ymm for W=8, zmm for W=16 under `target-cpu=native`) —
+//! the analog of the paper's hand-written AVX2/AVX-512 intrinsics, kept
+//! ISA-portable exactly the way §III-C argues for.
+//!
+//! Boundary handling follows §III-C: out-of-field lanes are *computed
+//! anyway* (blocks are gathered with padding fill), so no per-element
+//! bounds branches survive in the hot loop.
+
+use super::{check_batch, prep_halo_dq, CodesKind, DqConfig, PqBackend, OUTLIER_CODE};
+use crate::blocks::HaloBlock;
+use crate::padding::PadScalars;
+
+/// Lane-chunked dual-quant backend; `width` ∈ {4, 8, 16} is the paper's
+/// "vector length" knob (8 ≈ 256-bit, 16 ≈ 512-bit registers over f32).
+///
+/// `run` delegates to the halo-free implementation in [`super::vectorized2`]
+/// (the §Perf iteration: +20-60% by skipping the halo copy); set
+/// `halo: true` to use the original halo-buffer path — kept as the
+/// reference implementation and for the ablation bench.
+#[derive(Clone, Copy, Debug)]
+pub struct VecBackend {
+    pub width: usize,
+    pub halo: bool,
+}
+
+impl VecBackend {
+    pub fn new(width: usize) -> Self {
+        assert!(matches!(width, 4 | 8 | 16), "supported lane widths: 4, 8, 16");
+        Self { width, halo: false }
+    }
+
+    /// The original halo-buffer implementation (ablation reference).
+    pub fn with_halo(width: usize) -> Self {
+        Self { width, halo: true }
+    }
+}
+
+impl PqBackend for VecBackend {
+    fn name(&self) -> String {
+        if self.halo {
+            format!("vec{}-halo", self.width)
+        } else {
+            format!("vec{}", self.width)
+        }
+    }
+
+    fn kind(&self) -> CodesKind {
+        CodesKind::DualQuant
+    }
+
+    fn lanes(&self) -> usize {
+        self.width
+    }
+
+    fn run(
+        &self,
+        cfg: &DqConfig,
+        blocks: &[f32],
+        block_base: usize,
+        pads: &PadScalars,
+        codes: &mut [u16],
+        outv: &mut [f32],
+    ) {
+        if !self.halo {
+            return super::vectorized2::VecBackend2::new(self.width)
+                .run(cfg, blocks, block_base, pads, codes, outv);
+        }
+        match self.width {
+            4 => run_w::<4>(cfg, blocks, block_base, pads, codes, outv),
+            8 => run_w::<8>(cfg, blocks, block_base, pads, codes, outv),
+            16 => run_w::<16>(cfg, blocks, block_base, pads, codes, outv),
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// Branchless post-quantization of one W-lane chunk.
+/// `cur[t]` is the pre-quantized value, `pred[t]` its Lorenzo prediction.
+#[inline(always)]
+fn emit_lane<const W: usize>(
+    cur: &[f32],
+    pred: &[f32; W],
+    radius_f: f32,
+    codes: &mut [u16],
+    outv: &mut [f32],
+) {
+    for t in 0..W {
+        let delta = cur[t] - pred[t];
+        // in-cap mask as 0.0/1.0 — select without a branch
+        let ic = (delta.abs() < radius_f) as u32 as f32;
+        codes[t] = (ic * (delta + radius_f)) as i32 as u16;
+        outv[t] = (1.0 - ic) * cur[t];
+    }
+}
+
+/// Scalar tail for the last `n < W` elements of a row.
+#[inline(always)]
+fn emit_tail(cur: &[f32], pred: impl Fn(usize) -> f32, radius_f: f32, codes: &mut [u16], outv: &mut [f32]) {
+    for t in 0..cur.len() {
+        let delta = cur[t] - pred(t);
+        if delta.abs() < radius_f {
+            codes[t] = (delta + radius_f) as i32 as u16;
+            outv[t] = 0.0;
+        } else {
+            codes[t] = OUTLIER_CODE;
+            outv[t] = cur[t];
+        }
+    }
+}
+
+/// 1D row: pred = W (west) — `west` is `cur` shifted one left in the halo.
+#[inline(always)]
+fn row_1d<const W: usize>(cur: &[f32], west: &[f32], radius_f: f32, codes: &mut [u16], outv: &mut [f32]) {
+    let n = cur.len();
+    let mut j = 0;
+    while j + W <= n {
+        let mut pred = [0.0f32; W];
+        for t in 0..W {
+            pred[t] = west[j + t];
+        }
+        emit_lane::<W>(&cur[j..j + W], &pred, radius_f, &mut codes[j..j + W], &mut outv[j..j + W]);
+        j += W;
+    }
+    emit_tail(&cur[j..], |t| west[j + t], radius_f, &mut codes[j..], &mut outv[j..]);
+}
+
+/// 2D row: pred = W + N − NW.
+#[inline(always)]
+fn row_2d<const W: usize>(
+    cur: &[f32],
+    west: &[f32],
+    north: &[f32],
+    northwest: &[f32],
+    radius_f: f32,
+    codes: &mut [u16],
+    outv: &mut [f32],
+) {
+    let n = cur.len();
+    let mut j = 0;
+    while j + W <= n {
+        let mut pred = [0.0f32; W];
+        for t in 0..W {
+            pred[t] = west[j + t] + north[j + t] - northwest[j + t];
+        }
+        emit_lane::<W>(&cur[j..j + W], &pred, radius_f, &mut codes[j..j + W], &mut outv[j..j + W]);
+        j += W;
+    }
+    emit_tail(
+        &cur[j..],
+        |t| west[j + t] + north[j + t] - northwest[j + t],
+        radius_f,
+        &mut codes[j..],
+        &mut outv[j..],
+    );
+}
+
+/// 3D row: pred = (W+N+U) − (NW+NU+WU) + NWU.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn row_3d<const W: usize>(
+    cur: &[f32],
+    west: &[f32],
+    north: &[f32],
+    northwest: &[f32],
+    up: &[f32],
+    west_up: &[f32],
+    north_up: &[f32],
+    northwest_up: &[f32],
+    radius_f: f32,
+    codes: &mut [u16],
+    outv: &mut [f32],
+) {
+    let n = cur.len();
+    let mut j = 0;
+    while j + W <= n {
+        let mut pred = [0.0f32; W];
+        for t in 0..W {
+            pred[t] = (west[j + t] + north[j + t] + up[j + t])
+                - (northwest[j + t] + north_up[j + t] + west_up[j + t])
+                + northwest_up[j + t];
+        }
+        emit_lane::<W>(&cur[j..j + W], &pred, radius_f, &mut codes[j..j + W], &mut outv[j..j + W]);
+        j += W;
+    }
+    emit_tail(
+        &cur[j..],
+        |t| {
+            (west[j + t] + north[j + t] + up[j + t])
+                - (northwest[j + t] + north_up[j + t] + west_up[j + t])
+                + northwest_up[j + t]
+        },
+        radius_f,
+        &mut codes[j..],
+        &mut outv[j..],
+    );
+}
+
+fn run_w<const W: usize>(
+    cfg: &DqConfig,
+    blocks: &[f32],
+    block_base: usize,
+    pads: &PadScalars,
+    codes: &mut [u16],
+    outv: &mut [f32],
+) {
+    let shape = cfg.shape;
+    let elems = shape.elems();
+    let bs = shape.bs;
+    let side = shape.halo_side();
+    let nb = check_batch(shape, blocks, codes, outv);
+    let radius_f = cfg.radius as f32;
+    let mut halo = HaloBlock::new(shape);
+
+    for b in 0..nb {
+        let block = &blocks[b * elems..(b + 1) * elems];
+        prep_halo_dq(&mut halo, block, cfg, pads, block_base + b);
+        let buf = &halo.buf;
+        let ccodes = &mut codes[b * elems..(b + 1) * elems];
+        let coutv = &mut outv[b * elems..(b + 1) * elems];
+
+        match shape.ndim {
+            1 => {
+                row_1d::<W>(&buf[1..=bs], &buf[0..bs], radius_f, ccodes, coutv);
+            }
+            2 => {
+                for i in 0..bs {
+                    let r = (i + 1) * side;
+                    let p = i * side;
+                    // split borrows: rows of the same halo buffer
+                    let (cur, west) = (&buf[r + 1..r + 1 + bs], &buf[r..r + bs]);
+                    let (north, northwest) = (&buf[p + 1..p + 1 + bs], &buf[p..p + bs]);
+                    row_2d::<W>(
+                        cur,
+                        west,
+                        north,
+                        northwest,
+                        radius_f,
+                        &mut ccodes[i * bs..(i + 1) * bs],
+                        &mut coutv[i * bs..(i + 1) * bs],
+                    );
+                }
+            }
+            3 => {
+                let plane = side * side;
+                for k in 0..bs {
+                    for i in 0..bs {
+                        let r = (k + 1) * plane + (i + 1) * side; // current row
+                        let rn = (k + 1) * plane + i * side; // north row
+                        let ru = k * plane + (i + 1) * side; // up row
+                        let rnu = k * plane + i * side; // north-up row
+                        let l = (k * bs + i) * bs;
+                        row_3d::<W>(
+                            &buf[r + 1..r + 1 + bs],
+                            &buf[r..r + bs],
+                            &buf[rn + 1..rn + 1 + bs],
+                            &buf[rn..rn + bs],
+                            &buf[ru + 1..ru + 1 + bs],
+                            &buf[ru..ru + bs],
+                            &buf[rnu + 1..rnu + 1 + bs],
+                            &buf[rnu..rnu + bs],
+                            radius_f,
+                            &mut ccodes[l..l + bs],
+                            &mut coutv[l..l + bs],
+                        );
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
+
+    // Cross-backend equivalence (the strongest test) lives in quant::tests;
+    // here: width-specific edge cases.
+
+    fn zero_pads(ndim: usize) -> PadScalars {
+        PadScalars {
+            policy: PaddingPolicy::new(PadValue::Zero, PadGranularity::Global),
+            scalars: vec![0.0],
+            ndim,
+        }
+    }
+
+    #[test]
+    fn width_larger_than_block_uses_tail_path() {
+        // bs=4 with W=16: whole row is remainder; must still be correct
+        let shape = BlockShape::new(2, 4);
+        let cfg = DqConfig::new(0.5, 512, shape);
+        let blocks: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        let mut c16 = vec![0u16; 16];
+        let mut v16 = vec![0.0f32; 16];
+        VecBackend::new(16).run(&cfg, &blocks, 0, &zero_pads(2), &mut c16, &mut v16);
+        let mut c4 = vec![0u16; 16];
+        let mut v4 = vec![0.0f32; 16];
+        VecBackend::new(4).run(&cfg, &blocks, 0, &zero_pads(2), &mut c4, &mut v4);
+        assert_eq!(c16, c4);
+        assert_eq!(v16, v4);
+    }
+
+    #[test]
+    fn branchless_select_handles_exact_radius_boundary() {
+        // delta == radius must be an outlier (strict <), delta == radius-1 in-cap
+        let shape = BlockShape::new(1, 4);
+        let cfg = DqConfig::new(0.5, 8, shape);
+        // dq = [8, 7, 0, 0] with pad 0: deltas [8, -1, -7, 0]
+        let blocks = vec![8.0f32, 7.0, 0.0, 0.0];
+        let mut codes = vec![0u16; 4];
+        let mut outv = vec![0.0f32; 4];
+        VecBackend::new(4).run(&cfg, &blocks, 0, &zero_pads(1), &mut codes, &mut outv);
+        assert_eq!(codes[0], OUTLIER_CODE, "delta == radius is an outlier");
+        assert_eq!(outv[0], 8.0);
+        assert_eq!(codes[1], 7); // -1 + 8
+        assert_eq!(codes[2], 1); // -7 + 8
+        assert_eq!(codes[3], 8); // 0 + 8
+    }
+
+    #[test]
+    fn negative_out_of_cap_is_outlier() {
+        let shape = BlockShape::new(1, 2);
+        let cfg = DqConfig::new(0.5, 8, shape);
+        let blocks = vec![-20.0f32, -20.0];
+        let mut codes = vec![0u16; 2];
+        let mut outv = vec![0.0f32; 2];
+        VecBackend::new(8).run(&cfg, &blocks, 0, &zero_pads(1), &mut codes, &mut outv);
+        assert_eq!(codes[0], OUTLIER_CODE);
+        assert_eq!(outv[0], -20.0);
+        assert_eq!(codes[1], 8); // delta 0 after outlier (pred uses dq, not recon)
+    }
+}

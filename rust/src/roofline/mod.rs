@@ -1,0 +1,240 @@
+//! Roofline machine characterization (§III-B, Figs 1 & 4).
+//!
+//! An ERT-like pair of microkernels measures the two ceilings:
+//! * sustainable DRAM bandwidth — a STREAM-triad sweep over arrays far
+//!   larger than LLC;
+//! * peak f32 FLOP rate — independent FMA chains over register-resident
+//!   lanes (auto-vectorized, matching how the dual-quant code reaches SIMD).
+//!
+//! The module also derives the dual-quant operational-intensity bounds
+//! (conservative = arithmetic only; lenient = + rounds/compares/casts, per
+//! the paper) and classifies measured runs against the model.
+
+use crate::util::timer::Timer;
+
+/// Machine ceilings measured by the microkernels.
+#[derive(Clone, Copy, Debug)]
+pub struct Ceilings {
+    pub dram_gb_s: f64,
+    pub peak_gflop_s: f64,
+}
+
+/// Host description (Table I analog).
+#[derive(Clone, Debug, Default)]
+pub struct HostInfo {
+    pub model: String,
+    pub cores: usize,
+    pub cache_kb: usize,
+    pub has_avx2: bool,
+    pub has_avx512: bool,
+}
+
+/// Read /proc/cpuinfo (Linux) — best-effort.
+pub fn host_info() -> HostInfo {
+    let mut info = HostInfo {
+        cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        ..Default::default()
+    };
+    if let Ok(txt) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in txt.lines() {
+            if info.model.is_empty() && line.starts_with("model name") {
+                info.model = line.split(':').nth(1).unwrap_or("").trim().to_string();
+            } else if line.starts_with("cache size") {
+                if let Some(kb) =
+                    line.split(':').nth(1).and_then(|s| s.trim().split(' ').next())
+                {
+                    info.cache_kb = kb.parse().unwrap_or(0);
+                }
+            } else if line.starts_with("flags") {
+                info.has_avx2 |= line.contains(" avx2");
+                info.has_avx512 |= line.contains(" avx512f");
+            }
+        }
+    }
+    info
+}
+
+/// STREAM-triad sustainable bandwidth. `n` elements per array (default
+/// sizing via [`measure_ceilings`] uses 32 Mi = 3x128 MiB footprint).
+pub fn stream_triad_gb_s(n: usize, reps: usize) -> f64 {
+    let mut a = vec![0.0f32; n];
+    let b = vec![1.5f32; n];
+    let c = vec![2.5f32; n];
+    let s = 3.0f32;
+    // warm
+    triad(&mut a, &b, &c, s);
+    let t = Timer::start();
+    for _ in 0..reps {
+        triad(&mut a, &b, &c, s);
+    }
+    let secs = t.elapsed_s();
+    // 3 streams x 4 bytes (2 reads + 1 write) per element per rep
+    (n as f64 * 12.0 * reps as f64) / secs / 1e9
+}
+
+#[inline(never)]
+fn triad(a: &mut [f32], b: &[f32], c: &[f32], s: f32) {
+    for i in 0..a.len() {
+        a[i] = b[i] + s * c[i];
+    }
+}
+
+/// Peak f32 GFLOP/s: independent FMA chains over a flat lane array.
+///
+/// The flat `[f32; 128]` with a single vectorizable loop is deliberate:
+/// LLVM promotes it to 8 zmm (or 16 ymm) accumulators held in registers
+/// across the unrolled outer iterations, giving true FMA-throughput
+/// numbers; nested per-chain arrays spill to the stack and measure L1
+/// latency instead (30x low).
+pub fn peak_gflops(ms_budget: u64) -> f64 {
+    const N: usize = 128; // 8 zmm registers worth of f32 lanes
+    let mut acc = [1.000_1f32; N];
+    let m = std::hint::black_box(1.000_000_1f32);
+    let a = std::hint::black_box(1e-7f32);
+    let mut iters = 0u64;
+    let t = Timer::start();
+    loop {
+        for _ in 0..8192 {
+            for x in acc.iter_mut() {
+                *x = x.mul_add(m, a);
+            }
+        }
+        iters += 8192;
+        if t.elapsed().as_millis() as u64 >= ms_budget {
+            break;
+        }
+    }
+    let secs = t.elapsed_s();
+    // keep the accumulators observable so the loop is not eliminated
+    let sink: f32 = acc.iter().sum();
+    std::hint::black_box(sink);
+    // 2 flops (mul+add) per lane per iter
+    (iters as f64 * N as f64 * 2.0) / secs / 1e9
+}
+
+/// Measure both ceilings (seconds-scale; used by `vecsz roofline`).
+pub fn measure_ceilings(quick: bool) -> Ceilings {
+    let (n, reps, ms) = if quick { (1 << 22, 3, 150) } else { (1 << 25, 5, 800) };
+    Ceilings { dram_gb_s: stream_triad_gb_s(n, reps), peak_gflop_s: peak_gflops(ms) }
+}
+
+/// Dual-quant per-element operation counts (§III-B bounds).
+#[derive(Clone, Copy, Debug)]
+pub struct OiModel {
+    pub flops_conservative: f64,
+    pub flops_lenient: f64,
+    pub bytes: f64,
+}
+
+/// Per-element counts for the dual-quant kernel of dimensionality `ndim`.
+///
+/// conservative: arithmetic only — prequant mul, Lorenzo adds/subs, delta.
+/// lenient:      + round, |.| compare, cast, select.
+/// bytes: f32 read + u16 code write + f32 outlier-lane write = 10 B.
+pub fn oi_model(ndim: usize) -> OiModel {
+    let lorenzo_ops = match ndim {
+        1 => 1.0,  // delta = dq - W
+        2 => 3.0,  // W + N - NW, delta
+        _ => 7.0,  // 3 adds + 3 subs + 1 add, delta
+    };
+    let conservative = 1.0 + lorenzo_ops + 1.0; // prequant mul + lorenzo + code add
+    let lenient = conservative + 4.0; // round, cmp, cast, select
+    OiModel { flops_conservative: conservative, flops_lenient: lenient, bytes: 10.0 }
+}
+
+impl OiModel {
+    pub fn oi_conservative(&self) -> f64 {
+        self.flops_conservative / self.bytes
+    }
+    pub fn oi_lenient(&self) -> f64 {
+        self.flops_lenient / self.bytes
+    }
+}
+
+/// Roofline evaluation of a measured kernel run.
+#[derive(Clone, Copy, Debug)]
+pub struct RooflinePoint {
+    pub oi: f64,
+    pub gflop_s: f64,
+    /// Attainable at this OI = min(peak, OI * DRAM BW).
+    pub attainable_gflop_s: f64,
+    /// Fraction of attainable reached (the paper's "percentage of peak
+    /// DRAM bandwidth" when memory-bound).
+    pub fraction_of_roof: f64,
+    pub memory_bound: bool,
+}
+
+/// Place a measured run on the roofline.
+pub fn evaluate(ceilings: Ceilings, oi: f64, gflop_s: f64) -> RooflinePoint {
+    let mem_roof = oi * ceilings.dram_gb_s;
+    let attainable = mem_roof.min(ceilings.peak_gflop_s);
+    RooflinePoint {
+        oi,
+        gflop_s,
+        attainable_gflop_s: attainable,
+        fraction_of_roof: gflop_s / attainable.max(f64::MIN_POSITIVE),
+        memory_bound: mem_roof < ceilings.peak_gflop_s,
+    }
+}
+
+/// GFLOP/s of a dual-quant run given elements processed and seconds
+/// (flops model `lenient?`).
+pub fn dualquant_gflops(ndim: usize, elements: usize, secs: f64, lenient: bool) -> f64 {
+    let m = oi_model(ndim);
+    let f = if lenient { m.flops_lenient } else { m.flops_conservative };
+    elements as f64 * f / secs.max(f64::MIN_POSITIVE) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oi_increases_with_dim_and_is_memory_bound_at_hpc_ratios() {
+        let o1 = oi_model(1);
+        let o2 = oi_model(2);
+        let o3 = oi_model(3);
+        assert!(o1.oi_conservative() < o2.oi_conservative());
+        assert!(o2.oi_conservative() < o3.oi_conservative());
+        assert!(o1.oi_lenient() > o1.oi_conservative());
+        // typical server: 100 GB/s DRAM, 1 TFLOP f32 -> knee at OI 10;
+        // all dual-quant OIs are far below the knee (paper: memory-bound)
+        for o in [o1, o2, o3] {
+            assert!(o.oi_lenient() < 2.0);
+        }
+    }
+
+    #[test]
+    fn evaluate_classifies_memory_bound() {
+        let c = Ceilings { dram_gb_s: 100.0, peak_gflop_s: 1000.0 };
+        let p = evaluate(c, 0.5, 25.0);
+        assert!(p.memory_bound);
+        assert!((p.attainable_gflop_s - 50.0).abs() < 1e-9);
+        assert!((p.fraction_of_roof - 0.5).abs() < 1e-9);
+        let p2 = evaluate(c, 100.0, 800.0);
+        assert!(!p2.memory_bound);
+        assert_eq!(p2.attainable_gflop_s, 1000.0);
+    }
+
+    #[test]
+    fn microkernels_produce_positive_rates() {
+        // tiny sizes: smoke only (CI-friendly)
+        let bw = stream_triad_gb_s(1 << 16, 2);
+        assert!(bw > 0.1, "triad {bw} GB/s");
+        let gf = peak_gflops(30);
+        assert!(gf > 0.1, "fma {gf} GFLOP/s");
+    }
+
+    #[test]
+    fn host_info_smoke() {
+        let h = host_info();
+        assert!(h.cores >= 1);
+    }
+
+    #[test]
+    fn gflops_math() {
+        // 1e9 elements in 1 s at 3 flops/elem = 3 GFLOP/s
+        let g = dualquant_gflops(1, 1_000_000_000, 1.0, false);
+        assert!((g - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,298 @@
+//! PJRT runtime — loads the AOT-compiled XLA artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts`) and executes them from the Rust hot
+//! path. Python never runs at request time.
+//!
+//! [`PjrtBackend`] adapts one compiled dual-quant executable to the
+//! [`PqBackend`] trait so the coordinator/benches can swap it in wherever a
+//! native backend fits. Input batches of any size are chunked into the
+//! executable's fixed superbatch; the tail chunk is zero-padded and the
+//! surplus outputs discarded.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::error::{Result, VszError};
+use crate::padding::{PadGranularity, PadScalars};
+use crate::quant::{check_batch, CodesKind, DqConfig, PqBackend};
+use crate::util::json::{self};
+
+/// One artifact as described by `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub impl_kind: String, // "jnp" | "pallas"
+    pub ndim: usize,
+    pub block_size: usize,
+    pub lanes: usize,
+    pub superbatch: usize,
+    pub radius: u16,
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            VszError::runtime(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let j = json::parse(&text)?;
+        let radius = j.req("radius")?.as_usize().unwrap_or(512) as u16;
+        let mut artifacts = Vec::new();
+        for a in j.req("artifacts")?.as_array().unwrap_or(&[]) {
+            artifacts.push(ArtifactMeta {
+                name: a.req("name")?.as_str().unwrap_or_default().to_string(),
+                file: a.req("file")?.as_str().unwrap_or_default().to_string(),
+                impl_kind: a.req("impl")?.as_str().unwrap_or_default().to_string(),
+                ndim: a.req("ndim")?.as_usize().unwrap_or(0),
+                block_size: a.req("block_size")?.as_usize().unwrap_or(0),
+                lanes: a.req("lanes")?.as_usize().unwrap_or(0),
+                superbatch: a.req("superbatch")?.as_usize().unwrap_or(0),
+                radius,
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find an artifact by (ndim, block size, lanes, impl).
+    pub fn find(&self, ndim: usize, bs: usize, lanes: usize, impl_kind: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.ndim == ndim && a.block_size == bs && a.lanes == lanes && a.impl_kind == impl_kind
+        })
+    }
+
+    /// All (block_size, lanes) configs available for `ndim` with impl "jnp"
+    /// (the autotuner's PJRT search space).
+    pub fn configs(&self, ndim: usize) -> Vec<(usize, usize)> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.ndim == ndim && a.impl_kind == "jnp")
+            .map(|a| (a.block_size, a.lanes))
+            .collect()
+    }
+}
+
+/// A compiled, ready-to-execute dual-quant artifact.
+pub struct PjrtExecutable {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT client + executable cache.
+pub struct PjrtRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and load the manifest.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| VszError::runtime(format!("pjrt cpu client: {e:?}")))?;
+        Ok(Self { manifest, client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact (HLO text -> loaded executable).
+    pub fn load(&self, meta: &ArtifactMeta) -> Result<PjrtExecutable> {
+        let path = self.manifest.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| VszError::runtime(format!("parse {}: {e:?}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| VszError::runtime(format!("compile {}: {e:?}", meta.name)))?;
+        Ok(PjrtExecutable { meta: meta.clone(), exe })
+    }
+}
+
+impl PjrtExecutable {
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute one superbatch. `blocks` must be exactly
+    /// `superbatch * bs^ndim` long, `pads` `superbatch` long.
+    pub fn run_superbatch(
+        &self,
+        blocks: &[f32],
+        pads: &[f32],
+        eb: f64,
+        radius: u16,
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let m = &self.meta;
+        let elems = m.block_size.pow(m.ndim as u32);
+        if blocks.len() != m.superbatch * elems || pads.len() != m.superbatch {
+            return Err(VszError::runtime("superbatch size mismatch"));
+        }
+        let mut dims: Vec<i64> = vec![m.superbatch as i64];
+        dims.extend(std::iter::repeat(m.block_size as i64).take(m.ndim));
+        let xerr = |e: xla::Error| VszError::runtime(format!("pjrt exec: {e:?}"));
+        let blocks_lit = xla::Literal::vec1(blocks).reshape(&dims).map_err(xerr)?;
+        let pads_lit =
+            xla::Literal::vec1(pads).reshape(&[m.superbatch as i64, 1]).map_err(xerr)?;
+        let ebs = [2.0 * eb as f32, (0.5 / eb) as f32, radius as f32];
+        let ebs_lit = xla::Literal::vec1(&ebs).reshape(&[1, 3]).map_err(xerr)?;
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[blocks_lit, pads_lit, ebs_lit])
+            .map_err(xerr)?[0][0]
+            .to_literal_sync()
+            .map_err(xerr)?;
+        // aot.py lowers with return_tuple=True: (codes i32, outv f32)
+        let (codes_lit, outv_lit) = result.to_tuple2().map_err(xerr)?;
+        let codes = codes_lit.to_vec::<i32>().map_err(xerr)?;
+        let outv = outv_lit.to_vec::<f32>().map_err(xerr)?;
+        Ok((codes, outv))
+    }
+}
+
+/// [`PqBackend`] adapter: chunks arbitrary batches into superbatches.
+///
+/// Only Global/Block padding granularities are supported (the artifacts
+/// take one scalar per block — see DESIGN.md); `Edge` requires the native
+/// backends.
+///
+/// Thread-safety: the `xla` crate's executables hold `Rc` internals and are
+/// not `Send`. Every use (execute + eventual drop) is serialized behind the
+/// mutex below, and the single-device CPU client has no cross-thread
+/// affinity requirements, so the manual `Send + Sync` is sound in this
+/// confinement discipline.
+struct ExeCell(PjrtExecutable);
+// SAFETY: see above — all access to the inner executable goes through
+// `Mutex<ExeCell>`.
+unsafe impl Send for ExeCell {}
+
+pub struct PjrtBackend {
+    meta: ArtifactMeta,
+    exe: Mutex<ExeCell>,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: &PjrtRuntime, ndim: usize, bs: usize, lanes: usize) -> Result<Self> {
+        let meta = runtime
+            .manifest
+            .find(ndim, bs, lanes, "jnp")
+            .or_else(|| runtime.manifest.find(ndim, bs, lanes, "pallas"))
+            .ok_or_else(|| {
+                VszError::runtime(format!("no artifact for ndim={ndim} bs={bs} lanes={lanes}"))
+            })?
+            .clone();
+        Self::from_meta(runtime, &meta)
+    }
+
+    pub fn from_meta(runtime: &PjrtRuntime, meta: &ArtifactMeta) -> Result<Self> {
+        let exe = runtime.load(meta)?;
+        Ok(Self { meta: meta.clone(), exe: Mutex::new(ExeCell(exe)) })
+    }
+}
+
+impl PqBackend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.meta.name)
+    }
+
+    fn kind(&self) -> CodesKind {
+        CodesKind::DualQuant
+    }
+
+    fn lanes(&self) -> usize {
+        self.meta.lanes
+    }
+
+    fn run(
+        &self,
+        cfg: &DqConfig,
+        blocks: &[f32],
+        block_base: usize,
+        pads: &PadScalars,
+        codes: &mut [u16],
+        outv: &mut [f32],
+    ) {
+        assert_eq!(cfg.shape.ndim, self.meta.ndim, "artifact ndim mismatch");
+        assert_eq!(cfg.shape.bs, self.meta.block_size, "artifact block size mismatch");
+        assert!(
+            pads.policy.granularity != PadGranularity::Edge,
+            "PJRT backend does not support edge-granularity padding"
+        );
+        let elems = cfg.shape.elems();
+        let nb = check_batch(cfg.shape, blocks, codes, outv);
+        let sb = self.meta.superbatch;
+        let guard = self.exe.lock().unwrap();
+
+        let mut in_blocks = vec![0.0f32; sb * elems];
+        let mut in_pads = vec![0.0f32; sb];
+        let mut done = 0usize;
+        while done < nb {
+            let take = (nb - done).min(sb);
+            in_blocks[..take * elems].copy_from_slice(&blocks[done * elems..(done + take) * elems]);
+            in_blocks[take * elems..].fill(0.0);
+            for k in 0..take {
+                in_pads[k] = pads.block_scalar(block_base + done + k);
+            }
+            in_pads[take..].fill(0.0);
+            let (c, v) = guard
+                .0
+                .run_superbatch(&in_blocks, &in_pads, cfg.eb, cfg.radius)
+                .expect("pjrt superbatch execution failed");
+            for (dst, src) in codes[done * elems..(done + take) * elems]
+                .iter_mut()
+                .zip(c[..take * elems].iter())
+            {
+                *dst = *src as u16;
+            }
+            outv[done * elems..(done + take) * elems].copy_from_slice(&v[..take * elems]);
+            done += take;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let doc = r#"{"version":1,"radius":512,"artifacts":[
+            {"name":"dq_2d_b16_l8_jnp","file":"f.hlo.txt","impl":"jnp",
+             "ndim":2,"block_size":16,"lanes":8,"superbatch":4096,
+             "inputs":[],"outputs":[]}]}"#;
+        let dir = std::env::temp_dir().join("vecsz_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find(2, 16, 8, "jnp").unwrap();
+        assert_eq!(a.superbatch, 4096);
+        assert!(m.find(2, 16, 16, "jnp").is_none());
+        assert_eq!(m.configs(2), vec![(16, 8)]);
+    }
+
+    #[test]
+    fn manifest_missing_dir_is_runtime_error() {
+        let err = Manifest::load(Path::new("/nonexistent/path")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    // Execution tests live in rust/tests/pjrt_integration.rs (they need
+    // built artifacts and are skipped when artifacts/ is absent).
+    #[allow(dead_code)]
+    fn _types_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<ArtifactMeta>();
+    }
+}

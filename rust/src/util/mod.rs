@@ -1,0 +1,88 @@
+//! Cross-cutting utilities: deterministic PRNGs, timing helpers, a mini
+//! property-testing driver, and small numeric/format helpers.
+
+pub mod json;
+pub mod proptest;
+pub mod prng;
+pub mod timer;
+
+/// crc32 (IEEE, reflected) — container integrity checks.
+/// Table-driven; table built at first use.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+/// Human-readable byte size ("12.3 MiB").
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Reinterpret a f32 slice as bytes (little-endian host assumed; this crate
+/// targets x86-64/aarch64 — both LE).
+pub fn f32_as_bytes(xs: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no invalid bit patterns as bytes, alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+/// Copy bytes into a f32 vec (handles the unaligned case).
+pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0, "byte length must be a multiple of 4");
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard test vector: "123456789" -> 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn human_bytes_rendering() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert!(human_bytes(3 * 1024 * 1024).starts_with("3.00 MiB"));
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let xs = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        let bytes = f32_as_bytes(&xs).to_vec();
+        assert_eq!(bytes_to_f32(&bytes), xs);
+    }
+}

@@ -1,0 +1,131 @@
+//! Mini property-testing driver (substrate — the `proptest` crate is not in
+//! the vendored set).
+//!
+//! A property is a closure from a seeded [`Gen`] to `Result<(), String>`.
+//! The driver runs `cases` random cases; on failure it retries the failing
+//! seed with progressively smaller size hints ("shrinking-lite") and reports
+//! the smallest failing seed/size so the case is reproducible.
+
+use crate::util::prng::Pcg32;
+
+/// Random-value source handed to properties; carries a size hint that the
+/// driver lowers while shrinking.
+pub struct Gen {
+    pub rng: Pcg32,
+    /// Soft upper bound for "how big" generated structures should be.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Pcg32::seeded(seed), size }
+    }
+
+    /// Length in [1, size].
+    pub fn len(&mut self) -> usize {
+        1 + self.rng.bounded(self.size.max(1) as u32) as usize
+    }
+
+    /// Uniform f32 in [-scale, scale].
+    pub fn f32_in(&mut self, scale: f32) -> f32 {
+        (self.rng.next_f32() * 2.0 - 1.0) * scale
+    }
+
+    /// Vec of uniform f32 in [-scale, scale].
+    pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_in(scale)).collect()
+    }
+
+    /// Smooth-ish f32 vec (random walk) — predicts well under Lorenzo, so
+    /// properties exercise the in-cap path too.
+    pub fn smooth_vec(&mut self, n: usize, step: f32) -> Vec<f32> {
+        let mut v = Vec::with_capacity(n);
+        let mut x = self.f32_in(1.0);
+        for _ in 0..n {
+            x += self.f32_in(step);
+            v.push(x);
+        }
+        v
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Vec<u8> {
+        (0..n).map(|_| self.rng.next_u32() as u8).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.bounded(xs.len() as u32) as usize]
+    }
+}
+
+/// Run `cases` random cases of `prop`; panic with the failing seed on error.
+pub fn check(name: &str, cases: u32, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    let base_seed = 0x5ECDEF00u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let size = 4 + (case as usize % 64) * 4; // grow sizes across cases
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // shrinking-lite: retry same seed at smaller sizes, report the
+            // smallest size that still fails.
+            let mut min_fail = (size, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut g2 = Gen::new(seed, s);
+                match prop(&mut g2) {
+                    Err(m) => min_fail = (s, m),
+                    Ok(()) => break,
+                }
+                if s == 1 {
+                    break;
+                }
+                s /= 2;
+            }
+            panic!(
+                "property '{name}' failed: seed={seed:#x} size={} (case {case}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 50, |g| {
+            n += 1;
+            let v = g.f32_vec(g.size.min(8), 1.0);
+            if v.iter().all(|x| x.abs() <= 1.0) {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'boom' failed")]
+    fn failing_property_reports_seed() {
+        check("boom", 10, |g| {
+            if g.size > 2 {
+                Err("too big".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn smooth_vec_is_smooth() {
+        let mut g = Gen::new(1, 32);
+        let v = g.smooth_vec(100, 0.1);
+        for w in v.windows(2) {
+            assert!((w[1] - w[0]).abs() <= 0.1 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Timing helpers used by the bench harness, the autotuner and the
+//! coordinator's per-stage profile (the paper times stages with C++
+//! `high_resolution_clock`; we use `std::time::Instant`).
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap duration in seconds.
+    pub fn lap_s(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.start).as_secs_f64();
+        self.start = now;
+        dt
+    }
+}
+
+/// Time a closure; returns (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_s())
+}
+
+/// MB/s throughput given bytes processed in `secs` (paper reports MB/s with
+/// MB = 1e6 bytes; we follow that convention everywhere).
+pub fn mb_per_s(bytes: usize, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return f64::INFINITY;
+    }
+    bytes as f64 / 1e6 / secs
+}
+
+/// Accumulates per-stage wall time for a pipeline run (Table III input).
+#[derive(Debug, Default, Clone)]
+pub struct StageProfile {
+    entries: Vec<(String, f64)>,
+}
+
+impl StageProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, stage: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == stage) {
+            e.1 += secs;
+        } else {
+            self.entries.push((stage.to_string(), secs));
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|e| e.1).sum()
+    }
+
+    pub fn get(&self, stage: &str) -> f64 {
+        self.entries.iter().find(|e| e.0 == stage).map(|e| e.1).unwrap_or(0.0)
+    }
+
+    /// Fraction of total time spent in `stage` (Table III's "Dual-Quant % of
+    /// Runtime" row).
+    pub fn fraction(&self, stage: &str) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.get(stage) / t
+        }
+    }
+
+    pub fn entries(&self) -> &[(String, f64)] {
+        &self.entries
+    }
+
+    pub fn merge(&mut self, other: &StageProfile) {
+        for (s, t) in &other.entries {
+            self.add(s, *t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_s() >= 0.002);
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert_eq!(mb_per_s(2_000_000, 1.0), 2.0);
+        assert!(mb_per_s(1, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn stage_profile_accumulates() {
+        let mut p = StageProfile::new();
+        p.add("dualquant", 0.3);
+        p.add("huffman", 0.5);
+        p.add("dualquant", 0.2);
+        assert!((p.get("dualquant") - 0.5).abs() < 1e-12);
+        assert!((p.total() - 1.0).abs() < 1e-12);
+        assert!((p.fraction("dualquant") - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,125 @@
+//! End-to-end integration over the public API: synthetic suites through
+//! compress/decompress with every backend, checking the error bound, the
+//! bitstream determinism and the padding-study claim on real-ish fields.
+
+use vecsz::compressor::{compress, decompress, BackendChoice, Config, EbMode};
+use vecsz::data::{suite, Scale};
+use vecsz::metrics::distortion;
+use vecsz::padding::{PadGranularity, PadValue, PaddingPolicy};
+
+fn subsample(field: &vecsz::data::Field, max_elems: usize) -> vecsz::data::Field {
+    // keep tests fast: slice a prefix that preserves dimensionality
+    let d = field.dims;
+    if d.len() <= max_elems {
+        return field.clone();
+    }
+    match d.ndim {
+        1 => vecsz::data::Field::new(
+            field.name.clone(),
+            vecsz::blocks::Dims::d1(max_elems),
+            field.data[..max_elems].to_vec(),
+        ),
+        2 => {
+            let rows = (max_elems / d.shape[1]).max(4).min(d.shape[0]);
+            vecsz::data::Field::new(
+                field.name.clone(),
+                vecsz::blocks::Dims::d2(rows, d.shape[1]),
+                field.data[..rows * d.shape[1]].to_vec(),
+            )
+        }
+        _ => {
+            let planes = (max_elems / (d.shape[1] * d.shape[2])).max(4).min(d.shape[0]);
+            vecsz::data::Field::new(
+                field.name.clone(),
+                vecsz::blocks::Dims::d3(planes, d.shape[1], d.shape[2]),
+                field.data[..planes * d.shape[1] * d.shape[2]].to_vec(),
+            )
+        }
+    }
+}
+
+#[test]
+fn every_suite_roundtrips_within_bound() {
+    for name in ["hacc", "cesm", "hurricane", "nyx", "qmcpack"] {
+        let ds = suite(name, Scale::Small, 1).unwrap();
+        let field = subsample(&ds.fields[0], 200_000);
+        // NYX density spans ~1e8: absolute bounds must scale with range.
+        let cfg = Config { eb: EbMode::Rel(1e-4), ..Config::default() };
+        let (bytes, stats) = compress(&field, &cfg).unwrap();
+        let rec = decompress(&bytes, 1).unwrap();
+        let d = distortion(&field.data, &rec.data);
+        let tol = vecsz::metrics::roundtrip_tolerance(stats.eb, d.value_range);
+        assert!(
+            d.max_abs_err <= tol,
+            "{name}: max err {} > tol {} (eb {})",
+            d.max_abs_err,
+            tol,
+            stats.eb
+        );
+        assert!(stats.size.ratio() > 1.0, "{name}: ratio {:.2}", stats.size.ratio());
+    }
+}
+
+#[test]
+fn backends_produce_interchangeable_dualquant_streams() {
+    // psz / vec8 / vec16 must produce byte-identical containers
+    let ds = suite("cesm", Scale::Small, 2).unwrap();
+    let field = subsample(&ds.fields[1], 100_000);
+    let mk = |backend| {
+        let cfg = Config { backend, eb: EbMode::Abs(1e-3), ..Config::default() };
+        compress(&field, &cfg).unwrap().0
+    };
+    let a = mk(BackendChoice::Psz);
+    let b = mk(BackendChoice::Vec { width: 8 });
+    let c = mk(BackendChoice::Vec { width: 16 });
+    assert_eq!(a, b, "psz vs vec8 containers differ");
+    assert_eq!(b, c, "vec8 vs vec16 containers differ");
+}
+
+#[test]
+fn avg_padding_reduces_outliers_on_offset_field() {
+    // §V-I in miniature: TS-like field (offset ~270) at a generous bound
+    let ds = suite("cesm", Scale::Small, 3).unwrap();
+    let ts = subsample(&ds.fields[1], 120_000);
+    let run = |padding| {
+        let cfg = Config { padding, eb: EbMode::Abs(1e-2), ..Config::default() };
+        compress(&ts, &cfg).unwrap().1
+    };
+    let zero = run(PaddingPolicy::ZERO);
+    let avg = run(PaddingPolicy::new(PadValue::Avg, PadGranularity::Global));
+    assert!(
+        avg.n_outliers < zero.n_outliers,
+        "avg padding should reduce outliers: zero={} avg={}",
+        zero.n_outliers,
+        avg.n_outliers
+    );
+    // and the paper's extreme case: block-granularity average can reach
+    // 100% elimination at generous bounds
+    let blockavg = run(PaddingPolicy::new(PadValue::Avg, PadGranularity::Block));
+    assert!(blockavg.n_outliers <= avg.n_outliers);
+}
+
+#[test]
+fn sz14_and_vecsz_rate_distortion_sane() {
+    let ds = suite("hurricane", Scale::Small, 4).unwrap();
+    let field = subsample(&ds.fields[2], 150_000);
+    for backend in [BackendChoice::Sz14, BackendChoice::Vec { width: 8 }] {
+        let cfg = Config { backend, eb: EbMode::Rel(1e-3), ..Config::default() };
+        let (bytes, stats) = compress(&field, &cfg).unwrap();
+        let rec = decompress(&bytes, 1).unwrap();
+        let d = distortion(&field.data, &rec.data);
+        assert!(d.max_abs_err <= vecsz::metrics::roundtrip_tolerance(stats.eb, d.value_range));
+        assert!(d.psnr_db > 40.0, "{backend:?}: psnr {:.1}", d.psnr_db);
+    }
+}
+
+#[test]
+fn decompression_is_deterministic_across_thread_counts() {
+    let ds = suite("nyx", Scale::Small, 5).unwrap();
+    let field = subsample(&ds.fields[1], 100_000);
+    let cfg = Config { eb: EbMode::Rel(1e-4), threads: 3, ..Config::default() };
+    let (bytes, _) = compress(&field, &cfg).unwrap();
+    let r1 = decompress(&bytes, 1).unwrap();
+    let r8 = decompress(&bytes, 8).unwrap();
+    assert_eq!(r1.data, r8.data);
+}

@@ -1,0 +1,126 @@
+//! Integration: AOT artifacts (L1/L2) vs native Rust backends (L3).
+//!
+//! These tests require `make artifacts` to have run; they skip (pass
+//! trivially, with a note on stderr) when `artifacts/manifest.json` is
+//! absent so `cargo test` works in a fresh checkout.
+
+use std::path::Path;
+
+use vecsz::blocks::BlockShape;
+use vecsz::padding::{PadGranularity, PadScalars, PadValue, PaddingPolicy};
+use vecsz::quant::psz::PszBackend;
+use vecsz::quant::{DqConfig, PqBackend};
+use vecsz::runtime::{PjrtBackend, PjrtRuntime};
+use vecsz::util::prng::Pcg32;
+
+fn artifact_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping PJRT integration test: artifacts/ not built");
+        None
+    }
+}
+
+fn random_batch(shape: BlockShape, nb: usize, seed: u64) -> (Vec<f32>, PadScalars) {
+    let elems = shape.elems();
+    let mut rng = Pcg32::seeded(seed);
+    let mut blocks = vec![0.0f32; nb * elems];
+    let mut x = 0.0f32;
+    for v in blocks.iter_mut() {
+        x += (rng.next_f32() - 0.5) * 0.2;
+        *v = x;
+    }
+    let scalars: Vec<f32> = (0..nb)
+        .map(|b| {
+            let s = &blocks[b * elems..(b + 1) * elems];
+            s.iter().sum::<f32>() / elems as f32
+        })
+        .collect();
+    (
+        blocks,
+        PadScalars {
+            policy: PaddingPolicy::new(PadValue::Avg, PadGranularity::Block),
+            scalars,
+            ndim: shape.ndim,
+        },
+    )
+}
+
+fn compare_backend_outputs(ndim: usize, bs: usize, lanes: usize, rt: &PjrtRuntime) {
+    let shape = BlockShape::new(ndim, bs);
+    let cfg = DqConfig::new(1e-3, 512, shape);
+    // more blocks than one superbatch would be slow under test; use a
+    // modest batch that still exercises the tail-padding path.
+    let nb = 11;
+    let (blocks, pads) = random_batch(shape, nb, 42 + ndim as u64);
+
+    let pjrt = match PjrtBackend::new(rt, ndim, bs, lanes) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("skipping ndim={ndim} bs={bs} lanes={lanes}: {e}");
+            return;
+        }
+    };
+    let elems = shape.elems();
+    let mut c_native = vec![0u16; nb * elems];
+    let mut v_native = vec![0.0f32; nb * elems];
+    PszBackend.run(&cfg, &blocks, 0, &pads, &mut c_native, &mut v_native);
+    let mut c_pjrt = vec![0u16; nb * elems];
+    let mut v_pjrt = vec![0.0f32; nb * elems];
+    pjrt.run(&cfg, &blocks, 0, &pads, &mut c_pjrt, &mut v_pjrt);
+
+    assert_eq!(c_native, c_pjrt, "codes diverge: ndim={ndim} bs={bs} lanes={lanes}");
+    assert_eq!(v_native, v_pjrt, "outlier values diverge: ndim={ndim} bs={bs} lanes={lanes}");
+}
+
+#[test]
+fn pjrt_jnp_artifacts_match_native_all_dims() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = PjrtRuntime::new(dir).expect("pjrt runtime");
+    // smallest config per dim keeps compile time reasonable in tests
+    compare_backend_outputs(1, 64, 8, &rt);
+    compare_backend_outputs(2, 16, 8, &rt);
+    compare_backend_outputs(3, 8, 8, &rt);
+}
+
+#[test]
+fn pjrt_pallas_artifact_matches_native_1d() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = PjrtRuntime::new(dir).expect("pjrt runtime");
+    let Some(meta) = rt.manifest.find(1, 64, 8, "pallas").cloned() else {
+        eprintln!("no pallas artifact; skipping");
+        return;
+    };
+    let shape = BlockShape::new(1, 64);
+    let cfg = DqConfig::new(1e-3, 512, shape);
+    let nb = 7;
+    let (blocks, pads) = random_batch(shape, nb, 99);
+    let pjrt = PjrtBackend::from_meta(&rt, &meta).expect("load pallas artifact");
+    let elems = shape.elems();
+    let mut c_native = vec![0u16; nb * elems];
+    let mut v_native = vec![0.0f32; nb * elems];
+    PszBackend.run(&cfg, &blocks, 0, &pads, &mut c_native, &mut v_native);
+    let mut c_p = vec![0u16; nb * elems];
+    let mut v_p = vec![0.0f32; nb * elems];
+    pjrt.run(&cfg, &blocks, 0, &pads, &mut c_p, &mut v_p);
+    assert_eq!(c_native, c_p, "pallas kernel diverges from native dual-quant");
+    assert_eq!(v_native, v_p);
+}
+
+#[test]
+fn manifest_covers_paper_config_grid() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = PjrtRuntime::new(dir).expect("pjrt runtime");
+    for ndim in 1..=3 {
+        let configs = rt.manifest.configs(ndim);
+        assert!(
+            configs.len() >= 2,
+            "expected >= 2 jnp configs for ndim={ndim}, got {configs:?}"
+        );
+        // both lane widths present (the paper's AVX2/AVX-512 axis)
+        assert!(configs.iter().any(|&(_, l)| l == 8));
+        assert!(configs.iter().any(|&(_, l)| l == 16));
+    }
+}
