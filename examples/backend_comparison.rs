@@ -1,10 +1,9 @@
-//! Backend comparison: the paper's Fig 3 in miniature, plus the §Perf
-//! halo-vs-halo-free ablation.
+//! Backend comparison: the paper's Fig 3 in miniature.
 //!
 //!     cargo run --release --example backend_comparison
 //!
-//! Benchmarks every P&Q backend (SZ-1.4, pSZ, vecSZ at widths 8/16, both
-//! implementations) on identical block batches for 1D/2D/3D shapes.
+//! Benchmarks every P&Q backend (SZ-1.4, pSZ, vecSZ at widths 8/16) on
+//! identical block batches for 1D/2D/3D shapes.
 
 use vecsz::bench::{bench, BenchOpts};
 use vecsz::blocks::BlockShape;
@@ -40,9 +39,7 @@ fn main() {
         for be in [
             &Sz14Backend as &dyn PqBackend,
             &PszBackend,
-            &VecBackend::with_halo(8),
             &VecBackend::new(8),
-            &VecBackend::with_halo(16),
             &VecBackend::new(16),
         ] {
             let s = bench(&format!("{ndim}D [{}]", be.name()), blocks.len() * 4, opts, || {

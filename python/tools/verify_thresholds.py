@@ -1,0 +1,222 @@
+"""Numeric verification of vecsz test thresholds, ported bit-faithfully
+(f32 semantics via numpy) from the Rust sources.
+
+Checks:
+  1. real_suite_field_compresses_well: CLDHGH 128x256 slab, eb=1e-3,
+     bs=16, zero padding -> compression ratio must be > 4.0
+  2. avg_padding_reduces_outliers_on_offset_field: TS 66x1800 slab,
+     eb=1e-2: outliers(avg-global) < outliers(zero), blockavg <= avg
+  3. cesm_cloud_fraction_in_unit_interval: flat (0/1) fraction > 2%
+"""
+import numpy as np
+import heapq
+
+f32 = np.float32
+U64 = np.uint64
+MASK = U64(0xFFFFFFFFFFFFFFFF)
+
+def mix64(x):
+    x = (x + U64(0x9E3779B97F4A7C15)) & MASK
+    x = ((x ^ (x >> U64(30))) * U64(0xBF58476D1CE4E5B9)) & MASK
+    x = ((x ^ (x >> U64(27))) * U64(0x94D049BB133111EB)) & MASK
+    return x ^ (x >> U64(31))
+
+def lattice(seed, c0, c1, c2):
+    h = mix64(U64(seed) ^ (c0 * U64(0x8DA6B343)) & MASK ^ (c1 * U64(0xD8163841)) & MASK ^ (c2 * U64(0xCB1AB31F)) & MASK)
+    return f32(np.float32(h >> U64(40)) * f32(1.0 / (1 << 23)) - f32(1.0))
+
+def lattice_arr(seed, c0, c1, c2):
+    # c*: uint64 numpy arrays
+    with np.errstate(over='ignore'):
+        h = mix64((U64(seed) ^ ((c0 * U64(0x8DA6B343)) & MASK) ^ ((c1 * U64(0xD8163841)) & MASK) ^ ((c2 * U64(0xCB1AB31F)) & MASK)))
+    return ((h >> U64(40)).astype(f32) * f32(1.0 / (1 << 23)) - f32(1.0))
+
+def smoothstep(t):
+    return (t * t * (f32(3.0) - f32(2.0) * t)).astype(f32)
+
+def value_noise(seed, p0, p1, p2):
+    # p*: f32 arrays
+    cell0 = np.floor(p0).astype(f32); cell1 = np.floor(p1).astype(f32); cell2 = np.floor(p2).astype(f32)
+    fx = smoothstep((p0 - cell0).astype(f32)); fy = smoothstep((p1 - cell1).astype(f32)); fz = smoothstep((p2 - cell2).astype(f32))
+    c0 = cell0.astype(np.int64).astype(U64); c1 = cell1.astype(np.int64).astype(U64); c2 = cell2.astype(np.int64).astype(U64)
+    acc = np.zeros_like(p0, dtype=f32)
+    for corner in range(8):
+        o0, o1, o2 = corner & 1, (corner >> 1) & 1, (corner >> 2) & 1
+        w = ((fx if o0 else (f32(1.0) - fx)) * (fy if o1 else (f32(1.0) - fy))).astype(f32)
+        w = (w * (fz if o2 else (f32(1.0) - fz))).astype(f32)
+        l = lattice_arr(seed, c0 + U64(o0), c1 + U64(o1), c2 + U64(o2))
+        acc = (acc + (w * l).astype(f32)).astype(f32)
+    return acc
+
+def fbm(seed, p0, p1, p2, octaves, gain):
+    amp = f32(1.0); freq = f32(1.0)
+    acc = np.zeros_like(p0, dtype=f32); norm = f32(0.0)
+    for o in range(octaves):
+        s = (U64(seed) + U64(o) * U64(0x9E37)) & MASK
+        acc = (acc + (amp * value_noise(s, (p0 * freq).astype(f32), (p1 * freq).astype(f32), (p2 * freq).astype(f32))).astype(f32)).astype(f32)
+        norm = f32(norm + amp)
+        amp = f32(amp * gain)
+        freq = f32(freq * 2.0)
+    return (acc / max(norm, np.finfo(f32).tiny)).astype(f32)
+
+def cesm_cldhgh(seed, nr, nc, rows, cols):
+    i = np.arange(rows, dtype=np.float64); j = np.arange(cols, dtype=np.float64)
+    J, I = np.meshgrid(j, i)
+    p0 = (J.astype(f32) / f32(nc) * f32(24.0)).astype(f32)
+    p1 = (I.astype(f32) / f32(nr) * f32(12.0)).astype(f32)
+    p2 = np.zeros_like(p0)
+    v = (fbm(U64(seed) ^ U64(0xC1D), p0, p1, p2, 5, f32(0.55)) * f32(1.4) + f32(0.3)).astype(f32)
+    return np.clip(v, f32(0.0), f32(1.0)).astype(f32)
+
+def cesm_ts(seed, nr, nc, rows, cols):
+    i = np.arange(rows, dtype=np.float64); j = np.arange(cols, dtype=np.float64)
+    J, I = np.meshgrid(j, i)
+    lat = ((I.astype(f32) / f32(nr) - f32(0.5)) * f32(np.pi)).astype(f32)
+    base = (f32(287.0) - f32(55.0) * (np.sin(lat.astype(f32)).astype(f32) ** 2)).astype(f32)
+    p0 = (J.astype(f32) / f32(nc) * f32(16.0)).astype(f32)
+    p1 = (I.astype(f32) / f32(nr) * f32(8.0)).astype(f32)
+    p2 = np.zeros_like(p0)
+    return (base + f32(8.0) * fbm(U64(seed) ^ U64(0x75), p0, p1, p2, 4, f32(0.5))).astype(f32)
+
+def prequant(x, hie):
+    # round_ties_even(f32(x*hie))
+    return np.rint((x.astype(f32) * f32(hie)).astype(f32)).astype(f32)
+
+def dualquant_block(block, pad, hie, radius):
+    """block: (bs,bs) f32; pad scalar fill for halo. returns codes(int), outliers mask."""
+    bs = block.shape[0]
+    dq = prequant(block, hie)
+    pq_pad = prequant(np.array([pad], dtype=f32), hie)[0]
+    halo = np.full((bs + 1, bs + 1), pq_pad, dtype=f32)
+    halo[1:, 1:] = dq
+    w = halo[1:, :-1]; n = halo[:-1, 1:]; nw = halo[:-1, :-1]
+    pred = ((w + n).astype(f32) - nw).astype(f32)
+    delta = (dq - pred).astype(f32)
+    incap = np.abs(delta) < f32(radius)
+    codes = np.where(incap, (delta + f32(radius)).astype(np.int64), 0)
+    return codes, ~incap, dq
+
+def huffman_lengths(freqs, max_bits=15):
+    present = [i for i, x in enumerate(freqs) if x > 0]
+    n = len(freqs)
+    lens = [0] * n
+    if len(present) == 0:
+        return lens
+    if len(present) == 1:
+        lens[present[0]] = 1
+        return lens
+    heap = [(int(freqs[i]), i) for i in present]
+    heapq.heapify(heap)
+    parent = {}
+    nxt = n
+    while len(heap) > 1:
+        wa, a = heapq.heappop(heap)
+        wb, b = heapq.heappop(heap)
+        parent[a] = nxt; parent[b] = nxt
+        heapq.heappush(heap, (wa + wb, nxt))
+        nxt += 1
+    root = heap[0][1]
+    for i in present:
+        d = 0; node = i
+        while node != root:
+            node = parent[node]; d += 1
+        lens[i] = min(d, 255)
+    over = any(lens[i] > max_bits for i in present)
+    if over:
+        for i in present:
+            lens[i] = min(lens[i], max_bits)
+        def kraft():
+            return sum(1 << (max_bits - lens[i]) for i in present)
+        budget = 1 << max_bits
+        while kraft() > budget:
+            best = None
+            for i in present:
+                if lens[i] < max_bits and (best is None or lens[i] > lens[best]):
+                    best = i
+            lens[best] += 1
+    return lens
+
+def uvarint_len(v):
+    n = 1
+    while v >= 0x80:
+        v >>= 7; n += 1
+    return n
+
+def huffman_blob_size(freqs, total_syms):
+    lens = huffman_lengths(list(freqs))
+    pairs = [(s, l) for s, l in enumerate(lens) if l > 0]
+    hdr = uvarint_len(len(freqs)) + uvarint_len(len(pairs))
+    prev = 0
+    for s, l in pairs:
+        hdr += uvarint_len(s - prev) + 1
+        prev = s
+    payload_bits = sum(freqs[s] * l for s, l in enumerate(lens))
+    return hdr + uvarint_len(total_syms) + (payload_bits + 7) // 8
+
+# ---------------------------------------------------------------- check 1
+print("== check 1: real_suite_field_compresses_well (ratio > 4.0) ==")
+field = cesm_cldhgh(3, 900, 1800, 128, 256)
+bs, radius, eb = 16, 512, 1e-3
+hie = 0.5 / eb
+codes_all = []
+n_out = 0
+for bi in range(128 // bs):
+    for bj in range(256 // bs):
+        blk = field[bi*bs:(bi+1)*bs, bj*bs:(bj+1)*bs]
+        codes, outmask, dq = dualquant_block(blk, 0.0, hie, radius)
+        codes_all.append(codes.ravel())
+        n_out += int(outmask.sum())
+codes_all = np.concatenate(codes_all)
+freqs = np.bincount(codes_all, minlength=2 * radius)
+hsize = huffman_blob_size(freqs, codes_all.size)
+# conservative (stored, never-expanding) sizes for the other sections
+pos_bytes = n_out * 3 + 6  # varint deltas, <= 3 bytes each here, + lossless hdr
+val_bytes = n_out * 4 + 6
+pad_bytes = 4 + 6
+framing = 48 + 1 + 4 * 16  # header + count + per-section framing upper bound
+total = hsize + pos_bytes + val_bytes + pad_bytes + framing
+raw = field.size * 4
+ent = freqs[freqs > 0] / codes_all.size
+entropy = float(-(ent * np.log2(ent)).sum())
+print(f"  field range [{field.min():.3f},{field.max():.3f}] flat0/1={(np.sum((field==0)|(field==1))/field.size)*100:.1f}%")
+print(f"  outliers={n_out} ({100*n_out/codes_all.size:.3f}%)  code entropy={entropy:.3f} bits")
+print(f"  huffman={hsize}B  conservative total={total}B  raw={raw}B  ratio={raw/total:.2f}x")
+assert raw / total > 4.0, "RATIO CHECK FAILED"
+print("  PASS (ratio > 4.0 with conservative sizing)")
+
+# ---------------------------------------------------------------- check 3
+flat = float(np.sum((field == 0) | (field == 1)) / field.size)
+print(f"== check 3: flat fraction on slab = {flat*100:.2f}% (test needs >2% on full field)")
+
+# ---------------------------------------------------------------- check 2
+print("== check 2: avg padding reduces outliers on TS (eb=1e-2) ==")
+ts = cesm_ts(3, 900, 1800, 66, 1800)
+eb2 = 1e-2; hie2 = 0.5 / eb2
+def count_outliers(field, mode):
+    rows, cols = field.shape
+    nbr, nbc = (rows + bs - 1) // bs, (cols + bs - 1) // bs
+    total_out = 0
+    gmean = f32(np.float64(field).mean()) if mode == 'avg-global' else None
+    for bi in range(nbr):
+        for bj in range(nbc):
+            r0, c0 = bi * bs, bj * bs
+            valid = field[r0:min(r0+bs, rows), c0:min(c0+bs, cols)]
+            if mode == 'zero':
+                pad = f32(0.0)
+            elif mode == 'avg-global':
+                pad = gmean
+            else:  # avg-block over valid region
+                pad = f32(np.float64(valid).mean())
+            blk = np.full((bs, bs), pad, dtype=f32)
+            blk[:valid.shape[0], :valid.shape[1]] = valid
+            _, outmask, _ = dualquant_block(blk, float(pad), hie2, radius)
+            total_out += int(outmask.sum())
+    return total_out
+z = count_outliers(ts, 'zero')
+a = count_outliers(ts, 'avg-global')
+b = count_outliers(ts, 'avg-block')
+print(f"  zero={z}  avg-global={a}  avg-block={b}")
+assert a < z, "avg-global must beat zero"
+assert b <= a, "avg-block must be <= avg-global"
+print("  PASS")
+

@@ -94,9 +94,7 @@ fn main() {
     let mut outv = vec![0.0f32; blocks.len()];
     for be in [
         &PszBackend as &dyn PqBackend,
-        &VecBackend::with_halo(8), // ablation: original halo-copy path
         &VecBackend::new(8),
-        &VecBackend::with_halo(16),
         &VecBackend::new(16),
     ] {
         let s = bench(

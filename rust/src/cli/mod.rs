@@ -21,7 +21,7 @@ pub struct Args {
 }
 
 /// Known boolean switches (no value).
-const SWITCHES: &[&str] = &["help", "quick", "full", "verbose", "no-lossless", "csv"];
+const SWITCHES: &[&str] = &["help", "quick", "full", "verbose", "no-lossless", "csv", "stream"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {

@@ -8,11 +8,14 @@
 //! across time-steps, so tuning amortizes).
 
 use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
 
 use crate::autotune::{autotune, TuneConfig, TuneSettings};
-use crate::compressor::{compress, BackendChoice, Config, CompressStats};
+use crate::compressor::{compress, BackendChoice, Config, CompressStats, EbMode};
+use crate::coordinator::pool::ThreadPool;
 use crate::data::Field;
 use crate::error::{Result, VszError};
+use crate::stream;
 use crate::util::timer::Timer;
 
 /// Pipeline configuration.
@@ -178,6 +181,80 @@ pub fn compress_dataset(
         .map_err(|e: VszError| e)
 }
 
+/// One compressed field of a batch run (container bytes + the numbers the
+/// batch report prints, normalized across v1 and chunked-v2 containers).
+#[derive(Clone, Debug)]
+pub struct BatchItem {
+    pub name: String,
+    pub bytes: Vec<u8>,
+    pub raw_bytes: usize,
+    pub compressed_bytes: usize,
+    pub n_outliers: usize,
+    pub pq_seconds: f64,
+    /// Chunks in the container (1 for a v1 container).
+    pub n_chunks: usize,
+}
+
+impl BatchItem {
+    pub fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+}
+
+/// Multi-field batch driver: push a whole dataset suite through the
+/// [`ThreadPool`], compressing fields concurrently (`pool_threads`
+/// workers). Parallelism is across fields; each field compresses
+/// single-threaded on its worker. With `chunked = Some(chunk_span)` every
+/// field is written as a v2 chunked streaming container (range-relative
+/// bounds are resolved per field first); otherwise as a v1 container.
+/// Results come back in input order.
+pub fn compress_batch(
+    fields: Vec<Field>,
+    cfg: &Config,
+    pool_threads: usize,
+    chunked: Option<usize>,
+) -> Result<Vec<BatchItem>> {
+    if fields.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut cfg = *cfg;
+    cfg.threads = 1;
+    let n = fields.len();
+    let shared = Arc::new(fields);
+    let pool = ThreadPool::new(pool_threads.max(1));
+    let results = pool.scatter_gather(n, move |i| -> Result<BatchItem> {
+        let f = &shared[i];
+        if let Some(span) = chunked {
+            let mut c = cfg;
+            if matches!(c.eb, EbMode::Rel(_)) {
+                c.eb = EbMode::Abs(c.eb.resolve(&f.data));
+            }
+            let (bytes, stats) = stream::compress_chunked(f, &c, span)?;
+            Ok(BatchItem {
+                name: f.name.clone(),
+                bytes,
+                raw_bytes: stats.raw_bytes,
+                compressed_bytes: stats.compressed_bytes,
+                n_outliers: stats.n_outliers,
+                pq_seconds: stats.pq_seconds,
+                n_chunks: stats.n_chunks,
+            })
+        } else {
+            let (bytes, stats) = compress(f, &cfg)?;
+            Ok(BatchItem {
+                name: f.name.clone(),
+                bytes,
+                raw_bytes: stats.size.raw_bytes,
+                compressed_bytes: stats.size.compressed_bytes,
+                n_outliers: stats.n_outliers,
+                pq_seconds: stats.pq_seconds,
+                n_chunks: 1,
+            })
+        }
+    });
+    results.into_iter().collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,6 +333,40 @@ mod tests {
             },
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn batch_driver_preserves_order_and_content() {
+        let fields: Vec<Field> = (0..6).map(step_field).collect();
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let serial = compress_batch(fields.clone(), &cfg, 1, None).unwrap();
+        let parallel = compress_batch(fields.clone(), &cfg, 4, None).unwrap();
+        assert_eq!(serial.len(), 6);
+        for (i, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+            assert_eq!(a.name, fields[i].name, "order changed");
+            assert_eq!(a.bytes, b.bytes, "pool width changed the bitstream of {}", a.name);
+            assert!(a.ratio() > 1.0);
+        }
+        // every container decompresses within the bound
+        for (i, item) in serial.iter().enumerate() {
+            let rec = crate::compressor::decompress(&item.bytes, 1).unwrap();
+            for (o, r) in fields[i].data.iter().zip(&rec.data) {
+                assert!((o - r).abs() <= 1e-3 + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_driver_chunked_mode_emits_v2_containers() {
+        let fields: Vec<Field> = (0..3).map(step_field).collect();
+        let cfg = Config { eb: EbMode::Rel(1e-3), ..Config::default() };
+        let items = compress_batch(fields.clone(), &cfg, 2, Some(16)).unwrap();
+        for (i, item) in items.iter().enumerate() {
+            assert!(crate::format::is_chunked_container(&item.bytes), "{}", item.name);
+            assert!(item.n_chunks >= 4, "{} chunks", item.n_chunks);
+            let rec = crate::compressor::decompress(&item.bytes, 2).unwrap();
+            assert_eq!(rec.data.len(), fields[i].data.len());
+        }
     }
 
     #[test]

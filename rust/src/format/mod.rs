@@ -1,13 +1,45 @@
-//! `.vsz` container format.
+//! `.vsz` container formats.
+//!
+//! # v1 — monolithic container (whole-field, in-memory)
 //!
 //! Layout (all little-endian):
 //! ```text
-//! magic "VSZ1" | u16 version | u8 ndim | u8 codes_kind | u64 dims[3]
+//! magic "VSZ1" | u16 version=1 | u8 ndim | u8 codes_kind | u64 dims[3]
 //! f64 eb | u16 radius | u32 block_size
 //! u8 pad_value | u8 pad_granularity
 //! u8 n_sections, then per section:
 //!   u8 tag | uvarint raw_len | uvarint enc_len | u32 crc32(payload) | bytes
 //! ```
+//!
+//! # v2 — chunked streaming container (out-of-core fields)
+//!
+//! The field is framed as a sequence of independently-decodable **chunks**:
+//! contiguous slabs along the leading dimension, each a whole number of
+//! block rows so blocks never straddle a chunk boundary. Every chunk
+//! carries its own CODES / OUTLIER_POS / OUTLIER_VAL / PAD_SCALARS sections
+//! with the same per-section CRC framing as v1, so a single flipped byte is
+//! detected at the chunk that owns it and decode of the other chunks can
+//! proceed (or the whole read can be rejected, as `decompress` does).
+//!
+//! ```text
+//! magic "VSZ2" | u16 version=2 | u8 ndim | u8 codes_kind | u64 dims[3]
+//! f64 eb | u16 radius | u32 block_size
+//! u8 pad_value | u8 pad_granularity
+//! u64 chunk_span                  -- leading-dim extent of a full chunk
+//! then, per chunk (in leading-dim order):
+//!   u8 0xC7 | uvarint chunk_index | uvarint lead_extent | u8 n_sections
+//!   per section: u8 tag | uvarint raw_len | uvarint enc_len
+//!                | u32 crc32(payload) | bytes
+//! trailer:
+//!   u8 0xE7 | uvarint n_chunks | u32 crc32(n_chunks as u64 LE)
+//! ```
+//!
+//! Chunk framing is what enables the streaming engine (`stream`): the
+//! writer emits the fixed-size header, then one frame per slab as data
+//! arrives (bounded memory), and the reader decodes frames one at a time —
+//! or hands batches of frames to the thread pool for chunk-parallel decode
+//! (cuSZ-style coarse-grained parallelism).
+//!
 //! Section payloads are already entropy-coded by their producers (Huffman
 //! for codes, lossless for outlier streams); the container adds integrity
 //! and framing only.
@@ -21,6 +53,16 @@ use crate::util::crc32;
 
 pub const MAGIC: &[u8; 4] = b"VSZ1";
 pub const VERSION: u16 = 1;
+
+pub const MAGIC2: &[u8; 4] = b"VSZ2";
+pub const VERSION2: u16 = 2;
+
+/// Frame markers of the v2 streaming container.
+pub const CHUNK_TAG: u8 = 0xC7;
+pub const END_TAG: u8 = 0xE7;
+
+/// Serialized size of the v2 stream header (fixed — no section count).
+pub const STREAM_HEADER_LEN: usize = 4 + 2 + 1 + 1 + 24 + 8 + 2 + 4 + 1 + 1 + 8;
 
 /// Section tags.
 pub mod tag {
@@ -43,6 +85,15 @@ pub struct Header {
     pub radius: u16,
     pub block_size: u32,
     pub padding: PaddingPolicy,
+}
+
+/// v2 stream header: the v1 header fields plus the chunking geometry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StreamHeader {
+    pub header: Header,
+    /// Leading-dimension extent of every full chunk (the last chunk may be
+    /// shorter). Always a multiple of the block size.
+    pub chunk_span: u64,
 }
 
 /// One framed section.
@@ -104,11 +155,9 @@ fn pad_gran_from_u8(v: u8) -> Result<PadGranularity> {
     })
 }
 
-/// Serialize a container.
-pub fn write_container(header: &Header, sections: &[Section]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(64 + sections.iter().map(|s| s.payload.len() + 16).sum::<usize>());
-    out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
+/// Append the header fields shared by both container versions (everything
+/// between the version word and the version-specific framing).
+fn write_header_fields(out: &mut Vec<u8>, header: &Header) {
     out.push(header.dims.ndim as u8);
     out.push(kind_to_u8(header.codes_kind));
     for d in header.dims.shape {
@@ -119,28 +168,10 @@ pub fn write_container(header: &Header, sections: &[Section]) -> Vec<u8> {
     out.extend_from_slice(&header.block_size.to_le_bytes());
     out.push(pad_value_to_u8(header.padding.value));
     out.push(pad_gran_to_u8(header.padding.granularity));
-    out.push(sections.len() as u8);
-    for s in sections {
-        out.push(s.tag);
-        put_uvarint(&mut out, s.raw_len);
-        put_uvarint(&mut out, s.payload.len() as u64);
-        out.extend_from_slice(&crc32(&s.payload).to_le_bytes());
-        out.extend_from_slice(&s.payload);
-    }
-    out
 }
 
-/// Parse and integrity-check a container.
-pub fn read_container(data: &[u8]) -> Result<(Header, Vec<Section>)> {
-    let mut c = Cursor::new(data);
-    let magic = c.take(4).ok_or_else(|| VszError::format("truncated magic"))?;
-    if magic != MAGIC {
-        return Err(VszError::format("bad magic (not a .vsz container)"));
-    }
-    let version = c.u16().ok_or_else(|| VszError::format("truncated version"))?;
-    if version != VERSION {
-        return Err(VszError::format(format!("unsupported version {version}")));
-    }
+/// Parse the shared header fields (inverse of [`write_header_fields`]).
+fn read_header_fields(c: &mut Cursor) -> Result<Header> {
     let ndim = c.u8().ok_or_else(|| VszError::format("truncated ndim"))? as usize;
     if !(1..=3).contains(&ndim) {
         return Err(VszError::format(format!("bad ndim {ndim}")));
@@ -148,9 +179,19 @@ pub fn read_container(data: &[u8]) -> Result<(Header, Vec<Section>)> {
     let codes_kind = kind_from_u8(c.u8().ok_or_else(|| VszError::format("truncated kind"))?)?;
     let mut shape = [1usize; 3];
     for s in shape.iter_mut() {
-        *s = c.u64().ok_or_else(|| VszError::format("truncated dims"))? as usize;
+        let d = c.u64().ok_or_else(|| VszError::format("truncated dims"))?;
+        // bound each axis so a corrupt header cannot drive allocations into
+        // overflow/OOM territory before any payload check runs
+        if d == 0 || d > 1 << 40 {
+            return Err(VszError::format(format!("implausible dimension {d}")));
+        }
+        *s = d as usize;
     }
     let dims = Dims { shape, ndim };
+    let total = (dims.shape[0] as u128) * (dims.shape[1] as u128) * (dims.shape[2] as u128);
+    if total > 1 << 42 {
+        return Err(VszError::format("implausible field size"));
+    }
     let eb = c.f64().ok_or_else(|| VszError::format("truncated eb"))?;
     if !(eb.is_finite() && eb > 0.0) {
         return Err(VszError::format("invalid error bound"));
@@ -159,31 +200,161 @@ pub fn read_container(data: &[u8]) -> Result<(Header, Vec<Section>)> {
     let block_size = c.u32().ok_or_else(|| VszError::format("truncated block size"))?;
     let pv = pad_value_from_u8(c.u8().ok_or_else(|| VszError::format("truncated pad value"))?)?;
     let pg = pad_gran_from_u8(c.u8().ok_or_else(|| VszError::format("truncated pad gran"))?)?;
+    Ok(Header { dims, codes_kind, eb, radius, block_size, padding: PaddingPolicy::new(pv, pg) })
+}
+
+/// Append one framed section (shared by v1 and v2 containers).
+pub fn write_section(out: &mut Vec<u8>, s: &Section) {
+    out.push(s.tag);
+    put_uvarint(out, s.raw_len);
+    put_uvarint(out, s.payload.len() as u64);
+    out.extend_from_slice(&crc32(&s.payload).to_le_bytes());
+    out.extend_from_slice(&s.payload);
+}
+
+/// Parse and CRC-check one framed section.
+pub fn read_section(c: &mut Cursor) -> Result<Section> {
+    let tag = c.u8().ok_or_else(|| VszError::format("truncated section tag"))?;
+    let raw_len = c.uvarint().ok_or_else(|| VszError::format("truncated raw_len"))?;
+    let enc_len = c.uvarint().ok_or_else(|| VszError::format("truncated enc_len"))? as usize;
+    let crc = c.u32().ok_or_else(|| VszError::format("truncated crc"))?;
+    let payload = c
+        .take(enc_len)
+        .ok_or_else(|| VszError::format("truncated section payload"))?
+        .to_vec();
+    if crc32(&payload) != crc {
+        return Err(VszError::Integrity(format!("section {tag}: crc mismatch")));
+    }
+    Ok(Section { tag, raw_len, payload })
+}
+
+/// Serialize a v1 container.
+pub fn write_container(header: &Header, sections: &[Section]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + sections.iter().map(|s| s.payload.len() + 16).sum::<usize>());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    write_header_fields(&mut out, header);
+    out.push(sections.len() as u8);
+    for s in sections {
+        write_section(&mut out, s);
+    }
+    out
+}
+
+/// Parse and integrity-check a v1 container.
+pub fn read_container(data: &[u8]) -> Result<(Header, Vec<Section>)> {
+    let mut c = Cursor::new(data);
+    let magic = c.take(4).ok_or_else(|| VszError::format("truncated magic"))?;
+    if magic == MAGIC2 {
+        return Err(VszError::format(
+            "chunked (VSZ2) container: use the streaming decoder (stream module)",
+        ));
+    }
+    if magic != MAGIC {
+        return Err(VszError::format("bad magic (not a .vsz container)"));
+    }
+    let version = c.u16().ok_or_else(|| VszError::format("truncated version"))?;
+    if version != VERSION {
+        return Err(VszError::format(format!("unsupported version {version}")));
+    }
+    let header = read_header_fields(&mut c)?;
     let n_sections = c.u8().ok_or_else(|| VszError::format("truncated section count"))? as usize;
     let mut sections = Vec::with_capacity(n_sections);
     for _ in 0..n_sections {
-        let tag = c.u8().ok_or_else(|| VszError::format("truncated section tag"))?;
-        let raw_len = c.uvarint().ok_or_else(|| VszError::format("truncated raw_len"))?;
-        let enc_len = c.uvarint().ok_or_else(|| VszError::format("truncated enc_len"))? as usize;
-        let crc = c.u32().ok_or_else(|| VszError::format("truncated crc"))?;
-        let payload = c
-            .take(enc_len)
-            .ok_or_else(|| VszError::format("truncated section payload"))?
-            .to_vec();
-        if crc32(&payload) != crc {
-            return Err(VszError::Integrity(format!("section {tag}: crc mismatch")));
-        }
-        sections.push(Section { tag, raw_len, payload });
+        sections.push(read_section(&mut c)?);
     }
-    let header = Header {
-        dims,
-        codes_kind,
-        eb,
-        radius,
-        block_size,
-        padding: PaddingPolicy::new(pv, pg),
-    };
     Ok((header, sections))
+}
+
+/// True when `data` starts with the v2 streaming magic.
+pub fn is_chunked_container(data: &[u8]) -> bool {
+    data.len() >= 4 && &data[..4] == MAGIC2
+}
+
+/// Serialize a v2 stream header (fixed [`STREAM_HEADER_LEN`] bytes).
+pub fn write_stream_header(sh: &StreamHeader) -> Vec<u8> {
+    let mut out = Vec::with_capacity(STREAM_HEADER_LEN);
+    out.extend_from_slice(MAGIC2);
+    out.extend_from_slice(&VERSION2.to_le_bytes());
+    write_header_fields(&mut out, &sh.header);
+    out.extend_from_slice(&sh.chunk_span.to_le_bytes());
+    debug_assert_eq!(out.len(), STREAM_HEADER_LEN);
+    out
+}
+
+/// Parse a v2 stream header from the first [`STREAM_HEADER_LEN`] bytes.
+pub fn read_stream_header(data: &[u8]) -> Result<StreamHeader> {
+    let mut c = Cursor::new(data);
+    let magic = c.take(4).ok_or_else(|| VszError::format("truncated magic"))?;
+    if magic != MAGIC2 {
+        return Err(VszError::format("bad magic (not a chunked .vsz container)"));
+    }
+    let version = c.u16().ok_or_else(|| VszError::format("truncated version"))?;
+    if version != VERSION2 {
+        return Err(VszError::format(format!("unsupported stream version {version}")));
+    }
+    let header = read_header_fields(&mut c)?;
+    let chunk_span = c.u64().ok_or_else(|| VszError::format("truncated chunk span"))?;
+    if chunk_span == 0 {
+        return Err(VszError::format("zero chunk span"));
+    }
+    Ok(StreamHeader { header, chunk_span })
+}
+
+/// Append one chunk frame (marker + geometry + sections).
+pub fn write_chunk_frame(out: &mut Vec<u8>, chunk_index: u64, lead_extent: u64, sections: &[Section]) {
+    out.push(CHUNK_TAG);
+    put_uvarint(out, chunk_index);
+    put_uvarint(out, lead_extent);
+    out.push(sections.len() as u8);
+    for s in sections {
+        write_section(out, s);
+    }
+}
+
+/// A parsed v2 frame: either one chunk or the end-of-stream trailer.
+#[derive(Debug)]
+pub enum Frame {
+    Chunk { index: u64, lead_extent: u64, sections: Vec<Section> },
+    End { n_chunks: u64 },
+}
+
+/// Parse the next frame at the cursor (chunk or trailer).
+pub fn read_frame(c: &mut Cursor) -> Result<Frame> {
+    let marker = c.u8().ok_or_else(|| VszError::format("truncated frame marker"))?;
+    match marker {
+        CHUNK_TAG => {
+            let index = c.uvarint().ok_or_else(|| VszError::format("truncated chunk index"))?;
+            let lead_extent =
+                c.uvarint().ok_or_else(|| VszError::format("truncated chunk extent"))?;
+            if lead_extent == 0 {
+                return Err(VszError::format("empty chunk"));
+            }
+            let n_sections =
+                c.u8().ok_or_else(|| VszError::format("truncated chunk section count"))? as usize;
+            let mut sections = Vec::with_capacity(n_sections);
+            for _ in 0..n_sections {
+                sections.push(read_section(c)?);
+            }
+            Ok(Frame::Chunk { index, lead_extent, sections })
+        }
+        END_TAG => {
+            let n_chunks = c.uvarint().ok_or_else(|| VszError::format("truncated trailer"))?;
+            let crc = c.u32().ok_or_else(|| VszError::format("truncated trailer crc"))?;
+            if crc32(&n_chunks.to_le_bytes()) != crc {
+                return Err(VszError::Integrity("trailer crc mismatch".into()));
+            }
+            Ok(Frame::End { n_chunks })
+        }
+        other => Err(VszError::format(format!("unknown frame marker {other:#x}"))),
+    }
+}
+
+/// Append the end-of-stream trailer.
+pub fn write_trailer(out: &mut Vec<u8>, n_chunks: u64) {
+    out.push(END_TAG);
+    put_uvarint(out, n_chunks);
+    out.extend_from_slice(&crc32(&n_chunks.to_le_bytes()).to_le_bytes());
 }
 
 /// Find a section by tag.
@@ -270,5 +441,89 @@ mod tests {
         h.codes_kind = CodesKind::Sz14;
         let (h2, _) = read_container(&write_container(&h, &[])).unwrap();
         assert_eq!(h2.codes_kind, CodesKind::Sz14);
+    }
+
+    // ------------------------------------------------------- v2 framing
+
+    fn sample_stream_header() -> StreamHeader {
+        StreamHeader { header: sample_header(), chunk_span: 32 }
+    }
+
+    #[test]
+    fn stream_header_roundtrip() {
+        let sh = sample_stream_header();
+        let bytes = write_stream_header(&sh);
+        assert_eq!(bytes.len(), STREAM_HEADER_LEN);
+        assert!(is_chunked_container(&bytes));
+        let back = read_stream_header(&bytes).unwrap();
+        assert_eq!(sh, back);
+    }
+
+    #[test]
+    fn v1_reader_rejects_v2_container_cleanly() {
+        let bytes = write_stream_header(&sample_stream_header());
+        let err = read_container(&bytes).unwrap_err();
+        assert!(err.to_string().contains("stream"), "{err}");
+    }
+
+    #[test]
+    fn chunk_frames_and_trailer_roundtrip() {
+        let mut out = write_stream_header(&sample_stream_header());
+        let secs = vec![
+            Section { tag: tag::CODES, raw_len: 64, payload: vec![5; 10] },
+            Section { tag: tag::PAD_SCALARS, raw_len: 4, payload: vec![1, 2, 3, 4] },
+        ];
+        write_chunk_frame(&mut out, 0, 32, &secs);
+        write_chunk_frame(&mut out, 1, 7, &secs);
+        write_trailer(&mut out, 2);
+
+        let mut c = Cursor::new(&out[STREAM_HEADER_LEN..]);
+        match read_frame(&mut c).unwrap() {
+            Frame::Chunk { index, lead_extent, sections } => {
+                assert_eq!(index, 0);
+                assert_eq!(lead_extent, 32);
+                assert_eq!(sections.len(), 2);
+                assert_eq!(sections[0].payload, vec![5; 10]);
+            }
+            other => panic!("expected chunk, got {other:?}"),
+        }
+        match read_frame(&mut c).unwrap() {
+            Frame::Chunk { index, lead_extent, .. } => {
+                assert_eq!(index, 1);
+                assert_eq!(lead_extent, 7);
+            }
+            other => panic!("expected chunk, got {other:?}"),
+        }
+        match read_frame(&mut c).unwrap() {
+            Frame::End { n_chunks } => assert_eq!(n_chunks, 2),
+            other => panic!("expected end, got {other:?}"),
+        }
+        assert_eq!(c.remaining(), 0);
+    }
+
+    #[test]
+    fn chunk_frame_crc_detects_flips() {
+        let mut out = Vec::new();
+        let secs = vec![Section { tag: tag::CODES, raw_len: 16, payload: vec![9; 16] }];
+        write_chunk_frame(&mut out, 0, 8, &secs);
+        let n = out.len();
+        out[n - 3] ^= 0x40;
+        let mut c = Cursor::new(&out);
+        assert!(matches!(read_frame(&mut c), Err(VszError::Integrity(_))));
+    }
+
+    #[test]
+    fn trailer_crc_detects_flips() {
+        let mut out = Vec::new();
+        write_trailer(&mut out, 5);
+        out[1] ^= 0x01; // n_chunks varint
+        let mut c = Cursor::new(&out);
+        assert!(read_frame(&mut c).is_err());
+    }
+
+    #[test]
+    fn unknown_marker_rejected() {
+        let mut c = Cursor::new(&[0x7Fu8, 0, 0][..]);
+        assert!(read_frame(&mut c).is_err());
     }
 }

@@ -304,6 +304,11 @@ pub fn decompress_u16(data: &[u8]) -> Result<Vec<u16>> {
     if count == 0 {
         return Ok(Vec::new());
     }
+    // every symbol consumes at least one bit, so a forged count can never
+    // exceed the remaining payload bits — reject before allocating
+    if count > (data.len() - pos) as u64 * 8 {
+        return Err(VszError::format("huffman: count exceeds payload"));
+    }
     let dec = Decoder::from_lengths(&lens)?;
     dec.decode_all(&data[pos..], count as usize)
 }

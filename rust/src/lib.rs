@@ -8,7 +8,10 @@
 //! PJRT.
 //!
 //! Public entry points:
-//! * [`compressor`] — the `Compressor` trait plus `VecSz`, `PSz`, `Sz14`.
+//! * [`compressor`] — `compress`/`decompress` over whole in-memory fields.
+//! * [`stream`] — the chunked streaming engine (`StreamCompressor`/
+//!   `StreamDecompressor` over `std::io::Read`/`Write`) for out-of-core
+//!   fields and chunk-parallel decode.
 //! * [`data`] — synthetic SDRBench-like dataset suites.
 //! * [`metrics`] — PSNR / rate-distortion evaluation.
 //! * [`autotune`] — block-size/lane-width autotuning.
@@ -33,6 +36,7 @@ pub mod lossless;
 pub mod padding;
 pub mod quant;
 pub mod runtime;
+pub mod stream;
 pub mod util;
 
 pub use error::{Result, VszError};

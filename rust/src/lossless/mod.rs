@@ -102,7 +102,8 @@ fn lzss_tokens(data: &[u8]) -> Vec<u8> {
 }
 
 fn lzss_expand(tokens: &[u8], raw_len: usize) -> Result<Vec<u8>> {
-    let mut out = Vec::with_capacity(raw_len);
+    // cap the pre-allocation: a forged raw_len must not abort on reserve
+    let mut out = Vec::with_capacity(raw_len.min(1 << 26));
     let mut pos = 0usize;
     let err = || VszError::format("lzss: truncated token stream");
     while out.len() < raw_len {
@@ -150,7 +151,8 @@ fn rle_encode(data: &[u8]) -> Vec<u8> {
 }
 
 fn rle_decode(data: &[u8], raw_len: usize) -> Result<Vec<u8>> {
-    let mut out = Vec::with_capacity(raw_len);
+    // cap the pre-allocation: a forged raw_len must not abort on reserve
+    let mut out = Vec::with_capacity(raw_len.min(1 << 26));
     let mut pos = 0usize;
     while out.len() < raw_len {
         let (run, n) =

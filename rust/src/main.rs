@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   compress    raw f32 file or synthetic suite -> .vsz container(s)
-//!   decompress  .vsz -> raw f32 file
+//!   decompress  .vsz -> raw f32 file (v1 and chunked v2 containers)
+//!   stream      chunked streaming compress/decompress in bounded memory
+//!   batch       push a whole dataset suite through the thread pool
 //!   verify      compress + decompress + check the error bound
 //!   bench       P&Q bandwidth of one configuration
 //!   autotune    pick best (block size x lane width) for an input
@@ -12,6 +14,7 @@
 //!   pipeline    streaming time-series compression demo
 //!   info        artifact manifest + host summary
 
+use std::io::{BufReader, BufWriter};
 use std::path::Path;
 use std::process::ExitCode;
 
@@ -36,6 +39,16 @@ COMMANDS
              flags: --eb 1e-4 | --rel-eb 1e-4, --block N, --backend
              sz14|psz|vec8|vec16, --padding zero|avg-global|..., --threads N
   decompress --input F.vsz --out F.f32 [--threads N]
+             (accepts both monolithic v1 and chunked v2 containers)
+  stream     compress   --input F.f32 --dims NxM --out F.vsz
+                        [--chunk-rows N] [--threads N] + compress flags
+                        (absolute --eb required; bounded memory; chunk
+                        pipeline across --threads workers)
+             decompress --input F.vsz --out F.f32 [--threads N]
+                        (chunk-parallel decode via the thread pool)
+  batch      --suite NAME|all [--out-dir D] [--threads N]
+             [--stream [--chunk-rows N]] + compress flags
+             (whole dataset suite through the pool, one field per worker)
   verify     same flags as compress; checks the error bound end to end
   bench      --suite NAME [--backend ...] [--block N] [--threads N]
   autotune   --suite NAME [--sample-pct P] [--iterations N]
@@ -127,6 +140,126 @@ fn cmd_decompress(a: &Args) -> Result<()> {
         out,
         field.data.len(),
         &field.dims.shape[..field.dims.ndim]
+    );
+    Ok(())
+}
+
+fn cmd_stream(a: &Args) -> Result<()> {
+    let mode = a.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let input = a.get("input").ok_or_else(|| VszError::config("--input required"))?.to_string();
+    let out = a.get("out").ok_or_else(|| VszError::config("--out required"))?.to_string();
+    let threads = a.usize_or("threads", 1)?;
+    match mode {
+        "compress" => {
+            let cfg = parse_common(a)?;
+            let dims = dio::parse_dims(
+                a.get("dims").ok_or_else(|| VszError::config("--dims required"))?,
+            )?;
+            let chunk_rows = a.usize_or("chunk-rows", 0)?;
+            let fin = std::fs::File::open(&input)?;
+            let expect = dims.len() as u64 * 4;
+            let got = fin.metadata()?.len();
+            if got != expect {
+                return Err(VszError::format(format!(
+                    "{input}: {got} bytes, dims {:?} need {expect}",
+                    &dims.shape[..dims.ndim]
+                )));
+            }
+            std::fs::create_dir_all(Path::new(&out).parent().unwrap_or(Path::new(".")))?;
+            let fout = std::fs::File::create(&out)?;
+            let stats = vecsz::stream::compress_stream(
+                BufReader::new(fin),
+                BufWriter::new(fout),
+                dims,
+                &cfg,
+                chunk_rows,
+            )?;
+            println!(
+                "{input} -> {out}: {} -> {} in {} chunks  CR {:.2}x  P&Q {:.0} MB/s  outliers {}",
+                human_bytes(stats.raw_bytes as u64),
+                human_bytes(stats.compressed_bytes as u64),
+                stats.n_chunks,
+                stats.ratio(),
+                vecsz::util::timer::mb_per_s(stats.n_elements * 4, stats.pq_seconds),
+                stats.n_outliers,
+            );
+            Ok(())
+        }
+        "decompress" => {
+            let fin = std::fs::File::open(&input)?;
+            std::fs::create_dir_all(Path::new(&out).parent().unwrap_or(Path::new(".")))?;
+            let fout = std::fs::File::create(&out)?;
+            let header = vecsz::stream::decompress_stream(
+                BufReader::new(fin),
+                BufWriter::new(fout),
+                threads,
+            )?;
+            let d = header.header.dims;
+            println!(
+                "{input} -> {out}: {} values, dims {:?}, chunk span {}",
+                d.len(),
+                &d.shape[..d.ndim],
+                header.chunk_span
+            );
+            Ok(())
+        }
+        other => Err(VszError::config(format!(
+            "stream: expected 'compress' or 'decompress', got '{other}'"
+        ))),
+    }
+}
+
+fn cmd_batch(a: &Args) -> Result<()> {
+    use vecsz::coordinator::pipeline::compress_batch;
+    let cfg = parse_common(a)?;
+    let name = a.get("suite").ok_or_else(|| VszError::config("--suite NAME|all required"))?;
+    let scale = if a.has("full") { Scale::Full } else { Scale::Small };
+    let seed = a.usize_or("seed", 0xDA7A)? as u64;
+    let threads = a.usize_or("threads", 1)?;
+    let chunked = if a.has("stream") || a.get("chunk-rows").is_some() {
+        Some(a.usize_or("chunk-rows", 0)?)
+    } else {
+        None
+    };
+    let out_dir = a.get("out-dir").map(|s| s.to_string());
+
+    let datasets = if name == "all" {
+        vecsz::data::all_suites(scale, seed)
+    } else {
+        vec![suite(name, scale, seed)
+            .ok_or_else(|| VszError::config(format!("unknown suite '{name}'")))?]
+    };
+
+    let t = vecsz::util::timer::Timer::start();
+    let (mut raw, mut comp) = (0usize, 0usize);
+    for ds in datasets {
+        let items = compress_batch(ds.fields, &cfg, threads, chunked)?;
+        for item in &items {
+            raw += item.raw_bytes;
+            comp += item.compressed_bytes;
+            println!(
+                "{:<11} {:<16} {:>10} -> {:>10}  CR {:>6.2}x  chunks {:>3}  outliers {}",
+                ds.name,
+                item.name,
+                human_bytes(item.raw_bytes as u64),
+                human_bytes(item.compressed_bytes as u64),
+                item.ratio(),
+                item.n_chunks,
+                item.n_outliers,
+            );
+            if let Some(dir) = &out_dir {
+                std::fs::create_dir_all(dir)?;
+                std::fs::write(format!("{dir}/{}_{}.vsz", ds.name, item.name), &item.bytes)?;
+            }
+        }
+    }
+    println!(
+        "batch: {} -> {} overall CR {:.2}x in {:.2}s ({} pool threads)",
+        human_bytes(raw as u64),
+        human_bytes(comp as u64),
+        raw as f64 / comp.max(1) as f64,
+        t.elapsed_s(),
+        threads.max(1),
     );
     Ok(())
 }
@@ -331,6 +464,8 @@ fn dispatch(a: &Args) -> Result<()> {
     match a.subcommand.as_str() {
         "compress" => cmd_compress(a),
         "decompress" => cmd_decompress(a),
+        "stream" => cmd_stream(a),
+        "batch" => cmd_batch(a),
         "verify" => cmd_verify(a),
         "bench" => cmd_bench(a),
         "autotune" => cmd_autotune(a),

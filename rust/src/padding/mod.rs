@@ -65,6 +65,18 @@ impl PaddingPolicy {
         Some(Self { value, granularity })
     }
 
+    /// The policy as stored in containers: zero padding normalizes to
+    /// Global granularity (one scalar), matching what [`compute_scalars`]
+    /// produces — the decompressor indexes scalars by the stored policy, so
+    /// the two must agree.
+    pub fn normalized(&self) -> Self {
+        if self.value == PadValue::Zero {
+            Self::ZERO
+        } else {
+            *self
+        }
+    }
+
     pub fn name(&self) -> String {
         let v = match self.value {
             PadValue::Zero => "zero",
@@ -194,13 +206,7 @@ pub fn compute_scalars(field: &[f32], dims: &Dims, bs: usize, policy: PaddingPol
             out
         }
     };
-    // Zero policy normalizes to Global granularity (1 scalar)
-    let policy = if policy.value == PadValue::Zero {
-        PaddingPolicy::ZERO
-    } else {
-        policy
-    };
-    PadScalars { policy, scalars, ndim }
+    PadScalars { policy: policy.normalized(), scalars, ndim }
 }
 
 /// All policies of the paper's padding study (§IV/§V-I grid).

@@ -21,7 +21,6 @@ pub mod decode;
 pub mod psz;
 pub mod sz14;
 pub mod vectorized;
-pub mod vectorized2;
 
 use crate::blocks::{BlockShape, HaloBlock};
 use crate::padding::PadScalars;

@@ -1,53 +1,47 @@
 //! vecSZ — the lane-chunked, branchless dual-quantization backend.
 //!
 //! The paper's contribution (§III-C): with the RAW dependence removed by
-//! dual-quantization, the post-quantization loop is data-parallel. Here the
-//! inner row loops are written as fixed-width lane chunks over `[f32; W]`
-//! stack arrays with a branchless outlier select, which LLVM lowers to
-//! packed SIMD (ymm for W=8, zmm for W=16 under `target-cpu=native`) —
-//! the analog of the paper's hand-written AVX2/AVX-512 intrinsics, kept
-//! ISA-portable exactly the way §III-C argues for.
+//! dual-quantization, the post-quantization loop is data-parallel. The
+//! inner row loops are written as fixed-width lane chunks with a branchless
+//! outlier select, which LLVM lowers to packed SIMD (ymm for W=8, zmm for
+//! W=16 under `target-cpu=native`) — the analog of the paper's hand-written
+//! AVX2/AVX-512 intrinsics, kept ISA-portable exactly the way §III-C argues
+//! for.
 //!
-//! Boundary handling follows §III-C: out-of-field lanes are *computed
-//! anyway* (blocks are gathered with padding fill), so no per-element
-//! bounds branches survive in the hot loop.
+//! This is the *halo-free* formulation (the §Perf iteration, +20-60% over
+//! the original halo-copy path, which has since been removed): instead of
+//! copying every block into a `(bs+1)^d` halo buffer, the kernel works
+//! directly on a pre-quantized scratch block and *hoists* the border cases
+//! to row level (the paper's §III-C: boundary checks at vector-register
+//! granularity, not element granularity).
+//!
+//! Bit-exactness: border neighbours read the same padding scalars the halo
+//! planes would hold (replicating the halo fill precedence — later axes
+//! overwrite shared cells) and every prediction keeps `predict_halo`'s
+//! operation order `(w+n+u)-(nw+nu+wu)+nwu`, so no f32 re-association can
+//! diverge from `psz`. Enforced by the equivalence tests below (including
+//! edge granularity) and the cross-backend tests in `quant::tests`.
 
-use super::{check_batch, prep_halo_dq, CodesKind, DqConfig, PqBackend, OUTLIER_CODE};
-use crate::blocks::HaloBlock;
+use super::{check_batch, prequant, CodesKind, DqConfig, PqBackend, OUTLIER_CODE};
 use crate::padding::PadScalars;
 
 /// Lane-chunked dual-quant backend; `width` ∈ {4, 8, 16} is the paper's
 /// "vector length" knob (8 ≈ 256-bit, 16 ≈ 512-bit registers over f32).
-///
-/// `run` delegates to the halo-free implementation in [`super::vectorized2`]
-/// (the §Perf iteration: +20-60% by skipping the halo copy); set
-/// `halo: true` to use the original halo-buffer path — kept as the
-/// reference implementation and for the ablation bench.
 #[derive(Clone, Copy, Debug)]
 pub struct VecBackend {
     pub width: usize,
-    pub halo: bool,
 }
 
 impl VecBackend {
     pub fn new(width: usize) -> Self {
         assert!(matches!(width, 4 | 8 | 16), "supported lane widths: 4, 8, 16");
-        Self { width, halo: false }
-    }
-
-    /// The original halo-buffer implementation (ablation reference).
-    pub fn with_halo(width: usize) -> Self {
-        Self { width, halo: true }
+        Self { width }
     }
 }
 
 impl PqBackend for VecBackend {
     fn name(&self) -> String {
-        if self.halo {
-            format!("vec{}-halo", self.width)
-        } else {
-            format!("vec{}", self.width)
-        }
+        format!("vec{}", self.width)
     }
 
     fn kind(&self) -> CodesKind {
@@ -67,10 +61,6 @@ impl PqBackend for VecBackend {
         codes: &mut [u16],
         outv: &mut [f32],
     ) {
-        if !self.halo {
-            return super::vectorized2::VecBackend2::new(self.width)
-                .run(cfg, blocks, block_base, pads, codes, outv);
-        }
         match self.width {
             4 => run_w::<4>(cfg, blocks, block_base, pads, codes, outv),
             8 => run_w::<8>(cfg, blocks, block_base, pads, codes, outv),
@@ -80,125 +70,42 @@ impl PqBackend for VecBackend {
     }
 }
 
-/// Branchless post-quantization of one W-lane chunk.
-/// `cur[t]` is the pre-quantized value, `pred[t]` its Lorenzo prediction.
+/// Branch form of the outlier split for single border elements.
 #[inline(always)]
-fn emit_lane<const W: usize>(
-    cur: &[f32],
-    pred: &[f32; W],
-    radius_f: f32,
-    codes: &mut [u16],
-    outv: &mut [f32],
-) {
-    for t in 0..W {
-        let delta = cur[t] - pred[t];
-        // in-cap mask as 0.0/1.0 — select without a branch
-        let ic = (delta.abs() < radius_f) as u32 as f32;
-        codes[t] = (ic * (delta + radius_f)) as i32 as u16;
-        outv[t] = (1.0 - ic) * cur[t];
+fn emit1(dq: f32, pred: f32, radius_f: f32, code: &mut u16, ov: &mut f32) {
+    let delta = dq - pred;
+    if delta.abs() < radius_f {
+        *code = (delta + radius_f) as i32 as u16;
+        *ov = 0.0;
+    } else {
+        *code = OUTLIER_CODE;
+        *ov = dq;
     }
 }
 
-/// Scalar tail for the last `n < W` elements of a row.
-#[inline(always)]
-fn emit_tail(cur: &[f32], pred: impl Fn(usize) -> f32, radius_f: f32, codes: &mut [u16], outv: &mut [f32]) {
-    for t in 0..cur.len() {
-        let delta = cur[t] - pred(t);
-        if delta.abs() < radius_f {
-            codes[t] = (delta + radius_f) as i32 as u16;
-            outv[t] = 0.0;
-        } else {
-            codes[t] = OUTLIER_CODE;
-            outv[t] = cur[t];
+/// Lane loop over `cur[1..]` with a per-j prediction expression.
+macro_rules! lane_loop {
+    ($W:expr, $cur:expr, $codes:expr, $outv:expr, $radius_f:expr, |$j:ident| $pred:expr) => {{
+        let n = $cur.len();
+        let mut j = 1usize;
+        while j + $W <= n {
+            // fixed-width chunk: LLVM lowers to packed SIMD
+            for t in 0..$W {
+                let $j = j + t;
+                let dqv = $cur[$j];
+                let delta = dqv - $pred;
+                let ic = (delta.abs() < $radius_f) as u32 as f32;
+                $codes[$j] = (ic * (delta + $radius_f)) as i32 as u16;
+                $outv[$j] = (1.0 - ic) * dqv;
+            }
+            j += $W;
         }
-    }
-}
-
-/// 1D row: pred = W (west) — `west` is `cur` shifted one left in the halo.
-#[inline(always)]
-fn row_1d<const W: usize>(cur: &[f32], west: &[f32], radius_f: f32, codes: &mut [u16], outv: &mut [f32]) {
-    let n = cur.len();
-    let mut j = 0;
-    while j + W <= n {
-        let mut pred = [0.0f32; W];
-        for t in 0..W {
-            pred[t] = west[j + t];
+        while j < n {
+            let $j = j;
+            emit1($cur[$j], $pred, $radius_f, &mut $codes[$j], &mut $outv[$j]);
+            j += 1;
         }
-        emit_lane::<W>(&cur[j..j + W], &pred, radius_f, &mut codes[j..j + W], &mut outv[j..j + W]);
-        j += W;
-    }
-    emit_tail(&cur[j..], |t| west[j + t], radius_f, &mut codes[j..], &mut outv[j..]);
-}
-
-/// 2D row: pred = W + N − NW.
-#[inline(always)]
-fn row_2d<const W: usize>(
-    cur: &[f32],
-    west: &[f32],
-    north: &[f32],
-    northwest: &[f32],
-    radius_f: f32,
-    codes: &mut [u16],
-    outv: &mut [f32],
-) {
-    let n = cur.len();
-    let mut j = 0;
-    while j + W <= n {
-        let mut pred = [0.0f32; W];
-        for t in 0..W {
-            pred[t] = west[j + t] + north[j + t] - northwest[j + t];
-        }
-        emit_lane::<W>(&cur[j..j + W], &pred, radius_f, &mut codes[j..j + W], &mut outv[j..j + W]);
-        j += W;
-    }
-    emit_tail(
-        &cur[j..],
-        |t| west[j + t] + north[j + t] - northwest[j + t],
-        radius_f,
-        &mut codes[j..],
-        &mut outv[j..],
-    );
-}
-
-/// 3D row: pred = (W+N+U) − (NW+NU+WU) + NWU.
-#[inline(always)]
-#[allow(clippy::too_many_arguments)]
-fn row_3d<const W: usize>(
-    cur: &[f32],
-    west: &[f32],
-    north: &[f32],
-    northwest: &[f32],
-    up: &[f32],
-    west_up: &[f32],
-    north_up: &[f32],
-    northwest_up: &[f32],
-    radius_f: f32,
-    codes: &mut [u16],
-    outv: &mut [f32],
-) {
-    let n = cur.len();
-    let mut j = 0;
-    while j + W <= n {
-        let mut pred = [0.0f32; W];
-        for t in 0..W {
-            pred[t] = (west[j + t] + north[j + t] + up[j + t])
-                - (northwest[j + t] + north_up[j + t] + west_up[j + t])
-                + northwest_up[j + t];
-        }
-        emit_lane::<W>(&cur[j..j + W], &pred, radius_f, &mut codes[j..j + W], &mut outv[j..j + W]);
-        j += W;
-    }
-    emit_tail(
-        &cur[j..],
-        |t| {
-            (west[j + t] + north[j + t] + up[j + t])
-                - (northwest[j + t] + north_up[j + t] + west_up[j + t])
-                + northwest_up[j + t]
-        },
-        radius_f,
-        &mut codes[j..],
-        &mut outv[j..],
-    );
+    }};
 }
 
 fn run_w<const W: usize>(
@@ -212,62 +119,141 @@ fn run_w<const W: usize>(
     let shape = cfg.shape;
     let elems = shape.elems();
     let bs = shape.bs;
-    let side = shape.halo_side();
     let nb = check_batch(shape, blocks, codes, outv);
     let radius_f = cfg.radius as f32;
-    let mut halo = HaloBlock::new(shape);
+    let hie = cfg.half_inv_eb();
+    let mut dq = vec![0.0f32; elems];
 
     for b in 0..nb {
         let block = &blocks[b * elems..(b + 1) * elems];
-        prep_halo_dq(&mut halo, block, cfg, pads, block_base + b);
-        let buf = &halo.buf;
+        // pre-quantization pass (vectorizable elementwise)
+        for (d, &x) in dq.iter_mut().zip(block) {
+            *d = prequant(x, hie);
+        }
+        let gb = block_base + b;
         let ccodes = &mut codes[b * elems..(b + 1) * elems];
         let coutv = &mut outv[b * elems..(b + 1) * elems];
 
         match shape.ndim {
             1 => {
-                row_1d::<W>(&buf[1..=bs], &buf[0..bs], radius_f, ccodes, coutv);
+                let p0 = prequant(pads.edge_scalar(gb, 0), hie);
+                emit1(dq[0], p0, radius_f, &mut ccodes[0], &mut coutv[0]);
+                let cur = &dq[..];
+                lane_loop!(W, cur, ccodes, coutv, radius_f, |j| cur[j - 1]);
             }
             2 => {
+                // halo precedence: axis-1 planes overwrite shared cells,
+                // so row-0 body cells hold p0, the column (incl. corner) p1.
+                let p0 = prequant(pads.edge_scalar(gb, 0), hie);
+                let p1 = prequant(pads.edge_scalar(gb, 1), hie);
                 for i in 0..bs {
-                    let r = (i + 1) * side;
-                    let p = i * side;
-                    // split borrows: rows of the same halo buffer
-                    let (cur, west) = (&buf[r + 1..r + 1 + bs], &buf[r..r + bs]);
-                    let (north, northwest) = (&buf[p + 1..p + 1 + bs], &buf[p..p + bs]);
-                    row_2d::<W>(
-                        cur,
-                        west,
-                        north,
-                        northwest,
-                        radius_f,
-                        &mut ccodes[i * bs..(i + 1) * bs],
-                        &mut coutv[i * bs..(i + 1) * bs],
-                    );
+                    let row = i * bs;
+                    let (before, cur_on) = dq.split_at(row);
+                    let cur = &cur_on[..bs];
+                    let c = &mut ccodes[row..row + bs];
+                    let v = &mut coutv[row..row + bs];
+                    if i == 0 {
+                        // (0,0): w=p1 n=p0 nw=p1 ; (0,j): n=nw=p0
+                        emit1(cur[0], p1 + p0 - p1, radius_f, &mut c[0], &mut v[0]);
+                        lane_loop!(W, cur, c, v, radius_f, |j| cur[j - 1] + p0 - p0);
+                    } else {
+                        let north = &before[row - bs..];
+                        // (i,0): w=nw=p1
+                        emit1(cur[0], p1 + north[0] - p1, radius_f, &mut c[0], &mut v[0]);
+                        lane_loop!(W, cur, c, v, radius_f, |j| cur[j - 1] + north[j]
+                            - north[j - 1]);
+                    }
                 }
             }
             3 => {
-                let plane = side * side;
+                // halo precedence (fill order axis0 -> axis1 -> axis2):
+                //   cell with j-coord 0            -> p2
+                //   else cell with i-coord 0       -> p1
+                //   else cell with k-coord 0       -> p0
+                let p0 = prequant(pads.edge_scalar(gb, 0), hie);
+                let p1 = prequant(pads.edge_scalar(gb, 1), hie);
+                let p2 = prequant(pads.edge_scalar(gb, 2), hie);
+                let plane = bs * bs;
                 for k in 0..bs {
                     for i in 0..bs {
-                        let r = (k + 1) * plane + (i + 1) * side; // current row
-                        let rn = (k + 1) * plane + i * side; // north row
-                        let ru = k * plane + (i + 1) * side; // up row
-                        let rnu = k * plane + i * side; // north-up row
-                        let l = (k * bs + i) * bs;
-                        row_3d::<W>(
-                            &buf[r + 1..r + 1 + bs],
-                            &buf[r..r + bs],
-                            &buf[rn + 1..rn + 1 + bs],
-                            &buf[rn..rn + bs],
-                            &buf[ru + 1..ru + 1 + bs],
-                            &buf[ru..ru + bs],
-                            &buf[rnu + 1..rnu + 1 + bs],
-                            &buf[rnu..rnu + bs],
-                            radius_f,
-                            &mut ccodes[l..l + bs],
-                            &mut coutv[l..l + bs],
-                        );
+                        let row = k * plane + i * bs;
+                        let (before, cur_on) = dq.split_at(row);
+                        let cur = &cur_on[..bs];
+                        let c = &mut ccodes[row..row + bs];
+                        let v = &mut coutv[row..row + bs];
+                        // predict_halo order: (w+n+u)-(nw+nu+wu)+nwu
+                        match (k > 0, i > 0) {
+                            (true, true) => {
+                                let north = &before[row - bs..row - bs + bs];
+                                let up = &before[row - plane..row - plane + bs];
+                                let nu = &before[row - plane - bs..row - plane - bs + bs];
+                                // j=0: w=nw=wu=nwu=p2
+                                emit1(
+                                    cur[0],
+                                    (p2 + north[0] + up[0]) - (p2 + nu[0] + p2) + p2,
+                                    radius_f,
+                                    &mut c[0],
+                                    &mut v[0],
+                                );
+                                lane_loop!(W, cur, c, v, radius_f, |j| (cur[j - 1]
+                                    + north[j]
+                                    + up[j])
+                                    - (north[j - 1] + nu[j] + up[j - 1])
+                                    + nu[j - 1]);
+                            }
+                            (true, false) => {
+                                // i == 0: n,nw,nu,nwu live in the i=0 halo
+                                let up = &before[row - plane..row - plane + bs];
+                                // j=0: w=p2 n=p1 nw=p2 nu=p1 wu=p2 nwu=p2
+                                emit1(
+                                    cur[0],
+                                    (p2 + p1 + up[0]) - (p2 + p1 + p2) + p2,
+                                    radius_f,
+                                    &mut c[0],
+                                    &mut v[0],
+                                );
+                                // j>=1: n=nw=nu=nwu=p1
+                                lane_loop!(W, cur, c, v, radius_f, |j| (cur[j - 1] + p1 + up[j])
+                                    - (p1 + p1 + up[j - 1])
+                                    + p1);
+                            }
+                            (false, true) => {
+                                // k == 0: u,wu,nu,nwu live in the k=0 halo
+                                let north = &before[row - bs..row - bs + bs];
+                                // j=0: w=p2 nw=p2 u=p0 nu=p0 wu=p2 nwu=p2
+                                emit1(
+                                    cur[0],
+                                    (p2 + north[0] + p0) - (p2 + p0 + p2) + p2,
+                                    radius_f,
+                                    &mut c[0],
+                                    &mut v[0],
+                                );
+                                // j>=1: u=wu=nu=nwu=p0
+                                lane_loop!(W, cur, c, v, radius_f, |j| (cur[j - 1]
+                                    + north[j]
+                                    + p0)
+                                    - (north[j - 1] + p0 + p0)
+                                    + p0);
+                            }
+                            (false, false) => {
+                                // k == i == 0
+                                // j=0: w=p2 n=p1 u=p0 nw=p2 nu=p1 wu=p2 nwu=p2
+                                emit1(
+                                    cur[0],
+                                    (p2 + p1 + p0) - (p2 + p1 + p2) + p2,
+                                    radius_f,
+                                    &mut c[0],
+                                    &mut v[0],
+                                );
+                                // j>=1: n=nw=p1... careful: n = halo(1,0,j+1)
+                                // -> i-coord 0 -> p1; nw same -> p1;
+                                // u = halo(0,1,j+1) -> k-coord 0 -> p0; wu -> p0;
+                                // nu = halo(0,0,j+1) -> i-coord 0 -> p1; nwu -> p1
+                                lane_loop!(W, cur, c, v, radius_f, |j| (cur[j - 1] + p1 + p0)
+                                    - (p1 + p1 + p0)
+                                    + p1);
+                            }
+                        }
                     }
                 }
             }
@@ -280,10 +266,15 @@ fn run_w<const W: usize>(
 mod tests {
     use super::*;
     use crate::blocks::BlockShape;
-    use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
+    use crate::padding::{PadGranularity, PadScalars, PadValue, PaddingPolicy};
+    use crate::quant::psz::PszBackend;
+    use crate::quant::test_support::random_batch;
+    use crate::util::proptest::check;
+    use crate::util::prng::Pcg32;
 
-    // Cross-backend equivalence (the strongest test) lives in quant::tests;
-    // here: width-specific edge cases.
+    // Cross-backend equivalence over random batches also lives in
+    // quant::tests; here: the full psz/vec bit-exactness matrix (all dims,
+    // odd block sizes, edge-granularity scalars) plus width edge cases.
 
     fn zero_pads(ndim: usize) -> PadScalars {
         PadScalars {
@@ -291,6 +282,83 @@ mod tests {
             scalars: vec![0.0],
             ndim,
         }
+    }
+
+    #[test]
+    fn matches_psz_bit_exact_all_dims() {
+        let mut rng = Pcg32::seeded(77);
+        for &(ndim, bs) in &[(1usize, 64usize), (1, 7), (2, 8), (2, 16), (2, 5), (3, 8), (3, 4)] {
+            let shape = BlockShape::new(ndim, bs);
+            let cfg = DqConfig::new(1e-3, 512, shape);
+            for smooth in [true, false] {
+                let (blocks, pads) = random_batch(&mut rng, shape, 5, 4.0, smooth);
+                let mut c0 = vec![0u16; blocks.len()];
+                let mut v0 = vec![0.0f32; blocks.len()];
+                PszBackend.run(&cfg, &blocks, 0, &pads, &mut c0, &mut v0);
+                for w in [4usize, 8, 16] {
+                    let mut c1 = vec![0u16; blocks.len()];
+                    let mut v1 = vec![0.0f32; blocks.len()];
+                    VecBackend::new(w).run(&cfg, &blocks, 0, &pads, &mut c1, &mut v1);
+                    assert_eq!(c0, c1, "codes: ndim={ndim} bs={bs} w={w} smooth={smooth}");
+                    assert_eq!(v0, v1, "outv: ndim={ndim} bs={bs} w={w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_psz_with_distinct_edge_scalars() {
+        // per-axis edge scalars of very different magnitudes stress the
+        // f32-order-of-operations equivalence (no collapsed shortcuts!)
+        let mut rng = Pcg32::seeded(99);
+        for &(ndim, bs) in &[(1usize, 9usize), (2, 8), (3, 6)] {
+            let shape = BlockShape::new(ndim, bs);
+            let cfg = DqConfig::new(1e-2, 512, shape);
+            let (blocks, _) = random_batch(&mut rng, shape, 4, 2.0, true);
+            let nb = 4;
+            let scalars: Vec<f32> = (0..nb * ndim)
+                .map(|q| [1000.0f32, -0.37, 12.5][q % 3] * (1.0 + q as f32))
+                .collect();
+            let pads = PadScalars {
+                policy: PaddingPolicy::new(PadValue::Avg, PadGranularity::Edge),
+                scalars,
+                ndim,
+            };
+            let mut c0 = vec![0u16; blocks.len()];
+            let mut v0 = vec![0.0f32; blocks.len()];
+            PszBackend.run(&cfg, &blocks, 0, &pads, &mut c0, &mut v0);
+            for w in [8usize, 16] {
+                let mut c1 = vec![0u16; blocks.len()];
+                let mut v1 = vec![0.0f32; blocks.len()];
+                VecBackend::new(w).run(&cfg, &blocks, 0, &pads, &mut c1, &mut v1);
+                assert_eq!(c0, c1, "edge-pad codes: ndim={ndim} bs={bs} w={w}");
+                assert_eq!(v0, v1, "edge-pad outv: ndim={ndim} bs={bs} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_psz_equivalence() {
+        check("vec-equivalence", 50, |g| {
+            let ndim = 1 + g.rng.bounded(3) as usize;
+            let bs = *g.choose(&[3usize, 4, 8, 12]);
+            let shape = BlockShape::new(ndim, bs);
+            let cfg = DqConfig::new(*g.choose(&[1e-2f64, 1e-3]), 512, shape);
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let (blocks, pads) = random_batch(&mut rng, shape, 3, 6.0, g.rng.next_f32() < 0.5);
+            let mut c0 = vec![0u16; blocks.len()];
+            let mut v0 = vec![0.0f32; blocks.len()];
+            PszBackend.run(&cfg, &blocks, 0, &pads, &mut c0, &mut v0);
+            let w = *g.choose(&[4usize, 8, 16]);
+            let mut c1 = vec![0u16; blocks.len()];
+            let mut v1 = vec![0.0f32; blocks.len()];
+            VecBackend::new(w).run(&cfg, &blocks, 0, &pads, &mut c1, &mut v1);
+            if c0 == c1 && v0 == v1 {
+                Ok(())
+            } else {
+                Err(format!("diverged ndim={ndim} bs={bs} w={w}"))
+            }
+        });
     }
 
     #[test]

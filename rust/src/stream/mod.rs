@@ -1,0 +1,919 @@
+//! Streaming chunked-container engine — compress/decompress fields larger
+//! than RAM in bounded memory over `std::io::Read`/`Write`.
+//!
+//! The v2 container (see [`crate::format`]) frames a field as a sequence of
+//! independently-decodable **chunks**: contiguous slabs along the leading
+//! dimension, each a whole number of block rows, each carrying its own
+//! CODES / OUTLIER_POS / OUTLIER_VAL / PAD_SCALARS sections with per-section
+//! CRCs. Because row-major slabs are contiguous in memory, a chunk is
+//! exactly a sub-field and reuses the whole-field encode/decode cores
+//! ([`crate::compressor`]): same backends, same bitstreams, same error
+//! bound per element.
+//!
+//! * [`StreamCompressor`] accepts samples incrementally (`push`) and emits
+//!   one frame per completed slab. Memory is bounded by
+//!   `chunk_elems × in-flight window`, never the whole field, and never a
+//!   full-field codes buffer.
+//! * With `threads > 1` the compressor pipelines **across chunks** through
+//!   the [`ThreadPool`]: chunk N compresses on a worker while chunk N+1
+//!   gathers on the caller's thread (cuSZ-style coarse-grained
+//!   parallelism). Frames are re-ordered before writing, so the output
+//!   bytes are identical for every thread count.
+//! * [`StreamDecompressor`] reads frames one at a time;
+//!   [`decompress_stream`]/[`decompress_chunked`] decode batches of chunks
+//!   concurrently via [`ThreadPool::scatter_gather`] — byte-identical to
+//!   serial decode because slabs are assembled by offset.
+//!
+//! Streaming requires an **absolute** error bound: a range-relative bound
+//! needs the whole field before the first byte can be emitted.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+
+use crate::blocks::Dims;
+use crate::compressor::{decode_body, default_block_size, encode_body, Config, EbMode};
+use crate::coordinator::pool::ThreadPool;
+use crate::data::Field;
+use crate::error::{Result, VszError};
+use crate::format::{self, Frame, Header, Section, StreamHeader};
+use crate::quant::CodesKind;
+use crate::util::crc32;
+use crate::util::{bytes_to_f32, f32_as_bytes};
+
+/// Upper bound on a single section payload accepted from a stream (guards
+/// allocations against forged lengths).
+const MAX_SECTION_LEN: u64 = 1 << 30;
+
+/// Aggregate statistics of one streaming compression run.
+#[derive(Clone, Debug, Default)]
+pub struct StreamStats {
+    pub n_chunks: usize,
+    pub n_elements: usize,
+    pub n_outliers: usize,
+    pub raw_bytes: usize,
+    pub compressed_bytes: usize,
+    /// Summed P&Q stage seconds across chunks (worker wall time, not
+    /// end-to-end wall time when pipelined).
+    pub pq_seconds: f64,
+}
+
+impl StreamStats {
+    pub fn ratio(&self) -> f64 {
+        self.raw_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+}
+
+/// Pick a chunk span (leading-dim extent) targeting ~4 MiB of raw samples
+/// per chunk, rounded up to a whole number of block rows.
+pub fn default_chunk_span(dims: Dims, block_size: usize) -> usize {
+    let bs = if block_size == 0 { default_block_size(dims.ndim) } else { block_size };
+    let row_elems: usize = dims.shape[1] * dims.shape[2];
+    let target_rows = ((1usize << 20) / row_elems.max(1)).max(1); // 4 MiB / 4 B
+    let span = target_rows.div_ceil(bs) * bs;
+    span.max(bs)
+}
+
+/// Per-chunk numbers sent back from encode workers.
+struct ChunkOut {
+    n_outliers: usize,
+    pq_seconds: f64,
+}
+
+/// Encode one slab sub-field into a framed chunk (free function so the
+/// thread-pool job owns everything it needs).
+fn encode_chunk(index: u64, field: Field, cfg: Config) -> Result<(Vec<u8>, ChunkOut)> {
+    let backend = cfg.backend.instantiate();
+    let body = encode_body(&field, &cfg, backend.as_ref())?;
+    let mut frame = Vec::new();
+    format::write_chunk_frame(&mut frame, index, field.dims.shape[0] as u64, &body.sections);
+    Ok((frame, ChunkOut { n_outliers: body.n_outliers, pq_seconds: body.pq_seconds }))
+}
+
+type ChunkResult = (u64, Result<(Vec<u8>, ChunkOut)>);
+
+/// Incremental compressor writing a v2 chunked container to `W`.
+///
+/// Feed samples in row-major order with [`push`](Self::push) (any slice
+/// granularity), then call [`finish`](Self::finish). The compressor holds
+/// at most one gathering slab plus `threads` in-flight slabs.
+pub struct StreamCompressor<W: Write> {
+    out: W,
+    cfg: Config,
+    dims: Dims,
+    chunk_span: usize,
+    row_elems: usize,
+    total_elems: usize,
+    received: usize,
+    lead_done: usize,
+    buf: Vec<f32>,
+    chunk_index: u64,
+    stats: StreamStats,
+    // chunk-pipeline state (threads > 1)
+    pool: Option<ThreadPool>,
+    tx: Sender<ChunkResult>,
+    rx: Receiver<ChunkResult>,
+    window: usize,
+    in_flight: usize,
+    next_write: u64,
+    ready: BTreeMap<u64, Vec<u8>>,
+}
+
+impl<W: Write> StreamCompressor<W> {
+    /// Create a compressor and write the stream header.
+    ///
+    /// `chunk_span` is the leading-dim extent per chunk (rounded up to a
+    /// whole number of block rows); 0 picks [`default_chunk_span`]. The
+    /// error bound must be [`EbMode::Abs`].
+    pub fn new(mut out: W, dims: Dims, cfg: &Config, chunk_span: usize) -> Result<Self> {
+        let eb = match cfg.eb {
+            EbMode::Abs(e) if e > 0.0 && e.is_finite() => e,
+            EbMode::Abs(_) => return Err(VszError::config("invalid absolute error bound")),
+            EbMode::Rel(_) => {
+                return Err(VszError::config(
+                    "streaming requires an absolute error bound (--eb), not a relative one",
+                ))
+            }
+        };
+        if dims.is_empty() {
+            return Err(VszError::config("empty field"));
+        }
+        let bs = if cfg.block_size == 0 { default_block_size(dims.ndim) } else { cfg.block_size };
+        let mut cfg = *cfg;
+        cfg.block_size = bs;
+        let span = if chunk_span == 0 { default_chunk_span(dims, bs) } else { chunk_span };
+        let span = span.div_ceil(bs) * bs;
+        let codes_kind = match cfg.backend {
+            crate::compressor::BackendChoice::Sz14 => CodesKind::Sz14,
+            _ => CodesKind::DualQuant,
+        };
+        let header = StreamHeader {
+            header: Header {
+                dims,
+                codes_kind,
+                eb,
+                radius: cfg.radius,
+                block_size: bs as u32,
+                padding: cfg.padding.normalized(),
+            },
+            chunk_span: span as u64,
+        };
+        let hdr = format::write_stream_header(&header);
+        out.write_all(&hdr)?;
+
+        let threads = cfg.threads.max(1);
+        let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
+        let (tx, rx) = channel();
+        Ok(Self {
+            out,
+            cfg,
+            dims,
+            chunk_span: span,
+            row_elems: dims.shape[1] * dims.shape[2],
+            total_elems: dims.len(),
+            received: 0,
+            lead_done: 0,
+            buf: Vec::new(),
+            chunk_index: 0,
+            stats: StreamStats {
+                raw_bytes: dims.len() * 4,
+                n_elements: dims.len(),
+                compressed_bytes: hdr.len(),
+                ..StreamStats::default()
+            },
+            pool,
+            tx,
+            rx,
+            window: threads,
+            in_flight: 0,
+            next_write: 0,
+            ready: BTreeMap::new(),
+        })
+    }
+
+    fn next_chunk_extent(&self) -> usize {
+        (self.dims.shape[0] - self.lead_done).min(self.chunk_span)
+    }
+
+    fn chunk_dims(&self, extent: usize) -> Dims {
+        let mut shape = self.dims.shape;
+        shape[0] = extent;
+        Dims { shape, ndim: self.dims.ndim }
+    }
+
+    /// Write every frame that is next in line.
+    fn write_ready(&mut self) -> Result<()> {
+        while let Some(frame) = self.ready.remove(&self.next_write) {
+            self.out.write_all(&frame)?;
+            self.stats.compressed_bytes += frame.len();
+            self.next_write += 1;
+        }
+        Ok(())
+    }
+
+    /// Receive one worker result; `blocking` waits (with a generous
+    /// timeout so a crashed worker cannot deadlock the writer — the
+    /// compressor keeps a master `Sender`, so the channel never reports
+    /// disconnection on its own), otherwise returns Ok(false) when nothing
+    /// is pending.
+    fn recv_one(&mut self, blocking: bool) -> Result<bool> {
+        let msg = if blocking {
+            self.rx
+                .recv_timeout(std::time::Duration::from_secs(300))
+                .map_err(|_| VszError::runtime("stream worker stalled or died"))?
+        } else {
+            match self.rx.try_recv() {
+                Ok(m) => m,
+                Err(TryRecvError::Empty) => return Ok(false),
+                Err(TryRecvError::Disconnected) => {
+                    return Err(VszError::runtime("stream worker disconnected"))
+                }
+            }
+        };
+        self.in_flight -= 1;
+        let (index, res) = msg;
+        let (frame, info) = res?;
+        self.stats.n_outliers += info.n_outliers;
+        self.stats.pq_seconds += info.pq_seconds;
+        self.ready.insert(index, frame);
+        Ok(true)
+    }
+
+    fn emit_chunk(&mut self, data: Vec<f32>, extent: usize) -> Result<()> {
+        let index = self.chunk_index;
+        self.chunk_index += 1;
+        self.stats.n_chunks += 1;
+        let field = Field::new(format!("chunk{index}"), self.chunk_dims(extent), data);
+        if self.pool.is_some() {
+            // pipelined: bound in-flight chunks, then hand off to a worker
+            while self.in_flight >= self.window {
+                self.recv_one(true)?;
+                self.write_ready()?;
+            }
+            let mut job_cfg = self.cfg;
+            job_cfg.threads = 1; // parallelism is across chunks here
+            let tx = self.tx.clone();
+            self.pool.as_ref().unwrap().submit(move || {
+                let res = encode_chunk(index, field, job_cfg);
+                let _ = tx.send((index, res));
+            });
+            self.in_flight += 1;
+            // opportunistically drain finished workers
+            while self.recv_one(false)? {}
+            self.write_ready()?;
+        } else {
+            let (frame, info) = encode_chunk(index, field, self.cfg)?;
+            self.stats.n_outliers += info.n_outliers;
+            self.stats.pq_seconds += info.pq_seconds;
+            self.out.write_all(&frame)?;
+            self.stats.compressed_bytes += frame.len();
+            self.next_write += 1;
+        }
+        Ok(())
+    }
+
+    /// Feed the next samples (row-major order, any slice size).
+    pub fn push(&mut self, mut samples: &[f32]) -> Result<()> {
+        if self.received + samples.len() > self.total_elems {
+            return Err(VszError::config(format!(
+                "more samples than dims describe ({} > {})",
+                self.received + samples.len(),
+                self.total_elems
+            )));
+        }
+        self.received += samples.len();
+        while !samples.is_empty() {
+            let extent = self.next_chunk_extent();
+            let chunk_elems = extent * self.row_elems;
+            let need = chunk_elems - self.buf.len();
+            let take = need.min(samples.len());
+            if self.buf.is_empty() && take == chunk_elems {
+                // whole chunk available in the caller's slice: skip the copy
+                self.emit_chunk(samples[..take].to_vec(), extent)?;
+                self.lead_done += extent;
+            } else {
+                self.buf.extend_from_slice(&samples[..take]);
+                if self.buf.len() == chunk_elems {
+                    let data = std::mem::take(&mut self.buf);
+                    self.emit_chunk(data, extent)?;
+                    self.lead_done += extent;
+                }
+            }
+            samples = &samples[take..];
+        }
+        Ok(())
+    }
+
+    /// Drain in-flight chunks, write the trailer and return the writer plus
+    /// run statistics. Errors if fewer samples than `dims` describe were
+    /// pushed.
+    pub fn finish(mut self) -> Result<(W, StreamStats)> {
+        if self.received != self.total_elems {
+            return Err(VszError::config(format!(
+                "incomplete field: got {} of {} samples",
+                self.received, self.total_elems
+            )));
+        }
+        while self.in_flight > 0 {
+            self.recv_one(true)?;
+            self.write_ready()?;
+        }
+        self.write_ready()?;
+        debug_assert!(self.ready.is_empty());
+        debug_assert_eq!(self.next_write, self.chunk_index);
+        let mut trailer = Vec::new();
+        format::write_trailer(&mut trailer, self.chunk_index);
+        self.out.write_all(&trailer)?;
+        self.stats.compressed_bytes += trailer.len();
+        self.out.flush()?;
+        Ok((self.out, self.stats))
+    }
+}
+
+/// Compress a raw little-endian f32 stream (e.g. an `.f32` file) to a v2
+/// chunked container in bounded memory.
+pub fn compress_stream<R: Read, W: Write>(
+    mut input: R,
+    out: W,
+    dims: Dims,
+    cfg: &Config,
+    chunk_span: usize,
+) -> Result<StreamStats> {
+    let mut sc = StreamCompressor::new(out, dims, cfg, chunk_span)?;
+    let mut buf = vec![0u8; 1 << 20];
+    let mut carry = [0u8; 4];
+    let mut carry_len = 0usize;
+    loop {
+        let n = input.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        let mut bytes = &buf[..n];
+        if carry_len > 0 {
+            let need = 4 - carry_len;
+            let take = need.min(bytes.len());
+            carry[carry_len..carry_len + take].copy_from_slice(&bytes[..take]);
+            carry_len += take;
+            bytes = &bytes[take..];
+            if carry_len == 4 {
+                sc.push(&[f32::from_le_bytes(carry)])?;
+                carry_len = 0;
+            }
+        }
+        let whole = bytes.len() / 4 * 4;
+        if whole > 0 {
+            sc.push(&bytes_to_f32(&bytes[..whole]))?;
+        }
+        let rem = &bytes[whole..];
+        if !rem.is_empty() {
+            // `bytes` is only non-empty here when the carry was flushed (a
+            // partial top-up exhausts the read), so this never clobbers a
+            // pending carry
+            carry[..rem.len()].copy_from_slice(rem);
+            carry_len = rem.len();
+        }
+    }
+    if carry_len != 0 {
+        return Err(VszError::format("input length is not a multiple of 4 bytes"));
+    }
+    let (_, stats) = sc.finish()?;
+    Ok(stats)
+}
+
+/// Compress an in-memory field to a v2 chunked container.
+pub fn compress_chunked(
+    field: &Field,
+    cfg: &Config,
+    chunk_span: usize,
+) -> Result<(Vec<u8>, StreamStats)> {
+    let mut sc = StreamCompressor::new(Vec::new(), field.dims, cfg, chunk_span)?;
+    sc.push(&field.data)?;
+    sc.finish()
+}
+
+// ------------------------------------------------------------------ decode
+
+fn read_u8_io<R: Read>(r: &mut R) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+fn read_u32_io<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_uvarint_io<R: Read>(r: &mut R) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        if shift >= 64 {
+            return Err(VszError::format("varint overflow"));
+        }
+        let b = read_u8_io(r)?;
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+fn read_section_io<R: Read>(r: &mut R) -> Result<Section> {
+    let tag = read_u8_io(r)?;
+    let raw_len = read_uvarint_io(r)?;
+    let enc_len = read_uvarint_io(r)?;
+    if enc_len > MAX_SECTION_LEN {
+        return Err(VszError::format(format!("section {tag}: implausible length {enc_len}")));
+    }
+    let crc = read_u32_io(r)?;
+    let mut payload = vec![0u8; enc_len as usize];
+    r.read_exact(&mut payload)?;
+    if crc32(&payload) != crc {
+        return Err(VszError::Integrity(format!("section {tag}: crc mismatch")));
+    }
+    Ok(Section { tag, raw_len, payload })
+}
+
+fn read_frame_io<R: Read>(r: &mut R) -> Result<Frame> {
+    let marker = read_u8_io(r)?;
+    match marker {
+        format::CHUNK_TAG => {
+            let index = read_uvarint_io(r)?;
+            let lead_extent = read_uvarint_io(r)?;
+            if lead_extent == 0 {
+                return Err(VszError::format("empty chunk"));
+            }
+            let n_sections = read_u8_io(r)? as usize;
+            let mut sections = Vec::with_capacity(n_sections);
+            for _ in 0..n_sections {
+                sections.push(read_section_io(r)?);
+            }
+            Ok(Frame::Chunk { index, lead_extent, sections })
+        }
+        format::END_TAG => {
+            let n_chunks = read_uvarint_io(r)?;
+            let crc = read_u32_io(r)?;
+            if crc32(&n_chunks.to_le_bytes()) != crc {
+                return Err(VszError::Integrity("trailer crc mismatch".into()));
+            }
+            Ok(Frame::End { n_chunks })
+        }
+        other => Err(VszError::format(format!("unknown frame marker {other:#x}"))),
+    }
+}
+
+/// One decoded slab handed out by [`StreamDecompressor::next_chunk`].
+pub struct DecodedChunk {
+    pub index: u64,
+    /// Leading-dim offset of this slab within the full field.
+    pub lead_offset: usize,
+    /// Leading-dim extent of this slab.
+    pub lead_extent: usize,
+    pub data: Vec<f32>,
+}
+
+/// Incremental decoder for v2 chunked containers over any `Read`.
+pub struct StreamDecompressor<R: Read> {
+    input: R,
+    header: StreamHeader,
+    next_index: u64,
+    lead_done: usize,
+    finished: bool,
+}
+
+impl<R: Read> StreamDecompressor<R> {
+    pub fn new(mut input: R) -> Result<Self> {
+        let mut hdr = [0u8; format::STREAM_HEADER_LEN];
+        input.read_exact(&mut hdr)?;
+        let header = format::read_stream_header(&hdr)?;
+        Ok(Self { input, header, next_index: 0, lead_done: 0, finished: false })
+    }
+
+    pub fn header(&self) -> &StreamHeader {
+        &self.header
+    }
+
+    fn chunk_header(&self, extent: usize) -> Header {
+        let mut h = self.header.header;
+        h.dims.shape[0] = extent;
+        h
+    }
+
+    /// Validate one frame's geometry against the running position.
+    fn check_chunk(&self, index: u64, extent: u64) -> Result<usize> {
+        if index != self.next_index {
+            return Err(VszError::format(format!(
+                "chunk out of order: got {index}, expected {}",
+                self.next_index
+            )));
+        }
+        let remaining = self.header.header.dims.shape[0] - self.lead_done;
+        let extent = extent as usize;
+        if extent > remaining || (extent != self.header.chunk_span as usize && extent != remaining)
+        {
+            return Err(VszError::format(format!("bad chunk extent {extent}")));
+        }
+        Ok(extent)
+    }
+
+    /// Read and validate the next frame without decoding it, advancing the
+    /// running position. Returns `None` once the trailer has been consumed
+    /// and verified. Shared by [`Self::next_chunk`] and
+    /// [`decompress_stream`] so the trailer checks live in one place.
+    fn next_frame(&mut self) -> Result<Option<(usize, Vec<Section>)>> {
+        if self.finished {
+            return Ok(None);
+        }
+        match read_frame_io(&mut self.input)? {
+            Frame::Chunk { index, lead_extent, sections } => {
+                let extent = self.check_chunk(index, lead_extent)?;
+                self.lead_done += extent;
+                self.next_index += 1;
+                Ok(Some((extent, sections)))
+            }
+            Frame::End { n_chunks } => {
+                if n_chunks != self.next_index {
+                    return Err(VszError::format(format!(
+                        "trailer says {n_chunks} chunks, read {}",
+                        self.next_index
+                    )));
+                }
+                if self.lead_done != self.header.header.dims.shape[0] {
+                    return Err(VszError::format("stream ended before the field was complete"));
+                }
+                self.finished = true;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Decode the next chunk, or `None` after the trailer.
+    pub fn next_chunk(&mut self) -> Result<Option<DecodedChunk>> {
+        match self.next_frame()? {
+            None => Ok(None),
+            Some((extent, sections)) => {
+                let h = self.chunk_header(extent);
+                let data = decode_body(&h, &sections, 1)?;
+                Ok(Some(DecodedChunk {
+                    index: self.next_index - 1,
+                    lead_offset: self.lead_done - extent,
+                    lead_extent: extent,
+                    data,
+                }))
+            }
+        }
+    }
+}
+
+/// Decode a batch of owned chunk frames, in parallel when `pool` is given.
+fn decode_batch(
+    header: &StreamHeader,
+    batch: Vec<(usize, Vec<Section>)>,
+    pool: Option<&ThreadPool>,
+) -> Result<Vec<Vec<f32>>> {
+    let base = header.header;
+    let decode_one = move |extent: usize, sections: &[Section]| -> Result<Vec<f32>> {
+        let mut h = base;
+        h.dims.shape[0] = extent;
+        decode_body(&h, sections, 1)
+    };
+    match pool {
+        Some(pool) if batch.len() > 1 => {
+            let shared = Arc::new(batch);
+            let shared2 = Arc::clone(&shared);
+            let results = pool.scatter_gather(shared.len(), move |i| {
+                let (extent, sections) = &shared2[i];
+                decode_one(*extent, sections)
+            });
+            results.into_iter().collect()
+        }
+        _ => batch
+            .iter()
+            .map(|(extent, sections)| decode_one(*extent, sections))
+            .collect(),
+    }
+}
+
+/// Decompress a v2 chunked container from `input`, writing raw little-endian
+/// f32 bytes to `out` in field order. Chunks are decoded `threads` at a time
+/// via the pool; memory stays bounded by the batch, never the whole field.
+/// Returns the stream header.
+pub fn decompress_stream<R: Read, W: Write>(
+    input: R,
+    mut out: W,
+    threads: usize,
+) -> Result<StreamHeader> {
+    let mut dec = StreamDecompressor::new(input)?;
+    let header = *dec.header();
+    let threads = threads.max(1);
+    let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
+    loop {
+        // gather up to `threads` frames, then decode them concurrently
+        let mut batch: Vec<(usize, Vec<Section>)> = Vec::with_capacity(threads);
+        while batch.len() < threads {
+            match dec.next_frame()? {
+                Some(frame) => batch.push(frame),
+                None => break,
+            }
+        }
+        if batch.is_empty() {
+            break;
+        }
+        for data in decode_batch(&header, batch, pool.as_ref())? {
+            out.write_all(f32_as_bytes(&data))?;
+        }
+    }
+    out.flush()?;
+    Ok(header)
+}
+
+/// Decompress an in-memory v2 chunked container, decoding chunks
+/// concurrently (`threads`) — byte-identical to serial decode because
+/// slabs are assembled by offset.
+pub fn decompress_chunked(bytes: &[u8], threads: usize) -> Result<Field> {
+    if bytes.len() < format::STREAM_HEADER_LEN {
+        return Err(VszError::format("truncated stream header"));
+    }
+    let header = format::read_stream_header(&bytes[..format::STREAM_HEADER_LEN])?;
+    let dims = header.header.dims;
+    let span = header.chunk_span as usize;
+
+    // index all frames up front (cheap: payloads are borrowed then owned
+    // per section; the heavy work is the decode below)
+    let mut c = crate::bitio::Cursor::new(&bytes[format::STREAM_HEADER_LEN..]);
+    let mut chunks: Vec<(usize, Vec<Section>)> = Vec::new();
+    let mut lead_done = 0usize;
+    loop {
+        match format::read_frame(&mut c)? {
+            Frame::Chunk { index, lead_extent, sections } => {
+                if index as usize != chunks.len() {
+                    return Err(VszError::format(format!(
+                        "chunk out of order: got {index}, expected {}",
+                        chunks.len()
+                    )));
+                }
+                let remaining = dims.shape[0] - lead_done;
+                let extent = lead_extent as usize;
+                if extent > remaining || (extent != span && extent != remaining) {
+                    return Err(VszError::format(format!("bad chunk extent {extent}")));
+                }
+                lead_done += extent;
+                chunks.push((extent, sections));
+            }
+            Frame::End { n_chunks } => {
+                if n_chunks as usize != chunks.len() {
+                    return Err(VszError::format(format!(
+                        "trailer says {n_chunks} chunks, read {}",
+                        chunks.len()
+                    )));
+                }
+                break;
+            }
+        }
+    }
+    if c.remaining() != 0 {
+        return Err(VszError::format("trailing garbage after stream trailer"));
+    }
+    if lead_done != dims.shape[0] {
+        return Err(VszError::format("stream ended before the field was complete"));
+    }
+
+    let threads = threads.max(1);
+    let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
+    let slabs = decode_batch(&header, chunks, pool.as_ref())?;
+    let row_elems = dims.shape[1] * dims.shape[2];
+    let mut data = Vec::with_capacity(dims.len());
+    for slab in &slabs {
+        data.extend_from_slice(slab);
+    }
+    debug_assert_eq!(data.len(), dims.shape[0] * row_elems);
+    Ok(Field::new("decompressed", dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{compress, decompress, BackendChoice, Config};
+    use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
+    use crate::util::prng::Pcg32;
+
+    fn smooth_field(dims: Dims, seed: u64) -> Field {
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = 1.0f32;
+        let data: Vec<f32> = (0..dims.len())
+            .map(|_| {
+                x += (rng.next_f32() - 0.5) * 0.1;
+                x
+            })
+            .collect();
+        Field::new("t", dims, data)
+    }
+
+    fn max_err(a: &[f32], b: &[f32]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        a.iter().zip(b).map(|(x, y)| (*x as f64 - *y as f64).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn chunked_roundtrip_all_dims_within_bound() {
+        for dims in [Dims::d1(3000), Dims::d2(70, 40), Dims::d3(40, 12, 10)] {
+            let field = smooth_field(dims, 41);
+            let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+            let bs = default_block_size(dims.ndim);
+            let (bytes, stats) = compress_chunked(&field, &cfg, bs).unwrap();
+            assert!(stats.n_chunks >= 4, "want >=4 chunks, got {} for {dims:?}", stats.n_chunks);
+            let rec = decompress_chunked(&bytes, 1).unwrap();
+            assert_eq!(rec.dims, dims);
+            assert!(max_err(&field.data, &rec.data) <= 1e-3 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn chunk_parallel_decode_is_byte_identical_to_serial() {
+        let field = smooth_field(Dims::d2(96, 50), 43);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 16).unwrap();
+        assert!(stats.n_chunks >= 4);
+        let serial = decompress_chunked(&bytes, 1).unwrap();
+        let parallel = decompress_chunked(&bytes, 4).unwrap();
+        assert_eq!(serial.data, parallel.data, "thread count changed decode output");
+        assert!(max_err(&field.data, &serial.data) <= 1e-3 + 1e-6);
+    }
+
+    #[test]
+    fn pipelined_compress_bytes_match_serial() {
+        let field = smooth_field(Dims::d2(80, 64), 47);
+        let c1 = Config { eb: EbMode::Abs(1e-3), threads: 1, ..Config::default() };
+        let c4 = Config { eb: EbMode::Abs(1e-3), threads: 4, ..Config::default() };
+        let (b1, s1) = compress_chunked(&field, &c1, 16).unwrap();
+        let (b4, s4) = compress_chunked(&field, &c4, 16).unwrap();
+        assert_eq!(s1.n_chunks, s4.n_chunks);
+        assert_eq!(b1, b4, "chunk pipelining must not change the bitstream");
+    }
+
+    #[test]
+    fn push_granularity_does_not_change_bytes() {
+        // stream the field one awkwardly-sized slice at a time
+        let field = smooth_field(Dims::d2(48, 30), 53);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (whole, _) = compress_chunked(&field, &cfg, 16).unwrap();
+
+        let mut sc = StreamCompressor::new(Vec::new(), field.dims, &cfg, 16).unwrap();
+        let mut at = 0usize;
+        let mut step = 7usize;
+        while at < field.data.len() {
+            let take = step.min(field.data.len() - at);
+            sc.push(&field.data[at..at + take]).unwrap();
+            at += take;
+            step = step * 2 + 1;
+        }
+        let (drip, _) = sc.finish().unwrap();
+        assert_eq!(whole, drip);
+    }
+
+    #[test]
+    fn io_streaming_roundtrip() {
+        // full Read -> compress -> Read -> decompress -> bytes pipeline
+        let field = smooth_field(Dims::d2(64, 32), 59);
+        let cfg = Config { eb: EbMode::Abs(1e-3), threads: 2, ..Config::default() };
+        let raw: Vec<u8> = f32_as_bytes(&field.data).to_vec();
+        let mut container = Vec::new();
+        let stats =
+            compress_stream(&raw[..], &mut container, field.dims, &cfg, 16).unwrap();
+        assert!(stats.n_chunks >= 4);
+        assert_eq!(stats.n_elements, field.data.len());
+
+        let mut out = Vec::new();
+        let header = decompress_stream(&container[..], &mut out, 3).unwrap();
+        assert_eq!(header.header.dims, field.dims);
+        let rec = bytes_to_f32(&out);
+        assert!(max_err(&field.data, &rec) <= 1e-3 + 1e-6);
+    }
+
+    #[test]
+    fn incremental_decoder_walks_chunks_in_order() {
+        let field = smooth_field(Dims::d2(80, 16), 61);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 16).unwrap();
+        let mut dec = StreamDecompressor::new(&bytes[..]).unwrap();
+        let mut n = 0usize;
+        let mut offset = 0usize;
+        while let Some(chunk) = dec.next_chunk().unwrap() {
+            assert_eq!(chunk.index as usize, n);
+            assert_eq!(chunk.lead_offset, offset);
+            offset += chunk.lead_extent;
+            n += 1;
+        }
+        assert_eq!(n, stats.n_chunks);
+        assert_eq!(offset, 80);
+        // after the trailer the decoder keeps returning None
+        assert!(dec.next_chunk().unwrap().is_none());
+    }
+
+    #[test]
+    fn generic_decompress_dispatches_on_magic() {
+        let field = smooth_field(Dims::d2(48, 20), 67);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (v2, _) = compress_chunked(&field, &cfg, 16).unwrap();
+        let rec = decompress(&v2, 2).unwrap(); // compressor::decompress
+        assert!(max_err(&field.data, &rec.data) <= 1e-3 + 1e-6);
+        // and v1 still works through the same entry point
+        let (v1, _) = compress(&field, &cfg).unwrap();
+        let rec1 = decompress(&v1, 2).unwrap();
+        assert_eq!(rec1.dims, field.dims);
+    }
+
+    #[test]
+    fn rel_eb_rejected_for_streaming() {
+        let cfg = Config { eb: EbMode::Rel(1e-3), ..Config::default() };
+        let err = StreamCompressor::new(Vec::new(), Dims::d1(100), &cfg, 0).unwrap_err();
+        assert!(err.to_string().contains("absolute"), "{err}");
+    }
+
+    #[test]
+    fn wrong_sample_counts_are_rejected() {
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        // too many
+        let mut sc = StreamCompressor::new(Vec::new(), Dims::d1(256), &cfg, 0).unwrap();
+        assert!(sc.push(&vec![0.0f32; 300]).is_err());
+        // too few
+        let mut sc = StreamCompressor::new(Vec::new(), Dims::d1(512), &cfg, 256).unwrap();
+        sc.push(&vec![0.0f32; 100]).unwrap();
+        assert!(sc.finish().is_err());
+    }
+
+    #[test]
+    fn sz14_backend_streams_too() {
+        let field = smooth_field(Dims::d2(64, 24), 71);
+        let cfg = Config {
+            eb: EbMode::Abs(1e-3),
+            backend: BackendChoice::Sz14,
+            ..Config::default()
+        };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 16).unwrap();
+        assert!(stats.n_chunks >= 4);
+        let rec = decompress_chunked(&bytes, 2).unwrap();
+        assert!(max_err(&field.data, &rec.data) <= 1e-3 + 1e-6);
+    }
+
+    #[test]
+    fn padding_policies_stream_roundtrip() {
+        let field = smooth_field(Dims::d2(64, 24), 73);
+        for (value, gran) in [
+            (PadValue::Avg, PadGranularity::Global),
+            (PadValue::Avg, PadGranularity::Block),
+            (PadValue::Min, PadGranularity::Edge),
+        ] {
+            let cfg = Config {
+                eb: EbMode::Abs(1e-3),
+                padding: PaddingPolicy::new(value, gran),
+                ..Config::default()
+            };
+            let (bytes, _) = compress_chunked(&field, &cfg, 16).unwrap();
+            let rec = decompress_chunked(&bytes, 2).unwrap();
+            assert!(
+                max_err(&field.data, &rec.data) <= 1e-3 + 1e-6,
+                "padding {value:?}/{gran:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunked_corruption_and_truncation_rejected() {
+        let field = smooth_field(Dims::d2(64, 24), 79);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, _) = compress_chunked(&field, &cfg, 16).unwrap();
+        assert!(decompress_chunked(&bytes, 1).is_ok());
+        // flip a byte every 97 positions across the whole container
+        for at in (4..bytes.len()).step_by(97) {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x5A;
+            match decompress_chunked(&bad, 1) {
+                Err(_) => {}
+                Ok(rec) => assert_eq!(
+                    rec.data.len(),
+                    field.data.len(),
+                    "flip at {at} silently changed the field shape"
+                ),
+            }
+        }
+        // truncations: header, mid-chunk, before trailer, inside trailer
+        for cut in [0, 10, format::STREAM_HEADER_LEN, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decompress_chunked(&bytes[..cut], 1).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn default_chunk_span_is_block_aligned() {
+        for dims in [Dims::d1(1 << 22), Dims::d2(4000, 500), Dims::d3(300, 100, 100)] {
+            let bs = default_block_size(dims.ndim);
+            let span = default_chunk_span(dims, 0);
+            assert_eq!(span % bs, 0);
+            assert!(span >= bs);
+        }
+    }
+}

@@ -29,6 +29,41 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     !crc
 }
 
+/// A `Send + Sync` wrapper around a raw mutable pointer, for scoped
+/// parallel loops whose workers write **disjoint** regions of one buffer.
+///
+/// The borrow checker cannot express "these `&mut` regions are disjoint by
+/// an index computation", so the hot loops in `compressor` (and anything
+/// else that partitions one output buffer across workers) smuggle the base
+/// pointer into the worker closures through this wrapper and re-derive
+/// their slice with `std::slice::from_raw_parts_mut`.
+///
+/// # Safety contract (callers must uphold all of these)
+/// * Every region derived from the pointer is **disjoint** between
+///   concurrently running workers (no element is written by two workers,
+///   and nobody reads a region another worker writes).
+/// * All derived regions stay inside the allocation the pointer was taken
+///   from.
+/// * The underlying buffer outlives every worker (guaranteed when workers
+///   run inside `std::thread::scope` / `parallel_chunks_mut`, which join
+///   before the enclosing frame returns).
+pub struct SendPtr<T>(*mut T);
+
+// SAFETY: sending/sharing the pointer itself is safe; all dereferences are
+// governed by the disjointness contract documented above.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> Self {
+        Self(p)
+    }
+
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
 /// Human-readable byte size ("12.3 MiB").
 pub fn human_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
