@@ -4,8 +4,9 @@
 //! decode. These locate the non-P&Q bottlenecks that Table III's Amdahl
 //! analysis attributes the residual runtime to.
 
-use vecsz::bench::{bench, BenchOpts};
+use vecsz::bench::{bench, BenchOpts, BenchStats};
 use vecsz::blocks::{gather_block, BlockShape, Dims, HaloBlock};
+use vecsz::coordinator::pool::ThreadPool;
 use vecsz::huffman;
 use vecsz::lossless;
 use vecsz::padding::{PadGranularity, PadScalars, PadValue, PaddingPolicy};
@@ -14,6 +15,35 @@ use vecsz::quant::psz::PszBackend;
 use vecsz::quant::vectorized::VecBackend;
 use vecsz::quant::{DqConfig, PqBackend};
 use vecsz::util::prng::Pcg32;
+
+/// One machine-readable result row for `BENCH_entropy.json`.
+fn json_row(op: &str, format: &str, threads: usize, s: &BenchStats) -> String {
+    format!(
+        "{{\"op\":\"{op}\",\"format\":\"{format}\",\"threads\":{threads},\
+         \"mb_per_s\":{:.1},\"gb_per_s\":{:.3},\"mean_s\":{:.6},\"min_s\":{:.6},\
+         \"samples\":{}}}",
+        s.mean_mb_s(),
+        s.mean_mb_s() / 1e3,
+        s.mean_s,
+        s.min_s,
+        s.samples
+    )
+}
+
+/// Emit the entropy-stage perf trajectory (tracked across PRs; GB/s over
+/// the 4M-symbol skewed quant-code workload at 1/2/4/8 threads).
+fn write_entropy_json(n_symbols: usize, rows: &[String]) {
+    let doc = format!(
+        "{{\n  \"workload\": \"skewed-quant-codes\",\n  \"n_symbols\": {n_symbols},\n  \
+         \"alphabet\": 1024,\n  \"payload_bytes_per_run\": {},\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        n_symbols * 2,
+        rows.join(",\n    ")
+    );
+    match std::fs::write("BENCH_entropy.json", &doc) {
+        Ok(()) => println!("    (wrote BENCH_entropy.json)"),
+        Err(e) => eprintln!("    (could not write BENCH_entropy.json: {e})"),
+    }
+}
 
 fn main() {
     let opts = BenchOpts::from_env();
@@ -34,17 +64,38 @@ fn main() {
         })
         .collect();
 
-    let s = bench("huffman encode (4M skewed codes)", n * 2, opts, || {
+    let s = bench("huffman encode legacy (4M skewed codes)", n * 2, opts, || {
         std::hint::black_box(huffman::compress_u16(&codes, 1024));
     });
     println!("{}", s.row());
+    let mut entropy_rows: Vec<String> = Vec::new();
+    entropy_rows.push(json_row("encode", "legacy", 1, &s));
 
     let blob = huffman::compress_u16(&codes, 1024);
     println!("    (compressed to {:.2} bits/code)", blob.len() as f64 * 8.0 / n as f64);
-    let s = bench("huffman decode", n * 2, opts, || {
+    let s = bench("huffman decode legacy", n * 2, opts, || {
         std::hint::black_box(huffman::decompress_u16(&blob).unwrap());
     });
     println!("{}", s.row());
+    entropy_rows.push(json_row("decode", "legacy", 1, &s));
+
+    // chunked HUF2 entropy stage across thread counts (the perf-trajectory
+    // numbers tracked in BENCH_entropy.json)
+    let huf2 = huffman::compress_u16_chunked(&codes, 1024, None);
+    for threads in [1usize, 2, 4, 8] {
+        let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
+        let s = bench(&format!("huffman encode HUF2 {threads}T"), n * 2, opts, || {
+            std::hint::black_box(huffman::compress_u16_chunked(&codes, 1024, pool.as_ref()));
+        });
+        println!("{}", s.row());
+        entropy_rows.push(json_row("encode", "huf2", threads, &s));
+        let s = bench(&format!("huffman decode HUF2 {threads}T"), n * 2, opts, || {
+            std::hint::black_box(huffman::decompress_u16_pooled(&huf2, pool.as_ref()).unwrap());
+        });
+        println!("{}", s.row());
+        entropy_rows.push(json_row("decode", "huf2", threads, &s));
+    }
+    write_entropy_json(n, &entropy_rows);
 
     // outlier-value-like f32 stream for the lossless pass
     let vals: Vec<f32> = (0..500_000).map(|_| 270.0 + rng.next_f32() * 2.0).collect();

@@ -73,8 +73,22 @@ impl<'a> BitReader<'a> {
         Self { data, pos: 0, acc: 0, nbits: 0 }
     }
 
+    /// Top up the accumulator. Hot path loads one little-endian u64 and
+    /// advances by however many whole bytes fit above the pending bits
+    /// (§Perf: the byte-at-a-time loop was the Huffman decode bottleneck).
+    /// Bits of the partially-consumed boundary byte are deposited twice
+    /// across successive refills; the OR is idempotent because they are the
+    /// same stream bits at the same accumulator positions.
     #[inline]
     fn refill(&mut self) {
+        if self.pos + 8 <= self.data.len() {
+            let w = u64::from_le_bytes(self.data[self.pos..self.pos + 8].try_into().unwrap());
+            self.acc |= w << self.nbits;
+            let take = (64 - self.nbits) >> 3; // whole bytes that fit
+            self.pos += take as usize;
+            self.nbits += take * 8;
+            return;
+        }
         while self.nbits <= 56 && self.pos < self.data.len() {
             self.acc |= (self.data[self.pos] as u64) << self.nbits;
             self.pos += 1;
@@ -270,6 +284,29 @@ mod tests {
             r.consume(5);
             assert_eq!(p, i % 32);
         }
+    }
+
+    #[test]
+    fn wide_peek_partial_consume_across_word_refills() {
+        // the two-symbol Huffman decode pattern: peek a wide window, then
+        // consume fewer bits, repeatedly crossing the 8-byte fast-refill
+        // boundary with pending stale bits in the accumulator
+        let mut w = BitWriter::new();
+        let mut items = Vec::new();
+        for i in 0..5000u64 {
+            let width = 1 + (i % 30) as u32;
+            let v = i.wrapping_mul(0x9E37_79B9_7F4A_7C15) & ((1u64 << width) - 1);
+            w.put(v, width);
+            items.push((v, width));
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, width) in &items {
+            let p = r.peek(30);
+            assert_eq!(p & ((1u64 << width) - 1), v);
+            r.consume(width);
+        }
+        assert!(r.remaining_bits() < 8, "only zero padding may remain");
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //! the per-run statistics the benchmarks report.
 //!
 //! `compress` runs the full SZ pipeline:
-//! gather blocks → P&Q backend (dual-quant or SZ-1.4) → Huffman codes →
-//! outlier streams (delta-varint positions + lossless values) → container.
+//! gather blocks → P&Q backend (dual-quant or SZ-1.4) → chunked HUF2
+//! Huffman codes → outlier streams (delta-varint positions + lossless
+//! values) → container. With `threads > 1` the entropy tail is parallel
+//! too: Huffman chunks fan out across the pool while the three lossless
+//! streams compress on scoped helper threads (see [`encode_body`]).
 //!
 //! `decompress` reverses it; the block scan is sequential *within* a block
 //! (the cascading Lorenzo reverse) and parallel *across* blocks.
@@ -15,7 +18,7 @@
 
 use crate::bitio::{get_uvarint, put_uvarint};
 use crate::blocks::{gather_block, scatter_block, BlockShape, HaloBlock};
-use crate::coordinator::pool::parallel_chunks_mut;
+use crate::coordinator::pool::{parallel_chunks_mut, ThreadPool};
 use crate::data::Field;
 use crate::error::{Result, VszError};
 use crate::format::{self, tag, Header, Section};
@@ -223,12 +226,31 @@ pub(crate) struct EncodedBody {
     pub profile: StageProfile,
 }
 
+/// Auxiliary-stream byte floor below which the entropy stage runs serial:
+/// spawning the lossless helper threads costs more than the work itself.
+const ENTROPY_OVERLAP_MIN: usize = 1 << 12;
+
 /// Encode one field (or chunk sub-field) into CODES / OUTLIER_POS /
 /// OUTLIER_VAL / PAD_SCALARS sections.
+///
+/// The entropy tail is parallel two ways, both opt-in so a single-threaded
+/// configuration spawns no threads at all: with `entropy_threads > 1` the
+/// quant codes fan out across a pool through the chunked HUF2 encoder
+/// (the pool is only built when the stream is long enough to split), and
+/// with `overlap_aux` the three independent `lossless` streams (outlier
+/// positions, outlier values, pad scalars) compress on scoped helper
+/// threads concurrently with the Huffman pass — skipped when they are
+/// tiny and the spawn overhead would dominate. The streaming engine sets
+/// `entropy_threads = 1` but `overlap_aux = true` for its pipelined chunk
+/// jobs (its parallelism axis is across chunks). Neither axis changes the
+/// output bytes: every payload is a pure function of its input, and HUF2
+/// chunk geometry is worker-count independent.
 pub(crate) fn encode_body(
     field: &Field,
     cfg: &Config,
     backend: &dyn PqBackend,
+    entropy_threads: usize,
+    overlap_aux: bool,
 ) -> Result<EncodedBody> {
     if field.data.is_empty() {
         return Err(VszError::config("empty field"));
@@ -267,13 +289,42 @@ pub(crate) fn encode_body(
     }
     profile.add("outlier-scan", t.lap_s());
 
-    // --- entropy coding ---
-    let codes_payload = huffman::compress_u16(&codes, 2 * cfg.radius as usize);
-    profile.add("huffman", t.lap_s());
-    let pos_payload = lossless::compress(&pos_bytes);
-    let val_payload = lossless::compress(f32_as_bytes(&out_values));
-    let pad_payload = lossless::compress(f32_as_bytes(&pads.scalars));
-    profile.add("lossless", t.lap_s());
+    // --- entropy coding: chunked Huffman overlapped with the three
+    // independent lossless streams ---
+    let alphabet = 2 * cfg.radius as usize;
+    let val_bytes = f32_as_bytes(&out_values);
+    let pad_bytes = f32_as_bytes(&pads.scalars);
+    // only build a pool when the code stream actually splits into >1 chunk
+    let pool = if entropy_threads > 1 && codes.len() > huffman::CHUNK_SYMS {
+        Some(ThreadPool::new(entropy_threads))
+    } else {
+        None
+    };
+    let pool = pool.as_ref();
+    let overlap =
+        overlap_aux && pos_bytes.len() + val_bytes.len() + pad_bytes.len() >= ENTROPY_OVERLAP_MIN;
+    let (codes_payload, pos_payload, val_payload, pad_payload) = if overlap {
+        std::thread::scope(|s| {
+            let h_pos = s.spawn(|| lossless::compress(&pos_bytes));
+            let h_val = s.spawn(|| lossless::compress(val_bytes));
+            let h_pad = s.spawn(|| lossless::compress(pad_bytes));
+            let codes_payload = huffman::compress_u16_chunked(&codes, alphabet, pool);
+            (
+                codes_payload,
+                h_pos.join().expect("lossless worker panicked"),
+                h_val.join().expect("lossless worker panicked"),
+                h_pad.join().expect("lossless worker panicked"),
+            )
+        })
+    } else {
+        (
+            huffman::compress_u16_chunked(&codes, alphabet, pool),
+            lossless::compress(&pos_bytes),
+            lossless::compress(val_bytes),
+            lossless::compress(pad_bytes),
+        )
+    };
+    profile.add("entropy", t.lap_s());
 
     let sections = vec![
         Section { tag: tag::CODES, raw_len: (codes.len() * 2) as u64, payload: codes_payload },
@@ -303,7 +354,7 @@ pub(crate) fn encode_body(
 /// Compress one field to a `.vsz` (v1) container.
 pub fn compress(field: &Field, cfg: &Config) -> Result<(Vec<u8>, CompressStats)> {
     let backend = cfg.backend.instantiate();
-    let mut body = encode_body(field, cfg, backend.as_ref())?;
+    let mut body = encode_body(field, cfg, backend.as_ref(), cfg.threads, cfg.threads > 1)?;
 
     let mut t = Timer::start();
     let header = Header {
@@ -357,8 +408,16 @@ pub(crate) fn decode_body(header: &Header, sections: &[Section], threads: usize)
         .ok_or_else(|| VszError::format("block geometry overflow"))?;
     let dq = DqConfig::new(header.eb, header.radius, shape);
 
-    // sections
-    let codes = huffman::decompress_u16(&format::find_section(sections, tag::CODES)?.payload)?;
+    // sections; a HUF2-framed CODES payload decodes chunk-parallel on the
+    // pool, while legacy unframed or single-chunk payloads decode serially
+    // on this thread (no pool spawned for them; `need` is the exact code
+    // count, so this mirrors the encoder's fan-out gate)
+    let codes = {
+        let payload = &format::find_section(sections, tag::CODES)?.payload;
+        let splits = payload.starts_with(&huffman::HUF2_MAGIC) && need > huffman::CHUNK_SYMS;
+        let pool = if threads > 1 && splits { Some(ThreadPool::new(threads)) } else { None };
+        huffman::decompress_u16_pooled(payload, pool.as_ref())?
+    };
     if codes.len() != need {
         return Err(VszError::format("codes length mismatch"));
     }
@@ -631,6 +690,29 @@ mod tests {
         }
         assert_eq!(pos, bytes.len(), "landmark walk must consume the container");
         marks
+    }
+
+    #[test]
+    fn legacy_unframed_codes_payload_still_decodes() {
+        // Pre-HUF2 containers carried the CODES section as one unframed
+        // Huffman stream (`huffman::compress_u16`); the v1 container
+        // framing itself is unchanged, so rebuilding a container with a
+        // legacy payload reproduces the pre-PR on-disk format exactly.
+        let field = smooth_field(Dims::d2(40, 30), 101);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, _) = compress(&field, &cfg).unwrap();
+        let (header, mut sections) = format::read_container(&bytes).unwrap();
+        let idx = sections.iter().position(|s| s.tag == tag::CODES).unwrap();
+        assert!(
+            sections[idx].payload.starts_with(&huffman::HUF2_MAGIC),
+            "new containers should carry HUF2-framed codes"
+        );
+        let syms = huffman::decompress_u16(&sections[idx].payload).unwrap();
+        sections[idx].payload = huffman::compress_u16(&syms, 2 * header.radius as usize);
+        let legacy = format::write_container(&header, &sections);
+        let modern = decompress(&bytes, 2).unwrap();
+        let old = decompress(&legacy, 2).unwrap();
+        assert_eq!(modern.data, old.data, "legacy CODES payload must decode bit-exactly");
     }
 
     #[test]

@@ -94,7 +94,12 @@ impl ThreadPool {
                             q = sh.available.wait(q).unwrap();
                         }
                     };
-                    job();
+                    // keep the worker alive across a panicking job: the
+                    // job's result never arrives, which scatter_gather
+                    // surfaces as a "missing result" panic on the caller —
+                    // instead of a dead worker silently stranding the
+                    // still-queued jobs (a permanent hang).
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
                 })
             })
             .collect();
@@ -117,15 +122,47 @@ impl ThreadPool {
         n: usize,
         f: impl Fn(usize) -> R + Send + Sync + 'static,
     ) -> Vec<R> {
+        self.scoped_scatter_gather(n, f)
+    }
+
+    /// [`scatter_gather`](Self::scatter_gather) for closures that borrow
+    /// from the caller's stack (the chunked Huffman encode/decode paths hand
+    /// out sub-slices of one borrowed symbol/payload buffer). Blocks until
+    /// every job closure has been destroyed — run to completion or dropped —
+    /// so no borrow escapes the call.
+    pub fn scoped_scatter_gather<'env, R: Send + 'env>(
+        &self,
+        n: usize,
+        f: impl Fn(usize) -> R + Send + Sync + 'env,
+    ) -> Vec<R> {
+        // The struct's declaration order is the guaranteed drop order: a
+        // job's Arc clone of the user closure dies strictly before its
+        // Sender clone does — on completion and on unwind alike — so
+        // channel disconnection proves no worker still executes or owns
+        // any part of `f`.
+        struct JobEnv<F, T> {
+            f: Arc<F>,
+            tx: mpsc::Sender<(usize, T)>,
+        }
         let f = Arc::new(f);
         let (tx, rx) = mpsc::channel::<(usize, R)>();
         for i in 0..n {
-            let f = Arc::clone(&f);
-            let tx = tx.clone();
-            self.submit(move || {
-                let r = f(i);
-                let _ = tx.send((i, r));
+            let env = JobEnv { f: Arc::clone(&f), tx: tx.clone() };
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                let r = (env.f)(i);
+                let _ = env.tx.send((i, r));
             });
+            // SAFETY: the job only borrows data living at least as long as
+            // 'env. The receive loop below runs until every clone of `tx`
+            // is gone; by JobEnv's drop order each job has dropped its Arc
+            // clone of `f` strictly before its Sender, so disconnection
+            // implies every job is dead and `f` on this frame is the sole
+            // owner of the user closure. Jobs therefore never outlive this
+            // call — whether it returns normally or panics on a missing
+            // result — and no 'env borrow escapes.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            self.shared.queue.lock().unwrap().push_back(job);
+            self.shared.available.notify_one();
         }
         drop(tx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
@@ -199,5 +236,19 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.submit(|| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn scoped_scatter_gather_borrows_stack_data() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..100).collect();
+        let chunk_sum = |i: usize| data[i * 10..(i + 1) * 10].iter().sum::<u64>();
+        let sums = pool.scoped_scatter_gather(10, chunk_sum);
+        assert_eq!(sums.len(), 10);
+        assert_eq!(sums.iter().sum::<u64>(), (0..100).sum::<u64>());
+        assert_eq!(sums[0], (0..10).sum::<u64>());
+        // empty fan-out is a no-op
+        let none: Vec<u64> = pool.scoped_scatter_gather(0, |_| 0u64);
+        assert!(none.is_empty());
     }
 }

@@ -43,6 +43,35 @@
 //! Section payloads are already entropy-coded by their producers (Huffman
 //! for codes, lossless for outlier streams); the container adds integrity
 //! and framing only.
+//!
+//! # CODES payload framing (`HUF2`)
+//!
+//! Since the parallel entropy stage, the CODES section of **both**
+//! container versions carries a chunked Huffman payload
+//! ([`crate::huffman::compress_u16_chunked`]):
+//!
+//! ```text
+//! magic 0xF5 'H' 'F' '2'
+//! code-table header (varint alphabet, varint n_pairs, (delta-sym, len)*)
+//! uvarint chunk_syms               -- symbols per full chunk (2^16)
+//! uvarint n_chunks
+//! n_chunks x (uvarint sym_count | uvarint bit_len)   -- chunk offset table
+//! concatenated chunk payloads, each byte-aligned (ceil(bit_len/8) bytes)
+//! ```
+//!
+//! Chunks are fixed-size symbol ranges — geometry never depends on the
+//! worker count, so the payload bytes are identical for every thread
+//! count — and each chunk is an independently decodable bitstream, which
+//! is what lets encode and decode fan out across the thread pool.
+//!
+//! **Backward compatibility:** the decoder dispatches on the magic; a
+//! CODES payload that does not start with it is parsed as the legacy
+//! pre-HUF2 unframed stream (one code-table header, varint count, one
+//! monolithic bitstream), so every container written before this framing
+//! existed still decodes bit-exactly. Legacy payloads begin with the
+//! uvarint of the alphabet size — always even (`2 * radius`, or 256 for
+//! lossless token streams) — while the magic's first byte is odd, so the
+//! dispatch is unambiguous for every payload this crate has ever written.
 
 use crate::bitio::{put_uvarint, Cursor};
 use crate::blocks::Dims;
@@ -66,7 +95,9 @@ pub const STREAM_HEADER_LEN: usize = 4 + 2 + 1 + 1 + 24 + 8 + 2 + 4 + 1 + 1 + 8;
 
 /// Section tags.
 pub mod tag {
-    /// Huffman-coded quant codes.
+    /// Huffman-coded quant codes (HUF2 chunked framing; legacy unframed
+    /// payloads from pre-HUF2 containers are still accepted — see the
+    /// module doc).
     pub const CODES: u8 = 1;
     /// Outlier positions (delta varints, lossless-compressed).
     pub const OUTLIER_POS: u8 = 2;

@@ -5,18 +5,64 @@
 //!
 //! Design:
 //! * code lengths from a heap-built Huffman tree, then clamped to
-//!   `MAX_BITS` with a Kraft-sum repair pass (zlib-style),
+//!   `MAX_BITS` with a single-pass Kraft-sum repair over the bit-length
+//!   histogram (zlib-style),
 //! * canonical code assignment (sorted by length, then symbol), so the
 //!   header only stores lengths,
 //! * sparse header: varint (symbol, length) pairs for non-zero lengths,
-//! * decode through a flat `2^max_len` lookup table (symbol + length per
-//!   entry) — one peek/consume per symbol on the hot path.
+//! * decode through a flat `2^max_len` **two-symbol** lookup table: when a
+//!   complete second code also fits in the peeked window, one entry yields
+//!   both symbols in a single peek/consume,
+//! * encode writes symbol **pairs** per `BitWriter::put` (2 × `MAX_BITS`
+//!   ≤ 30 bits fits one call).
+//!
+//! # Payload formats
+//!
+//! Two stream formats share the code-table header and the bitstream coder:
+//!
+//! * **legacy unframed** ([`compress_u16`]) — header, varint count, one
+//!   monolithic bitstream. Still written for the small internal token
+//!   streams of [`crate::lossless`], still decoded everywhere.
+//! * **`HUF2` chunked** ([`compress_u16_chunked`]) — the container CODES
+//!   format since the parallel entropy stage: a 4-byte magic, the shared
+//!   code-table header, and the symbol stream split into fixed-size
+//!   [`CHUNK_SYMS`] chunks, each encoded as an independent byte-aligned
+//!   bitstream. A per-chunk (symbol-count, bit-length) offset table lets
+//!   [`decompress_u16_pooled`] decode chunks concurrently on the
+//!   [`ThreadPool`] (the gap-array idea of Rivera et al.). Chunk geometry
+//!   is fixed by `CHUNK_SYMS`, never by the worker count, so the output
+//!   bytes are identical for every thread count.
+//!
+//! [`decompress_u16`] dispatches on the `HUF2` magic: real legacy payloads
+//! can never collide with it (their first byte is the uvarint of the
+//! alphabet size, and every alphabet this crate ever wrote — `2 * radius`
+//! for quant codes, 256 for lossless token bytes — is even, while
+//! `HUF2_MAGIC[0]` is odd; the three magic bytes that follow make an
+//! accidental match with a hand-rolled odd alphabet practically
+//! impossible).
 
 use crate::bitio::{BitReader, BitWriter, get_uvarint, put_uvarint};
+use crate::coordinator::pool::ThreadPool;
 use crate::error::{Result, VszError};
 
-/// Maximum code length; 2^15 table = 32K entries keeps the LUT inside L2.
+/// Maximum code length; the 2^15-entry two-symbol LUT (8 B/entry) stays
+/// inside a 256 KiB L2 slice.
 pub const MAX_BITS: u32 = 15;
+
+/// Symbols per HUF2 chunk. Fixed (never derived from the worker count) so
+/// the encoded bytes are identical for every thread count; at the ~2
+/// bits/symbol typical of quant codes a chunk is a ~16 KiB bitstream —
+/// plenty of chunks to balance, large enough to amortize the per-chunk
+/// byte-alignment padding (< 1 byte per chunk) and table entry.
+pub const CHUNK_SYMS: usize = 1 << 16;
+
+/// Magic prefix of the chunked HUF2 payload (see the module doc for why it
+/// cannot collide with a legacy payload).
+pub const HUF2_MAGIC: [u8; 4] = [0xF5, b'H', b'F', b'2'];
+
+/// Symbol-count floor below which the parallel histogram is not worth the
+/// fan-out.
+const PAR_HIST_MIN: usize = 2 * CHUNK_SYMS;
 
 /// Frequency histogram over a u16-symbol stream.
 pub fn histogram(symbols: &[u16], alphabet: usize) -> Vec<u64> {
@@ -27,8 +73,39 @@ pub fn histogram(symbols: &[u16], alphabet: usize) -> Vec<u64> {
     h
 }
 
+/// Histogram via per-worker partial histograms merged once (the merge is a
+/// commutative sum, so the result is independent of worker count).
+fn histogram_pooled(symbols: &[u16], alphabet: usize, pool: Option<&ThreadPool>) -> Vec<u64> {
+    let pool = match pool {
+        Some(p) if symbols.len() >= PAR_HIST_MIN && p.threads() > 1 => p,
+        _ => return histogram(symbols, alphabet),
+    };
+    let nw = pool.threads().min(symbols.len().div_ceil(CHUNK_SYMS));
+    let per = symbols.len().div_ceil(nw);
+    let parts = pool.scoped_scatter_gather(nw, |i| {
+        let lo = (i * per).min(symbols.len());
+        let hi = ((i + 1) * per).min(symbols.len());
+        histogram(&symbols[lo..hi], alphabet)
+    });
+    let mut h = vec![0u64; alphabet];
+    for part in parts {
+        for (a, b) in h.iter_mut().zip(part) {
+            *a += b;
+        }
+    }
+    h
+}
+
 /// Compute Huffman code lengths for `freqs` (0-freq symbols get length 0),
 /// limited to `max_bits`.
+///
+/// # Panics
+/// When more than `2^max_bits` symbols have non-zero frequency no
+/// `max_bits`-limited prefix code exists; the repair pass panics with
+/// "no extendable symbol" (the same contract as the pre-histogram repair
+/// loop). With `MAX_BITS = 15` this needs > 32768 distinct symbols — a
+/// `radius` above 16384 combined with a stream that actually uses most of
+/// its alphabet.
 pub fn code_lengths(freqs: &[u64], max_bits: u32) -> Vec<u8> {
     let n = freqs.len();
     let mut lens = vec![0u8; n];
@@ -73,33 +150,51 @@ pub fn code_lengths(freqs: &[u64], max_bits: u32) -> Vec<u8> {
         lens[i] = d.min(255) as u8;
     }
 
-    // Length-limit repair: clamp, then restore Kraft sum <= 1 by lengthening
-    // the deepest still-extendable codes (cheapest distortion).
-    let mut over = false;
+    if present.iter().all(|&i| (lens[i] as u32) <= max_bits) {
+        return lens;
+    }
+
+    // Single-pass length-limit repair over the bit-length histogram
+    // (zlib-style): clamp every over-long code to max_bits, then restore
+    // Kraft <= 1 by repeatedly moving one symbol from the deepest
+    // non-full level down one level (the cheapest distortion). Lengths are
+    // then reassigned in ascending (original depth, frequency descending,
+    // symbol) order: deeper tree leaves keep the longer codes, and within
+    // one depth the rarest symbols absorb the lengthening — deterministic
+    // and O(n log n) instead of the old per-move full rescan.
+    let mb = max_bits as usize;
+    let max_depth = present.iter().map(|&i| lens[i] as usize).max().unwrap();
+    let mut bl_count = vec![0u64; mb + 2];
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); max_depth + 1];
     for &i in &present {
-        if lens[i] as u32 > max_bits {
-            lens[i] = max_bits as u8;
-            over = true;
+        bl_count[(lens[i] as usize).min(mb)] += 1;
+        buckets[lens[i] as usize].push(i);
+    }
+    let budget = 1u64 << max_bits;
+    let mut kraft: u64 = (1..=mb).map(|l| bl_count[l] << (mb - l)).sum();
+    let mut l = mb - 1;
+    while kraft > budget {
+        while bl_count[l] == 0 {
+            assert!(l > 1, "kraft repair: no extendable symbol");
+            l -= 1;
+        }
+        bl_count[l] -= 1;
+        bl_count[l + 1] += 1;
+        kraft -= budget >> (l + 1);
+        if l < mb - 1 {
+            l += 1; // the moved symbol may now be the deepest extendable one
         }
     }
-    if over {
-        let kraft = |lens: &[u8]| -> u64 {
-            // scaled by 2^max_bits to stay integral
-            present.iter().map(|&i| 1u64 << (max_bits - lens[i] as u32)).sum()
-        };
-        let budget = 1u64 << max_bits;
-        while kraft(&lens) > budget {
-            // lengthen the symbol with the largest length < max_bits
-            let mut best: Option<usize> = None;
-            for &i in &present {
-                if (lens[i] as u32) < max_bits
-                    && best.map_or(true, |b| lens[i] > lens[b])
-                {
-                    best = Some(i);
-                }
+    let mut new_len = 1usize;
+    for bucket in &mut buckets {
+        // stable sort: frequency descending, ties stay in symbol order
+        bucket.sort_by_key(|&i| std::cmp::Reverse(freqs[i]));
+        for &i in bucket.iter() {
+            while bl_count[new_len] == 0 {
+                new_len += 1;
             }
-            let b = best.expect("kraft repair: no extendable symbol");
-            lens[b] += 1;
+            bl_count[new_len] -= 1;
+            lens[i] = new_len as u8;
         }
     }
     lens
@@ -162,12 +257,28 @@ impl Encoder {
         w.put(code as u64, len as u32);
     }
 
-    pub fn encode_all(&self, symbols: &[u16]) -> Vec<u8> {
+    /// Encode `symbols` into a byte-aligned bitstream; returns the bytes
+    /// and the exact bit length before padding. Symbols are written two at
+    /// a time (2 × `MAX_BITS` ≤ 30 bits fits one `put`), which is
+    /// bit-identical to the one-at-a-time loop.
+    pub fn encode_chunk(&self, symbols: &[u16]) -> (Vec<u8>, u64) {
         let mut w = BitWriter::with_capacity(symbols.len() / 2 + 16);
-        for &s in symbols {
+        let mut pairs = symbols.chunks_exact(2);
+        for p in &mut pairs {
+            let (c0, l0) = self.table[p[0] as usize];
+            let (c1, l1) = self.table[p[1] as usize];
+            debug_assert!(l0 > 0 && l1 > 0, "encoding symbol with no code");
+            w.put((c0 as u64) | ((c1 as u64) << l0), l0 as u32 + l1 as u32);
+        }
+        for &s in pairs.remainder() {
             self.encode_symbol(&mut w, s);
         }
-        w.finish()
+        let bits = w.bit_len();
+        (w.finish(), bits)
+    }
+
+    pub fn encode_all(&self, symbols: &[u16]) -> Vec<u8> {
+        self.encode_chunk(symbols).0
     }
 
     /// Exact bit cost of a stream under this code (for ratio estimates).
@@ -179,9 +290,18 @@ impl Encoder {
     }
 }
 
-/// Decoder: flat LUT of 2^max_len entries, each (symbol, length).
+/// Peek width of the decode loop: enough for one two-symbol LUT hit.
+const PAIR_PEEK_BITS: u32 = 2 * MAX_BITS;
+
+/// Decoder: flat two-symbol LUT of 2^max_len entries.
+///
+/// Entry layout (u64): `sym1[0..16] | sym2[16..32] | len1[32..40] |
+/// len_pair[40..48] | count[48..50]`. `count` is 0 for an invalid window,
+/// 1 when only the first code is determined by the window, 2 when a
+/// complete second code also fits — the hot loop then emits both symbols
+/// from a single peek/consume.
 pub struct Decoder {
-    lut: Vec<u32>, // sym in low 16, len in bits 16..24
+    lut: Vec<u64>,
     max_len: u32,
 }
 
@@ -195,7 +315,8 @@ impl Decoder {
             return Err(VszError::format(format!("huffman length {max_len} > {MAX_BITS}")));
         }
         let codes = canonical_codes(lens);
-        let mut lut = vec![u32::MAX; 1usize << max_len];
+        // single-symbol LUT first (sym in low 16, len in bits 16..24)
+        let mut single = vec![u32::MAX; 1usize << max_len];
         for (sym, &(code, len)) in codes.iter().enumerate() {
             if len == 0 {
                 continue;
@@ -204,36 +325,101 @@ impl Decoder {
             let step = 1usize << len;
             let entry = (sym as u32) | ((len as u32) << 16);
             let mut idx = rev;
-            while idx < lut.len() {
-                if lut[idx] != u32::MAX {
+            while idx < single.len() {
+                if single[idx] != u32::MAX {
                     return Err(VszError::format("huffman: overlapping codes (bad lengths)"));
                 }
-                lut[idx] = entry;
+                single[idx] = entry;
                 idx += step;
             }
         }
+        // derive the two-symbol LUT: after consuming len1 bits the next
+        // bits of the window are idx >> len1 (zero-extended), so the
+        // second code is determined exactly when its length fits the
+        // remaining window.
+        let mut lut = vec![0u64; single.len()];
+        for (idx, e) in lut.iter_mut().enumerate() {
+            let e1 = single[idx];
+            if e1 == u32::MAX {
+                continue;
+            }
+            let s1 = (e1 & 0xFFFF) as u64;
+            let l1 = (e1 >> 16) as u64;
+            let mut packed = s1 | (l1 << 32) | (l1 << 40) | (1u64 << 48);
+            let rem = max_len as u64 - l1;
+            if rem > 0 {
+                let e2 = single[idx >> l1];
+                if e2 != u32::MAX {
+                    let l2 = (e2 >> 16) as u64;
+                    if l2 <= rem {
+                        packed = s1
+                            | (((e2 & 0xFFFF) as u64) << 16)
+                            | (l1 << 32)
+                            | ((l1 + l2) << 40)
+                            | (2u64 << 48);
+                    }
+                }
+            }
+            *e = packed;
+        }
         Ok(Self { lut, max_len })
+    }
+
+    /// Decode exactly `count` symbols from `r` into `out`.
+    fn decode_into(&self, r: &mut BitReader, count: usize, out: &mut Vec<u16>) -> Result<()> {
+        if count == 0 {
+            return Ok(());
+        }
+        if self.max_len == 0 {
+            return Err(VszError::format("huffman: truncated stream"));
+        }
+        let mask = (1usize << self.max_len) - 1;
+        let want = out.len() + count;
+        while out.len() < want {
+            // peek wide enough that a pair consume never outruns the
+            // refill window (PAIR_PEEK_BITS >= len_pair)
+            let idx = (r.peek(PAIR_PEEK_BITS) as usize) & mask;
+            let e = self.lut[idx];
+            if e == 0 {
+                return Err(VszError::format("huffman: invalid code"));
+            }
+            if (e >> 48) == 2 && want - out.len() >= 2 {
+                let lp = ((e >> 40) & 0xFF) as u32;
+                if r.remaining_bits() >= lp as u64 {
+                    r.consume(lp);
+                    out.push(e as u16);
+                    out.push((e >> 16) as u16);
+                    continue;
+                }
+            }
+            let l1 = ((e >> 32) & 0xFF) as u32;
+            if r.remaining_bits() < l1 as u64 {
+                return Err(VszError::format("huffman: stream underrun"));
+            }
+            r.consume(l1);
+            out.push(e as u16);
+        }
+        Ok(())
     }
 
     /// Decode exactly `count` symbols.
     pub fn decode_all(&self, bytes: &[u8], count: usize) -> Result<Vec<u16>> {
         let mut out = Vec::with_capacity(count);
         let mut r = BitReader::new(bytes);
-        for _ in 0..count {
-            let idx = r.peek(self.max_len) as usize;
-            let entry = *self
-                .lut
-                .get(idx)
-                .ok_or_else(|| VszError::format("huffman: truncated stream"))?;
-            if entry == u32::MAX {
-                return Err(VszError::format("huffman: invalid code"));
-            }
-            let len = entry >> 16;
-            if r.remaining_bits() < len as u64 {
-                return Err(VszError::format("huffman: stream underrun"));
-            }
-            r.consume(len);
-            out.push(entry as u16);
+        self.decode_into(&mut r, count, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decode one HUF2 chunk: exactly `count` symbols that must consume
+    /// exactly `bit_len` bits (the length the encoder recorded in the
+    /// chunk offset table) — a strong cheap integrity check.
+    pub fn decode_chunk(&self, bytes: &[u8], count: usize, bit_len: u64) -> Result<Vec<u16>> {
+        let mut out = Vec::with_capacity(count);
+        let mut r = BitReader::new(bytes);
+        self.decode_into(&mut r, count, &mut out)?;
+        let consumed = bytes.len() as u64 * 8 - r.remaining_bits();
+        if consumed != bit_len {
+            return Err(VszError::format("huffman: chunk bit length mismatch"));
         }
         Ok(out)
     }
@@ -282,7 +468,11 @@ pub fn read_lengths(data: &[u8]) -> Result<(Vec<u8>, usize)> {
     Ok((lens, pos))
 }
 
-/// One-call stream compression: header (lengths) + varint count + payload.
+/// One-call stream compression, legacy unframed format: header (lengths) +
+/// varint count + one monolithic payload. Kept as the format of the small
+/// internal token streams in [`crate::lossless`] and for backward
+/// compatibility with pre-HUF2 containers; the container CODES sections use
+/// [`compress_u16_chunked`].
 pub fn compress_u16(symbols: &[u16], alphabet: usize) -> Vec<u8> {
     let hist = histogram(symbols, alphabet);
     let lens = code_lengths(&hist, MAX_BITS);
@@ -295,8 +485,64 @@ pub fn compress_u16(symbols: &[u16], alphabet: usize) -> Vec<u8> {
     out
 }
 
-/// Inverse of [`compress_u16`].
+/// Chunked HUF2 compression (see the module doc for the layout):
+/// one shared code table, then the symbols encoded in fixed
+/// [`CHUNK_SYMS`]-sized chunks — concurrently on `pool` when given — with
+/// a per-chunk (symbol-count, bit-length) offset table so the decoder can
+/// fan chunks out. Output bytes are identical for every `pool`
+/// width (including `None`): chunk geometry depends only on the input.
+pub fn compress_u16_chunked(
+    symbols: &[u16],
+    alphabet: usize,
+    pool: Option<&ThreadPool>,
+) -> Vec<u8> {
+    let hist = histogram_pooled(symbols, alphabet, pool);
+    let lens = code_lengths(&hist, MAX_BITS);
+    let enc = Encoder::from_lengths(&lens);
+    let n_chunks = symbols.len().div_ceil(CHUNK_SYMS);
+    let encode_one = |i: usize| {
+        let lo = i * CHUNK_SYMS;
+        let hi = (lo + CHUNK_SYMS).min(symbols.len());
+        enc.encode_chunk(&symbols[lo..hi])
+    };
+    let chunks: Vec<(Vec<u8>, u64)> = match pool {
+        Some(pool) if n_chunks > 1 && pool.threads() > 1 => {
+            pool.scoped_scatter_gather(n_chunks, encode_one)
+        }
+        _ => (0..n_chunks).map(encode_one).collect(),
+    };
+
+    let payload_len: usize = chunks.iter().map(|(b, _)| b.len()).sum();
+    let mut out = Vec::with_capacity(payload_len + 8 * n_chunks + 64);
+    out.extend_from_slice(&HUF2_MAGIC);
+    write_lengths(&mut out, &lens);
+    put_uvarint(&mut out, CHUNK_SYMS as u64);
+    put_uvarint(&mut out, n_chunks as u64);
+    for (i, (_, bits)) in chunks.iter().enumerate() {
+        let lo = i * CHUNK_SYMS;
+        let hi = (lo + CHUNK_SYMS).min(symbols.len());
+        put_uvarint(&mut out, (hi - lo) as u64);
+        put_uvarint(&mut out, *bits);
+    }
+    for (bytes, _) in &chunks {
+        out.extend_from_slice(bytes);
+    }
+    out
+}
+
+/// Inverse of [`compress_u16`]/[`compress_u16_chunked`] (dispatches on the
+/// HUF2 magic), serial.
 pub fn decompress_u16(data: &[u8]) -> Result<Vec<u16>> {
+    decompress_u16_pooled(data, None)
+}
+
+/// Like [`decompress_u16`], but HUF2 chunks are decoded concurrently on
+/// `pool` when given (legacy payloads are one bit-serial stream, so they
+/// always decode on the calling thread).
+pub fn decompress_u16_pooled(data: &[u8], pool: Option<&ThreadPool>) -> Result<Vec<u16>> {
+    if data.starts_with(&HUF2_MAGIC) {
+        return decompress_huf2(data, pool);
+    }
     let (lens, mut pos) = read_lengths(data)?;
     let (count, n) =
         get_uvarint(&data[pos..]).ok_or_else(|| VszError::format("huffman count EOF"))?;
@@ -313,11 +559,96 @@ pub fn decompress_u16(data: &[u8]) -> Result<Vec<u16>> {
     dec.decode_all(&data[pos..], count as usize)
 }
 
+fn decompress_huf2(data: &[u8], pool: Option<&ThreadPool>) -> Result<Vec<u16>> {
+    let body = &data[HUF2_MAGIC.len()..];
+    let (lens, mut pos) = read_lengths(body)?;
+    let varint = |pos: &mut usize| -> Result<u64> {
+        let (v, n) =
+            get_uvarint(&body[*pos..]).ok_or_else(|| VszError::format("HUF2 header EOF"))?;
+        *pos += n;
+        Ok(v)
+    };
+    let chunk_syms = varint(&mut pos)? as usize;
+    if chunk_syms == 0 || chunk_syms > 1 << 28 {
+        return Err(VszError::format("huffman: bad HUF2 chunk size"));
+    }
+    let n_chunks = varint(&mut pos)?;
+    // every offset-table entry takes at least two bytes, so a forged count
+    // can never exceed the remaining header bytes — reject before reading
+    if n_chunks > (body.len() - pos) as u64 / 2 {
+        return Err(VszError::format("huffman: HUF2 chunk count exceeds payload"));
+    }
+    let n_chunks = n_chunks as usize;
+
+    // offset table: (symbol count, bit length, byte offset) per chunk
+    let mut table: Vec<(usize, u64, u64)> = Vec::with_capacity(n_chunks.min(1 << 16));
+    let mut total_syms = 0u64;
+    let mut total_bytes = 0u64;
+    for i in 0..n_chunks {
+        let sym_count = varint(&mut pos)? as usize;
+        let bit_len = varint(&mut pos)?;
+        let last = i + 1 == n_chunks;
+        if sym_count == 0 || sym_count > chunk_syms || (!last && sym_count != chunk_syms) {
+            return Err(VszError::format("huffman: bad HUF2 chunk symbol count"));
+        }
+        if bit_len < sym_count as u64 || bit_len > sym_count as u64 * MAX_BITS as u64 {
+            return Err(VszError::format("huffman: bad HUF2 chunk bit length"));
+        }
+        table.push((sym_count, bit_len, total_bytes));
+        total_syms += sym_count as u64;
+        total_bytes += bit_len.div_ceil(8);
+    }
+    let payload = &body[pos..];
+    if payload.len() as u64 != total_bytes {
+        return Err(VszError::format("huffman: HUF2 payload length mismatch"));
+    }
+    if n_chunks == 0 {
+        return Ok(Vec::new());
+    }
+
+    let dec = Decoder::from_lengths(&lens)?;
+    let decode_one = |i: usize| -> Result<Vec<u16>> {
+        let (count, bits, off) = table[i];
+        let lo = off as usize;
+        let hi = lo + bits.div_ceil(8) as usize;
+        dec.decode_chunk(&payload[lo..hi], count, bits)
+    };
+    let parts: Vec<Result<Vec<u16>>> = match pool {
+        Some(pool) if n_chunks > 1 && pool.threads() > 1 => {
+            pool.scoped_scatter_gather(n_chunks, decode_one)
+        }
+        _ => (0..n_chunks).map(decode_one).collect(),
+    };
+    let mut out = Vec::with_capacity(total_syms as usize);
+    for part in parts {
+        out.extend_from_slice(&part?);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::proptest::check;
     use crate::util::prng::Pcg32;
+
+    /// The skewed quant-code-like stream used across the entropy tests.
+    fn skewed_codes(n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = Pcg32::seeded(seed);
+        let radius = 512u16;
+        (0..n)
+            .map(|_| {
+                let r = rng.next_f32();
+                if r < 0.8 {
+                    radius
+                } else if r < 0.95 {
+                    radius + 1 - (rng.bounded(3) as u16)
+                } else {
+                    radius - 8 + rng.bounded(16) as u16
+                }
+            })
+            .collect()
+    }
 
     #[test]
     fn lengths_satisfy_kraft() {
@@ -346,20 +677,7 @@ mod tests {
     #[test]
     fn skewed_quant_code_stream_compresses_hard() {
         // mimic dual-quant output: mass at `radius`, tails around it
-        let mut rng = Pcg32::seeded(9);
-        let radius = 512u16;
-        let syms: Vec<u16> = (0..100_000)
-            .map(|_| {
-                let r = rng.next_f32();
-                if r < 0.8 {
-                    radius
-                } else if r < 0.95 {
-                    radius + 1 - (rng.bounded(3) as u16)
-                } else {
-                    radius - 8 + rng.bounded(16) as u16
-                }
-            })
-            .collect();
+        let syms = skewed_codes(100_000, 9);
         let blob = compress_u16(&syms, 1024);
         // entropy of this distribution is ~1.2 bits/sym; 16-bit raw = 200KB
         assert!(blob.len() < 40_000, "blob {} bytes", blob.len());
@@ -390,6 +708,36 @@ mod tests {
         }
         let blob = compress_u16(&syms, 40);
         assert_eq!(decompress_u16(&blob).unwrap(), syms);
+    }
+
+    #[test]
+    fn kraft_repair_monotone_in_original_depth() {
+        // after repair, a symbol that sat deeper in the unlimited tree must
+        // never end up with a shorter code than a shallower one
+        let mut freqs = vec![0u64; 64];
+        let (mut a, mut b) = (1u64, 1u64);
+        for f in freqs.iter_mut() {
+            *f = a;
+            let c = a.saturating_add(b);
+            a = b;
+            b = c;
+        }
+        let unlimited = code_lengths(&freqs, 60);
+        let limited = code_lengths(&freqs, MAX_BITS);
+        for i in 0..freqs.len() {
+            for j in 0..freqs.len() {
+                if unlimited[i] < unlimited[j] {
+                    assert!(
+                        limited[i] <= limited[j],
+                        "depth order inverted: {i} ({}->{}) vs {j} ({}->{})",
+                        unlimited[i],
+                        limited[i],
+                        unlimited[j],
+                        limited[j]
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -429,7 +777,160 @@ mod tests {
     }
 
     #[test]
+    fn prop_roundtrip_chunked_matches_input() {
+        check("huffman-huf2-roundtrip", 40, |g| {
+            let n = g.len() * 50;
+            let alphabet = *g.choose(&[2usize, 17, 256, 1024]);
+            let syms: Vec<u16> = (0..n)
+                .map(|_| {
+                    let u = g.rng.next_f32();
+                    ((u * u * (alphabet as f32 - 1.0)) as u16).min(alphabet as u16 - 1)
+                })
+                .collect();
+            let blob = compress_u16_chunked(&syms, alphabet, None);
+            let back = decompress_u16(&blob).map_err(|e| e.to_string())?;
+            if back == syms {
+                Ok(())
+            } else {
+                Err("chunked roundtrip mismatch".into())
+            }
+        });
+    }
+
+    #[test]
     fn decoder_rejects_garbage() {
         assert!(decompress_u16(&[0xFF, 0xFF, 0xFF]).is_err());
+    }
+
+    // ------------------------------------------------------ HUF2 chunked
+
+    #[test]
+    fn chunked_empty_and_tiny_streams() {
+        let blob = compress_u16_chunked(&[], 16, None);
+        assert_eq!(decompress_u16(&blob).unwrap(), Vec::<u16>::new());
+        let syms = vec![7u16; 3];
+        let blob = compress_u16_chunked(&syms, 16, None);
+        assert_eq!(decompress_u16(&blob).unwrap(), syms);
+    }
+
+    #[test]
+    fn chunked_multi_chunk_roundtrip_serial_and_pooled() {
+        // > 3 chunks so the offset table and the stitched payload are real
+        let syms = skewed_codes(3 * CHUNK_SYMS + 1234, 21);
+        let blob = compress_u16_chunked(&syms, 1024, None);
+        assert_eq!(decompress_u16(&blob).unwrap(), syms);
+        let pool = ThreadPool::new(4);
+        assert_eq!(decompress_u16_pooled(&blob, Some(&pool)).unwrap(), syms);
+    }
+
+    #[test]
+    fn chunked_encode_is_thread_count_deterministic() {
+        // 1, 2 and 7 workers must produce byte-identical payloads
+        let syms = skewed_codes(2 * CHUNK_SYMS + 777, 23);
+        let serial = compress_u16_chunked(&syms, 1024, None);
+        for nthreads in [2usize, 7] {
+            let pool = ThreadPool::new(nthreads);
+            let par = compress_u16_chunked(&syms, 1024, Some(&pool));
+            assert_eq!(serial, par, "{nthreads} workers changed the payload bytes");
+        }
+    }
+
+    #[test]
+    fn chunked_and_legacy_decode_to_the_same_symbols() {
+        let syms = skewed_codes(CHUNK_SYMS + 99, 25);
+        let legacy = compress_u16(&syms, 1024);
+        let chunked = compress_u16_chunked(&syms, 1024, None);
+        assert_ne!(legacy, chunked); // different framing...
+        assert_eq!(
+            decompress_u16(&legacy).unwrap(),
+            decompress_u16(&chunked).unwrap() // ...same stream
+        );
+    }
+
+    #[test]
+    fn huf2_corruption_sweep_over_header_and_offset_table() {
+        // mirror the container sweeps: flip every byte of the HUF2 header +
+        // chunk offset table; decode must never panic, and whenever it
+        // still succeeds the symbol count must be unchanged (content
+        // integrity is the container CRC's job, one layer up).
+        let syms = skewed_codes(2 * CHUNK_SYMS + 500, 27);
+        let blob = compress_u16_chunked(&syms, 1024, None);
+        // locate the payload start by re-walking the header
+        let body = &blob[HUF2_MAGIC.len()..];
+        let (_, mut pos) = read_lengths(body).unwrap();
+        let (_, n1) = get_uvarint(&body[pos..]).unwrap(); // chunk size
+        pos += n1;
+        let (n_chunks, n2) = get_uvarint(&body[pos..]).unwrap();
+        pos += n2;
+        for _ in 0..n_chunks {
+            let (_, a) = get_uvarint(&body[pos..]).unwrap();
+            pos += a;
+            let (_, b) = get_uvarint(&body[pos..]).unwrap();
+            pos += b;
+        }
+        let header_end = HUF2_MAGIC.len() + pos;
+        for at in 0..header_end {
+            let mut bad = blob.clone();
+            bad[at] ^= 0xA5;
+            match decompress_u16(&bad) {
+                Err(_) => {}
+                Ok(out) => assert_eq!(
+                    out.len(),
+                    syms.len(),
+                    "flip at {at} silently changed the symbol count"
+                ),
+            }
+        }
+        // truncation sweep: every cut must be rejected
+        for cut in [0, 2, 5, header_end - 1, header_end, blob.len() / 2, blob.len() - 1] {
+            assert!(decompress_u16(&blob[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn two_symbol_lut_matches_pairwise_reference_decode() {
+        // decode a stream symbol-by-symbol through get() as a reference
+        let syms = skewed_codes(10_000, 31);
+        let hist = histogram(&syms, 1024);
+        let lens = code_lengths(&hist, MAX_BITS);
+        let enc = Encoder::from_lengths(&lens);
+        let (payload, bits) = enc.encode_chunk(&syms);
+        // reference: walk the canonical codes bit by bit
+        let codes = canonical_codes(&lens);
+        let by_rev: std::collections::HashMap<(u32, u8), u16> = codes
+            .iter()
+            .enumerate()
+            .filter(|(_, &(_, l))| l > 0)
+            .map(|(s, &(c, l))| ((super::reverse_bits(c, l), l), s as u16))
+            .collect();
+        let mut r = BitReader::new(&payload);
+        let mut reference = Vec::new();
+        'outer: while reference.len() < syms.len() {
+            let mut code = 0u32;
+            for l in 1..=MAX_BITS as u8 {
+                code |= (r.get(1).unwrap() as u32) << (l - 1);
+                if let Some(&s) = by_rev.get(&(code, l)) {
+                    reference.push(s);
+                    continue 'outer;
+                }
+            }
+            panic!("reference decode lost sync");
+        }
+        assert_eq!(reference, syms);
+        let dec = Decoder::from_lengths(&lens).unwrap();
+        assert_eq!(dec.decode_chunk(&payload, syms.len(), bits).unwrap(), syms);
+    }
+
+    #[test]
+    fn chunk_bit_length_mismatch_is_rejected() {
+        let syms = skewed_codes(4096, 33);
+        let hist = histogram(&syms, 1024);
+        let lens = code_lengths(&hist, MAX_BITS);
+        let enc = Encoder::from_lengths(&lens);
+        let dec = Decoder::from_lengths(&lens).unwrap();
+        let (payload, bits) = enc.encode_chunk(&syms);
+        assert!(dec.decode_chunk(&payload, syms.len(), bits).is_ok());
+        assert!(dec.decode_chunk(&payload, syms.len(), bits + 1).is_err());
+        assert!(dec.decode_chunk(&payload, syms.len() - 1, bits).is_err());
     }
 }

@@ -178,22 +178,29 @@ fn unhuff_bytes(data: &[u8]) -> Result<Vec<u8>> {
 }
 
 /// Compress `data`, choosing the smallest of {store, rle, lzss, lzss+huff}.
+/// The winner is picked by length first; the STORE copy of the input is
+/// only materialized when it actually wins, instead of cloning the whole
+/// input up front (which doubled peak memory on incompressible streams).
+/// Ties resolve exactly as the old candidate ordering did: store, then
+/// rle, then lzss+huff, then lzss.
 pub fn compress(data: &[u8]) -> Vec<u8> {
-    let mut candidates: Vec<(u8, Vec<u8>)> = Vec::with_capacity(4);
-    candidates.push((TAG_STORE, data.to_vec()));
+    let mut best: Option<(u8, Vec<u8>)> = None;
+    let mut best_len = data.len(); // the implicit STORE candidate
     let rle = rle_encode(data);
-    if rle.len() < data.len() {
-        candidates.push((TAG_RLE, rle));
+    if rle.len() < best_len {
+        best_len = rle.len();
+        best = Some((TAG_RLE, rle));
     }
     if data.len() >= MIN_MATCH {
         let tokens = lzss_tokens(data);
         let hufftok = huff_bytes(&tokens);
-        if hufftok.len() < tokens.len() {
-            candidates.push((TAG_LZSS_HUFF, hufftok));
+        if hufftok.len() < tokens.len() && hufftok.len() < best_len {
+            best = Some((TAG_LZSS_HUFF, hufftok));
+        } else if tokens.len() < best_len {
+            best = Some((TAG_LZSS, tokens));
         }
-        candidates.push((TAG_LZSS, tokens));
     }
-    let (tag, payload) = candidates.into_iter().min_by_key(|(_, p)| p.len()).unwrap();
+    let (tag, payload) = best.unwrap_or_else(|| (TAG_STORE, data.to_vec()));
     let mut out = Vec::with_capacity(payload.len() + 6);
     out.push(tag);
     put_uvarint(&mut out, data.len() as u64);

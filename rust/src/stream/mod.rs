@@ -83,9 +83,18 @@ struct ChunkOut {
 
 /// Encode one slab sub-field into a framed chunk (free function so the
 /// thread-pool job owns everything it needs).
-fn encode_chunk(index: u64, field: Field, cfg: Config) -> Result<(Vec<u8>, ChunkOut)> {
+fn encode_chunk(
+    index: u64,
+    field: Field,
+    cfg: Config,
+    overlap_aux: bool,
+) -> Result<(Vec<u8>, ChunkOut)> {
     let backend = cfg.backend.instantiate();
-    let body = encode_body(&field, &cfg, backend.as_ref())?;
+    // entropy_threads = 1: streaming parallelism is across chunks, not
+    // within one. Pipelined runs (threads > 1) still overlap each chunk's
+    // lossless streams with its Huffman pass on scoped helper threads;
+    // serial runs (threads = 1) stay strictly single-threaded.
+    let body = encode_body(&field, &cfg, backend.as_ref(), 1, overlap_aux)?;
     let mut frame = Vec::new();
     format::write_chunk_frame(&mut frame, index, field.dims.shape[0] as u64, &body.sections);
     Ok((frame, ChunkOut { n_outliers: body.n_outliers, pq_seconds: body.pq_seconds }))
@@ -255,7 +264,7 @@ impl<W: Write> StreamCompressor<W> {
             job_cfg.threads = 1; // parallelism is across chunks here
             let tx = self.tx.clone();
             self.pool.as_ref().unwrap().submit(move || {
-                let res = encode_chunk(index, field, job_cfg);
+                let res = encode_chunk(index, field, job_cfg, true);
                 let _ = tx.send((index, res));
             });
             self.in_flight += 1;
@@ -263,7 +272,7 @@ impl<W: Write> StreamCompressor<W> {
             while self.recv_one(false)? {}
             self.write_ready()?;
         } else {
-            let (frame, info) = encode_chunk(index, field, self.cfg)?;
+            let (frame, info) = encode_chunk(index, field, self.cfg, false)?;
             self.stats.n_outliers += info.n_outliers;
             self.stats.pq_seconds += info.pq_seconds;
             self.out.write_all(&frame)?;
