@@ -1,0 +1,129 @@
+//! `cargo bench --bench stream_access` — streaming-container access paths:
+//! chunked compression (with and without per-chunk autotuning, so the
+//! tuner's overhead is a tracked number), full chunk-parallel decode, and
+//! random access through the VSZ3 index footer (single chunk and row
+//! range vs. decoding everything). Emits the machine-readable perf
+//! trajectory `BENCH_stream.json`; honour `VECSZ_BENCH_QUICK=1` in CI.
+
+use vecsz::autotune::TuneSettings;
+use vecsz::bench::{bench, BenchOpts, BenchStats};
+use vecsz::blocks::Dims;
+use vecsz::compressor::{Config, EbMode};
+use vecsz::data::Field;
+use vecsz::stream::{
+    compress_chunked, compress_chunked_with, decompress_chunked, StreamDecompressor,
+    StreamOptions,
+};
+use vecsz::util::prng::Pcg32;
+
+const ROWS: usize = 1024;
+const COLS: usize = 512;
+const SPAN: usize = 64; // 16 chunks of 64x512 = 32768 elems each
+
+fn json_row(op: &str, threads: usize, s: &BenchStats) -> String {
+    format!(
+        "{{\"op\":\"{op}\",\"threads\":{threads},\"mb_per_s\":{:.1},\
+         \"mean_s\":{:.6},\"min_s\":{:.6},\"samples\":{}}}",
+        s.mean_mb_s(),
+        s.mean_s,
+        s.min_s,
+        s.samples
+    )
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let dims = Dims::d2(ROWS, COLS);
+    let mut rng = Pcg32::seeded(7);
+    let mut x = 0.0f32;
+    let data: Vec<f32> = (0..dims.len())
+        .map(|_| {
+            x += (rng.next_f32() - 0.5) * 0.1;
+            x
+        })
+        .collect();
+    let field = Field::new("bench", dims, data);
+    let raw_bytes = field.data.len() * 4;
+    let mut rows: Vec<String> = Vec::new();
+
+    // ---- compression: plain vs per-chunk-autotuned (tuner overhead) ----
+    for threads in [1usize, 4] {
+        let cfg = Config { eb: EbMode::Abs(1e-3), threads, ..Config::default() };
+        let s = bench(&format!("stream compress {threads}T"), raw_bytes, opts, || {
+            std::hint::black_box(compress_chunked(&field, &cfg, SPAN).unwrap());
+        });
+        println!("{}", s.row());
+        rows.push(json_row("compress", threads, &s));
+    }
+    {
+        let cfg = Config { eb: EbMode::Abs(1e-3), threads: 4, ..Config::default() };
+        let topts = StreamOptions {
+            chunk_autotune: Some(TuneSettings { sample_pct: 5.0, iterations: 1, seed: 3 }),
+            ..StreamOptions::default()
+        };
+        let s = bench("stream compress 4T + per-chunk autotune", raw_bytes, opts, || {
+            std::hint::black_box(compress_chunked_with(&field, &cfg, SPAN, topts).unwrap());
+        });
+        println!("{}", s.row());
+        rows.push(json_row("compress-autotune", 4, &s));
+    }
+
+    // ---- the container the decode benches read ----
+    let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+    let (container, stats) = compress_chunked(&field, &cfg, SPAN).unwrap();
+    println!(
+        "    (container: {} chunks, {:.2}x, {} bytes)",
+        stats.n_chunks,
+        stats.ratio(),
+        container.len()
+    );
+
+    // ---- full decode (the baseline random access competes against) ----
+    for threads in [1usize, 4] {
+        let s = bench(&format!("full decode {threads}T"), raw_bytes, opts, || {
+            std::hint::black_box(decompress_chunked(&container, threads).unwrap());
+        });
+        println!("{}", s.row());
+        rows.push(json_row("decode-full", threads, &s));
+    }
+
+    // ---- random access: open + index + one chunk (cold every time) ----
+    let chunk_bytes = SPAN * COLS * 4;
+    let s = bench("random access: one chunk (open+index+decode)", chunk_bytes, opts, || {
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&container)).unwrap();
+        std::hint::black_box(dec.decode_chunk(stats.n_chunks / 2).unwrap());
+    });
+    println!("{}", s.row());
+    rows.push(json_row("decode-chunk", 1, &s));
+
+    // ---- random access: middle half of the rows, chunk-parallel ----
+    let lo = ROWS / 4;
+    let hi = 3 * ROWS / 4;
+    let range_bytes = (hi - lo) * COLS * 4;
+    for threads in [1usize, 4] {
+        let s = bench(
+            &format!("random access: rows {lo}..{hi} {threads}T"),
+            range_bytes,
+            opts,
+            || {
+                let mut dec = StreamDecompressor::new(std::io::Cursor::new(&container)).unwrap();
+                std::hint::black_box(dec.decode_rows(lo..hi, threads).unwrap());
+            },
+        );
+        println!("{}", s.row());
+        rows.push(json_row("decode-rows-half", threads, &s));
+    }
+
+    let doc = format!(
+        "{{\n  \"workload\": \"walk-field-{ROWS}x{COLS}-span{SPAN}\",\n  \
+         \"n_elems\": {},\n  \"raw_bytes\": {raw_bytes},\n  \"n_chunks\": {},\n  \
+         \"rows\": [\n    {}\n  ]\n}}\n",
+        field.data.len(),
+        stats.n_chunks,
+        rows.join(",\n    ")
+    );
+    match std::fs::write("BENCH_stream.json", &doc) {
+        Ok(()) => println!("    (wrote BENCH_stream.json)"),
+        Err(e) => eprintln!("    (could not write BENCH_stream.json: {e})"),
+    }
+}

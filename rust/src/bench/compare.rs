@@ -1,0 +1,192 @@
+//! `BENCH_*.json` regression gate — the CI `compare-bench` step.
+//!
+//! The bench targets (`micro_substrates`, `stream_access`) emit
+//! machine-readable throughput rows; CI diffs a fresh run against the
+//! baselines committed under `ci/bench-baselines/` and fails the job when
+//! any matched row lost more than the tolerated fraction of throughput.
+//! Rows are matched by `(op, format, threads)`; rows present on only one
+//! side are reported but never fail the gate (new benchmarks must be able
+//! to land before their baseline exists, and baselines must survive a
+//! renamed row without blocking CI).
+
+use crate::error::{Result, VszError};
+use crate::util::json::{parse, Json};
+
+/// One matched row of a baseline/fresh diff.
+#[derive(Clone, Debug)]
+pub struct RowDiff {
+    pub key: String,
+    pub base_mb_s: f64,
+    pub fresh_mb_s: f64,
+    /// Throughput change in percent (negative = slower than baseline).
+    pub delta_pct: f64,
+    pub regressed: bool,
+}
+
+/// Outcome of diffing one `BENCH_*.json` pair.
+#[derive(Clone, Debug, Default)]
+pub struct CompareReport {
+    pub rows: Vec<RowDiff>,
+    /// Row keys present in only one of the two documents.
+    pub unmatched: Vec<String>,
+}
+
+impl CompareReport {
+    pub fn regressions(&self) -> impl Iterator<Item = &RowDiff> {
+        self.rows.iter().filter(|r| r.regressed)
+    }
+}
+
+/// Identity of a bench row: `op/format@threads` ("-" when a field is
+/// absent — the stream bench has no `format` axis).
+fn row_key(row: &Json) -> Option<String> {
+    let op = row.get("op")?.as_str()?;
+    let format = row.get("format").and_then(Json::as_str).unwrap_or("-");
+    let threads = row.get("threads").and_then(Json::as_usize).unwrap_or(1);
+    Some(format!("{op}/{format}@{threads}"))
+}
+
+fn rows_of(doc: &Json) -> Result<Vec<(String, f64)>> {
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_array)
+        .ok_or_else(|| VszError::format("bench json: missing 'rows' array"))?;
+    let mut out = Vec::with_capacity(rows.len());
+    for row in rows {
+        let key =
+            row_key(row).ok_or_else(|| VszError::format("bench json: row without an 'op'"))?;
+        let mbs = row
+            .get("mb_per_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| VszError::format(format!("bench json: row {key} has no mb_per_s")))?;
+        out.push((key, mbs));
+    }
+    Ok(out)
+}
+
+/// Diff two bench documents. `tolerance_pct` is the throughput loss (in
+/// percent of the baseline) beyond which a matched row counts as a
+/// regression.
+pub fn compare_docs(baseline: &Json, fresh: &Json, tolerance_pct: f64) -> Result<CompareReport> {
+    let base_rows = rows_of(baseline)?;
+    let fresh_rows = rows_of(fresh)?;
+    let mut report = CompareReport::default();
+    for (key, fresh_mbs) in &fresh_rows {
+        match base_rows.iter().find(|(k, _)| k == key) {
+            Some((_, base_mbs)) if *base_mbs > 0.0 => {
+                let delta_pct = (fresh_mbs - base_mbs) / base_mbs * 100.0;
+                report.rows.push(RowDiff {
+                    key: key.clone(),
+                    base_mb_s: *base_mbs,
+                    fresh_mb_s: *fresh_mbs,
+                    delta_pct,
+                    regressed: delta_pct < -tolerance_pct,
+                });
+            }
+            _ => report.unmatched.push(key.clone()),
+        }
+    }
+    for (key, _) in &base_rows {
+        if !fresh_rows.iter().any(|(k, _)| k == key) {
+            report.unmatched.push(format!("{key} (baseline only)"));
+        }
+    }
+    Ok(report)
+}
+
+/// Diff two `BENCH_*.json` files on disk.
+pub fn compare_files(baseline: &str, fresh: &str, tolerance_pct: f64) -> Result<CompareReport> {
+    let b = parse(&std::fs::read_to_string(baseline)?)?;
+    let f = parse(&std::fs::read_to_string(fresh)?)?;
+    compare_docs(&b, &f, tolerance_pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(rows: &str) -> Json {
+        parse(&format!("{{\"workload\": \"t\", \"rows\": [{rows}]}}")).unwrap()
+    }
+
+    #[test]
+    fn matched_rows_diff_and_gate() {
+        let base = doc(
+            r#"{"op":"decode","format":"huf2","threads":4,"mb_per_s":1000.0},
+               {"op":"encode","format":"huf2","threads":4,"mb_per_s":500.0}"#,
+        );
+        let fresh = doc(
+            r#"{"op":"decode","format":"huf2","threads":4,"mb_per_s":700.0},
+               {"op":"encode","format":"huf2","threads":4,"mb_per_s":510.0}"#,
+        );
+        let r = compare_docs(&base, &fresh, 25.0).unwrap();
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.regressions().count(), 1);
+        let reg = r.regressions().next().unwrap();
+        assert_eq!(reg.key, "decode/huf2@4");
+        assert!((reg.delta_pct - -30.0).abs() < 1e-9);
+        // within tolerance: 30% loss passes a 35% gate
+        let r = compare_docs(&base, &fresh, 35.0).unwrap();
+        assert_eq!(r.regressions().count(), 0);
+    }
+
+    #[test]
+    fn unmatched_rows_never_fail() {
+        let base = doc(r#"{"op":"old","threads":1,"mb_per_s":100.0}"#);
+        let fresh = doc(r#"{"op":"new","threads":1,"mb_per_s":1.0}"#);
+        let r = compare_docs(&base, &fresh, 25.0).unwrap();
+        assert_eq!(r.rows.len(), 0);
+        assert_eq!(r.regressions().count(), 0);
+        assert_eq!(r.unmatched.len(), 2);
+    }
+
+    #[test]
+    fn empty_baseline_is_all_unmatched() {
+        // the committed first baseline has no rows (populated from CI
+        // artifacts); the gate must pass until it is refreshed
+        let base = doc("");
+        let fresh = doc(r#"{"op":"decode","format":"huf2","threads":2,"mb_per_s":42.0}"#);
+        let r = compare_docs(&base, &fresh, 25.0).unwrap();
+        assert_eq!(r.regressions().count(), 0);
+        assert_eq!(r.unmatched, vec!["decode/huf2@2".to_string()]);
+    }
+
+    #[test]
+    fn missing_fields_are_format_errors() {
+        assert!(compare_docs(&parse("{}").unwrap(), &doc(""), 25.0).is_err());
+        let bad = doc(r#"{"format":"x","threads":1,"mb_per_s":1.0}"#);
+        assert!(compare_docs(&bad, &doc(""), 25.0).is_err());
+        let no_mbs = doc(r#"{"op":"x","threads":1}"#);
+        assert!(compare_docs(&no_mbs, &doc(""), 25.0).is_err());
+    }
+
+    #[test]
+    fn zero_baseline_rows_are_skipped_not_divided() {
+        let base = doc(r#"{"op":"x","threads":1,"mb_per_s":0.0}"#);
+        let fresh = doc(r#"{"op":"x","threads":1,"mb_per_s":5.0}"#);
+        let r = compare_docs(&base, &fresh, 25.0).unwrap();
+        assert_eq!(r.rows.len(), 0);
+        assert_eq!(r.unmatched.len(), 1);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("vecsz_bench_compare_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let b = dir.join("base.json");
+        let f = dir.join("fresh.json");
+        std::fs::write(
+            &b,
+            r#"{"rows":[{"op":"a","threads":1,"mb_per_s":10.0}]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            &f,
+            r#"{"rows":[{"op":"a","threads":1,"mb_per_s":2.0}]}"#,
+        )
+        .unwrap();
+        let r =
+            compare_files(b.to_str().unwrap(), f.to_str().unwrap(), 25.0).unwrap();
+        assert_eq!(r.regressions().count(), 1);
+    }
+}

@@ -1,0 +1,75 @@
+//! `bench-compare` — CI gate diffing fresh `BENCH_*.json` output against
+//! committed baselines.
+//!
+//!     bench-compare --baseline ../ci/bench-baselines --fresh . [--tolerance 25]
+//!
+//! Every `BENCH_*.json` in the fresh directory is compared against the
+//! same-named file in the baseline directory (missing baseline files are
+//! reported and skipped — a brand-new bench must be able to land first).
+//! Exit code 1 when any matched row lost more than `--tolerance` percent
+//! of its baseline throughput.
+
+use std::process::ExitCode;
+
+use vecsz::bench::compare::compare_files;
+use vecsz::cli::Args;
+
+fn run() -> Result<bool, vecsz::error::VszError> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let a = Args::parse(&argv)?;
+    let baseline_dir = a.str_or("baseline", "../ci/bench-baselines").to_string();
+    let fresh_dir = a.str_or("fresh", ".").to_string();
+    let tolerance = a.f64_or("tolerance", 25.0)?;
+    a.reject_unknown()?;
+
+    let mut fresh_files: Vec<String> = std::fs::read_dir(&fresh_dir)?
+        .filter_map(|e| e.ok())
+        .filter_map(|e| e.file_name().into_string().ok())
+        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+        .collect();
+    fresh_files.sort();
+    if fresh_files.is_empty() {
+        println!("bench-compare: no BENCH_*.json in {fresh_dir} — nothing to gate");
+        return Ok(true);
+    }
+
+    let mut ok = true;
+    for name in &fresh_files {
+        let base = format!("{baseline_dir}/{name}");
+        let fresh = format!("{fresh_dir}/{name}");
+        if !std::path::Path::new(&base).exists() {
+            println!("{name}: no committed baseline ({base}) — skipped");
+            continue;
+        }
+        let report = compare_files(&base, &fresh, tolerance)?;
+        println!("{name}: {} matched rows (gate: -{tolerance}%)", report.rows.len());
+        for r in &report.rows {
+            let flag = if r.regressed { "  REGRESSION" } else { "" };
+            println!(
+                "  {:<28} {:>10.1} -> {:>10.1} MB/s  {:>+7.1}%{flag}",
+                r.key, r.base_mb_s, r.fresh_mb_s, r.delta_pct
+            );
+        }
+        for u in &report.unmatched {
+            println!("  {u}: unmatched (ignored)");
+        }
+        if report.regressions().count() > 0 {
+            ok = false;
+        }
+    }
+    Ok(ok)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => {
+            eprintln!("bench-compare: throughput regression beyond tolerance");
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("bench-compare: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -7,6 +7,8 @@
 
 use crate::util::timer::Timer;
 
+pub mod compare;
+
 /// Result of one benchmark.
 #[derive(Clone, Debug)]
 pub struct BenchStats {

@@ -21,7 +21,8 @@ pub struct Args {
 }
 
 /// Known boolean switches (no value).
-const SWITCHES: &[&str] = &["help", "quick", "full", "verbose", "no-lossless", "csv", "stream"];
+const SWITCHES: &[&str] =
+    &["help", "quick", "full", "verbose", "no-lossless", "csv", "stream", "tune-chunks"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {

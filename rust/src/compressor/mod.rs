@@ -255,7 +255,7 @@ pub(crate) fn encode_body(
     if field.data.is_empty() {
         return Err(VszError::config("empty field"));
     }
-    if cfg.block_size != 0 && !(2..=1 << 20).contains(&cfg.block_size) {
+    if cfg.block_size != 0 && format::check_block_size(cfg.block_size as u64).is_err() {
         // same bounds the decoder enforces, so every container we write is
         // one we can read back (and a bad --block errors instead of
         // tripping the BlockShape assert)
@@ -394,9 +394,7 @@ pub(crate) fn decode_body(header: &Header, sections: &[Section], threads: usize)
         return Err(VszError::format("empty dims"));
     }
     let bs = header.block_size as usize;
-    if !(2..=1 << 20).contains(&bs) {
-        return Err(VszError::format(format!("bad block size {bs}")));
-    }
+    format::check_block_size(bs as u64)?;
     if header.radius < 2 {
         return Err(VszError::format(format!("bad radius {}", header.radius)));
     }
@@ -498,8 +496,9 @@ pub(crate) fn decode_body(header: &Header, sections: &[Section], threads: usize)
     Ok(out_field)
 }
 
-/// Decompress a `.vsz` container (either version: v1 monolithic containers
-/// and v2 chunked streaming containers are both accepted).
+/// Decompress a `.vsz` container (any version: v1 monolithic, v2 chunked
+/// and v3 indexed-chunked containers all decode through this entry point,
+/// dispatched on the leading magic).
 pub fn decompress(bytes: &[u8], threads: usize) -> Result<Field> {
     if format::is_chunked_container(bytes) {
         return crate::stream::decompress_chunked(bytes, threads);

@@ -11,12 +11,15 @@ use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 
 use crate::autotune::{autotune, TuneConfig, TuneSettings};
-use crate::compressor::{compress, BackendChoice, Config, CompressStats, EbMode};
+use crate::compressor::{
+    compress, default_block_size, BackendChoice, Config, CompressStats, EbMode,
+};
 use crate::coordinator::pool::ThreadPool;
 use crate::data::Field;
 use crate::error::{Result, VszError};
+use crate::metrics::SizeStats;
 use crate::stream;
-use crate::util::timer::Timer;
+use crate::util::timer::{StageProfile, Timer};
 
 /// Pipeline configuration.
 #[derive(Clone, Copy, Debug)]
@@ -29,6 +32,15 @@ pub struct PipelineConfig {
     pub widths: [usize; 2],
     /// Bounded queue depth between stages (backpressure).
     pub queue_depth: usize,
+    /// `Some(span)`: write each step as an indexed (VSZ3) chunked
+    /// streaming container with this leading-dim chunk span (0 = default
+    /// span) — the path for time-step fields larger than RAM. `None`:
+    /// monolithic v1 containers.
+    pub chunked: Option<usize>,
+    /// With `chunked`: re-run the autotuner on each chunk's slab instead
+    /// of once per step, so the configuration tracks non-stationary
+    /// fields. The per-step whole-field tune is skipped then.
+    pub chunk_autotune: bool,
 }
 
 impl Default for PipelineConfig {
@@ -39,6 +51,8 @@ impl Default for PipelineConfig {
             tune: TuneSettings::default(),
             widths: [8, 16],
             queue_depth: 2,
+            chunked: None,
+            chunk_autotune: false,
         }
     }
 }
@@ -114,7 +128,9 @@ pub fn run_stream(
         let eb = cfg.base.eb.resolve(&field.data);
         let mut tuned = None;
         let mut tune_seconds = 0.0;
+        let per_chunk_tuning = cfg.chunked.is_some() && cfg.chunk_autotune;
         let retune = cfg.retune_every > 0
+            && !per_chunk_tuning
             && (step % cfg.retune_every == 0 || current.is_none());
         if retune {
             let r = autotune(&field, eb, cfg.base.radius, cfg.base.padding, &cfg.widths, cfg.tune);
@@ -127,7 +143,10 @@ pub fn run_stream(
             c.block_size = tc.block_size;
             c.backend = BackendChoice::Vec { width: tc.width };
         }
-        let (bytes, stats) = compress(&field, &c)?;
+        let (bytes, stats) = match cfg.chunked {
+            Some(span) => compress_step_chunked(&field, &c, eb, span, &cfg)?,
+            None => compress(&field, &c)?,
+        };
         sink(step, bytes)?;
         report.steps.push(StepReport {
             step,
@@ -141,6 +160,44 @@ pub fn run_stream(
     }
     report.total_seconds = t_total.elapsed_s();
     Ok(report)
+}
+
+/// Compress one time-step through the indexed streaming container (the
+/// out-of-core path of [`run_stream`]) and map its [`stream::StreamStats`]
+/// onto the per-step [`CompressStats`] the report carries.
+fn compress_step_chunked(
+    field: &Field,
+    c: &Config,
+    eb: f64,
+    span: usize,
+    cfg: &PipelineConfig,
+) -> Result<(Vec<u8>, CompressStats)> {
+    // the chunked writer requires an absolute bound; eb is already
+    // resolved against this field
+    let mut c = *c;
+    c.eb = EbMode::Abs(eb);
+    let opts = stream::StreamOptions {
+        chunk_autotune: cfg.chunk_autotune.then_some(cfg.tune),
+        tune_widths: cfg.widths,
+        ..stream::StreamOptions::default()
+    };
+    let backend_name = c.backend.instantiate().name();
+    let (bytes, s) = stream::compress_chunked_with(field, &c, span, opts)?;
+    let bs = if c.block_size == 0 { default_block_size(field.dims.ndim) } else { c.block_size };
+    let mut profile = StageProfile::new();
+    profile.add("pq", s.pq_seconds);
+    let stats = CompressStats {
+        n_elements: s.n_elements,
+        n_blocks: field.dims.num_blocks(bs),
+        n_outliers: s.n_outliers,
+        eb,
+        block_size: bs,
+        backend: backend_name,
+        pq_seconds: s.pq_seconds,
+        profile,
+        size: SizeStats { raw_bytes: s.raw_bytes, compressed_bytes: s.compressed_bytes },
+    };
+    Ok((bytes, stats))
 }
 
 fn spawn_producer(
@@ -282,8 +339,7 @@ mod tests {
             base: Config { eb: EbMode::Abs(1e-3), ..Config::default() },
             retune_every: 4,
             tune: TuneSettings { sample_pct: 20.0, iterations: 1, seed: 2 },
-            widths: [8, 16],
-            queue_depth: 2,
+            ..PipelineConfig::default()
         };
         let mut received = Vec::new();
         let report = run_stream(
@@ -357,15 +413,82 @@ mod tests {
     }
 
     #[test]
-    fn batch_driver_chunked_mode_emits_v2_containers() {
+    fn batch_driver_chunked_mode_emits_indexed_containers() {
         let fields: Vec<Field> = (0..3).map(step_field).collect();
         let cfg = Config { eb: EbMode::Rel(1e-3), ..Config::default() };
         let items = compress_batch(fields.clone(), &cfg, 2, Some(16)).unwrap();
         for (i, item) in items.iter().enumerate() {
             assert!(crate::format::is_chunked_container(&item.bytes), "{}", item.name);
+            assert_eq!(&item.bytes[..4], crate::format::MAGIC3, "{}", item.name);
             assert!(item.n_chunks >= 4, "{} chunks", item.n_chunks);
             let rec = crate::compressor::decompress(&item.bytes, 2).unwrap();
             assert_eq!(rec.data.len(), fields[i].data.len());
+        }
+    }
+
+    #[test]
+    fn run_stream_chunked_mode_emits_decodable_indexed_containers() {
+        let cfg = PipelineConfig {
+            base: Config { eb: EbMode::Abs(1e-3), ..Config::default() },
+            retune_every: 0,
+            chunked: Some(16),
+            ..PipelineConfig::default()
+        };
+        let mut blobs = Vec::new();
+        let report = run_stream(
+            |i| if i < 3 { Some(step_field(i)) } else { None },
+            cfg,
+            |_, b| {
+                blobs.push(b);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(report.steps.len(), 3);
+        assert!(report.overall_ratio() > 1.0);
+        for (i, b) in blobs.iter().enumerate() {
+            assert_eq!(&b[..4], crate::format::MAGIC3, "step {i} not a v3 container");
+            // random access works on every step's container
+            let mut dec =
+                crate::stream::StreamDecompressor::new(std::io::Cursor::new(&b[..])).unwrap();
+            assert!(dec.load_index().unwrap().n_chunks() >= 4);
+            let rec = crate::compressor::decompress(b, 2).unwrap();
+            let orig = step_field(i);
+            for (o, r) in orig.data.iter().zip(&rec.data) {
+                assert!((o - r).abs() <= 1e-3 + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn run_stream_per_chunk_autotune_smoke() {
+        // per-chunk tuning replaces the per-step tune (tuned is None) and
+        // the output still decodes within the bound
+        let cfg = PipelineConfig {
+            base: Config { eb: EbMode::Abs(1e-3), ..Config::default() },
+            retune_every: 4,
+            tune: TuneSettings { sample_pct: 20.0, iterations: 1, seed: 9 },
+            chunked: Some(16),
+            chunk_autotune: true,
+            ..PipelineConfig::default()
+        };
+        let mut blobs = Vec::new();
+        let report = run_stream(
+            |i| if i < 2 { Some(step_field(i)) } else { None },
+            cfg,
+            |_, b| {
+                blobs.push(b);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert!(report.steps.iter().all(|s| s.tuned.is_none()));
+        for (i, b) in blobs.iter().enumerate() {
+            let rec = crate::compressor::decompress(b, 1).unwrap();
+            let orig = step_field(i);
+            for (o, r) in orig.data.iter().zip(&rec.data) {
+                assert!((o - r).abs() <= 1e-3 + 1e-5);
+            }
         }
     }
 
@@ -375,8 +498,8 @@ mod tests {
             base: Config { eb: EbMode::Abs(1e-3), ..Config::default() },
             retune_every: 1,
             tune: TuneSettings { sample_pct: 10.0, iterations: 1, seed: 3 },
-            widths: [8, 16],
             queue_depth: 1,
+            ..PipelineConfig::default()
         };
         let mut blobs = Vec::new();
         run_stream(

@@ -40,6 +40,47 @@
 //! or hands batches of frames to the thread pool for chunk-parallel decode
 //! (cuSZ-style coarse-grained parallelism).
 //!
+//! # v3 — indexed streaming container (random access / partial decode)
+//!
+//! v3 keeps the v2 chunk framing and adds two things: **per-chunk encode
+//! configuration** and a **seekable index footer**, the combination that
+//! makes a chunk decodable without touching any other byte of the file
+//! (the SZx/cuSZ partial-retrieval idea).
+//!
+//! ```text
+//! magic "VSZ3" | u16 version=3 | ...same header fields as v2... | u64 chunk_span
+//! then, per chunk (in leading-dim order):
+//!   u8 0xC7 | uvarint chunk_index | uvarint lead_extent
+//!   uvarint block_size | u8 lane_width      -- per-chunk config (v3 only)
+//!   u8 n_sections | sections as in v2
+//! trailer:
+//!   u8 0xE7 | uvarint n_chunks | u32 crc32(n_chunks as u64 LE)
+//! index footer (last bytes of the file):
+//!   u8 0xD3 | uvarint n_chunks
+//!   n_chunks x (uvarint offset | uvarint frame_len | uvarint lead_extent
+//!               | uvarint block_size | u8 lane_width)
+//!   u32 crc32(0xD3 .. last entry)
+//!   u32 footer_len                 -- bytes from 0xD3 through the crc
+//! ```
+//!
+//! `offset` is the byte position of the chunk's `0xC7` marker from the
+//! start of the container; frames are contiguous from the header, which
+//! the readers verify. The footer is **length-suffixed** so a reader can
+//! `open()` a file, read the trailing 4 bytes, seek back `footer_len`
+//! bytes, CRC-check the index and then fetch exactly `frame_len` bytes of
+//! any chunk. The per-chunk `block_size` exists because the streaming
+//! compressor may re-run the autotune heuristic per chunk
+//! ([`crate::stream::StreamOptions`]); `lane_width` records the SIMD lane
+//! count the encoder picked (informational — it does not affect decode).
+//!
+//! **Version-dispatch compatibility rule:** `compressor::decompress`
+//! dispatches on the leading magic — `VSZ1` monolithic, `VSZ2` chunked,
+//! `VSZ3` chunked + indexed — and all three decode through the same
+//! section cores, so every container this crate has ever written keeps
+//! decoding bit-exactly. v2 readers of *this* crate reject v3 input by
+//! magic (never misparse it), and the v3 reader accepts v2 containers
+//! (the index-footer APIs then report "no index" instead of seeking).
+//!
 //! Section payloads are already entropy-coded by their producers (Huffman
 //! for codes, lossless for outlier streams); the container adds integrity
 //! and framing only.
@@ -86,12 +127,32 @@ pub const VERSION: u16 = 1;
 pub const MAGIC2: &[u8; 4] = b"VSZ2";
 pub const VERSION2: u16 = 2;
 
-/// Frame markers of the v2 streaming container.
+pub const MAGIC3: &[u8; 4] = b"VSZ3";
+pub const VERSION3: u16 = 3;
+
+/// Frame markers of the v2/v3 streaming containers.
 pub const CHUNK_TAG: u8 = 0xC7;
 pub const END_TAG: u8 = 0xE7;
+/// First byte of the v3 index footer.
+pub const INDEX_TAG: u8 = 0xD3;
 
-/// Serialized size of the v2 stream header (fixed — no section count).
+/// Serialized size of the v2/v3 stream header (fixed — no section count).
 pub const STREAM_HEADER_LEN: usize = 4 + 2 + 1 + 1 + 24 + 8 + 2 + 4 + 1 + 1 + 8;
+
+/// Block-size bounds every reader enforces — one source of truth for the
+/// v3 chunk-meta parsers and `decode_body`'s header check, so a container
+/// accepted by one decode path is accepted by all of them.
+pub const MIN_BLOCK_SIZE: u64 = 2;
+pub const MAX_BLOCK_SIZE: u64 = 1 << 20;
+
+/// Validate a parsed block size against [`MIN_BLOCK_SIZE`]/
+/// [`MAX_BLOCK_SIZE`].
+pub fn check_block_size(bs: u64) -> Result<u32> {
+    if !(MIN_BLOCK_SIZE..=MAX_BLOCK_SIZE).contains(&bs) {
+        return Err(VszError::format(format!("bad block size {bs}")));
+    }
+    Ok(bs as u32)
+}
 
 /// Section tags.
 pub mod tag {
@@ -118,13 +179,43 @@ pub struct Header {
     pub padding: PaddingPolicy,
 }
 
-/// v2 stream header: the v1 header fields plus the chunking geometry.
+/// v2/v3 stream header: the v1 header fields plus the chunking geometry.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StreamHeader {
     pub header: Header,
     /// Leading-dimension extent of every full chunk (the last chunk may be
-    /// shorter). Always a multiple of the block size.
+    /// shorter). Always a multiple of the *base* block size (per-chunk
+    /// autotuning may encode an individual chunk with a different block
+    /// size; the span stays fixed).
     pub chunk_span: u64,
+    /// Container version: [`VERSION2`] (no footer) or [`VERSION3`]
+    /// (per-chunk config + index footer).
+    pub version: u16,
+}
+
+/// Per-chunk encode configuration carried by v3 chunk frames and the index
+/// footer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkMeta {
+    /// Block size this chunk was encoded with (drives decode geometry).
+    pub block_size: u32,
+    /// SIMD lane width the encoder used (informational; 0 = scalar/SZ-1.4
+    /// backend).
+    pub width: u8,
+}
+
+/// One entry of the v3 index footer: where a chunk frame lives and how it
+/// was encoded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkIndexEntry {
+    /// Byte offset of the chunk's [`CHUNK_TAG`] marker from the start of
+    /// the container.
+    pub offset: u64,
+    /// Frame length in bytes (marker through the last section byte).
+    pub frame_len: u64,
+    /// Leading-dim extent of the chunk's slab.
+    pub lead_extent: u64,
+    pub meta: ChunkMeta,
 }
 
 /// One framed section.
@@ -276,9 +367,9 @@ pub fn write_container(header: &Header, sections: &[Section]) -> Vec<u8> {
 pub fn read_container(data: &[u8]) -> Result<(Header, Vec<Section>)> {
     let mut c = Cursor::new(data);
     let magic = c.take(4).ok_or_else(|| VszError::format("truncated magic"))?;
-    if magic == MAGIC2 {
+    if magic == MAGIC2 || magic == MAGIC3 {
         return Err(VszError::format(
-            "chunked (VSZ2) container: use the streaming decoder (stream module)",
+            "chunked (VSZ2/VSZ3) container: use the streaming decoder (stream module)",
         ));
     }
     if magic != MAGIC {
@@ -297,61 +388,83 @@ pub fn read_container(data: &[u8]) -> Result<(Header, Vec<Section>)> {
     Ok((header, sections))
 }
 
-/// True when `data` starts with the v2 streaming magic.
+/// True when `data` starts with a chunked streaming magic (v2 or v3).
 pub fn is_chunked_container(data: &[u8]) -> bool {
-    data.len() >= 4 && &data[..4] == MAGIC2
+    data.len() >= 4 && (&data[..4] == MAGIC2 || &data[..4] == MAGIC3)
 }
 
-/// Serialize a v2 stream header (fixed [`STREAM_HEADER_LEN`] bytes).
-pub fn write_stream_header(sh: &StreamHeader) -> Vec<u8> {
+/// Serialize a v2/v3 stream header (fixed [`STREAM_HEADER_LEN`] bytes);
+/// the magic and version word follow `sh.version`. Errors on any other
+/// version (the `StreamHeader` fields are public, so a hand-built header
+/// must not panic the format layer).
+pub fn write_stream_header(sh: &StreamHeader) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(STREAM_HEADER_LEN);
-    out.extend_from_slice(MAGIC2);
-    out.extend_from_slice(&VERSION2.to_le_bytes());
+    match sh.version {
+        VERSION2 => out.extend_from_slice(MAGIC2),
+        VERSION3 => out.extend_from_slice(MAGIC3),
+        v => return Err(VszError::config(format!("unsupported stream version {v}"))),
+    }
+    out.extend_from_slice(&sh.version.to_le_bytes());
     write_header_fields(&mut out, &sh.header);
     out.extend_from_slice(&sh.chunk_span.to_le_bytes());
     debug_assert_eq!(out.len(), STREAM_HEADER_LEN);
-    out
+    Ok(out)
 }
 
-/// Parse a v2 stream header from the first [`STREAM_HEADER_LEN`] bytes.
+/// Parse a v2/v3 stream header from the first [`STREAM_HEADER_LEN`] bytes.
 pub fn read_stream_header(data: &[u8]) -> Result<StreamHeader> {
     let mut c = Cursor::new(data);
     let magic = c.take(4).ok_or_else(|| VszError::format("truncated magic"))?;
-    if magic != MAGIC2 {
+    if magic != MAGIC2 && magic != MAGIC3 {
         return Err(VszError::format("bad magic (not a chunked .vsz container)"));
     }
     let version = c.u16().ok_or_else(|| VszError::format("truncated version"))?;
-    if version != VERSION2 {
-        return Err(VszError::format(format!("unsupported stream version {version}")));
+    let expect = if magic == MAGIC2 { VERSION2 } else { VERSION3 };
+    if version != expect {
+        return Err(VszError::format(format!("stream version {version} does not match its magic")));
     }
     let header = read_header_fields(&mut c)?;
     let chunk_span = c.u64().ok_or_else(|| VszError::format("truncated chunk span"))?;
     if chunk_span == 0 {
         return Err(VszError::format("zero chunk span"));
     }
-    Ok(StreamHeader { header, chunk_span })
+    Ok(StreamHeader { header, chunk_span, version })
 }
 
-/// Append one chunk frame (marker + geometry + sections).
-pub fn write_chunk_frame(out: &mut Vec<u8>, chunk_index: u64, lead_extent: u64, sections: &[Section]) {
+/// Append one chunk frame (marker + geometry + sections). `meta` must be
+/// `Some` exactly for v3 containers (per-chunk config bytes).
+pub fn write_chunk_frame(
+    out: &mut Vec<u8>,
+    chunk_index: u64,
+    lead_extent: u64,
+    meta: Option<ChunkMeta>,
+    sections: &[Section],
+) {
     out.push(CHUNK_TAG);
     put_uvarint(out, chunk_index);
     put_uvarint(out, lead_extent);
+    if let Some(m) = meta {
+        put_uvarint(out, m.block_size as u64);
+        out.push(m.width);
+    }
     out.push(sections.len() as u8);
     for s in sections {
         write_section(out, s);
     }
 }
 
-/// A parsed v2 frame: either one chunk or the end-of-stream trailer.
+/// A parsed v2/v3 frame: either one chunk or the end-of-stream trailer.
+/// `meta` is `Some` for v3 frames, `None` for v2 (config comes from the
+/// stream header then).
 #[derive(Debug)]
 pub enum Frame {
-    Chunk { index: u64, lead_extent: u64, sections: Vec<Section> },
+    Chunk { index: u64, lead_extent: u64, meta: Option<ChunkMeta>, sections: Vec<Section> },
     End { n_chunks: u64 },
 }
 
-/// Parse the next frame at the cursor (chunk or trailer).
-pub fn read_frame(c: &mut Cursor) -> Result<Frame> {
+/// Parse the next frame at the cursor (chunk or trailer). `version` selects
+/// the chunk-frame layout (v3 frames carry per-chunk config bytes).
+pub fn read_frame(c: &mut Cursor, version: u16) -> Result<Frame> {
     let marker = c.u8().ok_or_else(|| VszError::format("truncated frame marker"))?;
     match marker {
         CHUNK_TAG => {
@@ -361,13 +474,22 @@ pub fn read_frame(c: &mut Cursor) -> Result<Frame> {
             if lead_extent == 0 {
                 return Err(VszError::format("empty chunk"));
             }
+            let meta = if version >= VERSION3 {
+                let block_size = check_block_size(
+                    c.uvarint().ok_or_else(|| VszError::format("truncated chunk block size"))?,
+                )?;
+                let width = c.u8().ok_or_else(|| VszError::format("truncated chunk width"))?;
+                Some(ChunkMeta { block_size, width })
+            } else {
+                None
+            };
             let n_sections =
                 c.u8().ok_or_else(|| VszError::format("truncated chunk section count"))? as usize;
             let mut sections = Vec::with_capacity(n_sections);
             for _ in 0..n_sections {
                 sections.push(read_section(c)?);
             }
-            Ok(Frame::Chunk { index, lead_extent, sections })
+            Ok(Frame::Chunk { index, lead_extent, meta, sections })
         }
         END_TAG => {
             let n_chunks = c.uvarint().ok_or_else(|| VszError::format("truncated trailer"))?;
@@ -379,6 +501,67 @@ pub fn read_frame(c: &mut Cursor) -> Result<Frame> {
         }
         other => Err(VszError::format(format!("unknown frame marker {other:#x}"))),
     }
+}
+
+/// Append the v3 index footer: tag, entry table, CRC, and the trailing
+/// length word that makes the footer discoverable from EOF.
+pub fn write_index_footer(out: &mut Vec<u8>, entries: &[ChunkIndexEntry]) {
+    let start = out.len();
+    out.push(INDEX_TAG);
+    put_uvarint(out, entries.len() as u64);
+    for e in entries {
+        put_uvarint(out, e.offset);
+        put_uvarint(out, e.frame_len);
+        put_uvarint(out, e.lead_extent);
+        put_uvarint(out, e.meta.block_size as u64);
+        out.push(e.meta.width);
+    }
+    let crc = crc32(&out[start..]);
+    out.extend_from_slice(&crc.to_le_bytes());
+    let len = (out.len() - start) as u32; // INDEX_TAG through the crc
+    out.extend_from_slice(&len.to_le_bytes());
+}
+
+/// Parse and CRC-check a v3 index footer. `bytes` is the `footer_len`-byte
+/// slice preceding the trailing length word (INDEX_TAG through the crc).
+pub fn read_index_footer(bytes: &[u8]) -> Result<Vec<ChunkIndexEntry>> {
+    if bytes.len() < 1 + 1 + 4 {
+        return Err(VszError::format("truncated index footer"));
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let crc = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    if crc32(body) != crc {
+        return Err(VszError::Integrity("index footer crc mismatch".into()));
+    }
+    let mut c = Cursor::new(body);
+    if c.u8() != Some(INDEX_TAG) {
+        return Err(VszError::format("bad index footer tag"));
+    }
+    let n = c.uvarint().ok_or_else(|| VszError::format("truncated index count"))?;
+    // each entry is at least 5 bytes, so the count is bounded by the
+    // CRC-verified footer length — no forged-length allocation possible
+    if n == 0 || n as usize > body.len() / 5 + 1 {
+        return Err(VszError::format(format!("implausible index chunk count {n}")));
+    }
+    let mut entries = Vec::with_capacity(n as usize);
+    for k in 0..n {
+        let trunc = || VszError::format(format!("truncated index entry {k}"));
+        let offset = c.uvarint().ok_or_else(trunc)?;
+        let frame_len = c.uvarint().ok_or_else(trunc)?;
+        let lead_extent = c.uvarint().ok_or_else(trunc)?;
+        let block_size = check_block_size(c.uvarint().ok_or_else(trunc)?)?;
+        let width = c.u8().ok_or_else(trunc)?;
+        entries.push(ChunkIndexEntry {
+            offset,
+            frame_len,
+            lead_extent,
+            meta: ChunkMeta { block_size, width },
+        });
+    }
+    if c.remaining() != 0 {
+        return Err(VszError::format("trailing bytes in index footer"));
+    }
+    Ok(entries)
 }
 
 /// Append the end-of-stream trailer.
@@ -474,58 +657,78 @@ mod tests {
         assert_eq!(h2.codes_kind, CodesKind::Sz14);
     }
 
-    // ------------------------------------------------------- v2 framing
+    // --------------------------------------------------- v2/v3 framing
 
     fn sample_stream_header() -> StreamHeader {
-        StreamHeader { header: sample_header(), chunk_span: 32 }
+        StreamHeader { header: sample_header(), chunk_span: 32, version: VERSION2 }
+    }
+
+    fn sample_stream_header_v3() -> StreamHeader {
+        StreamHeader { version: VERSION3, ..sample_stream_header() }
     }
 
     #[test]
-    fn stream_header_roundtrip() {
-        let sh = sample_stream_header();
-        let bytes = write_stream_header(&sh);
-        assert_eq!(bytes.len(), STREAM_HEADER_LEN);
-        assert!(is_chunked_container(&bytes));
-        let back = read_stream_header(&bytes).unwrap();
-        assert_eq!(sh, back);
+    fn stream_header_roundtrip_both_versions() {
+        for sh in [sample_stream_header(), sample_stream_header_v3()] {
+            let bytes = write_stream_header(&sh).unwrap();
+            assert_eq!(bytes.len(), STREAM_HEADER_LEN);
+            assert!(is_chunked_container(&bytes));
+            let back = read_stream_header(&bytes).unwrap();
+            assert_eq!(sh, back);
+        }
+        // a version the format does not know is an error, not a panic
+        let bad = StreamHeader { version: 7, ..sample_stream_header() };
+        assert!(write_stream_header(&bad).is_err());
     }
 
     #[test]
-    fn v1_reader_rejects_v2_container_cleanly() {
-        let bytes = write_stream_header(&sample_stream_header());
-        let err = read_container(&bytes).unwrap_err();
-        assert!(err.to_string().contains("stream"), "{err}");
+    fn version_magic_mismatch_rejected() {
+        // a VSZ3 magic with a version word of 2 (or vice versa) is a
+        // forgery, not a valid container
+        let mut bytes = write_stream_header(&sample_stream_header_v3()).unwrap();
+        bytes[4..6].copy_from_slice(&VERSION2.to_le_bytes());
+        assert!(read_stream_header(&bytes).is_err());
+    }
+
+    #[test]
+    fn v1_reader_rejects_chunked_containers_cleanly() {
+        for sh in [sample_stream_header(), sample_stream_header_v3()] {
+            let bytes = write_stream_header(&sh).unwrap();
+            let err = read_container(&bytes).unwrap_err();
+            assert!(err.to_string().contains("stream"), "{err}");
+        }
     }
 
     #[test]
     fn chunk_frames_and_trailer_roundtrip() {
-        let mut out = write_stream_header(&sample_stream_header());
+        let mut out = write_stream_header(&sample_stream_header()).unwrap();
         let secs = vec![
             Section { tag: tag::CODES, raw_len: 64, payload: vec![5; 10] },
             Section { tag: tag::PAD_SCALARS, raw_len: 4, payload: vec![1, 2, 3, 4] },
         ];
-        write_chunk_frame(&mut out, 0, 32, &secs);
-        write_chunk_frame(&mut out, 1, 7, &secs);
+        write_chunk_frame(&mut out, 0, 32, None, &secs);
+        write_chunk_frame(&mut out, 1, 7, None, &secs);
         write_trailer(&mut out, 2);
 
         let mut c = Cursor::new(&out[STREAM_HEADER_LEN..]);
-        match read_frame(&mut c).unwrap() {
-            Frame::Chunk { index, lead_extent, sections } => {
+        match read_frame(&mut c, VERSION2).unwrap() {
+            Frame::Chunk { index, lead_extent, meta, sections } => {
                 assert_eq!(index, 0);
                 assert_eq!(lead_extent, 32);
+                assert_eq!(meta, None);
                 assert_eq!(sections.len(), 2);
                 assert_eq!(sections[0].payload, vec![5; 10]);
             }
             other => panic!("expected chunk, got {other:?}"),
         }
-        match read_frame(&mut c).unwrap() {
+        match read_frame(&mut c, VERSION2).unwrap() {
             Frame::Chunk { index, lead_extent, .. } => {
                 assert_eq!(index, 1);
                 assert_eq!(lead_extent, 7);
             }
             other => panic!("expected chunk, got {other:?}"),
         }
-        match read_frame(&mut c).unwrap() {
+        match read_frame(&mut c, VERSION2).unwrap() {
             Frame::End { n_chunks } => assert_eq!(n_chunks, 2),
             other => panic!("expected end, got {other:?}"),
         }
@@ -533,14 +736,38 @@ mod tests {
     }
 
     #[test]
+    fn v3_chunk_frame_carries_per_chunk_config() {
+        let mut out = Vec::new();
+        let secs = vec![Section { tag: tag::CODES, raw_len: 64, payload: vec![5; 10] }];
+        let meta = ChunkMeta { block_size: 32, width: 16 };
+        write_chunk_frame(&mut out, 3, 64, Some(meta), &secs);
+        let mut c = Cursor::new(&out);
+        match read_frame(&mut c, VERSION3).unwrap() {
+            Frame::Chunk { index, lead_extent, meta: m, sections } => {
+                assert_eq!(index, 3);
+                assert_eq!(lead_extent, 64);
+                assert_eq!(m, Some(meta));
+                assert_eq!(sections.len(), 1);
+            }
+            other => panic!("expected chunk, got {other:?}"),
+        }
+        assert_eq!(c.remaining(), 0);
+        // a v2 parse of the same bytes must not silently succeed with
+        // garbage: the config bytes land in the section count / section
+        // frames and fail the walk
+        let mut c2 = Cursor::new(&out);
+        assert!(read_frame(&mut c2, VERSION2).is_err());
+    }
+
+    #[test]
     fn chunk_frame_crc_detects_flips() {
         let mut out = Vec::new();
         let secs = vec![Section { tag: tag::CODES, raw_len: 16, payload: vec![9; 16] }];
-        write_chunk_frame(&mut out, 0, 8, &secs);
+        write_chunk_frame(&mut out, 0, 8, None, &secs);
         let n = out.len();
         out[n - 3] ^= 0x40;
         let mut c = Cursor::new(&out);
-        assert!(matches!(read_frame(&mut c), Err(VszError::Integrity(_))));
+        assert!(matches!(read_frame(&mut c, VERSION2), Err(VszError::Integrity(_))));
     }
 
     #[test]
@@ -549,12 +776,81 @@ mod tests {
         write_trailer(&mut out, 5);
         out[1] ^= 0x01; // n_chunks varint
         let mut c = Cursor::new(&out);
-        assert!(read_frame(&mut c).is_err());
+        assert!(read_frame(&mut c, VERSION2).is_err());
     }
 
     #[test]
     fn unknown_marker_rejected() {
         let mut c = Cursor::new(&[0x7Fu8, 0, 0][..]);
-        assert!(read_frame(&mut c).is_err());
+        assert!(read_frame(&mut c, VERSION2).is_err());
+    }
+
+    // ------------------------------------------------------ index footer
+
+    fn sample_entries() -> Vec<ChunkIndexEntry> {
+        vec![
+            ChunkIndexEntry {
+                offset: STREAM_HEADER_LEN as u64,
+                frame_len: 300,
+                lead_extent: 32,
+                meta: ChunkMeta { block_size: 16, width: 8 },
+            },
+            ChunkIndexEntry {
+                offset: STREAM_HEADER_LEN as u64 + 300,
+                frame_len: 123,
+                lead_extent: 7,
+                meta: ChunkMeta { block_size: 32, width: 16 },
+            },
+        ]
+    }
+
+    #[test]
+    fn index_footer_roundtrip_and_length_suffix() {
+        let entries = sample_entries();
+        let mut out = vec![0xAAu8; 17]; // footer appends after arbitrary payload
+        write_index_footer(&mut out, &entries);
+        let len =
+            u32::from_le_bytes(out[out.len() - 4..].try_into().unwrap()) as usize;
+        let start = out.len() - 4 - len;
+        assert_eq!(out[start], INDEX_TAG);
+        let back = read_index_footer(&out[start..out.len() - 4]).unwrap();
+        assert_eq!(back, entries);
+    }
+
+    #[test]
+    fn index_footer_flips_rejected_everywhere() {
+        let entries = sample_entries();
+        let mut out = Vec::new();
+        write_index_footer(&mut out, &entries);
+        let len = u32::from_le_bytes(out[out.len() - 4..].try_into().unwrap()) as usize;
+        let body_end = out.len() - 4;
+        for at in 0..body_end {
+            let mut bad = out.clone();
+            bad[at] ^= 0x11;
+            assert!(
+                read_index_footer(&bad[body_end - len..body_end]).is_err(),
+                "flip at {at} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn index_footer_truncation_rejected() {
+        let mut out = Vec::new();
+        write_index_footer(&mut out, &sample_entries());
+        let body_end = out.len() - 4;
+        for cut in [0, 1, 3, body_end / 2, body_end - 1] {
+            assert!(read_index_footer(&out[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn index_footer_rejects_bad_block_size() {
+        let mut entries = sample_entries();
+        entries[1].meta.block_size = 1; // below the decoder's floor
+        let mut out = Vec::new();
+        write_index_footer(&mut out, &entries);
+        let body_end = out.len() - 4;
+        assert!(read_index_footer(&out[..body_end]).is_err());
     }
 }

@@ -11,7 +11,8 @@
 //! * [`compressor`] — `compress`/`decompress` over whole in-memory fields.
 //! * [`stream`] — the chunked streaming engine (`StreamCompressor`/
 //!   `StreamDecompressor` over `std::io::Read`/`Write`) for out-of-core
-//!   fields and chunk-parallel decode.
+//!   fields, chunk-parallel decode, per-chunk autotuning and index-driven
+//!   random access (`decode_chunk`/`decode_range`/`decode_rows`).
 //! * [`data`] — synthetic SDRBench-like dataset suites.
 //! * [`metrics`] — PSNR / rate-distortion evaluation.
 //! * [`autotune`] — block-size/lane-width autotuning.

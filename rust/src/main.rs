@@ -39,13 +39,23 @@ COMMANDS
              flags: --eb 1e-4 | --rel-eb 1e-4, --block N, --backend
              sz14|psz|vec8|vec16, --padding zero|avg-global|..., --threads N
   decompress --input F.vsz --out F.f32 [--threads N]
-             (accepts both monolithic v1 and chunked v2 containers)
+             (accepts every container version: monolithic v1, chunked
+             v2 and indexed v3)
   stream     compress   --input F.f32 --dims NxM --out F.vsz
-                        [--chunk-rows N] [--threads N] + compress flags
+                        [--chunk-rows N] [--threads N] [--tune-chunks
+                        [--sample-pct P] [--iterations N]] + compress flags
                         (absolute --eb required; bounded memory; chunk
-                        pipeline across --threads workers)
+                        pipeline across --threads workers; --tune-chunks
+                        re-runs the block/lane autotuner per chunk)
              decompress --input F.vsz --out F.f32 [--threads N]
                         (chunk-parallel decode via the thread pool)
+             inspect    --input F.vsz
+                        (print the header and the per-chunk index of a
+                        VSZ3 container: offsets, sizes, rows, config)
+             extract    --input F.vsz --out F.f32 [--threads N]
+                        (--chunk K | --rows LO:HI)
+                        (random access: decode one chunk or a row range,
+                        reading only the footer + the frames it covers)
   batch      --suite NAME|all [--out-dir D] [--threads N]
              [--stream [--chunk-rows N]] + compress flags
              (whole dataset suite through the pool, one field per worker)
@@ -57,6 +67,9 @@ COMMANDS
               padding|table3|stability|all> [--out-dir results] [--quick]
   gen-data   --suite NAME --out-dir D [--full]
   pipeline   --suite NAME --steps N [--out-dir D]
+             [--stream [--chunk-rows N] [--tune-chunks]]
+             (--stream writes each step as an indexed VSZ3 container;
+             --tune-chunks tunes per chunk instead of per step)
   info       [--artifacts DIR]
 ";
 
@@ -144,18 +157,31 @@ fn cmd_decompress(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn require_out(a: &Args) -> Result<String> {
+    Ok(a.get("out").ok_or_else(|| VszError::config("--out required"))?.to_string())
+}
+
 fn cmd_stream(a: &Args) -> Result<()> {
     let mode = a.positional.first().map(|s| s.as_str()).unwrap_or("");
     let input = a.get("input").ok_or_else(|| VszError::config("--input required"))?.to_string();
-    let out = a.get("out").ok_or_else(|| VszError::config("--out required"))?.to_string();
     let threads = a.usize_or("threads", 1)?;
     match mode {
         "compress" => {
+            let out = require_out(a)?;
             let cfg = parse_common(a)?;
             let dims = dio::parse_dims(
                 a.get("dims").ok_or_else(|| VszError::config("--dims required"))?,
             )?;
             let chunk_rows = a.usize_or("chunk-rows", 0)?;
+            let tune = TuneSettings {
+                sample_pct: a.f64_or("sample-pct", 5.0)?,
+                iterations: a.usize_or("iterations", 1)?,
+                ..TuneSettings::default()
+            };
+            let opts = vecsz::stream::StreamOptions {
+                chunk_autotune: a.has("tune-chunks").then_some(tune),
+                ..vecsz::stream::StreamOptions::default()
+            };
             let fin = std::fs::File::open(&input)?;
             let expect = dims.len() as u64 * 4;
             let got = fin.metadata()?.len();
@@ -167,12 +193,15 @@ fn cmd_stream(a: &Args) -> Result<()> {
             }
             std::fs::create_dir_all(Path::new(&out).parent().unwrap_or(Path::new(".")))?;
             let fout = std::fs::File::create(&out)?;
-            let stats = vecsz::stream::compress_stream(
-                BufReader::new(fin),
+            // compress_stream_with reads whole chunk-span slabs, so memory
+            // stays bounded by one slab regardless of file size
+            let stats = vecsz::stream::compress_stream_with(
+                fin,
                 BufWriter::new(fout),
                 dims,
                 &cfg,
                 chunk_rows,
+                opts,
             )?;
             println!(
                 "{input} -> {out}: {} -> {} in {} chunks  CR {:.2}x  P&Q {:.0} MB/s  outliers {}",
@@ -186,6 +215,7 @@ fn cmd_stream(a: &Args) -> Result<()> {
             Ok(())
         }
         "decompress" => {
+            let out = require_out(a)?;
             let fin = std::fs::File::open(&input)?;
             std::fs::create_dir_all(Path::new(&out).parent().unwrap_or(Path::new(".")))?;
             let fout = std::fs::File::create(&out)?;
@@ -203,8 +233,77 @@ fn cmd_stream(a: &Args) -> Result<()> {
             );
             Ok(())
         }
+        "inspect" => {
+            let fin = std::fs::File::open(&input)?;
+            let mut dec = vecsz::stream::StreamDecompressor::new(BufReader::new(fin))?;
+            let h = *dec.header();
+            let d = h.header.dims;
+            println!(
+                "{input}: VSZ{} container, dims {:?}, eb {:.3e}, base block {}, chunk span {}",
+                h.version,
+                &d.shape[..d.ndim],
+                h.header.eb,
+                h.header.block_size,
+                h.chunk_span,
+            );
+            match dec.load_index() {
+                Ok(idx) => {
+                    println!("{} chunks indexed:", idx.n_chunks());
+                    println!("{:>6} {:>12} {:>12} {:>8} {:>8} {:>6} {:>6}",
+                        "chunk", "offset", "bytes", "row0", "rows", "block", "lanes");
+                    for (k, e) in idx.entries.iter().enumerate() {
+                        println!(
+                            "{k:>6} {:>12} {:>12} {:>8} {:>8} {:>6} {:>6}",
+                            e.offset, e.frame_len, idx.lead_offsets[k], e.lead_extent,
+                            e.meta.block_size, e.meta.width,
+                        );
+                    }
+                }
+                Err(e) => println!("no random-access index: {e}"),
+            }
+            Ok(())
+        }
+        "extract" => {
+            let out = require_out(a)?;
+            let fin = std::fs::File::open(&input)?;
+            let mut dec = vecsz::stream::StreamDecompressor::new(BufReader::new(fin))?;
+            let chunk = a.get("chunk").map(|s| s.to_string());
+            let rows = a.get("rows").map(|s| s.to_string());
+            let data = match (chunk, rows) {
+                (Some(k), None) => {
+                    let k: usize = k
+                        .parse()
+                        .map_err(|_| VszError::config("--chunk: not an integer"))?;
+                    let c = dec.decode_chunk(k)?;
+                    println!(
+                        "{input}: chunk {k} = rows {}..{} ({} values)",
+                        c.lead_offset,
+                        c.lead_offset + c.lead_extent,
+                        c.data.len()
+                    );
+                    c.data
+                }
+                (None, Some(r)) => {
+                    let (lo, hi) = r
+                        .split_once(':')
+                        .and_then(|(lo, hi)| Some((lo.parse().ok()?, hi.parse().ok()?)))
+                        .ok_or_else(|| VszError::config("--rows: expected LO:HI"))?;
+                    let data = dec.decode_rows(lo..hi, threads)?;
+                    println!("{input}: rows {lo}..{hi} ({} values)", data.len());
+                    data
+                }
+                _ => {
+                    return Err(VszError::config(
+                        "extract: exactly one of --chunk K or --rows LO:HI required",
+                    ))
+                }
+            };
+            dio::write_f32_file(Path::new(&out), &data)?;
+            println!("wrote {out}");
+            Ok(())
+        }
         other => Err(VszError::config(format!(
-            "stream: expected 'compress' or 'decompress', got '{other}'"
+            "stream: expected 'compress', 'decompress', 'inspect' or 'extract', got '{other}'"
         ))),
     }
 }
@@ -385,12 +484,19 @@ fn cmd_pipeline(a: &Args) -> Result<()> {
     let steps = a.usize_or("steps", 8)?;
     let out_dir = a.str_or("out-dir", "").to_string();
     let seed = a.usize_or("seed", 42)? as u64;
+    let chunked = if a.has("stream") || a.get("chunk-rows").is_some() {
+        Some(a.usize_or("chunk-rows", 0)?)
+    } else {
+        None
+    };
     let pcfg = PipelineConfig {
         base: cfg,
         retune_every: a.usize_or("retune-every", 16)?,
         tune: TuneSettings::default(),
         widths: [8, 16],
         queue_depth: 2,
+        chunked,
+        chunk_autotune: a.has("tune-chunks"),
     };
     let nm = name.clone();
     let report = run_stream(

@@ -23,21 +23,37 @@
 //!   [`decompress_stream`]/[`decompress_chunked`] decode batches of chunks
 //!   concurrently via [`ThreadPool::scatter_gather`] — byte-identical to
 //!   serial decode because slabs are assembled by offset.
+//! * The default output is the **v3 indexed container**: a CRC'd,
+//!   length-suffixed footer records every chunk's byte range, slab extent
+//!   and encode config, so a `Read + Seek` reader can
+//!   [`decode_chunk`](StreamDecompressor::decode_chunk) /
+//!   [`decode_range`](StreamDecompressor::decode_range) /
+//!   [`decode_rows`](StreamDecompressor::decode_rows) an arbitrary part of
+//!   a huge field reading only the header, the footer and the frames it
+//!   needs. Multi-chunk ranges decode chunk-parallel through the pool.
+//! * With [`StreamOptions::chunk_autotune`] the compressor re-runs the
+//!   §III-E autotune heuristic on each chunk's slab (size-gated), so the
+//!   (block size × lane width) configuration tracks non-stationary fields;
+//!   the per-chunk choice is recorded in the frame and the index.
 //!
 //! Streaming requires an **absolute** error bound: a range-relative bound
 //! needs the whole field before the first byte can be emitted.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 
+use crate::autotune::{autotune, TuneSettings};
 use crate::blocks::Dims;
-use crate::compressor::{decode_body, default_block_size, encode_body, Config, EbMode};
+use crate::compressor::{
+    decode_body, default_block_size, encode_body, BackendChoice, Config, EbMode,
+};
 use crate::coordinator::pool::ThreadPool;
 use crate::data::Field;
 use crate::error::{Result, VszError};
-use crate::format::{self, Frame, Header, Section, StreamHeader};
+use crate::format::{self, ChunkIndexEntry, ChunkMeta, Frame, Header, Section, StreamHeader};
 use crate::quant::CodesKind;
 use crate::util::crc32;
 use crate::util::{bytes_to_f32, f32_as_bytes};
@@ -45,6 +61,31 @@ use crate::util::{bytes_to_f32, f32_as_bytes};
 /// Upper bound on a single section payload accepted from a stream (guards
 /// allocations against forged lengths).
 const MAX_SECTION_LEN: u64 = 1 << 30;
+
+/// Element-count floor below which per-chunk autotuning is skipped: on a
+/// tiny slab the sampling run costs more than the encode it would tune.
+pub const CHUNK_AUTOTUNE_MIN_ELEMS: usize = 1 << 14;
+
+/// Writer-side options beyond the compression [`Config`].
+#[derive(Clone, Copy, Debug)]
+pub struct StreamOptions {
+    /// Container version to write: [`format::VERSION3`] (indexed footer,
+    /// the default) or [`format::VERSION2`] (legacy layout, no footer).
+    pub version: u16,
+    /// Re-run the autotune heuristic on each chunk's slab and encode the
+    /// chunk with the winning (block size × lane width). v3 only (the
+    /// choice must be recorded per chunk); skipped for slabs smaller than
+    /// [`CHUNK_AUTOTUNE_MIN_ELEMS`] and for non-vectorized backends.
+    pub chunk_autotune: Option<TuneSettings>,
+    /// Lane widths the per-chunk tuner considers.
+    pub tune_widths: [usize; 2],
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        Self { version: format::VERSION3, chunk_autotune: None, tune_widths: [8, 16] }
+    }
+}
 
 /// Aggregate statistics of one streaming compression run.
 #[derive(Clone, Debug, Default)]
@@ -79,30 +120,67 @@ pub fn default_chunk_span(dims: Dims, block_size: usize) -> usize {
 struct ChunkOut {
     n_outliers: usize,
     pq_seconds: f64,
+    lead_extent: u64,
+    meta: ChunkMeta,
 }
 
 /// Encode one slab sub-field into a framed chunk (free function so the
-/// thread-pool job owns everything it needs).
+/// thread-pool job owns everything it needs). With per-chunk autotuning
+/// enabled the §III-E heuristic runs on this slab first and the winning
+/// (block size × lane width) replaces the base config — the choice is
+/// returned in [`ChunkOut::meta`] so the writer can index it.
 fn encode_chunk(
     index: u64,
     field: Field,
     cfg: Config,
     overlap_aux: bool,
+    opts: StreamOptions,
 ) -> Result<(Vec<u8>, ChunkOut)> {
+    let mut cfg = cfg;
+    if let Some(ts) = opts.chunk_autotune {
+        if field.data.len() >= CHUNK_AUTOTUNE_MIN_ELEMS
+            && matches!(cfg.backend, BackendChoice::Vec { .. })
+        {
+            let eb = cfg.eb.resolve(&field.data);
+            let r = autotune(&field, eb, cfg.radius, cfg.padding, &opts.tune_widths, ts);
+            cfg.block_size = r.best.block_size;
+            cfg.backend = BackendChoice::Vec { width: r.best.width };
+        }
+    }
     let backend = cfg.backend.instantiate();
     // entropy_threads = 1: streaming parallelism is across chunks, not
     // within one. Pipelined runs (threads > 1) still overlap each chunk's
     // lossless streams with its Huffman pass on scoped helper threads;
     // serial runs (threads = 1) stay strictly single-threaded.
     let body = encode_body(&field, &cfg, backend.as_ref(), 1, overlap_aux)?;
+    let meta = ChunkMeta {
+        block_size: body.block_size as u32,
+        width: match cfg.backend {
+            BackendChoice::Vec { width } => width as u8,
+            _ => 0,
+        },
+    };
+    let lead_extent = field.dims.shape[0] as u64;
     let mut frame = Vec::new();
-    format::write_chunk_frame(&mut frame, index, field.dims.shape[0] as u64, &body.sections);
-    Ok((frame, ChunkOut { n_outliers: body.n_outliers, pq_seconds: body.pq_seconds }))
+    format::write_chunk_frame(
+        &mut frame,
+        index,
+        lead_extent,
+        (opts.version >= format::VERSION3).then_some(meta),
+        &body.sections,
+    );
+    Ok((frame, ChunkOut {
+        n_outliers: body.n_outliers,
+        pq_seconds: body.pq_seconds,
+        lead_extent,
+        meta,
+    }))
 }
 
 type ChunkResult = (u64, Result<(Vec<u8>, ChunkOut)>);
 
-/// Incremental compressor writing a v2 chunked container to `W`.
+/// Incremental compressor writing a chunked container (v3 indexed by
+/// default, v2 via [`StreamOptions::version`]) to `W`.
 ///
 /// Feed samples in row-major order with [`push`](Self::push) (any slice
 /// granularity), then call [`finish`](Self::finish). The compressor holds
@@ -110,6 +188,7 @@ type ChunkResult = (u64, Result<(Vec<u8>, ChunkOut)>);
 pub struct StreamCompressor<W: Write> {
     out: W,
     cfg: Config,
+    opts: StreamOptions,
     dims: Dims,
     chunk_span: usize,
     row_elems: usize,
@@ -119,6 +198,8 @@ pub struct StreamCompressor<W: Write> {
     buf: Vec<f32>,
     chunk_index: u64,
     stats: StreamStats,
+    /// One entry per written frame, in order — becomes the v3 footer.
+    index: Vec<ChunkIndexEntry>,
     // chunk-pipeline state (threads > 1)
     pool: Option<ThreadPool>,
     tx: Sender<ChunkResult>,
@@ -126,16 +207,38 @@ pub struct StreamCompressor<W: Write> {
     window: usize,
     in_flight: usize,
     next_write: u64,
-    ready: BTreeMap<u64, Vec<u8>>,
+    ready: BTreeMap<u64, (Vec<u8>, u64, ChunkMeta)>,
 }
 
 impl<W: Write> StreamCompressor<W> {
-    /// Create a compressor and write the stream header.
+    /// Create a compressor with default [`StreamOptions`] (v3 indexed
+    /// container, no per-chunk autotuning) and write the stream header.
     ///
     /// `chunk_span` is the leading-dim extent per chunk (rounded up to a
     /// whole number of block rows); 0 picks [`default_chunk_span`]. The
     /// error bound must be [`EbMode::Abs`].
-    pub fn new(mut out: W, dims: Dims, cfg: &Config, chunk_span: usize) -> Result<Self> {
+    pub fn new(out: W, dims: Dims, cfg: &Config, chunk_span: usize) -> Result<Self> {
+        Self::with_options(out, dims, cfg, chunk_span, StreamOptions::default())
+    }
+
+    /// [`new`](Self::new) with explicit writer options (container version,
+    /// per-chunk autotuning).
+    pub fn with_options(
+        mut out: W,
+        dims: Dims,
+        cfg: &Config,
+        chunk_span: usize,
+        opts: StreamOptions,
+    ) -> Result<Self> {
+        if opts.version != format::VERSION2 && opts.version != format::VERSION3 {
+            return Err(VszError::config(format!("unsupported stream version {}", opts.version)));
+        }
+        if opts.chunk_autotune.is_some() && opts.version < format::VERSION3 {
+            return Err(VszError::config(
+                "per-chunk autotuning needs the v3 container (the per-chunk \
+                 block size must be recorded in the frame and index)",
+            ));
+        }
         let eb = match cfg.eb {
             EbMode::Abs(e) if e > 0.0 && e.is_finite() => e,
             EbMode::Abs(_) => return Err(VszError::config("invalid absolute error bound")),
@@ -167,8 +270,9 @@ impl<W: Write> StreamCompressor<W> {
                 padding: cfg.padding.normalized(),
             },
             chunk_span: span as u64,
+            version: opts.version,
         };
-        let hdr = format::write_stream_header(&header);
+        let hdr = format::write_stream_header(&header)?;
         out.write_all(&hdr)?;
 
         let threads = cfg.threads.max(1);
@@ -177,6 +281,7 @@ impl<W: Write> StreamCompressor<W> {
         Ok(Self {
             out,
             cfg,
+            opts,
             dims,
             chunk_span: span,
             row_elems: dims.shape[1] * dims.shape[2],
@@ -191,6 +296,7 @@ impl<W: Write> StreamCompressor<W> {
                 compressed_bytes: hdr.len(),
                 ..StreamStats::default()
             },
+            index: Vec::new(),
             pool,
             tx,
             rx,
@@ -211,12 +317,29 @@ impl<W: Write> StreamCompressor<W> {
         Dims { shape, ndim: self.dims.ndim }
     }
 
+    /// Record a frame's index entry (offset = bytes written so far, which
+    /// is the frame's first byte because frames are written in order) and
+    /// write it out. v2 output writes no footer, so it accumulates no
+    /// entries — the index must not grow unboundedly on a long v2 run.
+    fn write_frame(&mut self, frame: &[u8], lead_extent: u64, meta: ChunkMeta) -> Result<()> {
+        if self.opts.version >= format::VERSION3 {
+            self.index.push(ChunkIndexEntry {
+                offset: self.stats.compressed_bytes as u64,
+                frame_len: frame.len() as u64,
+                lead_extent,
+                meta,
+            });
+        }
+        self.out.write_all(frame)?;
+        self.stats.compressed_bytes += frame.len();
+        self.next_write += 1;
+        Ok(())
+    }
+
     /// Write every frame that is next in line.
     fn write_ready(&mut self) -> Result<()> {
-        while let Some(frame) = self.ready.remove(&self.next_write) {
-            self.out.write_all(&frame)?;
-            self.stats.compressed_bytes += frame.len();
-            self.next_write += 1;
+        while let Some((frame, lead_extent, meta)) = self.ready.remove(&self.next_write) {
+            self.write_frame(&frame, lead_extent, meta)?;
         }
         Ok(())
     }
@@ -245,7 +368,7 @@ impl<W: Write> StreamCompressor<W> {
         let (frame, info) = res?;
         self.stats.n_outliers += info.n_outliers;
         self.stats.pq_seconds += info.pq_seconds;
-        self.ready.insert(index, frame);
+        self.ready.insert(index, (frame, info.lead_extent, info.meta));
         Ok(true)
     }
 
@@ -263,8 +386,9 @@ impl<W: Write> StreamCompressor<W> {
             let mut job_cfg = self.cfg;
             job_cfg.threads = 1; // parallelism is across chunks here
             let tx = self.tx.clone();
+            let opts = self.opts;
             self.pool.as_ref().unwrap().submit(move || {
-                let res = encode_chunk(index, field, job_cfg, true);
+                let res = encode_chunk(index, field, job_cfg, true, opts);
                 let _ = tx.send((index, res));
             });
             self.in_flight += 1;
@@ -272,12 +396,10 @@ impl<W: Write> StreamCompressor<W> {
             while self.recv_one(false)? {}
             self.write_ready()?;
         } else {
-            let (frame, info) = encode_chunk(index, field, self.cfg, false)?;
+            let (frame, info) = encode_chunk(index, field, self.cfg, false, self.opts)?;
             self.stats.n_outliers += info.n_outliers;
             self.stats.pq_seconds += info.pq_seconds;
-            self.out.write_all(&frame)?;
-            self.stats.compressed_bytes += frame.len();
-            self.next_write += 1;
+            self.write_frame(&frame, info.lead_extent, info.meta)?;
         }
         Ok(())
     }
@@ -331,72 +453,96 @@ impl<W: Write> StreamCompressor<W> {
         self.write_ready()?;
         debug_assert!(self.ready.is_empty());
         debug_assert_eq!(self.next_write, self.chunk_index);
-        let mut trailer = Vec::new();
-        format::write_trailer(&mut trailer, self.chunk_index);
-        self.out.write_all(&trailer)?;
-        self.stats.compressed_bytes += trailer.len();
+        let mut tail = Vec::new();
+        format::write_trailer(&mut tail, self.chunk_index);
+        if self.opts.version >= format::VERSION3 {
+            format::write_index_footer(&mut tail, &self.index);
+        }
+        self.out.write_all(&tail)?;
+        self.stats.compressed_bytes += tail.len();
         self.out.flush()?;
         Ok((self.out, self.stats))
     }
 }
 
-/// Compress a raw little-endian f32 stream (e.g. an `.f32` file) to a v2
-/// chunked container in bounded memory.
+/// Cap on the streaming read buffer (multiple of 4). A chunk span
+/// targeting ~4 MiB never gets near this; it only bites when the caller
+/// forces a gigantic explicit span.
+const MAX_READ_CHUNK_BYTES: usize = 1 << 28;
+
+/// Compress a raw little-endian f32 stream (e.g. an `.f32` file) to a
+/// chunked container in bounded memory (v3 indexed by default).
 pub fn compress_stream<R: Read, W: Write>(
-    mut input: R,
+    input: R,
     out: W,
     dims: Dims,
     cfg: &Config,
     chunk_span: usize,
 ) -> Result<StreamStats> {
-    let mut sc = StreamCompressor::new(out, dims, cfg, chunk_span)?;
-    let mut buf = vec![0u8; 1 << 20];
-    let mut carry = [0u8; 4];
-    let mut carry_len = 0usize;
+    compress_stream_with(input, out, dims, cfg, chunk_span, StreamOptions::default())
+}
+
+/// [`compress_stream`] with explicit writer options.
+///
+/// Reads whole chunk-span-sized buffers so `push` takes its zero-copy
+/// whole-slab path and memory stays bounded by one slab (plus the
+/// compressor's in-flight window) no matter how large the input file is.
+pub fn compress_stream_with<R: Read, W: Write>(
+    mut input: R,
+    out: W,
+    dims: Dims,
+    cfg: &Config,
+    chunk_span: usize,
+    opts: StreamOptions,
+) -> Result<StreamStats> {
+    let mut sc = StreamCompressor::with_options(out, dims, cfg, chunk_span, opts)?;
+    let chunk_bytes =
+        sc.chunk_span.saturating_mul(sc.row_elems).saturating_mul(4).clamp(4, MAX_READ_CHUNK_BYTES);
+    let mut buf = vec![0u8; chunk_bytes];
     loop {
-        let n = input.read(&mut buf)?;
-        if n == 0 {
+        // fill the buffer completely (short `read`s happen on pipes and
+        // sockets) so each push is one whole slab when possible
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            let n = input.read(&mut buf[filled..])?;
+            if n == 0 {
+                break;
+            }
+            filled += n;
+        }
+        if filled == 0 {
             break;
         }
-        let mut bytes = &buf[..n];
-        if carry_len > 0 {
-            let need = 4 - carry_len;
-            let take = need.min(bytes.len());
-            carry[carry_len..carry_len + take].copy_from_slice(&bytes[..take]);
-            carry_len += take;
-            bytes = &bytes[take..];
-            if carry_len == 4 {
-                sc.push(&[f32::from_le_bytes(carry)])?;
-                carry_len = 0;
-            }
+        if filled % 4 != 0 {
+            return Err(VszError::format("input length is not a multiple of 4 bytes"));
         }
-        let whole = bytes.len() / 4 * 4;
-        if whole > 0 {
-            sc.push(&bytes_to_f32(&bytes[..whole]))?;
+        sc.push(&bytes_to_f32(&buf[..filled]))?;
+        if filled < buf.len() {
+            break; // EOF mid-buffer
         }
-        let rem = &bytes[whole..];
-        if !rem.is_empty() {
-            // `bytes` is only non-empty here when the carry was flushed (a
-            // partial top-up exhausts the read), so this never clobbers a
-            // pending carry
-            carry[..rem.len()].copy_from_slice(rem);
-            carry_len = rem.len();
-        }
-    }
-    if carry_len != 0 {
-        return Err(VszError::format("input length is not a multiple of 4 bytes"));
     }
     let (_, stats) = sc.finish()?;
     Ok(stats)
 }
 
-/// Compress an in-memory field to a v2 chunked container.
+/// Compress an in-memory field to a chunked container (v3 indexed).
 pub fn compress_chunked(
     field: &Field,
     cfg: &Config,
     chunk_span: usize,
 ) -> Result<(Vec<u8>, StreamStats)> {
-    let mut sc = StreamCompressor::new(Vec::new(), field.dims, cfg, chunk_span)?;
+    compress_chunked_with(field, cfg, chunk_span, StreamOptions::default())
+}
+
+/// [`compress_chunked`] with explicit writer options (container version,
+/// per-chunk autotuning).
+pub fn compress_chunked_with(
+    field: &Field,
+    cfg: &Config,
+    chunk_span: usize,
+    opts: StreamOptions,
+) -> Result<(Vec<u8>, StreamStats)> {
+    let mut sc = StreamCompressor::with_options(Vec::new(), field.dims, cfg, chunk_span, opts)?;
     sc.push(&field.data)?;
     sc.finish()
 }
@@ -447,7 +593,7 @@ fn read_section_io<R: Read>(r: &mut R) -> Result<Section> {
     Ok(Section { tag, raw_len, payload })
 }
 
-fn read_frame_io<R: Read>(r: &mut R) -> Result<Frame> {
+fn read_frame_io<R: Read>(r: &mut R, version: u16) -> Result<Frame> {
     let marker = read_u8_io(r)?;
     match marker {
         format::CHUNK_TAG => {
@@ -456,12 +602,19 @@ fn read_frame_io<R: Read>(r: &mut R) -> Result<Frame> {
             if lead_extent == 0 {
                 return Err(VszError::format("empty chunk"));
             }
+            let meta = if version >= format::VERSION3 {
+                let block_size = format::check_block_size(read_uvarint_io(r)?)?;
+                let width = read_u8_io(r)?;
+                Some(ChunkMeta { block_size, width })
+            } else {
+                None
+            };
             let n_sections = read_u8_io(r)? as usize;
             let mut sections = Vec::with_capacity(n_sections);
             for _ in 0..n_sections {
                 sections.push(read_section_io(r)?);
             }
-            Ok(Frame::Chunk { index, lead_extent, sections })
+            Ok(Frame::Chunk { index, lead_extent, meta, sections })
         }
         format::END_TAG => {
             let n_chunks = read_uvarint_io(r)?;
@@ -485,13 +638,82 @@ pub struct DecodedChunk {
     pub data: Vec<f32>,
 }
 
-/// Incremental decoder for v2 chunked containers over any `Read`.
+/// The loaded v3 chunk index: one entry per chunk plus derived positions.
+#[derive(Clone, Debug)]
+pub struct ChunkIndex {
+    pub entries: Vec<ChunkIndexEntry>,
+    /// Leading-dim offset of each chunk's slab within the full field.
+    pub lead_offsets: Vec<usize>,
+    /// Byte position where the footer begins (frames + trailer end here).
+    pub footer_start: u64,
+}
+
+impl ChunkIndex {
+    pub fn n_chunks(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// Build per-chunk slab positions from footer entries, enforcing the
+/// invariants the writer guarantees: frames are contiguous from the
+/// header, extents tile the leading dimension, block sizes are sane.
+fn validate_index(
+    header: &StreamHeader,
+    entries: Vec<ChunkIndexEntry>,
+    footer_start: u64,
+) -> Result<ChunkIndex> {
+    let dims = header.header.dims;
+    let span = header.chunk_span as usize;
+    let mut lead_offsets = Vec::with_capacity(entries.len());
+    let mut lead_done = 0usize;
+    let mut pos = format::STREAM_HEADER_LEN as u64;
+    for (k, e) in entries.iter().enumerate() {
+        if e.offset != pos {
+            return Err(VszError::format(format!(
+                "index entry {k}: offset {} does not follow the previous frame",
+                e.offset
+            )));
+        }
+        // checked arithmetic throughout: a CRC-consistent but forged entry
+        // with frame_len near u64::MAX must not wrap past the bound check
+        // and reach the frame allocation below
+        pos = e
+            .offset
+            .checked_add(e.frame_len)
+            .ok_or_else(|| VszError::format("index offset overflow"))?;
+        // the END trailer (>= 6 bytes) sits between the last frame and the
+        // footer, so every frame must end strictly before it; this also
+        // caps every frame_len at the file size
+        let end = pos
+            .checked_add(6)
+            .ok_or_else(|| VszError::format("index offset overflow"))?;
+        if end > footer_start {
+            return Err(VszError::format(format!("index entry {k} overruns the trailer")));
+        }
+        let extent = e.lead_extent as usize;
+        let remaining = dims.shape[0] - lead_done;
+        if extent == 0 || extent > remaining || (extent != span && extent != remaining) {
+            return Err(VszError::format(format!("index entry {k}: bad extent {extent}")));
+        }
+        lead_offsets.push(lead_done);
+        lead_done += extent;
+    }
+    if lead_done != dims.shape[0] {
+        return Err(VszError::format("index does not cover the field"));
+    }
+    Ok(ChunkIndex { entries, lead_offsets, footer_start })
+}
+
+/// Incremental decoder for v2/v3 chunked containers over any `Read`; with
+/// `Read + Seek` input it additionally offers footer-driven random access
+/// ([`decode_chunk`](Self::decode_chunk) and friends).
 pub struct StreamDecompressor<R: Read> {
     input: R,
     header: StreamHeader,
     next_index: u64,
     lead_done: usize,
     finished: bool,
+    index: Option<ChunkIndex>,
 }
 
 impl<R: Read> StreamDecompressor<R> {
@@ -499,16 +721,21 @@ impl<R: Read> StreamDecompressor<R> {
         let mut hdr = [0u8; format::STREAM_HEADER_LEN];
         input.read_exact(&mut hdr)?;
         let header = format::read_stream_header(&hdr)?;
-        Ok(Self { input, header, next_index: 0, lead_done: 0, finished: false })
+        Ok(Self { input, header, next_index: 0, lead_done: 0, finished: false, index: None })
     }
 
     pub fn header(&self) -> &StreamHeader {
         &self.header
     }
 
-    fn chunk_header(&self, extent: usize) -> Header {
+    /// Per-chunk decode header: the slab's dims plus the block size the
+    /// chunk was actually encoded with (v3 frames may override the base).
+    fn chunk_header(&self, extent: usize, meta: Option<ChunkMeta>) -> Header {
         let mut h = self.header.header;
         h.dims.shape[0] = extent;
+        if let Some(m) = meta {
+            h.block_size = m.block_size;
+        }
         h
     }
 
@@ -530,19 +757,20 @@ impl<R: Read> StreamDecompressor<R> {
     }
 
     /// Read and validate the next frame without decoding it, advancing the
-    /// running position. Returns `None` once the trailer has been consumed
-    /// and verified. Shared by [`Self::next_chunk`] and
+    /// running position. Returns the chunk's decode header (dims +
+    /// per-chunk block size) and sections, or `None` once the trailer has
+    /// been consumed and verified. Shared by [`Self::next_chunk`] and
     /// [`decompress_stream`] so the trailer checks live in one place.
-    fn next_frame(&mut self) -> Result<Option<(usize, Vec<Section>)>> {
+    fn next_frame(&mut self) -> Result<Option<(Header, Vec<Section>)>> {
         if self.finished {
             return Ok(None);
         }
-        match read_frame_io(&mut self.input)? {
-            Frame::Chunk { index, lead_extent, sections } => {
+        match read_frame_io(&mut self.input, self.header.version)? {
+            Frame::Chunk { index, lead_extent, meta, sections } => {
                 let extent = self.check_chunk(index, lead_extent)?;
                 self.lead_done += extent;
                 self.next_index += 1;
-                Ok(Some((extent, sections)))
+                Ok(Some((self.chunk_header(extent, meta), sections)))
             }
             Frame::End { n_chunks } => {
                 if n_chunks != self.next_index {
@@ -564,8 +792,8 @@ impl<R: Read> StreamDecompressor<R> {
     pub fn next_chunk(&mut self) -> Result<Option<DecodedChunk>> {
         match self.next_frame()? {
             None => Ok(None),
-            Some((extent, sections)) => {
-                let h = self.chunk_header(extent);
+            Some((h, sections)) => {
+                let extent = h.dims.shape[0];
                 let data = decode_body(&h, &sections, 1)?;
                 Ok(Some(DecodedChunk {
                     index: self.next_index - 1,
@@ -578,39 +806,190 @@ impl<R: Read> StreamDecompressor<R> {
     }
 }
 
-/// Decode a batch of owned chunk frames, in parallel when `pool` is given.
+impl<R: Read + Seek> StreamDecompressor<R> {
+    /// Load (and cache) the v3 chunk index: seek to EOF, read the trailing
+    /// length word, CRC-check the footer, validate its geometry. Errors on
+    /// v2 containers (they carry no index).
+    pub fn load_index(&mut self) -> Result<&ChunkIndex> {
+        if self.index.is_none() {
+            let idx = self.read_index()?;
+            self.index = Some(idx);
+        }
+        Ok(self.index.as_ref().unwrap())
+    }
+
+    /// Run `f` (which may seek freely), then restore the reader to where
+    /// it was — random access must not derail a concurrent sequential
+    /// [`next_chunk`](Self::next_chunk) walk over the same decoder.
+    fn with_restored_position<T>(
+        &mut self,
+        f: impl FnOnce(&mut Self) -> Result<T>,
+    ) -> Result<T> {
+        let saved = self.input.stream_position()?;
+        let res = f(self);
+        self.input.seek(SeekFrom::Start(saved))?;
+        res
+    }
+
+    fn read_index(&mut self) -> Result<ChunkIndex> {
+        if self.header.version < format::VERSION3 {
+            return Err(VszError::format(
+                "container has no chunk index (pre-v3): random access needs a VSZ3 container",
+            ));
+        }
+        self.with_restored_position(|this| this.read_index_inner())
+    }
+
+    fn read_index_inner(&mut self) -> Result<ChunkIndex> {
+        let file_len = self.input.seek(SeekFrom::End(0))?;
+        let min = format::STREAM_HEADER_LEN as u64;
+        if file_len < min + 4 {
+            return Err(VszError::format("truncated container: no index footer"));
+        }
+        self.input.seek(SeekFrom::End(-4))?;
+        let len = read_u32_io(&mut self.input)? as u64;
+        if len < 6 || len > file_len - min - 4 {
+            return Err(VszError::format(format!("implausible index footer length {len}")));
+        }
+        let footer_start = file_len - 4 - len;
+        self.input.seek(SeekFrom::Start(footer_start))?;
+        let mut buf = vec![0u8; len as usize];
+        self.input.read_exact(&mut buf)?;
+        let entries = format::read_index_footer(&buf)?;
+        validate_index(&self.header, entries, footer_start)
+    }
+
+    /// Fetch and parse one chunk's frame through the index, verifying the
+    /// frame agrees with its index entry. The reader position is restored
+    /// afterwards, so sequential decoding can continue unharmed.
+    fn parse_indexed_frame(&mut self, k: usize) -> Result<(Header, Vec<Section>)> {
+        self.with_restored_position(|this| this.parse_indexed_frame_inner(k))
+    }
+
+    fn parse_indexed_frame_inner(&mut self, k: usize) -> Result<(Header, Vec<Section>)> {
+        let e = self.index.as_ref().unwrap().entries[k];
+        self.input.seek(SeekFrom::Start(e.offset))?;
+        // frame_len was bounded by the file size in `validate_index`, so
+        // this allocation cannot be driven past the container itself
+        let mut buf = vec![0u8; e.frame_len as usize];
+        self.input.read_exact(&mut buf)?;
+        let mut c = crate::bitio::Cursor::new(&buf);
+        match format::read_frame(&mut c, self.header.version)? {
+            Frame::Chunk { index, lead_extent, meta, sections } => {
+                let meta_bs = meta.map(|m| m.block_size);
+                if index != k as u64
+                    || lead_extent != e.lead_extent
+                    || meta_bs != Some(e.meta.block_size)
+                {
+                    return Err(VszError::format(format!(
+                        "chunk {k}: frame does not match its index entry"
+                    )));
+                }
+                if c.remaining() != 0 {
+                    return Err(VszError::format(format!(
+                        "chunk {k}: index frame length overshoots the frame"
+                    )));
+                }
+                Ok((self.chunk_header(lead_extent as usize, meta), sections))
+            }
+            Frame::End { .. } => {
+                Err(VszError::format(format!("chunk {k}: index points at the trailer")))
+            }
+        }
+    }
+
+    /// Random access: decode chunk `k`, reading only the index footer
+    /// (once) and that chunk's byte range.
+    pub fn decode_chunk(&mut self, k: usize) -> Result<DecodedChunk> {
+        let n = self.load_index()?.n_chunks();
+        if k >= n {
+            return Err(VszError::config(format!("chunk {k} out of range (container has {n})")));
+        }
+        let lead_offset = self.index.as_ref().unwrap().lead_offsets[k];
+        let (h, sections) = self.parse_indexed_frame(k)?;
+        let extent = h.dims.shape[0];
+        let data = decode_body(&h, &sections, 1)?;
+        Ok(DecodedChunk { index: k as u64, lead_offset, lead_extent: extent, data })
+    }
+
+    /// Random access: decode the chunk range `chunks` and return the
+    /// concatenated slabs in field order. Multi-chunk ranges decode
+    /// chunk-parallel on a pool of `threads` workers.
+    pub fn decode_range(&mut self, chunks: Range<usize>, threads: usize) -> Result<Vec<f32>> {
+        let n = self.load_index()?.n_chunks();
+        if chunks.start >= chunks.end || chunks.end > n {
+            return Err(VszError::config(format!(
+                "chunk range {}..{} out of range (container has {n})",
+                chunks.start, chunks.end
+            )));
+        }
+        let mut batch = Vec::with_capacity(chunks.len());
+        for k in chunks {
+            batch.push(self.parse_indexed_frame(k)?);
+        }
+        let threads = threads.max(1);
+        let pool =
+            if threads > 1 && batch.len() > 1 { Some(ThreadPool::new(threads)) } else { None };
+        let slabs = decode_batch(batch, pool.as_ref())?;
+        Ok(slabs.concat())
+    }
+
+    /// Random access by leading-dim position: decode rows `[rows.start,
+    /// rows.end)` of the field, touching only the chunks that overlap the
+    /// range.
+    pub fn decode_rows(&mut self, rows: Range<usize>, threads: usize) -> Result<Vec<f32>> {
+        let total = self.header.header.dims.shape[0];
+        if rows.start >= rows.end || rows.end > total {
+            return Err(VszError::config(format!(
+                "row range {}..{} out of range (field has {total} rows)",
+                rows.start, rows.end
+            )));
+        }
+        let idx = self.load_index()?;
+        // lead_offsets is sorted and starts at 0, so the covering chunk of
+        // a row is the last offset <= it
+        let chunk_of = |row: usize| match idx.lead_offsets.binary_search(&row) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let first = chunk_of(rows.start);
+        let last = chunk_of(rows.end - 1);
+        let skip_rows = rows.start - idx.lead_offsets[first];
+        let data = self.decode_range(first..last + 1, threads)?;
+        let row_elems = self.header.header.dims.shape[1] * self.header.header.dims.shape[2];
+        let skip = skip_rows * row_elems;
+        let take = (rows.end - rows.start) * row_elems;
+        Ok(data[skip..skip + take].to_vec())
+    }
+}
+
+/// Decode a batch of owned chunk frames (each already carrying its decode
+/// header — slab dims + per-chunk block size), in parallel when `pool` is
+/// given.
 fn decode_batch(
-    header: &StreamHeader,
-    batch: Vec<(usize, Vec<Section>)>,
+    batch: Vec<(Header, Vec<Section>)>,
     pool: Option<&ThreadPool>,
 ) -> Result<Vec<Vec<f32>>> {
-    let base = header.header;
-    let decode_one = move |extent: usize, sections: &[Section]| -> Result<Vec<f32>> {
-        let mut h = base;
-        h.dims.shape[0] = extent;
-        decode_body(&h, sections, 1)
-    };
     match pool {
         Some(pool) if batch.len() > 1 => {
             let shared = Arc::new(batch);
             let shared2 = Arc::clone(&shared);
             let results = pool.scatter_gather(shared.len(), move |i| {
-                let (extent, sections) = &shared2[i];
-                decode_one(*extent, sections)
+                let (h, sections) = &shared2[i];
+                decode_body(h, sections, 1)
             });
             results.into_iter().collect()
         }
-        _ => batch
-            .iter()
-            .map(|(extent, sections)| decode_one(*extent, sections))
-            .collect(),
+        _ => batch.iter().map(|(h, sections)| decode_body(h, sections, 1)).collect(),
     }
 }
 
-/// Decompress a v2 chunked container from `input`, writing raw little-endian
-/// f32 bytes to `out` in field order. Chunks are decoded `threads` at a time
-/// via the pool; memory stays bounded by the batch, never the whole field.
-/// Returns the stream header.
+/// Decompress a v2/v3 chunked container from `input`, writing raw
+/// little-endian f32 bytes to `out` in field order. Chunks are decoded
+/// `threads` at a time via the pool; memory stays bounded by the batch,
+/// never the whole field. Returns the stream header. (Pure-`Read` path: a
+/// trailing v3 index footer is simply left unread — sequential decode does
+/// not need it.)
 pub fn decompress_stream<R: Read, W: Write>(
     input: R,
     mut out: W,
@@ -622,7 +1001,7 @@ pub fn decompress_stream<R: Read, W: Write>(
     let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
     loop {
         // gather up to `threads` frames, then decode them concurrently
-        let mut batch: Vec<(usize, Vec<Section>)> = Vec::with_capacity(threads);
+        let mut batch: Vec<(Header, Vec<Section>)> = Vec::with_capacity(threads);
         while batch.len() < threads {
             match dec.next_frame()? {
                 Some(frame) => batch.push(frame),
@@ -632,7 +1011,7 @@ pub fn decompress_stream<R: Read, W: Write>(
         if batch.is_empty() {
             break;
         }
-        for data in decode_batch(&header, batch, pool.as_ref())? {
+        for data in decode_batch(batch, pool.as_ref())? {
             out.write_all(f32_as_bytes(&data))?;
         }
     }
@@ -640,9 +1019,10 @@ pub fn decompress_stream<R: Read, W: Write>(
     Ok(header)
 }
 
-/// Decompress an in-memory v2 chunked container, decoding chunks
+/// Decompress an in-memory v2/v3 chunked container, decoding chunks
 /// concurrently (`threads`) — byte-identical to serial decode because
-/// slabs are assembled by offset.
+/// slabs are assembled by offset. For v3 the index footer is required and
+/// cross-checked against the frames actually walked.
 pub fn decompress_chunked(bytes: &[u8], threads: usize) -> Result<Field> {
     if bytes.len() < format::STREAM_HEADER_LEN {
         return Err(VszError::format("truncated stream header"));
@@ -654,11 +1034,13 @@ pub fn decompress_chunked(bytes: &[u8], threads: usize) -> Result<Field> {
     // index all frames up front (cheap: payloads are borrowed then owned
     // per section; the heavy work is the decode below)
     let mut c = crate::bitio::Cursor::new(&bytes[format::STREAM_HEADER_LEN..]);
-    let mut chunks: Vec<(usize, Vec<Section>)> = Vec::new();
+    let mut chunks: Vec<(Header, Vec<Section>)> = Vec::new();
+    let mut observed: Vec<ChunkIndexEntry> = Vec::new();
     let mut lead_done = 0usize;
     loop {
-        match format::read_frame(&mut c)? {
-            Frame::Chunk { index, lead_extent, sections } => {
+        let frame_start = format::STREAM_HEADER_LEN + c.pos();
+        match format::read_frame(&mut c, header.version)? {
+            Frame::Chunk { index, lead_extent, meta, sections } => {
                 if index as usize != chunks.len() {
                     return Err(VszError::format(format!(
                         "chunk out of order: got {index}, expected {}",
@@ -671,7 +1053,19 @@ pub fn decompress_chunked(bytes: &[u8], threads: usize) -> Result<Field> {
                     return Err(VszError::format(format!("bad chunk extent {extent}")));
                 }
                 lead_done += extent;
-                chunks.push((extent, sections));
+                let mut h = header.header;
+                h.dims.shape[0] = extent;
+                if let Some(m) = meta {
+                    h.block_size = m.block_size;
+                    // only v3 has a footer to cross-check against
+                    observed.push(ChunkIndexEntry {
+                        offset: frame_start as u64,
+                        frame_len: (format::STREAM_HEADER_LEN + c.pos() - frame_start) as u64,
+                        lead_extent,
+                        meta: m,
+                    });
+                }
+                chunks.push((h, sections));
             }
             Frame::End { n_chunks } => {
                 if n_chunks as usize != chunks.len() {
@@ -684,16 +1078,32 @@ pub fn decompress_chunked(bytes: &[u8], threads: usize) -> Result<Field> {
             }
         }
     }
-    if c.remaining() != 0 {
-        return Err(VszError::format("trailing garbage after stream trailer"));
-    }
     if lead_done != dims.shape[0] {
         return Err(VszError::format("stream ended before the field was complete"));
+    }
+    if header.version >= format::VERSION3 {
+        // the remaining bytes must be exactly the index footer, and its
+        // entries must describe exactly the frames we just walked
+        let rest = c.remaining();
+        if rest < 10 {
+            return Err(VszError::format("missing index footer"));
+        }
+        let footer = c.take(rest).unwrap();
+        let len = u32::from_le_bytes(footer[rest - 4..].try_into().unwrap()) as usize;
+        if len + 4 != rest {
+            return Err(VszError::format("index footer length does not match the container"));
+        }
+        let entries = format::read_index_footer(&footer[..rest - 4])?;
+        if entries != observed {
+            return Err(VszError::format("index footer disagrees with the chunk frames"));
+        }
+    } else if c.remaining() != 0 {
+        return Err(VszError::format("trailing garbage after stream trailer"));
     }
 
     let threads = threads.max(1);
     let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
-    let slabs = decode_batch(&header, chunks, pool.as_ref())?;
+    let slabs = decode_batch(chunks, pool.as_ref())?;
     let row_elems = dims.shape[1] * dims.shape[2];
     let mut data = Vec::with_capacity(dims.len());
     for slab in &slabs {
@@ -924,5 +1334,335 @@ mod tests {
             assert_eq!(span % bs, 0);
             assert!(span >= bs);
         }
+    }
+
+    // ------------------------------------------------ v3 random access
+
+    /// Footer size in bytes (length word included), read from the tail.
+    fn footer_total(container: &[u8]) -> usize {
+        let n = container.len();
+        u32::from_le_bytes(container[n - 4..].try_into().unwrap()) as usize + 4
+    }
+
+    #[test]
+    fn default_output_is_v3_with_index() {
+        let field = smooth_field(Dims::d2(80, 32), 83);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 16).unwrap();
+        assert_eq!(&bytes[..4], format::MAGIC3);
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(dec.header().version, format::VERSION3);
+        let idx = dec.load_index().unwrap();
+        assert_eq!(idx.n_chunks(), stats.n_chunks);
+        // entries tile the leading dimension and point at contiguous frames
+        assert_eq!(idx.lead_offsets[0], 0);
+        assert_eq!(
+            idx.entries.iter().map(|e| e.lead_extent as usize).sum::<usize>(),
+            field.dims.shape[0]
+        );
+        assert_eq!(idx.entries[0].offset as usize, format::STREAM_HEADER_LEN);
+    }
+
+    #[test]
+    fn decode_chunk_matches_full_decode_slabs() {
+        let field = smooth_field(Dims::d2(96, 40), 89);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 16).unwrap();
+        assert!(stats.n_chunks >= 4);
+        let full = decompress_chunked(&bytes, 1).unwrap();
+        let row_elems = 40;
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        for k in 0..stats.n_chunks {
+            let c = dec.decode_chunk(k).unwrap();
+            let lo = c.lead_offset * row_elems;
+            let hi = lo + c.lead_extent * row_elems;
+            assert_eq!(c.data, &full.data[lo..hi], "chunk {k}");
+        }
+        assert!(dec.decode_chunk(stats.n_chunks).is_err(), "out-of-range chunk accepted");
+    }
+
+    #[test]
+    fn decode_range_and_rows_thread_invariant() {
+        let field = smooth_field(Dims::d2(112, 24), 97);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 16).unwrap();
+        assert!(stats.n_chunks >= 7);
+        let full = decompress_chunked(&bytes, 1).unwrap();
+        let row_elems = 24;
+        for threads in [1usize, 2, 7] {
+            let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+            let r = dec.decode_range(1..4, threads).unwrap();
+            assert_eq!(r, &full.data[16 * row_elems..64 * row_elems], "{threads} threads");
+            let rows = dec.decode_rows(13..50, threads).unwrap();
+            assert_eq!(rows, &full.data[13 * row_elems..50 * row_elems], "{threads} threads");
+            // whole field through decode_rows == full decode
+            let all = dec.decode_rows(0..112, threads).unwrap();
+            assert_eq!(all, full.data);
+        }
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        assert!(dec.decode_range(2..2, 1).is_err());
+        assert!(dec.decode_rows(40..30, 1).is_err());
+        assert!(dec.decode_rows(0..113, 1).is_err());
+    }
+
+    #[test]
+    fn footer_corruption_and_truncation_sweep_rejected() {
+        let field = smooth_field(Dims::d2(64, 24), 101);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, _) = compress_chunked(&field, &cfg, 16).unwrap();
+        let ft = footer_total(&bytes);
+        let start = bytes.len() - ft;
+        // every byte of the footer (entries, crc, trailing length word)
+        for at in start..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[at] ^= 0x3C;
+            let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bad)).unwrap();
+            assert!(dec.load_index().is_err(), "footer flip at {at} accepted");
+            // the full decoder cross-checks the footer too
+            assert!(decompress_chunked(&bad, 1).is_err(), "full decode accepted flip at {at}");
+        }
+        // footer truncations: random access must fail cleanly
+        for cut in [bytes.len() - 1, bytes.len() - 4, bytes.len() - ft + 2, start] {
+            let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes[..cut])).unwrap();
+            assert!(dec.load_index().is_err(), "cut at {cut} accepted");
+            assert!(decompress_chunked(&bytes[..cut], 1).is_err());
+        }
+    }
+
+    #[test]
+    fn random_access_does_not_derail_sequential_decode() {
+        // load_index + decode_chunk seek around; the sequential walk over
+        // the same decoder must still see every frame in order
+        let field = smooth_field(Dims::d2(64, 24), 137);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 16).unwrap();
+        let full = decompress_chunked(&bytes, 1).unwrap();
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(dec.load_index().unwrap().n_chunks(), stats.n_chunks);
+        let probe = dec.decode_chunk(stats.n_chunks - 1).unwrap();
+        assert_eq!(probe.lead_offset, 48);
+        let mut n = 0usize;
+        while let Some(c) = dec.next_chunk().unwrap() {
+            assert_eq!(c.index as usize, n, "sequential walk derailed after random access");
+            assert_eq!(c.data, &full.data[c.lead_offset * 24..(c.lead_offset + 16) * 24]);
+            n += 1;
+        }
+        assert_eq!(n, stats.n_chunks);
+    }
+
+    #[test]
+    fn forged_huge_frame_len_in_footer_rejected_without_allocating() {
+        // a CRC-consistent footer whose entry claims a near-u64::MAX (or
+        // merely file-exceeding) frame_len must fail validation — never
+        // reach the frame allocation
+        let field = smooth_field(Dims::d2(64, 24), 139);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, _) = compress_chunked(&field, &cfg, 16).unwrap();
+        let ft = footer_total(&bytes);
+        let body = bytes[..bytes.len() - ft].to_vec();
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        let good = dec.load_index().unwrap().entries.clone();
+        for forged_len in [u64::MAX - 60, u64::MAX - 4, 1u64 << 40, bytes.len() as u64] {
+            let mut entries = good.clone();
+            entries[0].frame_len = forged_len;
+            let mut forged = body.clone();
+            format::write_index_footer(&mut forged, &entries);
+            let mut dec = StreamDecompressor::new(std::io::Cursor::new(&forged)).unwrap();
+            assert!(dec.load_index().is_err(), "forged frame_len {forged_len} accepted");
+        }
+    }
+
+    #[test]
+    fn v2_option_still_writes_legacy_containers() {
+        let field = smooth_field(Dims::d2(64, 24), 103);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let opts = StreamOptions { version: format::VERSION2, ..StreamOptions::default() };
+        let (v2, stats) = compress_chunked_with(&field, &cfg, 16, opts).unwrap();
+        assert_eq!(&v2[..4], format::MAGIC2);
+        assert!(stats.n_chunks >= 4);
+        let rec = decompress_chunked(&v2, 2).unwrap();
+        assert!(max_err(&field.data, &rec.data) <= 1e-3 + 1e-6);
+        // no index footer on v2: random access reports that cleanly
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&v2)).unwrap();
+        let err = dec.load_index().unwrap_err();
+        assert!(err.to_string().contains("no chunk index"), "{err}");
+        // and the generic entry point still dispatches
+        let rec2 = decompress(&v2, 2).unwrap();
+        assert_eq!(rec.data, rec2.data);
+    }
+
+    #[test]
+    fn v2_and_v3_frames_differ_only_by_config_and_footer() {
+        // same field, both versions: v3 adds 2 bytes of per-chunk config
+        // per frame plus the footer; the section payloads are identical
+        let field = smooth_field(Dims::d2(48, 30), 107);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (v3, s3) = compress_chunked(&field, &cfg, 16).unwrap();
+        let opts = StreamOptions { version: format::VERSION2, ..StreamOptions::default() };
+        let (v2, s2) = compress_chunked_with(&field, &cfg, 16, opts).unwrap();
+        assert_eq!(s2.n_chunks, s3.n_chunks);
+        let overhead = v3.len() - v2.len();
+        assert_eq!(overhead, 2 * s3.n_chunks + footer_total(&v3));
+        let a = decompress_chunked(&v2, 1).unwrap();
+        let b = decompress_chunked(&v3, 1).unwrap();
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn chunk_autotune_requires_v3() {
+        let opts = StreamOptions {
+            version: format::VERSION2,
+            chunk_autotune: Some(TuneSettings::default()),
+            ..StreamOptions::default()
+        };
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let err =
+            StreamCompressor::with_options(Vec::new(), Dims::d1(512), &cfg, 0, opts).unwrap_err();
+        assert!(err.to_string().contains("v3"), "{err}");
+    }
+
+    #[test]
+    fn per_chunk_autotune_roundtrips_and_records_grid_configs() {
+        // chunks of 64 x 256 = 16384 elems == CHUNK_AUTOTUNE_MIN_ELEMS, so
+        // the tuner actually runs on every chunk
+        let field = smooth_field(Dims::d2(256, 256), 109);
+        let cfg = Config { eb: EbMode::Abs(1e-3), threads: 2, ..Config::default() };
+        let opts = StreamOptions {
+            chunk_autotune: Some(TuneSettings { sample_pct: 20.0, iterations: 1, seed: 5 }),
+            ..StreamOptions::default()
+        };
+        let (bytes, stats) = compress_chunked_with(&field, &cfg, 64, opts).unwrap();
+        assert_eq!(stats.n_chunks, 4);
+        // whichever configs the heuristic picked, the container decodes
+        // within the bound through every path
+        let rec = decompress_chunked(&bytes, 3).unwrap();
+        assert!(max_err(&field.data, &rec.data) <= 1e-3 + 1e-6);
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        for k in 0..4 {
+            let c = dec.decode_chunk(k).unwrap();
+            assert_eq!(c.data, &rec.data[c.lead_offset * 256..(c.lead_offset + 64) * 256]);
+        }
+        // the recorded configs come from the §III-E candidate grid
+        let idx = dec.load_index().unwrap();
+        for e in &idx.entries {
+            assert!([8, 16, 32, 64].contains(&e.meta.block_size), "bs {}", e.meta.block_size);
+            assert!([8u8, 16].contains(&e.meta.width), "width {}", e.meta.width);
+        }
+    }
+
+    #[test]
+    fn tiny_chunks_skip_the_tuner() {
+        // 480-elem chunks are far below the gate: configs stay at the base
+        let field = smooth_field(Dims::d2(64, 30), 113);
+        let cfg = Config { eb: EbMode::Abs(1e-3), block_size: 16, ..Config::default() };
+        let opts = StreamOptions {
+            chunk_autotune: Some(TuneSettings::default()),
+            ..StreamOptions::default()
+        };
+        let (bytes, _) = compress_chunked_with(&field, &cfg, 16, opts).unwrap();
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        let idx = dec.load_index().unwrap();
+        assert!(idx.entries.iter().all(|e| e.meta.block_size == 16));
+    }
+
+    #[test]
+    fn mixed_block_size_container_decodes_everywhere() {
+        // Build a v3 container by hand with a different block size per
+        // chunk — the shape a non-stationary field produces under
+        // per-chunk autotuning, but deterministic (no timing involved).
+        let field = smooth_field(Dims::d2(96, 32), 127);
+        let eb = 1e-3;
+        let span = 32usize;
+        let block_sizes = [8usize, 16, 32];
+        let base = Config { eb: EbMode::Abs(eb), block_size: 16, ..Config::default() };
+
+        let header = StreamHeader {
+            header: Header {
+                dims: field.dims,
+                codes_kind: crate::quant::CodesKind::DualQuant,
+                eb,
+                radius: base.radius,
+                block_size: 16,
+                padding: base.padding.normalized(),
+            },
+            chunk_span: span as u64,
+            version: format::VERSION3,
+        };
+        let mut bytes = format::write_stream_header(&header).unwrap();
+        let mut index = Vec::new();
+        for (k, &bs) in block_sizes.iter().enumerate() {
+            let slab = Field::new(
+                format!("c{k}"),
+                Dims::d2(span, 32),
+                field.data[k * span * 32..(k + 1) * span * 32].to_vec(),
+            );
+            let cfg = Config { block_size: bs, ..base };
+            let backend = cfg.backend.instantiate();
+            let body = encode_body(&slab, &cfg, backend.as_ref(), 1, false).unwrap();
+            let meta = ChunkMeta { block_size: bs as u32, width: 8 };
+            let offset = bytes.len() as u64;
+            format::write_chunk_frame(
+                &mut bytes,
+                k as u64,
+                span as u64,
+                Some(meta),
+                &body.sections,
+            );
+            index.push(ChunkIndexEntry {
+                offset,
+                frame_len: bytes.len() as u64 - offset,
+                lead_extent: span as u64,
+                meta,
+            });
+        }
+        format::write_trailer(&mut bytes, 3);
+        format::write_index_footer(&mut bytes, &index);
+
+        // full decode, chunk-parallel decode, and random access all agree
+        // and respect the bound despite three different block geometries
+        let serial = decompress_chunked(&bytes, 1).unwrap();
+        let parallel = decompress_chunked(&bytes, 3).unwrap();
+        assert_eq!(serial.data, parallel.data);
+        assert!(max_err(&field.data, &serial.data) <= eb + 1e-6);
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        for k in 0..3 {
+            let c = dec.decode_chunk(k).unwrap();
+            assert_eq!(c.data, &serial.data[k * span * 32..(k + 1) * span * 32], "chunk {k}");
+        }
+        // the sequential Read-only walker handles mixed configs too
+        let mut walker = StreamDecompressor::new(&bytes[..]).unwrap();
+        let mut n = 0;
+        while let Some(c) = walker.next_chunk().unwrap() {
+            assert_eq!(c.data, &serial.data[c.lead_offset * 32..(c.lead_offset + span) * 32]);
+            n += 1;
+        }
+        assert_eq!(n, 3);
+    }
+
+    #[test]
+    fn short_reads_and_odd_lengths_on_the_io_path() {
+        // a reader that dribbles 7 bytes at a time still produces the same
+        // container (the fill loop assembles whole slabs)
+        struct Dribble<'a>(&'a [u8]);
+        impl Read for Dribble<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                let n = buf.len().min(7).min(self.0.len());
+                buf[..n].copy_from_slice(&self.0[..n]);
+                self.0 = &self.0[n..];
+                Ok(n)
+            }
+        }
+        let field = smooth_field(Dims::d2(48, 30), 131);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let raw = f32_as_bytes(&field.data).to_vec();
+        let mut a = Vec::new();
+        compress_stream(Dribble(&raw), &mut a, field.dims, &cfg, 16).unwrap();
+        let mut b = Vec::new();
+        compress_stream(&raw[..], &mut b, field.dims, &cfg, 16).unwrap();
+        assert_eq!(a, b, "read granularity changed the container bytes");
+        // an input that is not a whole number of f32s errors cleanly
+        let mut out = Vec::new();
+        let err = compress_stream(&raw[..raw.len() - 3], &mut out, field.dims, &cfg, 16);
+        assert!(err.is_err());
     }
 }
