@@ -1,17 +1,22 @@
 //! `cargo bench --bench micro_substrates` — microbenchmarks of the
 //! substrate stages surrounding the dual-quant hot path: Huffman encode/
-//! decode, the lossless pass, block gather/scatter and sequential block
-//! decode. These locate the non-P&Q bottlenecks that Table III's Amdahl
-//! analysis attributes the residual runtime to.
+//! decode, the lossless pass, block gather/scatter, the P&Q backends head
+//! to head (autovectorized `vec` vs explicit-intrinsics fused `simd`, one
+//! and four threads) and sequential block decode. These locate the non-P&Q
+//! bottlenecks that Table III's Amdahl analysis attributes the residual
+//! runtime to.
 
 use vecsz::bench::{bench, BenchOpts, BenchStats};
 use vecsz::blocks::{gather_block, BlockShape, Dims, HaloBlock};
+use vecsz::compressor::{pq_stage, BackendChoice, Config, EbMode};
 use vecsz::coordinator::pool::ThreadPool;
+use vecsz::data::Field;
 use vecsz::huffman;
 use vecsz::lossless;
 use vecsz::padding::{PadGranularity, PadScalars, PadValue, PaddingPolicy};
 use vecsz::quant::decode::decode_block_dualquant;
 use vecsz::quant::psz::PszBackend;
+use vecsz::quant::simd::SimdBackend;
 use vecsz::quant::vectorized::VecBackend;
 use vecsz::quant::{DqConfig, PqBackend};
 use vecsz::util::prng::Pcg32;
@@ -31,17 +36,42 @@ fn json_row(op: &str, format: &str, threads: usize, s: &BenchStats) -> String {
 }
 
 /// Emit the entropy-stage perf trajectory (tracked across PRs; GB/s over
-/// the 4M-symbol skewed quant-code workload at 1/2/4/8 threads).
+/// the 4M-symbol skewed quant-code workload at 1/2/4/8 threads). The
+/// detected/forced ISA and the compiled target features ride in the
+/// metadata so `bench-compare` never diffs, say, AVX-512 numbers against
+/// an SSE2 baseline (it warns and skips the gate on mismatch).
 fn write_entropy_json(n_symbols: usize, rows: &[String]) {
     let doc = format!(
         "{{\n  \"workload\": \"skewed-quant-codes\",\n  \"n_symbols\": {n_symbols},\n  \
-         \"alphabet\": 1024,\n  \"payload_bytes_per_run\": {},\n  \"rows\": [\n    {}\n  ]\n}}\n",
+         \"alphabet\": 1024,\n  \"payload_bytes_per_run\": {},\n  \
+         \"isa\": \"{}\",\n  \"target_features\": \"{}\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
         n_symbols * 2,
+        vecsz::simd::Isa::active().name(),
+        vecsz::simd::compiled_target_features(),
         rows.join(",\n    ")
     );
     match std::fs::write("BENCH_entropy.json", &doc) {
         Ok(()) => println!("    (wrote BENCH_entropy.json)"),
         Err(e) => eprintln!("    (could not write BENCH_entropy.json: {e})"),
+    }
+}
+
+/// Emit the P&Q backend trajectory (its own document — the workload is a
+/// 2D smooth field, not the entropy stream, and writing it separately
+/// keeps the entropy rows on disk even if a later section panics).
+fn write_pq_json(rows: &[String]) {
+    let doc = format!(
+        "{{\n  \"workload\": \"pq-2d-smooth\",\n  \
+         \"kernel_batch\": \"4096 blocks of 16x16 (4Mi elems)\",\n  \
+         \"stage_field\": \"1024x1024 f32, eb 1e-3\",\n  \
+         \"isa\": \"{}\",\n  \"target_features\": \"{}\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        vecsz::simd::Isa::active().name(),
+        vecsz::simd::compiled_target_features(),
+        rows.join(",\n    ")
+    );
+    match std::fs::write("BENCH_pq.json", &doc) {
+        Ok(()) => println!("    (wrote BENCH_pq.json)"),
+        Err(e) => eprintln!("    (could not write BENCH_pq.json: {e})"),
     }
 }
 
@@ -143,10 +173,14 @@ fn main() {
     let cfg = DqConfig::new(1e-3, 512, shape);
     let mut qcodes = vec![0u16; blocks.len()];
     let mut outv = vec![0.0f32; blocks.len()];
+    println!("    (simd backend dispatching to isa: {})", vecsz::simd::Isa::active().name());
+    let mut pq_rows: Vec<String> = Vec::new();
     for be in [
         &PszBackend as &dyn PqBackend,
         &VecBackend::new(8),
         &VecBackend::new(16),
+        &SimdBackend::new(8),
+        &SimdBackend::new(16),
     ] {
         let s = bench(
             &format!("dual-quant kernel [{}] 4Mi elems 2D", be.name()),
@@ -158,7 +192,42 @@ fn main() {
             },
         );
         println!("{}", s.row());
+        pq_rows.push(json_row("pq-kernel", &be.name(), 1, &s));
     }
+
+    // full P&Q stage (gather + kernel) through pq_stage at 1 and 4 threads
+    // — the paper's Fig 3 unit, rows tracked per backend in the perf json
+    let pq_dims = Dims::d2(1024, 1024);
+    let mut x = 0.0f32;
+    let pq_data: Vec<f32> = (0..pq_dims.len())
+        .map(|_| {
+            x += (rng.next_f32() - 0.5) * 0.1;
+            x
+        })
+        .collect();
+    let pq_field = Field::new("pq-bench", pq_dims, pq_data);
+    for backend in [
+        BackendChoice::Vec { width: 8 },
+        BackendChoice::Vec { width: 16 },
+        BackendChoice::Simd { width: 8 },
+        BackendChoice::Simd { width: 16 },
+    ] {
+        let be = backend.instantiate();
+        for threads in [1usize, 4] {
+            let c = Config { eb: EbMode::Abs(1e-3), threads, ..Config::default() };
+            let s = bench(
+                &format!("pq stage [{}] 1Mi-elem 2D {threads}T", be.name()),
+                pq_field.data.len() * 4,
+                opts,
+                || {
+                    std::hint::black_box(pq_stage(&pq_field, &c, be.as_ref()));
+                },
+            );
+            println!("{}", s.row());
+            pq_rows.push(json_row("pq", &be.name(), threads, &s));
+        }
+    }
+    write_pq_json(&pq_rows);
 
     // sequential block decode (the decompression hot path)
     let mut halo = HaloBlock::new(shape);

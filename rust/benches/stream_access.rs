@@ -8,7 +8,7 @@
 use vecsz::autotune::TuneSettings;
 use vecsz::bench::{bench, BenchOpts, BenchStats};
 use vecsz::blocks::Dims;
-use vecsz::compressor::{Config, EbMode};
+use vecsz::compressor::{BackendChoice, Config, EbMode};
 use vecsz::data::Field;
 use vecsz::stream::{
     compress_chunked, compress_chunked_with, decompress_chunked, StreamDecompressor,
@@ -54,6 +54,20 @@ fn main() {
         });
         println!("{}", s.row());
         rows.push(json_row("compress", threads, &s));
+    }
+    // same path through the explicit-intrinsics fused P&Q backend
+    for threads in [1usize, 4] {
+        let cfg = Config {
+            eb: EbMode::Abs(1e-3),
+            threads,
+            backend: BackendChoice::Simd { width: 16 },
+            ..Config::default()
+        };
+        let s = bench(&format!("stream compress simd16 {threads}T"), raw_bytes, opts, || {
+            std::hint::black_box(compress_chunked(&field, &cfg, SPAN).unwrap());
+        });
+        println!("{}", s.row());
+        rows.push(json_row("compress-simd16", threads, &s));
     }
     {
         let cfg = Config { eb: EbMode::Abs(1e-3), threads: 4, ..Config::default() };
@@ -117,9 +131,11 @@ fn main() {
     let doc = format!(
         "{{\n  \"workload\": \"walk-field-{ROWS}x{COLS}-span{SPAN}\",\n  \
          \"n_elems\": {},\n  \"raw_bytes\": {raw_bytes},\n  \"n_chunks\": {},\n  \
-         \"rows\": [\n    {}\n  ]\n}}\n",
+         \"isa\": \"{}\",\n  \"target_features\": \"{}\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
         field.data.len(),
         stats.n_chunks,
+        vecsz::simd::Isa::active().name(),
+        vecsz::simd::compiled_target_features(),
         rows.join(",\n    ")
     );
     match std::fs::write("BENCH_stream.json", &doc) {

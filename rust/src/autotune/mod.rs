@@ -8,10 +8,9 @@
 //! [`top_k_stability`] reproduces that analysis.
 
 use crate::blocks::{gather_block, BlockShape};
-use crate::compressor::default_block_size;
+use crate::compressor::{default_block_size, BackendChoice};
 use crate::data::Field;
 use crate::padding::{compute_scalars, PaddingPolicy};
-use crate::quant::vectorized::VecBackend;
 use crate::quant::{DqConfig, PqBackend};
 use crate::util::prng::Pcg32;
 use crate::util::timer::{mb_per_s, Timer};
@@ -23,10 +22,33 @@ pub struct TuneConfig {
     /// Lane width (the paper's vector-register length: 8 ≈ 256-bit,
     /// 16 ≈ 512-bit).
     pub width: usize,
+    /// `true`: the explicit-intrinsics fused `SimdBackend`; `false`: the
+    /// autovectorized `VecBackend`. Both are bit-exact, so the heuristic
+    /// is free to pick whichever measures faster on this host/field.
+    pub simd: bool,
+}
+
+impl TuneConfig {
+    /// The `compressor` backend this candidate stands for.
+    pub fn backend_choice(&self) -> BackendChoice {
+        if self.simd {
+            BackendChoice::Simd { width: self.width }
+        } else {
+            BackendChoice::Vec { width: self.width }
+        }
+    }
+
+    /// Display label (`vec8` / `simd16`).
+    pub fn backend_label(&self) -> String {
+        format!("{}{}", if self.simd { "simd" } else { "vec" }, self.width)
+    }
 }
 
 /// Candidate grid per dimensionality (§III-D: multiples of the vector
-/// register; 128/256 showed no improvement in the paper's study).
+/// register; 128/256 showed no improvement in the paper's study). Every
+/// (block size × width) point appears twice — once per dual-quant backend
+/// (autovectorized `vec`, explicit-intrinsics `simd`) — since the two can
+/// rank differently per host/field while staying bit-exact.
 pub fn candidate_grid(ndim: usize, widths: &[usize]) -> Vec<TuneConfig> {
     let sizes: &[usize] = match ndim {
         1 => &[8, 16, 32, 64],
@@ -36,7 +58,9 @@ pub fn candidate_grid(ndim: usize, widths: &[usize]) -> Vec<TuneConfig> {
     let mut out = Vec::new();
     for &bs in sizes {
         for &w in widths {
-            out.push(TuneConfig { block_size: bs, width: w });
+            for simd in [false, true] {
+                out.push(TuneConfig { block_size: bs, width: w, simd });
+            }
         }
     }
     out
@@ -95,7 +119,7 @@ fn measure_config(
     let shape = BlockShape::new(ndim, cfg.block_size);
     let elems = shape.elems();
     let dq = DqConfig::new(eb, radius, shape);
-    let backend = VecBackend::new(cfg.width);
+    let backend = cfg.backend_choice().instantiate();
     let mut blocks = vec![0.0f32; idx.len() * elems];
     let mut codes = vec![0u16; blocks.len()];
     let mut outv = vec![0.0f32; blocks.len()];
@@ -181,7 +205,7 @@ pub fn autotune(
         .iter()
         .max_by(|a, b| a.mb_per_s.total_cmp(&b.mb_per_s))
         .map(|p| p.config)
-        .unwrap_or(TuneConfig { block_size: default_block_size(ndim), width: 8 });
+        .unwrap_or(TuneConfig { block_size: default_block_size(ndim), width: 8, simd: false });
     TuneResult { best, table, tune_seconds: t_total.elapsed_s(), sampled_blocks }
 }
 
@@ -204,7 +228,7 @@ pub fn exhaustive_full(
                 radius,
                 block_size: cfg.block_size,
                 padding,
-                backend: crate::compressor::BackendChoice::Vec { width: cfg.width },
+                backend: cfg.backend_choice(),
                 threads: backend_threads,
             };
             let backend = c.backend.instantiate();
@@ -262,11 +286,16 @@ mod tests {
 
     #[test]
     fn grid_shape_matches_paper_counts() {
-        // Intel: 8 configs of (bs x vector len) for 2D per §V-F (4 sizes x 2)
-        assert_eq!(candidate_grid(2, &[8, 16]).len(), 8);
-        // AMD: 4 configs (4 sizes x 1 width)
-        assert_eq!(candidate_grid(1, &[8]).len(), 4);
-        assert_eq!(candidate_grid(3, &[8, 16]).len(), 6);
+        // paper §V-F counts per (bs x vector len) point, doubled by the
+        // vec/simd backend axis:
+        // Intel 2D: 8 configs (4 sizes x 2 widths) -> 16 candidates
+        assert_eq!(candidate_grid(2, &[8, 16]).len(), 16);
+        // AMD: 4 configs (4 sizes x 1 width) -> 8
+        assert_eq!(candidate_grid(1, &[8]).len(), 8);
+        assert_eq!(candidate_grid(3, &[8, 16]).len(), 12);
+        // both backends present for every (bs, width) point
+        let g = candidate_grid(2, &[8]);
+        assert_eq!(g.iter().filter(|c| c.simd).count(), g.len() / 2);
     }
 
     #[test]
@@ -281,7 +310,7 @@ mod tests {
             TuneSettings { sample_pct: 10.0, iterations: 1, seed: 1 },
         );
         assert!(candidate_grid(2, &[8, 16]).contains(&r.best));
-        assert_eq!(r.table.len(), 8);
+        assert_eq!(r.table.len(), 16);
         assert!(r.tune_seconds > 0.0);
         assert!(r.table.iter().all(|p| p.mb_per_s > 0.0));
     }
@@ -307,7 +336,7 @@ mod tests {
             .collect();
         let s1 = top_k_stability(&runs, 1);
         let s2 = top_k_stability(&runs, 2);
-        let s_all = top_k_stability(&runs, 8);
+        let s_all = top_k_stability(&runs, 16);
         assert!((0.0..=1.0).contains(&s1));
         assert!(s2 >= s1);
         assert_eq!(s_all, 1.0);
@@ -317,6 +346,6 @@ mod tests {
     fn exhaustive_covers_grid() {
         let f = test_field();
         let pts = exhaustive_full(&f, 1e-3, 512, PaddingPolicy::ZERO, &[8], 1);
-        assert_eq!(pts.len(), 4);
+        assert_eq!(pts.len(), 8);
     }
 }

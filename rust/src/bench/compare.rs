@@ -8,6 +8,12 @@
 //! side are reported but never fail the gate (new benchmarks must be able
 //! to land before their baseline exists, and baselines must survive a
 //! renamed row without blocking CI).
+//!
+//! Both documents carry the runtime-dispatched SIMD `isa` (and the
+//! compiled `target_features`) in their metadata. When the two sides
+//! disagree — e.g. an AVX-512 baseline diffed on an SSE2 runner — the P&Q
+//! numbers are incomparable, so the diff is still *reported* but the gate
+//! is skipped with a warning instead of failing CI on a hardware change.
 
 use crate::error::{Result, VszError};
 use crate::util::json::{parse, Json};
@@ -29,11 +35,17 @@ pub struct CompareReport {
     pub rows: Vec<RowDiff>,
     /// Row keys present in only one of the two documents.
     pub unmatched: Vec<String>,
+    /// `Some((baseline, fresh))` when both documents record a SIMD ISA and
+    /// they differ — the gate must warn-and-skip, not fail.
+    pub isa_mismatch: Option<(String, String)>,
 }
 
 impl CompareReport {
+    /// Rows past the tolerance. Empty whenever the two documents were
+    /// measured on different ISAs (the numbers are incomparable).
     pub fn regressions(&self) -> impl Iterator<Item = &RowDiff> {
-        self.rows.iter().filter(|r| r.regressed)
+        let gated = self.isa_mismatch.is_none();
+        self.rows.iter().filter(move |r| gated && r.regressed)
     }
 }
 
@@ -71,6 +83,16 @@ pub fn compare_docs(baseline: &Json, fresh: &Json, tolerance_pct: f64) -> Result
     let base_rows = rows_of(baseline)?;
     let fresh_rows = rows_of(fresh)?;
     let mut report = CompareReport::default();
+    // both sides must have been measured on the same ISA for the gate to
+    // mean anything; older documents without the field gate as before
+    if let (Some(b), Some(f)) = (
+        baseline.get("isa").and_then(Json::as_str),
+        fresh.get("isa").and_then(Json::as_str),
+    ) {
+        if b != f {
+            report.isa_mismatch = Some((b.to_string(), f.to_string()));
+        }
+    }
     for (key, fresh_mbs) in &fresh_rows {
         match base_rows.iter().find(|(k, _)| k == key) {
             Some((_, base_mbs)) if *base_mbs > 0.0 => {
@@ -128,6 +150,25 @@ mod tests {
         // within tolerance: 30% loss passes a 35% gate
         let r = compare_docs(&base, &fresh, 35.0).unwrap();
         assert_eq!(r.regressions().count(), 0);
+    }
+
+    #[test]
+    fn isa_mismatch_reports_but_never_gates() {
+        let row = r#"{"op":"pq","format":"simd16","threads":1,"mb_per_s":1000.0}"#;
+        let slow = r#"{"op":"pq","format":"simd16","threads":1,"mb_per_s":100.0}"#;
+        let base = parse(&format!("{{\"isa\":\"avx512\",\"rows\":[{row}]}}")).unwrap();
+        let fresh = parse(&format!("{{\"isa\":\"scalar\",\"rows\":[{slow}]}}")).unwrap();
+        let r = compare_docs(&base, &fresh, 25.0).unwrap();
+        assert_eq!(r.rows.len(), 1, "mismatched-ISA rows are still reported");
+        assert!(r.rows[0].regressed, "the raw per-row flag is still computed");
+        assert_eq!(r.regressions().count(), 0, "...but the gate skips them");
+        assert_eq!(r.isa_mismatch, Some(("avx512".to_string(), "scalar".to_string())));
+        // same ISA on both sides gates normally
+        let fresh2 = parse(&format!("{{\"isa\":\"avx512\",\"rows\":[{slow}]}}")).unwrap();
+        assert_eq!(compare_docs(&base, &fresh2, 25.0).unwrap().regressions().count(), 1);
+        // docs predating the metadata (no "isa" field) gate normally too
+        let old = parse(&format!("{{\"rows\":[{slow}]}}")).unwrap();
+        assert_eq!(compare_docs(&base, &old, 25.0).unwrap().regressions().count(), 1);
     }
 
     #[test]

@@ -43,6 +43,12 @@ fn run() -> Result<bool, vecsz::error::VszError> {
         }
         let report = compare_files(&base, &fresh, tolerance)?;
         println!("{name}: {} matched rows (gate: -{tolerance}%)", report.rows.len());
+        if let Some((b, f)) = &report.isa_mismatch {
+            println!(
+                "  WARNING: ISA mismatch (baseline {b}, fresh {f}) — numbers are \
+                 incomparable across hardware; reporting rows but skipping the gate"
+            );
+        }
         for r in &report.rows {
             let flag = if r.regressed { "  REGRESSION" } else { "" };
             println!(

@@ -28,6 +28,7 @@ use crate::metrics::{value_range, SizeStats};
 use crate::padding::{compute_scalars, PadScalars, PaddingPolicy};
 use crate::quant::decode::decode_block;
 use crate::quant::psz::PszBackend;
+use crate::quant::simd::SimdBackend;
 use crate::quant::sz14::Sz14Backend;
 use crate::quant::vectorized::VecBackend;
 use crate::quant::{DqConfig, PqBackend, OUTLIER_CODE};
@@ -59,8 +60,11 @@ pub enum BackendChoice {
     Sz14,
     /// Serial dual-quant (Algorithm 2, scalar).
     Psz,
-    /// Lane-chunked dual-quant — the vecSZ contribution.
+    /// Lane-chunked autovectorized dual-quant — the original vecSZ kernel.
     Vec { width: usize },
+    /// Explicit-intrinsics fused dual-quant with runtime ISA dispatch
+    /// (see [`crate::simd`]); bit-identical to `Psz`/`Vec` on every ISA.
+    Simd { width: usize },
 }
 
 impl BackendChoice {
@@ -71,6 +75,9 @@ impl BackendChoice {
             "vec4" => Some(BackendChoice::Vec { width: 4 }),
             "vec8" | "vec" => Some(BackendChoice::Vec { width: 8 }),
             "vec16" => Some(BackendChoice::Vec { width: 16 }),
+            "simd4" => Some(BackendChoice::Simd { width: 4 }),
+            "simd8" => Some(BackendChoice::Simd { width: 8 }),
+            "simd16" | "simd" => Some(BackendChoice::Simd { width: 16 }),
             _ => None,
         }
     }
@@ -80,6 +87,7 @@ impl BackendChoice {
             BackendChoice::Sz14 => Box::new(Sz14Backend),
             BackendChoice::Psz => Box::new(PszBackend),
             BackendChoice::Vec { width } => Box::new(VecBackend::new(width)),
+            BackendChoice::Simd { width } => Box::new(SimdBackend::new(width)),
         }
     }
 }
@@ -565,6 +573,8 @@ mod tests {
                 BackendChoice::Psz,
                 BackendChoice::Vec { width: 8 },
                 BackendChoice::Vec { width: 16 },
+                BackendChoice::Simd { width: 8 },
+                BackendChoice::Simd { width: 16 },
                 BackendChoice::Sz14,
             ] {
                 let cfg = Config { backend, eb: EbMode::Abs(1e-3), ..Config::default() };
@@ -572,6 +582,21 @@ mod tests {
                 assert!(err <= 1e-3 + 1e-6, "{:?} {dims:?}: err {err}", backend);
                 assert!(stats.size.ratio() > 1.0, "no compression for {backend:?}");
             }
+        }
+    }
+
+    #[test]
+    fn simd_and_vec_backends_emit_identical_containers() {
+        // the container stores only codes_kind, never the backend, and the
+        // dual-quant backends are bit-exact — so the bytes must match too
+        let field = smooth_field(Dims::d2(60, 44), 41);
+        for width in [8usize, 16] {
+            let c_vec = Config { backend: BackendChoice::Vec { width }, ..Config::default() };
+            let c_simd = Config { backend: BackendChoice::Simd { width }, ..Config::default() };
+            let (bv, _) = compress(&field, &c_vec).unwrap();
+            let (bsd, stats) = compress(&field, &c_simd).unwrap();
+            assert_eq!(bv, bsd, "simd{width} container diverged from vec{width}");
+            assert_eq!(stats.backend, format!("simd{width}"));
         }
     }
 

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use crate::autotune::{autotune, TuneConfig, TuneSettings};
 use crate::compressor::{
-    compress, default_block_size, BackendChoice, Config, CompressStats, EbMode,
+    compress, default_block_size, Config, CompressStats, EbMode,
 };
 use crate::coordinator::pool::ThreadPool;
 use crate::data::Field;
@@ -141,7 +141,7 @@ pub fn run_stream(
         let mut c = cfg.base;
         if let Some(tc) = current {
             c.block_size = tc.block_size;
-            c.backend = BackendChoice::Vec { width: tc.width };
+            c.backend = tc.backend_choice();
         }
         let (bytes, stats) = match cfg.chunked {
             Some(span) => compress_step_chunked(&field, &c, eb, span, &cfg)?,

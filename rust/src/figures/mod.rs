@@ -228,7 +228,7 @@ pub fn fig3(out_dir: &str, quick: bool) -> Result<()> {
     println!("FIG 3 — P&Q bandwidth (MB/s): SZ-1.4 vs pSZ vs vecSZ (best config)");
     let mut w = CsvWriter::new(
         format!("{out_dir}/fig3.csv"),
-        "cpu_model,dataset,sz14_mbs,psz_mbs,vecsz_mbs,vec_bs,vec_width,speedup_vs_sz14,speedup_vs_psz",
+        "cpu_model,dataset,sz14_mbs,psz_mbs,vecsz_mbs,vec_bs,vec_backend,speedup_vs_sz14,speedup_vs_psz",
     );
     let opts = if quick { BenchOpts::quick() } else { BenchOpts::from_env() };
     for cpu in [ROME_CLASS, GOLD_CLASS] {
@@ -246,10 +246,10 @@ pub fn fig3(out_dir: &str, quick: bool) -> Result<()> {
             let grid = exhaustive_full(field, eb, 512, PaddingPolicy::ZERO, cpu.widths, 1);
             let best = grid.iter().max_by(|a, b| a.mb_per_s.total_cmp(&b.mb_per_s)).unwrap();
             let vec_mbs =
-                pq_mbs(field, BackendChoice::Vec { width: best.config.width }, best.config.block_size, eb, 1, opts);
+                pq_mbs(field, best.config.backend_choice(), best.config.block_size, eb, 1, opts);
             println!(
-                "{:<11} {:>10.0} {:>10.0} {:>10.0}  bs{:<3} w{:<2} {:>10.1}x",
-                name, sz14, psz, vec_mbs, best.config.block_size, best.config.width,
+                "{:<11} {:>10.0} {:>10.0} {:>10.0}  bs{:<3} {:<6} {:>8.1}x",
+                name, sz14, psz, vec_mbs, best.config.block_size, best.config.backend_label(),
                 vec_mbs / sz14.max(1e-9)
             );
             w.row(&[
@@ -259,7 +259,7 @@ pub fn fig3(out_dir: &str, quick: bool) -> Result<()> {
                 format!("{psz:.1}"),
                 format!("{vec_mbs:.1}"),
                 best.config.block_size.to_string(),
-                best.config.width.to_string(),
+                best.config.backend_label(),
                 format!("{:.2}", vec_mbs / sz14.max(1e-9)),
                 format!("{:.2}", vec_mbs / psz.max(1e-9)),
             ]);
@@ -326,17 +326,22 @@ pub fn fig4(out_dir: &str, quick: bool) -> Result<()> {
 pub fn fig5(out_dir: &str, quick: bool) -> Result<()> {
     println!("FIG 5 — P&Q bandwidth vs (block size x vector length)");
     let mut w =
-        CsvWriter::new(format!("{out_dir}/fig5.csv"), "dataset,block_size,width,mb_per_s");
+        CsvWriter::new(format!("{out_dir}/fig5.csv"), "dataset,block_size,backend,mb_per_s");
     for (name, field, eb_p) in field_set(quick) {
         let eb = eb_for(field, *eb_p);
         let pts = exhaustive_full(field, eb, 512, PaddingPolicy::ZERO, &[8, 16], 1);
         println!("-- {name}");
         for p in &pts {
-            println!("   bs={:<3} w={:<2} {:>9.0} MB/s", p.config.block_size, p.config.width, p.mb_per_s);
+            println!(
+                "   bs={:<3} {:<6} {:>9.0} MB/s",
+                p.config.block_size,
+                p.config.backend_label(),
+                p.mb_per_s
+            );
             w.row(&[
                 name.clone(),
                 p.config.block_size.to_string(),
-                p.config.width.to_string(),
+                p.config.backend_label(),
                 format!("{:.1}", p.mb_per_s),
             ]);
         }

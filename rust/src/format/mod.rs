@@ -71,7 +71,9 @@
 //! any chunk. The per-chunk `block_size` exists because the streaming
 //! compressor may re-run the autotune heuristic per chunk
 //! ([`crate::stream::StreamOptions`]); `lane_width` records the SIMD lane
-//! count the encoder picked (informational — it does not affect decode).
+//! count the encoder picked, with bit 7 ([`WIDTH_SIMD_FLAG`]) marking the
+//! explicit-intrinsics `simd` backend (informational — it does not affect
+//! decode).
 //!
 //! **Version-dispatch compatibility rule:** `compressor::decompress`
 //! dispatches on the leading magic — `VSZ1` monolithic, `VSZ2` chunked,
@@ -200,8 +202,38 @@ pub struct ChunkMeta {
     /// Block size this chunk was encoded with (drives decode geometry).
     pub block_size: u32,
     /// SIMD lane width the encoder used (informational; 0 = scalar/SZ-1.4
-    /// backend).
+    /// backend). Bit 7 ([`WIDTH_SIMD_FLAG`]) marks the explicit-intrinsics
+    /// `simd` backend; the low 7 bits are the lane width. Decoders ignore
+    /// the byte entirely (codes are backend-independent), so the flag is
+    /// forward- and backward-compatible.
     pub width: u8,
+}
+
+/// High bit of [`ChunkMeta::width`]: set when the chunk was encoded with
+/// the explicit-intrinsics `simd` backend rather than the autovectorized
+/// `vec` backend.
+pub const WIDTH_SIMD_FLAG: u8 = 0x80;
+
+impl ChunkMeta {
+    /// Lane width without the backend flag.
+    pub fn lane_width(&self) -> u8 {
+        self.width & !WIDTH_SIMD_FLAG
+    }
+
+    /// Was this chunk encoded by the explicit-intrinsics backend?
+    pub fn is_simd(&self) -> bool {
+        self.width & WIDTH_SIMD_FLAG != 0
+    }
+
+    /// Display label for `vsz stream inspect` (`vec8` / `simd16` /
+    /// `scalar`).
+    pub fn backend_label(&self) -> String {
+        match (self.is_simd(), self.lane_width()) {
+            (_, 0) => "scalar".to_string(),
+            (true, w) => format!("simd{w}"),
+            (false, w) => format!("vec{w}"),
+        }
+    }
 }
 
 /// One entry of the v3 index footer: where a chunk frame lives and how it

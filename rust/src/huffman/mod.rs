@@ -4,6 +4,9 @@
 //! Huffman coding; outlier/value streams reuse the same coder over bytes.
 //!
 //! Design:
+//! * histogramming is 4-way interleaved (independent sub-histograms merged
+//!   once) so skewed streams do not serialize on one hot counter's
+//!   store-to-load dependency, with the pooled per-worker merge on top,
 //! * code lengths from a heap-built Huffman tree, then clamped to
 //!   `MAX_BITS` with a single-pass Kraft-sum repair over the bit-length
 //!   histogram (zlib-style),
@@ -64,11 +67,51 @@ pub const HUF2_MAGIC: [u8; 4] = [0xF5, b'H', b'F', b'2'];
 /// fan-out.
 const PAR_HIST_MIN: usize = 2 * CHUNK_SYMS;
 
+/// Symbol-count floor below which the 4-way interleaved histogram is not
+/// worth its `4 × alphabet` counter allocation.
+const UNROLL_HIST_MIN: usize = 4096;
+
 /// Frequency histogram over a u16-symbol stream.
+///
+/// For streams past [`UNROLL_HIST_MIN`] this runs **4-way interleaved**:
+/// four independent sub-histograms take every 4th symbol and are summed at
+/// the end. Quant-code streams are heavily skewed (most symbols equal the
+/// radius), so a single counter array serializes on the store-to-load
+/// dependency of the hot bucket; independent sub-histograms give the CPU
+/// four dependency chains to overlap. The merge is a commutative sum, so
+/// the result is identical to the naive loop.
 pub fn histogram(symbols: &[u16], alphabet: usize) -> Vec<u64> {
+    // the interleave pays a 4×alphabet allocate/zero/merge, so it needs the
+    // counting work to dominate: require both the absolute floor and that
+    // the stream outweighs the per-bucket overhead (a small stream over a
+    // huge --radius alphabet must stay on the naive loop)
+    if symbols.len() < UNROLL_HIST_MIN.max(4 * alphabet) {
+        let mut h = vec![0u64; alphabet];
+        for &s in symbols {
+            h[s as usize] += 1;
+        }
+        return h;
+    }
+    // one flat allocation, sub-histogram k at offset k * alphabet
+    let mut sub = vec![0u64; 4 * alphabet];
+    let (h0, rest) = sub.split_at_mut(alphabet);
+    let (h1, rest) = rest.split_at_mut(alphabet);
+    let (h2, h3) = rest.split_at_mut(alphabet);
+    let mut chunks = symbols.chunks_exact(4);
+    for c in &mut chunks {
+        h0[c[0] as usize] += 1;
+        h1[c[1] as usize] += 1;
+        h2[c[2] as usize] += 1;
+        h3[c[3] as usize] += 1;
+    }
+    for &s in chunks.remainder() {
+        h0[s as usize] += 1;
+    }
     let mut h = vec![0u64; alphabet];
-    for &s in symbols {
-        h[s as usize] += 1;
+    for k in 0..4 {
+        for (a, b) in h.iter_mut().zip(&sub[k * alphabet..(k + 1) * alphabet]) {
+            *a += b;
+        }
     }
     h
 }
@@ -648,6 +691,35 @@ mod tests {
                 }
             })
             .collect()
+    }
+
+    #[test]
+    fn interleaved_histogram_matches_naive_reference() {
+        // cover both sides of UNROLL_HIST_MIN and every remainder length
+        let mut rng = Pcg32::seeded(77);
+        for n in [0usize, 1, 3, 100, 4095, 4096, 4097, 4098, 4099, 20_000] {
+            let syms: Vec<u16> = (0..n).map(|_| rng.bounded(1024) as u16).collect();
+            let mut reference = vec![0u64; 1024];
+            for &s in &syms {
+                reference[s as usize] += 1;
+            }
+            assert_eq!(histogram(&syms, 1024), reference, "n={n}");
+        }
+        // heavily skewed stream (the case the interleave exists for)
+        let syms = skewed_codes(50_000, 9);
+        let mut reference = vec![0u64; 1024];
+        for &s in &syms {
+            reference[s as usize] += 1;
+        }
+        assert_eq!(histogram(&syms, 1024), reference);
+        // a huge alphabet with a smallish stream stays on (and matches)
+        // the naive path — the gate scales with alphabet size
+        let syms: Vec<u16> = (0..10_000).map(|_| rng.bounded(60_000) as u16).collect();
+        let mut reference = vec![0u64; 65_536];
+        for &s in &syms {
+            reference[s as usize] += 1;
+        }
+        assert_eq!(histogram(&syms, 65_536), reference);
     }
 
     #[test]

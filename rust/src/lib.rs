@@ -15,7 +15,9 @@
 //!   random access (`decode_chunk`/`decode_range`/`decode_rows`).
 //! * [`data`] — synthetic SDRBench-like dataset suites.
 //! * [`metrics`] — PSNR / rate-distortion evaluation.
-//! * [`autotune`] — block-size/lane-width autotuning.
+//! * [`autotune`] — block-size/lane-width/backend autotuning.
+//! * [`simd`] — explicit-intrinsics lane layer with runtime ISA dispatch
+//!   (AVX2 / AVX-512F / NEON / scalar) behind `quant::simd::SimdBackend`.
 //! * [`roofline`] — ERT-like machine characterization.
 
 pub mod autotune;
@@ -37,6 +39,7 @@ pub mod lossless;
 pub mod padding;
 pub mod quant;
 pub mod runtime;
+pub mod simd;
 pub mod stream;
 pub mod util;
 

@@ -37,7 +37,10 @@ USAGE: vecsz <command> [flags]
 COMMANDS
   compress   --input F --dims NxM [--out F.vsz] | --suite NAME [--out-dir D]
              flags: --eb 1e-4 | --rel-eb 1e-4, --block N, --backend
-             sz14|psz|vec8|vec16, --padding zero|avg-global|..., --threads N
+             sz14|psz|vec4|vec8|vec16|simd4|simd8|simd16, --padding
+             zero|avg-global|..., --threads N, --isa scalar|neon|avx2|avx512
+             (--isa pins the simd backend's runtime ISA dispatch; also
+             settable via the VECSZ_FORCE_ISA environment variable)
   decompress --input F.vsz --out F.f32 [--threads N]
              (accepts every container version: monolithic v1, chunked
              v2 and indexed v3)
@@ -90,6 +93,16 @@ fn parse_common(a: &Args) -> Result<Config> {
     let pad = a.str_or("padding", "zero");
     cfg.padding = PaddingPolicy::parse(pad)
         .ok_or_else(|| VszError::config(format!("bad --padding {pad}")))?;
+    if let Some(s) = a.get("isa") {
+        // benchmarking override for the simd backend's runtime dispatch
+        // (same effect as VECSZ_FORCE_ISA; unavailable ISAs are clamped)
+        let isa = vecsz::simd::Isa::parse(s)
+            .ok_or_else(|| VszError::config(format!("bad --isa {s} (scalar|neon|avx2|avx512)")))?;
+        let active = vecsz::simd::force_isa(Some(isa));
+        if active != isa {
+            eprintln!("--isa {s}: not available on this host; dispatching to {}", active.name());
+        }
+    }
     Ok(cfg)
 }
 
@@ -249,13 +262,13 @@ fn cmd_stream(a: &Args) -> Result<()> {
             match dec.load_index() {
                 Ok(idx) => {
                     println!("{} chunks indexed:", idx.n_chunks());
-                    println!("{:>6} {:>12} {:>12} {:>8} {:>8} {:>6} {:>6}",
-                        "chunk", "offset", "bytes", "row0", "rows", "block", "lanes");
+                    println!("{:>6} {:>12} {:>12} {:>8} {:>8} {:>6} {:>8}",
+                        "chunk", "offset", "bytes", "row0", "rows", "block", "kernel");
                     for (k, e) in idx.entries.iter().enumerate() {
                         println!(
-                            "{k:>6} {:>12} {:>12} {:>8} {:>8} {:>6} {:>6}",
+                            "{k:>6} {:>12} {:>12} {:>8} {:>8} {:>6} {:>8}",
                             e.offset, e.frame_len, idx.lead_offsets[k], e.lead_extent,
-                            e.meta.block_size, e.meta.width,
+                            e.meta.block_size, e.meta.backend_label(),
                         );
                     }
                 }
@@ -412,8 +425,10 @@ fn cmd_autotune(a: &Args) -> Result<()> {
         for p in &r.table {
             let mark = if p.config == r.best { " <== best" } else { "" };
             println!(
-                "   bs={:<3} w={:<2} {:>9.0} MB/s{mark}",
-                p.config.block_size, p.config.width, p.mb_per_s
+                "   bs={:<3} {:<6} {:>9.0} MB/s{mark}",
+                p.config.block_size,
+                p.config.backend_label(),
+                p.mb_per_s
             );
         }
     }
@@ -425,6 +440,7 @@ fn cmd_roofline(a: &Args) -> Result<()> {
     let h = roofline::host_info();
     println!("host: {} ({} cores, cache {} KB, avx2={} avx512={})",
         h.model, h.cores, h.cache_kb, h.has_avx2, h.has_avx512);
+    println!("simd dispatch: {}", vecsz::simd::Isa::active().name());
     let c = roofline::measure_ceilings(quick);
     println!("stream triad : {:.2} GB/s", c.dram_gb_s);
     println!("peak f32 FMA : {:.2} GFLOP/s", c.peak_gflop_s);
@@ -550,6 +566,13 @@ fn cmd_info(a: &Args) -> Result<()> {
     println!("vecsz {}", vecsz::version());
     let h = roofline::host_info();
     println!("host: {} ({} cores)", h.model, h.cores);
+    let avail: Vec<&str> = vecsz::simd::Isa::available().iter().map(|i| i.name()).collect();
+    println!(
+        "simd dispatch: {} (available: {}; compiled: {})",
+        vecsz::simd::Isa::active().name(),
+        avail.join(","),
+        vecsz::simd::compiled_target_features()
+    );
     let dir = a.str_or("artifacts", "artifacts");
     match vecsz::runtime::Manifest::load(Path::new(dir)) {
         Ok(m) => {

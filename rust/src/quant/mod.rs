@@ -1,6 +1,8 @@
 //! Prediction + quantization backends — the paper's hot path.
 //!
-//! Three implementations of the P&Q stage share one trait so the bench
+//! # The backend hierarchy
+//!
+//! Four implementations of the P&Q stage share one trait so the bench
 //! harness, the coordinator and the figure generators can swap them:
 //!
 //! * [`sz14::Sz14Backend`] — Algorithm 1: predict on *reconstructed*
@@ -8,17 +10,41 @@
 //!   the paper's `SZ-1.4` baseline.
 //! * [`psz::PszBackend`] — Algorithm 2 (dual-quant) written as the
 //!   straightforward scalar loop with a data-dependent branch; the paper's
-//!   `pSZ` (serial dual-quant, `-O3`) baseline.
-//! * [`vectorized::VecBackend`] — the contribution: dual-quant with
-//!   branchless, lane-chunked inner loops (width 8 ≈ AVX2 class, width 16 ≈
-//!   AVX-512 class) that LLVM lowers to SIMD.
+//!   `pSZ` (serial dual-quant, `-O3`) baseline. **The bit-exactness
+//!   reference** every vectorized backend is tested against.
+//! * [`vectorized::VecBackend`] — dual-quant with branchless, lane-chunked
+//!   inner loops (width 8 ≈ AVX2 class, width 16 ≈ AVX-512 class) that
+//!   LLVM *autovectorizes* — portable, but silently scalar on the default
+//!   `target-cpu`, and it burns a separate prequant pass per block.
+//! * [`simd::SimdBackend`] — the explicit-intrinsics kernel (§III-C done
+//!   with `core::arch`): runtime ISA dispatch (x86-64 AVX2, AVX-512F
+//!   behind the `avx512` cargo feature, aarch64 NEON, scalar fallback) and
+//!   the prequant pass **fused** into the predict/quantize lane loop.
 //!
-//! A fourth implementation lives in `runtime::PjrtBackend`: the same math
-//! as an AOT-compiled XLA artifact. All dual-quant backends are bit-exact
-//! against each other and against the Python oracle.
+//! A fifth implementation lives in `runtime::PjrtBackend`: the same math
+//! as an AOT-compiled XLA artifact.
+//!
+//! # ISA dispatch & the bit-exactness guarantee
+//!
+//! `SimdBackend::new` snapshots [`crate::simd::Isa::active`]: the best ISA
+//! `is_x86_feature_detected!` reports (NEON is architecturally guaranteed
+//! on aarch64), overridable for benchmarking/testing via the
+//! `VECSZ_FORCE_ISA` environment variable, the CLI `--isa` flag, or
+//! [`crate::simd::force_isa`]. Overrides the host cannot execute are
+//! clamped to the detected best — the dispatcher never runs an
+//! instruction the CPU lacks.
+//!
+//! All dual-quant backends produce **byte-identical** codes and outlier
+//! streams on every ISA: each kernel keeps the paper's operation order
+//! `(w+n+u)-(nw+nu+wu)+nwu` and uses only lane ops with scalar-identical
+//! IEEE-754 semantics (ties-to-even rounding, truncating converts). The
+//! equivalence matrix in `simd::tests` enforces this against `PszBackend`
+//! across every reachable ISA, and the backends are bit-exact against the
+//! Python oracle.
 
 pub mod decode;
 pub mod psz;
+pub mod simd;
 pub mod sz14;
 pub mod vectorized;
 
@@ -206,6 +232,10 @@ mod tests {
                 assert_eq!(v0, v8);
                 assert_eq!(c0, c16, "psz vs vec16 ndim={ndim} bs={bs}");
                 assert_eq!(v0, v16);
+                let (cs, vs) =
+                    run_backend(&crate::quant::simd::SimdBackend::new(8), &cfg, &blocks, &pads);
+                assert_eq!(c0, cs, "psz vs simd8 ndim={ndim} bs={bs} smooth={smooth}");
+                assert_eq!(v0, vs);
             }
         }
     }

@@ -1,0 +1,262 @@
+//! simdSZ — the explicit-intrinsics dual-quantization backend.
+//!
+//! [`SimdBackend`] is the hand-written counterpart of
+//! [`super::vectorized::VecBackend`]: the same branchless dual-quant math,
+//! but executed through
+//! the `core::arch` lane layer in [`crate::simd`] with runtime ISA dispatch
+//! (AVX2 / AVX-512F / NEON / scalar) instead of hoping LLVM autovectorizes
+//! a lane-chunked loop — and with the per-block **prequant pass fused**
+//! into the predict/quantize loop, so every element is pre-quantized once,
+//! in-register, as it streams through (see `simd::kernel`).
+//!
+//! Output is bit-identical to `PszBackend` and `VecBackend` on every ISA:
+//! the kernel keeps `predict_halo`'s operation order
+//! `(w+n+u)-(nw+nu+wu)+nwu` and every lane op has scalar-identical IEEE
+//! semantics. The matrix below enforces this across every ISA reachable on
+//! the test host (forced per-instance via [`SimdBackend::with_isa`]).
+//!
+//! ISA selection: [`SimdBackend::new`] snapshots [`Isa::active`] — the
+//! detected best unless overridden by `VECSZ_FORCE_ISA` / `--isa` /
+//! [`crate::simd::force_isa`].
+
+use super::{CodesKind, DqConfig, PqBackend};
+use crate::padding::PadScalars;
+use crate::simd::{run_fused, Isa};
+
+/// Explicit-intrinsics dual-quant backend; `width` ∈ {4, 8, 16} is the
+/// paper's vector-length knob (the lane-chunk the row loop advances by —
+/// chunks wider than the ISA register run as unrolled vector pairs).
+#[derive(Clone, Copy, Debug)]
+pub struct SimdBackend {
+    pub width: usize,
+    isa: Isa,
+}
+
+impl SimdBackend {
+    /// Backend on the active (detected or forced) ISA.
+    pub fn new(width: usize) -> Self {
+        Self::with_isa(width, Isa::active())
+    }
+
+    /// Backend pinned to `isa` (test/bench hook). An ISA the host cannot
+    /// run is clamped to the detected best, so construction never yields
+    /// an inexecutable kernel.
+    pub fn with_isa(width: usize, isa: Isa) -> Self {
+        assert!(matches!(width, 4 | 8 | 16), "supported lane widths: 4, 8, 16");
+        let isa = if isa.is_available() { isa } else { Isa::detect_best() };
+        Self { width, isa }
+    }
+
+    /// The ISA this instance dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+}
+
+impl PqBackend for SimdBackend {
+    fn name(&self) -> String {
+        format!("simd{}", self.width)
+    }
+
+    fn kind(&self) -> CodesKind {
+        CodesKind::DualQuant
+    }
+
+    fn lanes(&self) -> usize {
+        self.width
+    }
+
+    fn run(
+        &self,
+        cfg: &DqConfig,
+        blocks: &[f32],
+        block_base: usize,
+        pads: &PadScalars,
+        codes: &mut [u16],
+        outv: &mut [f32],
+    ) {
+        run_fused(self.isa, self.width, cfg, blocks, block_base, pads, codes, outv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
+    use crate::quant::psz::PszBackend;
+    use crate::quant::test_support::random_batch;
+    use crate::quant::vectorized::VecBackend;
+    use crate::quant::OUTLIER_CODE;
+    use crate::util::proptest::check;
+    use crate::util::prng::Pcg32;
+
+    fn zero_pads(ndim: usize) -> PadScalars {
+        PadScalars {
+            policy: PaddingPolicy::new(PadValue::Zero, PadGranularity::Global),
+            scalars: vec![0.0],
+            ndim,
+        }
+    }
+
+    fn run(
+        be: &dyn PqBackend,
+        cfg: &DqConfig,
+        blocks: &[f32],
+        pads: &PadScalars,
+    ) -> (Vec<u16>, Vec<f32>) {
+        let mut codes = vec![0u16; blocks.len()];
+        let mut outv = vec![0.0f32; blocks.len()];
+        be.run(cfg, blocks, 0, pads, &mut codes, &mut outv);
+        (codes, outv)
+    }
+
+    /// The acceptance matrix: SimdBackend == PszBackend == VecBackend,
+    /// bit for bit, across all dims, odd block sizes and edge-granularity
+    /// pads, on **every ISA reachable on this host** including the forced
+    /// scalar fallback.
+    #[test]
+    fn matrix_matches_psz_and_vec_on_every_isa() {
+        let mut rng = Pcg32::seeded(2024);
+        for &(ndim, bs) in &[(1usize, 64usize), (1, 7), (2, 8), (2, 16), (2, 5), (3, 8), (3, 4)] {
+            let shape = BlockShape::new(ndim, bs);
+            let cfg = DqConfig::new(1e-3, 512, shape);
+            for smooth in [true, false] {
+                let (blocks, pads) = random_batch(&mut rng, shape, 5, 4.0, smooth);
+                let (c0, v0) = run(&PszBackend, &cfg, &blocks, &pads);
+                for w in [4usize, 8, 16] {
+                    let (cv, vv) = run(&VecBackend::new(w), &cfg, &blocks, &pads);
+                    assert_eq!(c0, cv, "vec{w} baseline ndim={ndim} bs={bs}");
+                    for isa in Isa::available() {
+                        let be = SimdBackend::with_isa(w, isa);
+                        let (cs, vs) = run(&be, &cfg, &blocks, &pads);
+                        let tag = format!(
+                            "simd{w}/{} ndim={ndim} bs={bs} smooth={smooth}",
+                            isa.name()
+                        );
+                        assert_eq!(c0, cs, "codes {tag}");
+                        assert_eq!(v0, vs, "outv {tag}");
+                        assert_eq!(vv, vs, "outv vs vec {tag}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_edge_granularity_scalars_every_isa() {
+        // per-axis edge scalars of very different magnitudes stress the
+        // f32 op-order equivalence through the broadcast-row substitution
+        let mut rng = Pcg32::seeded(99);
+        for &(ndim, bs) in &[(1usize, 9usize), (2, 8), (3, 6)] {
+            let shape = BlockShape::new(ndim, bs);
+            let cfg = DqConfig::new(1e-2, 512, shape);
+            let (blocks, _) = random_batch(&mut rng, shape, 4, 2.0, true);
+            let scalars: Vec<f32> = (0..4 * ndim)
+                .map(|q| [1000.0f32, -0.37, 12.5][q % 3] * (1.0 + q as f32))
+                .collect();
+            let pads = PadScalars {
+                policy: PaddingPolicy::new(PadValue::Avg, PadGranularity::Edge),
+                scalars,
+                ndim,
+            };
+            let (c0, v0) = run(&PszBackend, &cfg, &blocks, &pads);
+            for isa in Isa::available() {
+                for w in [8usize, 16] {
+                    let (c1, v1) = run(&SimdBackend::with_isa(w, isa), &cfg, &blocks, &pads);
+                    assert_eq!(c0, c1, "edge codes ndim={ndim} w={w} isa={}", isa.name());
+                    assert_eq!(v0, v1, "edge outv ndim={ndim} w={w} isa={}", isa.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_equivalence_random_shapes_and_isas() {
+        // randomized shapes AND a randomized ISA choice per case
+        check("simd-psz-equivalence", 60, |g| {
+            let ndim = 1 + g.rng.bounded(3) as usize;
+            let bs = *g.choose(&[3usize, 4, 5, 8, 12, 16]);
+            let shape = BlockShape::new(ndim, bs);
+            let cfg = DqConfig::new(*g.choose(&[1e-2f64, 1e-3, 1e-4]), 512, shape);
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let (blocks, pads) = random_batch(&mut rng, shape, 3, 6.0, g.rng.next_f32() < 0.5);
+            let (c0, v0) = run(&PszBackend, &cfg, &blocks, &pads);
+            let avail = Isa::available();
+            let isa = avail[g.rng.bounded(avail.len() as u32) as usize];
+            let w = *g.choose(&[4usize, 8, 16]);
+            let (c1, v1) = run(&SimdBackend::with_isa(w, isa), &cfg, &blocks, &pads);
+            if c0 == c1 && v0 == v1 {
+                Ok(())
+            } else {
+                Err(format!("simd{w}/{} diverged ndim={ndim} bs={bs}", isa.name()))
+            }
+        });
+    }
+
+    #[test]
+    fn exact_radius_boundary_every_isa() {
+        // delta == radius must be an outlier (strict <), delta == radius-1
+        // in-cap — the same acceptance case VecBackend carries
+        let shape = BlockShape::new(1, 4);
+        let cfg = DqConfig::new(0.5, 8, shape);
+        let blocks = vec![8.0f32, 7.0, 0.0, 0.0]; // deltas [8, -1, -7, 0]
+        for isa in Isa::available() {
+            for w in [4usize, 8, 16] {
+                let (codes, outv) =
+                    run(&SimdBackend::with_isa(w, isa), &cfg, &blocks, &zero_pads(1));
+                let tag = format!("w={w} isa={}", isa.name());
+                assert_eq!(codes[0], OUTLIER_CODE, "delta == radius outlier {tag}");
+                assert_eq!(outv[0], 8.0, "{tag}");
+                assert_eq!(&codes[1..], &[7, 1, 8], "{tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn negative_out_of_cap_is_outlier_every_isa() {
+        let shape = BlockShape::new(1, 2);
+        let cfg = DqConfig::new(0.5, 8, shape);
+        let blocks = vec![-20.0f32, -20.0];
+        for isa in Isa::available() {
+            let (codes, outv) = run(&SimdBackend::with_isa(8, isa), &cfg, &blocks, &zero_pads(1));
+            assert_eq!(codes[0], OUTLIER_CODE, "isa {}", isa.name());
+            assert_eq!(outv[0], -20.0);
+            assert_eq!(codes[1], 8, "pred uses dq, not recon ({})", isa.name());
+        }
+    }
+
+    #[test]
+    fn forced_scalar_matches_active_isa() {
+        // the two dispatch extremes the CI matrix pins: whatever the host
+        // detects vs the forced scalar fallback
+        let mut rng = Pcg32::seeded(5);
+        let shape = BlockShape::new(2, 16);
+        let cfg = DqConfig::new(1e-3, 512, shape);
+        let (blocks, pads) = random_batch(&mut rng, shape, 8, 3.0, true);
+        let (ca, va) = run(&SimdBackend::new(16), &cfg, &blocks, &pads);
+        let (cs, vs) = run(&SimdBackend::with_isa(16, Isa::Scalar), &cfg, &blocks, &pads);
+        assert_eq!(ca, cs);
+        assert_eq!(va, vs);
+    }
+
+    #[test]
+    fn width_larger_than_block_uses_tail_path() {
+        let shape = BlockShape::new(2, 4);
+        let cfg = DqConfig::new(0.5, 512, shape);
+        let blocks: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        let (c16, v16) = run(&SimdBackend::new(16), &cfg, &blocks, &zero_pads(2));
+        let (c4, v4) = run(&VecBackend::new(4), &cfg, &blocks, &zero_pads(2));
+        assert_eq!(c16, c4);
+        assert_eq!(v16, v4);
+    }
+
+    #[test]
+    fn backend_identity() {
+        let be = SimdBackend::new(8);
+        assert_eq!(be.name(), "simd8");
+        assert_eq!(be.lanes(), 8);
+        assert_eq!(be.kind(), CodesKind::DualQuant);
+        assert!(be.isa().is_available());
+    }
+}

@@ -1,0 +1,412 @@
+//! The fused prequant + predict + quantize batch kernel.
+//!
+//! `VecBackend` runs two passes per block: (1) pre-quantize every element
+//! into a scratch block, (2) re-read the scratch and predict/quantize.
+//! This kernel fuses them: each element is loaded once from the raw block,
+//! pre-quantized **in-register**, stored to the scratch (later rows read
+//! it back as their north/up neighbours) and immediately predicted and
+//! quantized — pass 2's full re-read of the current element stream is
+//! gone, and every element is pre-quantized exactly once.
+//!
+//! Bit-exactness with `PszBackend`/`VecBackend` holds because
+//!
+//! * the west neighbour is **read back from the scratch row** just after
+//!   the store (not recomputed), so it is the same f32 the two-pass code
+//!   reads;
+//! * border neighbours come from *broadcast rows* pre-filled with the
+//!   pre-quantized padding scalars, reproducing the halo-fill precedence
+//!   (highest axis wins shared cells), and every prediction keeps
+//!   `predict_halo`'s operation order `(w+n+u)-(nw+nu+wu)+nwu`;
+//! * the lane ops are single IEEE f32 instructions with scalar-identical
+//!   semantics (see `lanes`), so lane partitioning cannot change results.
+//!
+//! The backend `width` (4/8/16, the paper's vector-length knob) is the
+//! chunk the row loop advances by; a chunk is processed as
+//! `width / LANES` native vectors (e.g. width 16 on AVX2 = 2 × ymm — an
+//! unrolled form), and rows shorter than a chunk fall to the scalar tail,
+//! exactly like `VecBackend`'s remainder handling.
+
+#[cfg(target_arch = "x86_64")]
+use super::lanes::Avx2Lane;
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+use super::lanes::Avx512Lane;
+#[cfg(target_arch = "aarch64")]
+use super::lanes::NeonLane;
+use super::lanes::{LaneF32, ScalarLane, MAX_VECTOR_RADIUS};
+use super::Isa;
+use crate::padding::PadScalars;
+use crate::quant::{check_batch, prequant, DqConfig, OUTLIER_CODE};
+
+/// Run the fused dual-quant kernel over a gathered-block batch (the
+/// `PqBackend::run` contract) on `isa`, with lane-chunk width `width`
+/// (4, 8 or 16).
+///
+/// Safe for any arguments: an unavailable `isa` falls back to the best
+/// detected one, and a radius beyond `MAX_VECTOR_RADIUS` (32767) routes to
+/// the scalar path (whose Rust casts match `VecBackend` for every radius).
+#[allow(clippy::too_many_arguments)]
+pub fn run_fused(
+    isa: Isa,
+    width: usize,
+    cfg: &DqConfig,
+    blocks: &[f32],
+    block_base: usize,
+    pads: &PadScalars,
+    codes: &mut [u16],
+    outv: &mut [f32],
+) {
+    assert!(matches!(width, 4 | 8 | 16), "supported lane-chunk widths: 4, 8, 16");
+    let isa = if isa.is_available() { isa } else { Isa::detect_best() };
+    // Vector narrowing is only exact while codes stay < 65534; larger
+    // radii (degenerate — the alphabet no longer fits u16 headroom) take
+    // the scalar path, which wraps exactly like VecBackend.
+    let isa = if cfg.radius > MAX_VECTOR_RADIUS { Isa::Scalar } else { isa };
+    // A chunk narrower than the native register cannot fill one vector;
+    // drop to the widest ISA whose register fits the chunk.
+    let isa = match isa {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        Isa::Avx512 if width < 16 => Isa::Avx2,
+        Isa::Avx2 if width < 8 => Isa::Scalar,
+        Isa::Neon if width < 4 => Isa::Scalar,
+        other => other,
+    };
+    match (isa, width) {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        // SAFETY: AVX-512F availability was checked by `is_available`
+        (Isa::Avx512, 16) => unsafe {
+            batch_avx512_w16(cfg, blocks, block_base, pads, codes, outv)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: AVX2 availability was checked by `is_available`
+        (Isa::Avx2, 8) => unsafe { batch_avx2_w8(cfg, blocks, block_base, pads, codes, outv) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above
+        (Isa::Avx2, 16) => unsafe { batch_avx2_w16(cfg, blocks, block_base, pads, codes, outv) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally guaranteed on aarch64
+        (Isa::Neon, w) => unsafe {
+            match w {
+                4 => batch::<NeonLane, 4>(cfg, blocks, block_base, pads, codes, outv),
+                8 => batch::<NeonLane, 8>(cfg, blocks, block_base, pads, codes, outv),
+                _ => batch::<NeonLane, 16>(cfg, blocks, block_base, pads, codes, outv),
+            }
+        },
+        // SAFETY: the scalar lane type has no CPU or alignment
+        // requirements; all pointer arithmetic is bounds-derived
+        (_, w) => unsafe {
+            match w {
+                4 => batch::<ScalarLane, 4>(cfg, blocks, block_base, pads, codes, outv),
+                8 => batch::<ScalarLane, 8>(cfg, blocks, block_base, pads, codes, outv),
+                _ => batch::<ScalarLane, 16>(cfg, blocks, block_base, pads, codes, outv),
+            }
+        },
+    }
+}
+
+// Monomorphized `#[target_feature]` entries: marking the whole batch lets
+// LLVM inline the (feature-gated) intrinsic wrappers into the loops instead
+// of leaving per-intrinsic calls behind.
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn batch_avx2_w8(
+    cfg: &DqConfig,
+    blocks: &[f32],
+    block_base: usize,
+    pads: &PadScalars,
+    codes: &mut [u16],
+    outv: &mut [f32],
+) {
+    batch::<Avx2Lane, 8>(cfg, blocks, block_base, pads, codes, outv)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn batch_avx2_w16(
+    cfg: &DqConfig,
+    blocks: &[f32],
+    block_base: usize,
+    pads: &PadScalars,
+    codes: &mut [u16],
+    outv: &mut [f32],
+) {
+    batch::<Avx2Lane, 16>(cfg, blocks, block_base, pads, codes, outv)
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+#[target_feature(enable = "avx512f")]
+unsafe fn batch_avx512_w16(
+    cfg: &DqConfig,
+    blocks: &[f32],
+    block_base: usize,
+    pads: &PadScalars,
+    codes: &mut [u16],
+    outv: &mut [f32],
+) {
+    batch::<Avx512Lane, 16>(cfg, blocks, block_base, pads, codes, outv)
+}
+
+/// Branch form of the outlier split for row heads and scalar tails —
+/// verbatim `VecBackend::emit1` semantics.
+#[inline(always)]
+fn emit_scalar(dq: f32, pred: f32, radius_f: f32, code: &mut u16, ov: &mut f32) {
+    let delta = dq - pred;
+    if delta.abs() < radius_f {
+        *code = (delta + radius_f) as i32 as u16;
+        *ov = 0.0;
+    } else {
+        *code = OUTLIER_CODE;
+        *ov = dq;
+    }
+}
+
+/// One fused row: pre-quantize `raw` into `dqrow` while predicting with
+/// `pred(j)` built from the west lane and the supplied neighbour rows.
+///
+/// `$north`/`$up`/`$nu` are either real scratch rows of the previous
+/// row/plane or broadcast pad rows — the caller encodes the border cases
+/// by substitution, the expression itself never changes.
+macro_rules! fused_row {
+    ($V:ty, $CW:expr, $raw:expr, $dqrow:expr, $pred0:expr, $hie:expr, $radius_f:expr,
+     $codes:expr, $outv:expr, |$w:ident, $j:ident| $vpred:expr, |$ws:ident, $js:ident| $spred:expr
+    ) => {{
+        let raw: &[f32] = $raw;
+        let dqrow: &mut [f32] = $dqrow;
+        let codes: &mut [u16] = $codes;
+        let outv: &mut [f32] = $outv;
+        let n = raw.len();
+        // j = 0: the row head predicts purely from halo values
+        let d0 = prequant(raw[0], $hie);
+        dqrow[0] = d0;
+        emit_scalar(d0, $pred0, $radius_f, &mut codes[0], &mut outv[0]);
+        let rv = <$V>::splat($radius_f);
+        let hv = <$V>::splat($hie);
+        let zv = <$V>::splat(0.0);
+        let mut j = 1usize;
+        while j + $CW <= n {
+            let mut t = 0usize;
+            while t < $CW {
+                let $j = j + t;
+                // fused prequant: raw -> dq in-register, then to scratch
+                let d = <$V>::load(raw.as_ptr().add($j)).mul(hv).round_ne();
+                d.store(dqrow.as_mut_ptr().add($j));
+                // west reads the scratch *after* the store, so lane t>0
+                // sees the freshly pre-quantized values — same f32s the
+                // two-pass kernel reads
+                let $w = <$V>::load(dqrow.as_ptr().add($j - 1));
+                let pred = $vpred;
+                let delta = d.sub(pred);
+                let m = delta.abs().lt(rv);
+                <$V>::select(m, delta.add(rv), zv).store_codes(codes.as_mut_ptr().add($j));
+                <$V>::select(m, zv, d).store(outv.as_mut_ptr().add($j));
+                t += <$V>::LANES;
+            }
+            j += $CW;
+        }
+        while j < n {
+            let $js = j;
+            let d = prequant(raw[$js], $hie);
+            dqrow[$js] = d;
+            let $ws = dqrow[$js - 1];
+            let pred = $spred;
+            emit_scalar(d, pred, $radius_f, &mut codes[$js], &mut outv[$js]);
+            j += 1;
+        }
+    }};
+}
+
+/// The generic fused batch: the row/plane structure of `VecBackend`'s
+/// `run_w`, with the pre-quantization pass folded into each row visit.
+///
+/// # Safety
+/// `V`'s ISA must be executable on the current CPU; `CW` must be a
+/// multiple of `V::LANES` and >= `V::LANES`.
+///
+/// `inline(always)` is load-bearing: collapsing the batch into its
+/// `#[target_feature]` entry point lets the always-inline lane wrappers
+/// (and the intrinsics inside them) fold into a context where the feature
+/// is enabled, instead of degrading to per-intrinsic function calls.
+/// (`rustfmt::skip`: the prediction-expression macro calls read as layed
+/// out here; rustfmt would scramble the operand-order comments.)
+#[rustfmt::skip]
+#[inline(always)]
+unsafe fn batch<V: LaneF32, const CW: usize>(
+    cfg: &DqConfig,
+    blocks: &[f32],
+    block_base: usize,
+    pads: &PadScalars,
+    codes: &mut [u16],
+    outv: &mut [f32],
+) {
+    let shape = cfg.shape;
+    let elems = shape.elems();
+    let bs = shape.bs;
+    let nb = check_batch(shape, blocks, codes, outv);
+    let radius_f = cfg.radius as f32;
+    let hie = cfg.half_inv_eb();
+    // scratch: pre-quantized block (neighbour rows) + broadcast pad rows
+    let mut dq = vec![0.0f32; elems];
+    let mut prow0 = vec![0.0f32; bs];
+    let mut prow1 = vec![0.0f32; bs];
+
+    for b in 0..nb {
+        let block = &blocks[b * elems..(b + 1) * elems];
+        let gb = block_base + b;
+        let ccodes = &mut codes[b * elems..(b + 1) * elems];
+        let coutv = &mut outv[b * elems..(b + 1) * elems];
+
+        match shape.ndim {
+            1 => {
+                let p0 = prequant(pads.edge_scalar(gb, 0), hie);
+                fused_row!(V, CW, block, &mut dq[..], p0, hie, radius_f, ccodes, coutv,
+                    |w, _j| w, |w, _j| w);
+            }
+            2 => {
+                // halo precedence: axis-1 planes overwrite shared cells,
+                // so row-0 body cells hold p0, the column (incl. corner) p1
+                let p0 = prequant(pads.edge_scalar(gb, 0), hie);
+                let p1 = prequant(pads.edge_scalar(gb, 1), hie);
+                prow0.as_mut_slice().fill(p0);
+                for i in 0..bs {
+                    let row = i * bs;
+                    let (before, cur_on) = dq.split_at_mut(row);
+                    let cur = &mut cur_on[..bs];
+                    let c = &mut ccodes[row..row + bs];
+                    let v = &mut coutv[row..row + bs];
+                    // (i,0): w = nw = p1; row 0 substitutes the p0 row for
+                    // north, reproducing `cur[j-1] + p0 - p0` exactly
+                    let (north, pred0): (&[f32], f32) = if i == 0 {
+                        (&prow0[..], p1 + p0 - p1)
+                    } else {
+                        let nr = &before[row - bs..];
+                        (nr, p1 + nr[0] - p1)
+                    };
+                    let nrp = north.as_ptr();
+                    fused_row!(V, CW, &block[row..row + bs], cur, pred0, hie, radius_f,
+                        c, v,
+                        |w, j| w.add(V::load(nrp.add(j))).sub(V::load(nrp.add(j - 1))),
+                        |w, j| w + north[j] - north[j - 1]);
+                }
+            }
+            3 => {
+                // halo precedence (fill order axis0 -> axis1 -> axis2):
+                //   j-coord 0 -> p2, else i-coord 0 -> p1, else k-coord 0 -> p0
+                let p0 = prequant(pads.edge_scalar(gb, 0), hie);
+                let p1 = prequant(pads.edge_scalar(gb, 1), hie);
+                let p2 = prequant(pads.edge_scalar(gb, 2), hie);
+                prow0.as_mut_slice().fill(p0);
+                prow1.as_mut_slice().fill(p1);
+                let plane = bs * bs;
+                for k in 0..bs {
+                    for i in 0..bs {
+                        let row = k * plane + i * bs;
+                        let (before, cur_on) = dq.split_at_mut(row);
+                        let cur = &mut cur_on[..bs];
+                        let c = &mut ccodes[row..row + bs];
+                        let v = &mut coutv[row..row + bs];
+                        // substitute broadcast pad rows on the borders; the
+                        // unified expression then reproduces every case of
+                        // the two-pass kernel with identical operand order
+                        let (north, up, nu, pred0): (&[f32], &[f32], &[f32], f32) =
+                            match (k > 0, i > 0) {
+                                (true, true) => {
+                                    let nr = &before[row - bs..row];
+                                    let ur = &before[row - plane..row - plane + bs];
+                                    let nr2 = &before[row - plane - bs..row - plane];
+                                    // j=0: w = nw = wu = nwu = p2
+                                    let pr = (p2 + nr[0] + ur[0]) - (p2 + nr2[0] + p2) + p2;
+                                    (nr, ur, nr2, pr)
+                                }
+                                (true, false) => {
+                                    // i == 0: n, nw, nu, nwu live in the
+                                    // i=0 halo -> p1 row
+                                    let ur = &before[row - plane..row - plane + bs];
+                                    let pr = (p2 + p1 + ur[0]) - (p2 + p1 + p2) + p2;
+                                    (&prow1[..], ur, &prow1[..], pr)
+                                }
+                                (false, true) => {
+                                    // k == 0: u, wu, nu, nwu live in the
+                                    // k=0 halo -> p0 row
+                                    let nr = &before[row - bs..row];
+                                    let pr = (p2 + nr[0] + p0) - (p2 + p0 + p2) + p2;
+                                    (nr, &prow0[..], &prow0[..], pr)
+                                }
+                                (false, false) => {
+                                    // k == i == 0: n/nw/nu/nwu -> p1,
+                                    // u/wu -> p0 (see run_w's derivation)
+                                    let pr = (p2 + p1 + p0) - (p2 + p1 + p2) + p2;
+                                    (&prow1[..], &prow0[..], &prow1[..], pr)
+                                }
+                            };
+                        let (np, up_p, nup) = (north.as_ptr(), up.as_ptr(), nu.as_ptr());
+                        // predict_halo order: (w+n+u) - (nw+nu+wu) + nwu
+                        fused_row!(V, CW, &block[row..row + bs], cur, pred0, hie,
+                            radius_f, c, v,
+                            |w, j| w
+                                .add(V::load(np.add(j)))
+                                .add(V::load(up_p.add(j)))
+                                .sub(
+                                    V::load(np.add(j - 1))
+                                        .add(V::load(nup.add(j)))
+                                        .add(V::load(up_p.add(j - 1))),
+                                )
+                                .add(V::load(nup.add(j - 1))),
+                            |w, j| (w + north[j] + up[j]) - (north[j - 1] + nu[j] + up[j - 1])
+                                + nu[j - 1]);
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
+
+    fn zero_pads(ndim: usize) -> PadScalars {
+        PadScalars {
+            policy: PaddingPolicy::new(PadValue::Zero, PadGranularity::Global),
+            scalars: vec![0.0],
+            ndim,
+        }
+    }
+
+    // The cross-backend / cross-ISA equivalence matrix lives in
+    // quant::simd; here: direct kernel sanity on hand-computed cases.
+    #[test]
+    fn known_1d_case_matches_algorithm2() {
+        // eb = 0.5 -> prequant = round(x); pad 0
+        // data [1,2,4,4]: dq = [1,2,4,4]; preds [0,1,2,4]; deltas [1,1,2,0]
+        let shape = BlockShape::new(1, 4);
+        let cfg = DqConfig::new(0.5, 512, shape);
+        let blocks = vec![1.0f32, 2.0, 4.0, 4.0];
+        for isa in Isa::available() {
+            let mut codes = vec![0u16; 4];
+            let mut outv = vec![0.0f32; 4];
+            run_fused(isa, 8, &cfg, &blocks, 0, &zero_pads(1), &mut codes, &mut outv);
+            assert_eq!(codes, vec![513, 513, 514, 512], "isa {}", isa.name());
+            assert_eq!(outv, vec![0.0; 4]);
+        }
+    }
+
+    #[test]
+    fn unavailable_isa_and_giant_radius_fall_back() {
+        let shape = BlockShape::new(1, 4);
+        let blocks = vec![1.0f32, 2.0, 4.0, 4.0];
+        // forcing an ISA the host may lack must still produce the answer
+        let mut codes = vec![0u16; 4];
+        let mut outv = vec![0.0f32; 4];
+        let cfg = DqConfig::new(0.5, 512, shape);
+        run_fused(Isa::Avx512, 16, &cfg, &blocks, 0, &zero_pads(1), &mut codes, &mut outv);
+        assert_eq!(codes, vec![513, 513, 514, 512]);
+        // radius beyond the vector-exact range routes to the scalar path
+        let cfg = DqConfig::new(0.5, 40_000, shape);
+        let mut c2 = vec![0u16; 4];
+        run_fused(Isa::detect_best(), 8, &cfg, &blocks, 0, &zero_pads(1), &mut c2, &mut outv);
+        assert_eq!(c2, vec![40_001, 40_001, 40_002, 40_000]);
+    }
+}

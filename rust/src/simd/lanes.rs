@@ -1,0 +1,396 @@
+//! The `f32 × W` lane abstraction behind the fused kernel.
+//!
+//! One trait, four implementations: scalar (always), AVX2 and AVX-512F
+//! (x86-64, the latter behind the `avx512` cargo feature), NEON (aarch64).
+//! Every operation is a single IEEE-754 f32 instruction applied lane-wise,
+//! so any lane partitioning of the same element stream produces bit-equal
+//! results — the property the cross-ISA equivalence tests in `quant`
+//! enforce.
+//!
+//! Two semantic pins keep the vector paths equal to the scalar reference:
+//!
+//! * [`round_ne`](LaneF32::round_ne) is round-to-nearest-ties-even
+//!   (`vroundps`/`vrndscaleps` imm 0x08, `frintn`), matching
+//!   `f32::round_ties_even` in `quant::prequant`.
+//! * [`store_codes`](LaneF32::store_codes) converts with **truncation
+//!   toward zero** (`vcvttps2dq`, `fcvtzs`), matching Rust's `as i32`
+//!   cast, then narrows to u16. The kernel only feeds it values in
+//!   `[0, 2·radius)` with `radius <= MAX_VECTOR_RADIUS`, where truncating
+//!   and saturating narrows agree — the dispatcher routes larger radii to
+//!   the scalar path, whose Rust casts match `VecBackend` for any radius.
+
+/// Largest quantization radius the vector paths handle: in-cap codes stay
+/// `< 2·radius <= 65534`, inside exact-u16-narrowing range.
+pub const MAX_VECTOR_RADIUS: u16 = 32767;
+
+/// `W` f32 lanes plus the element-wise ops the fused dual-quant kernel
+/// needs. All methods are `unsafe`: the caller must guarantee (a) the CPU
+/// supports the implementing ISA and (b) pointers cover `LANES` elements.
+pub trait LaneF32: Copy {
+    /// Lanes per vector.
+    const LANES: usize;
+    /// Comparison-result type consumed by [`select`](Self::select).
+    type Mask: Copy;
+
+    unsafe fn splat(x: f32) -> Self;
+    unsafe fn load(p: *const f32) -> Self;
+    unsafe fn store(self, p: *mut f32);
+    unsafe fn add(self, o: Self) -> Self;
+    unsafe fn sub(self, o: Self) -> Self;
+    unsafe fn mul(self, o: Self) -> Self;
+    /// Round to nearest integer, ties to even (exactly
+    /// `f32::round_ties_even` per lane).
+    unsafe fn round_ne(self) -> Self;
+    unsafe fn abs(self) -> Self;
+    /// Lane-wise `self < o` (ordered: NaN compares false, like Rust `<`).
+    unsafe fn lt(self, o: Self) -> Self::Mask;
+    /// Lane-wise `if m { a } else { b }`.
+    unsafe fn select(m: Self::Mask, a: Self, b: Self) -> Self;
+    /// Truncate lanes toward zero to i32, narrow to u16 and store `LANES`
+    /// codes at `p`. Exact for lane values in `[0, 65534)`.
+    unsafe fn store_codes(self, p: *mut u16);
+}
+
+/// Scalar fallback: one lane, plain Rust float ops. Safe in substance (the
+/// `unsafe` is only the trait contract); bit-identical to `VecBackend`'s
+/// per-element math for **every** input including out-of-range radii,
+/// which is why the dispatcher routes `radius > MAX_VECTOR_RADIUS` here.
+#[derive(Clone, Copy)]
+pub struct ScalarLane(pub f32);
+
+impl LaneF32 for ScalarLane {
+    const LANES: usize = 1;
+    type Mask = bool;
+
+    #[inline(always)]
+    unsafe fn splat(x: f32) -> Self {
+        ScalarLane(x)
+    }
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> Self {
+        // SAFETY: caller guarantees p is valid for 1 read
+        ScalarLane(*p)
+    }
+    #[inline(always)]
+    unsafe fn store(self, p: *mut f32) {
+        // SAFETY: caller guarantees p is valid for 1 write
+        *p = self.0;
+    }
+    #[inline(always)]
+    unsafe fn add(self, o: Self) -> Self {
+        ScalarLane(self.0 + o.0)
+    }
+    #[inline(always)]
+    unsafe fn sub(self, o: Self) -> Self {
+        ScalarLane(self.0 - o.0)
+    }
+    #[inline(always)]
+    unsafe fn mul(self, o: Self) -> Self {
+        ScalarLane(self.0 * o.0)
+    }
+    #[inline(always)]
+    unsafe fn round_ne(self) -> Self {
+        ScalarLane(self.0.round_ties_even())
+    }
+    #[inline(always)]
+    unsafe fn abs(self) -> Self {
+        ScalarLane(self.0.abs())
+    }
+    #[inline(always)]
+    unsafe fn lt(self, o: Self) -> bool {
+        self.0 < o.0
+    }
+    #[inline(always)]
+    unsafe fn select(m: bool, a: Self, b: Self) -> Self {
+        if m {
+            a
+        } else {
+            b
+        }
+    }
+    #[inline(always)]
+    unsafe fn store_codes(self, p: *mut u16) {
+        // Rust's saturating f32 -> i32 cast, then u16 truncation: the
+        // scalar reference semantics the vector paths must agree with on
+        // their (bounded) domain.
+        // SAFETY: caller guarantees p is valid for 1 write
+        *p = self.0 as i32 as u16;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use x86::Avx2Lane;
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+pub use x86::Avx512Lane;
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::LaneF32;
+    use std::arch::x86_64::*;
+
+    /// 8 × f32 in a ymm register.
+    ///
+    /// SAFETY contract for every method: the caller runs on a CPU with
+    /// AVX2 (the dispatcher checks `is_x86_feature_detected!("avx2")`
+    /// before selecting this type) and pointer args cover 8 elements.
+    /// Loads/stores use the unaligned forms, so no alignment is required.
+    #[derive(Clone, Copy)]
+    pub struct Avx2Lane(__m256);
+
+    impl LaneF32 for Avx2Lane {
+        const LANES: usize = 8;
+        type Mask = __m256;
+
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> Self {
+            Avx2Lane(_mm256_set1_ps(x))
+        }
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            Avx2Lane(_mm256_loadu_ps(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            _mm256_storeu_ps(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            Avx2Lane(_mm256_add_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn sub(self, o: Self) -> Self {
+            Avx2Lane(_mm256_sub_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            Avx2Lane(_mm256_mul_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn round_ne(self) -> Self {
+            // 0x08 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC:
+            // ties-to-even, identical to f32::round_ties_even
+            Avx2Lane(_mm256_round_ps::<0x08>(self.0))
+        }
+        #[inline(always)]
+        unsafe fn abs(self) -> Self {
+            // clear the sign bit; |NaN| stays NaN, matching f32::abs
+            Avx2Lane(_mm256_andnot_ps(_mm256_set1_ps(-0.0), self.0))
+        }
+        #[inline(always)]
+        unsafe fn lt(self, o: Self) -> __m256 {
+            // ordered-quiet <: NaN lanes compare false, like Rust `<`
+            _mm256_cmp_ps::<_CMP_LT_OQ>(self.0, o.0)
+        }
+        #[inline(always)]
+        unsafe fn select(m: __m256, a: Self, b: Self) -> Self {
+            // blendv picks `a` where the mask lane's sign bit is set
+            Avx2Lane(_mm256_blendv_ps(b.0, a.0, m))
+        }
+        #[inline(always)]
+        unsafe fn store_codes(self, p: *mut u16) {
+            // vcvttps2dq truncates toward zero (Rust `as i32` semantics on
+            // the kernel's bounded domain), then a 4+4 unsigned-saturating
+            // pack narrows to 8 in-order u16 — exact for values < 65534.
+            let i = _mm256_cvttps_epi32(self.0);
+            let lo = _mm256_castsi256_si128(i);
+            let hi = _mm256_extracti128_si256::<1>(i);
+            _mm_storeu_si128(p as *mut __m128i, _mm_packus_epi32(lo, hi));
+        }
+    }
+
+    /// 16 × f32 in a zmm register (`avx512` cargo feature; needs
+    /// rustc >= 1.89 for stable AVX-512 intrinsics).
+    ///
+    /// SAFETY contract: CPU has AVX-512F (dispatcher-checked) and pointer
+    /// args cover 16 elements; unaligned forms throughout.
+    #[cfg(feature = "avx512")]
+    #[derive(Clone, Copy)]
+    pub struct Avx512Lane(__m512);
+
+    #[cfg(feature = "avx512")]
+    impl LaneF32 for Avx512Lane {
+        const LANES: usize = 16;
+        type Mask = __mmask16;
+
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> Self {
+            Avx512Lane(_mm512_set1_ps(x))
+        }
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            Avx512Lane(_mm512_loadu_ps(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            _mm512_storeu_ps(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            Avx512Lane(_mm512_add_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn sub(self, o: Self) -> Self {
+            Avx512Lane(_mm512_sub_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            Avx512Lane(_mm512_mul_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn round_ne(self) -> Self {
+            // vrndscaleps imm 0x08: scale 0, suppress exceptions,
+            // round-to-nearest-even — identical to f32::round_ties_even
+            Avx512Lane(_mm512_roundscale_ps::<0x08>(self.0))
+        }
+        #[inline(always)]
+        unsafe fn abs(self) -> Self {
+            Avx512Lane(_mm512_abs_ps(self.0))
+        }
+        #[inline(always)]
+        unsafe fn lt(self, o: Self) -> __mmask16 {
+            _mm512_cmp_ps_mask::<_CMP_LT_OQ>(self.0, o.0)
+        }
+        #[inline(always)]
+        unsafe fn select(m: __mmask16, a: Self, b: Self) -> Self {
+            Avx512Lane(_mm512_mask_blend_ps(m, b.0, a.0))
+        }
+        #[inline(always)]
+        unsafe fn store_codes(self, p: *mut u16) {
+            // vcvttps2dq truncation, then vpmovdw (plain low-16 narrowing,
+            // exact on the kernel's [0, 65534) domain)
+            let i = _mm512_cvttps_epi32(self.0);
+            _mm256_storeu_si256(p as *mut __m256i, _mm512_cvtepi32_epi16(i));
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+pub use arm::NeonLane;
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::LaneF32;
+    use std::arch::aarch64::*;
+
+    /// 4 × f32 in a NEON q register.
+    ///
+    /// SAFETY contract: NEON is architecturally guaranteed on aarch64;
+    /// pointer args cover 4 elements (NEON loads/stores are unaligned).
+    #[derive(Clone, Copy)]
+    pub struct NeonLane(float32x4_t);
+
+    impl LaneF32 for NeonLane {
+        const LANES: usize = 4;
+        type Mask = uint32x4_t;
+
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> Self {
+            NeonLane(vdupq_n_f32(x))
+        }
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            NeonLane(vld1q_f32(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            vst1q_f32(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            NeonLane(vaddq_f32(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn sub(self, o: Self) -> Self {
+            NeonLane(vsubq_f32(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            NeonLane(vmulq_f32(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn round_ne(self) -> Self {
+            // frintn: round to nearest, ties to even
+            NeonLane(vrndnq_f32(self.0))
+        }
+        #[inline(always)]
+        unsafe fn abs(self) -> Self {
+            NeonLane(vabsq_f32(self.0))
+        }
+        #[inline(always)]
+        unsafe fn lt(self, o: Self) -> uint32x4_t {
+            // fcmgt(o, self): NaN operands yield all-zero lanes (false)
+            vcltq_f32(self.0, o.0)
+        }
+        #[inline(always)]
+        unsafe fn select(m: uint32x4_t, a: Self, b: Self) -> Self {
+            NeonLane(vbslq_f32(m, a.0, b.0))
+        }
+        #[inline(always)]
+        unsafe fn store_codes(self, p: *mut u16) {
+            // fcvtzs truncates toward zero; sqxtun (signed -> unsigned
+            // saturating narrow) is exact on the kernel's [0, 65534) domain
+            let i = vcvtq_s32_f32(self.0);
+            vst1_u16(p, vqmovun_s32(i));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Scalar-lane semantics are the reference everything else is compared
+    // against (the cross-ISA comparisons live in quant::simd's matrix).
+    #[test]
+    fn scalar_lane_matches_rust_ops() {
+        unsafe {
+            let a = ScalarLane::splat(2.5);
+            assert_eq!(a.round_ne().0, 2.0); // ties to even
+            assert_eq!(ScalarLane::splat(3.5).round_ne().0, 4.0);
+            assert_eq!(ScalarLane::splat(-1.75).abs().0, 1.75);
+            assert!(ScalarLane::splat(1.0).lt(ScalarLane::splat(2.0)));
+            assert!(!ScalarLane::splat(f32::NAN).lt(ScalarLane::splat(2.0)));
+            let mut c = 0u16;
+            ScalarLane::splat(513.9).store_codes(&mut c);
+            assert_eq!(c, 513); // truncation toward zero
+            ScalarLane::splat(0.0).store_codes(&mut c);
+            assert_eq!(c, 0);
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_lane_matches_scalar_reference() {
+        if !crate::simd::Isa::Avx2.is_available() {
+            return;
+        }
+        // SAFETY: AVX2 presence checked above; buffers sized for 8 lanes
+        unsafe { avx2_case() }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn avx2_case() {
+        let xs: [f32; 8] = [0.5, 1.5, 2.5, -2.5, 1023.49, -0.49, 65533.4, 7.0];
+        let v = Avx2Lane::load(xs.as_ptr());
+        let mut rounded = [0.0f32; 8];
+        v.round_ne().store(rounded.as_mut_ptr());
+        for (x, r) in xs.iter().zip(rounded) {
+            assert_eq!(r, x.round_ties_even(), "round_ne({x})");
+        }
+        let mut codes = [0u16; 8];
+        // only non-negative in-range values reach store_codes in the kernel
+        let pos: [f32; 8] = [0.0, 1.9, 2.0, 513.7, 1023.0, 65533.0, 12.3, 8.5];
+        Avx2Lane::load(pos.as_ptr()).store_codes(codes.as_mut_ptr());
+        for (x, c) in pos.iter().zip(codes) {
+            assert_eq!(c, *x as i32 as u16, "store_codes({x})");
+        }
+        let m = Avx2Lane::load(xs.as_ptr()).abs().lt(Avx2Lane::splat(3.0));
+        let sel = Avx2Lane::select(m, Avx2Lane::splat(1.0), Avx2Lane::splat(0.0));
+        let mut out = [0.0f32; 8];
+        sel.store(out.as_mut_ptr());
+        for (x, o) in xs.iter().zip(out) {
+            assert_eq!(o, if x.abs() < 3.0 { 1.0 } else { 0.0 }, "select({x})");
+        }
+    }
+}

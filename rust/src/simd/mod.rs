@@ -1,0 +1,271 @@
+//! Explicit-intrinsics SIMD layer: runtime ISA dispatch + the fused
+//! prequant/predict/quantize kernel (§III-C, done with `core::arch`).
+//!
+//! The crate's `vec{4,8,16}` backends rely on LLVM autovectorizing
+//! fixed-width lane chunks, which silently degrades to scalar code on the
+//! default `target-cpu` and cannot use the ISA's rounding/convert/select
+//! instructions directly. This module is the hand-written counterpart the
+//! paper actually benchmarks:
+//!
+//! * `lanes` — a thin `f32 × W` lane abstraction (load/store, add/sub/
+//!   mul, round-ties-even, abs, compare, select, truncating convert with a
+//!   u16 narrowing store) implemented with x86-64 AVX2 intrinsics (AVX-512F
+//!   behind the `avx512` cargo feature), aarch64 NEON, and a safe scalar
+//!   fallback. All `unsafe` in the crate's SIMD path lives here and in
+//!   [`kernel`]; every intrinsic impl carries its safety argument.
+//! * [`kernel`] — the **fused** dual-quant batch kernel: the per-block
+//!   prequantization pass is folded into the predict/quantize lane loop, so
+//!   each element is pre-quantized exactly once, in-register, as it streams
+//!   through (the separate prequant pass's full re-read of every block is
+//!   gone; the `dq` scratch block remains only because neighbour rows need
+//!   it). Operation order is exactly `(w+n+u)-(nw+nu+wu)+nwu`, so output is
+//!   bit-identical to `PszBackend`/`VecBackend` on every ISA.
+//! * [`Isa`] — runtime CPU dispatch. The best ISA is detected once via
+//!   `is_x86_feature_detected!` (NEON is architecturally guaranteed on
+//!   aarch64) and can be overridden for benchmarking/testing with the
+//!   `VECSZ_FORCE_ISA` environment variable or the `--isa` CLI flag
+//!   (programmatically: [`force_isa`]). Forcing an ISA the host cannot run
+//!   falls back to the detected one — the dispatcher never executes an
+//!   instruction the CPU lacks.
+//!
+//! The public entry point is [`run_fused`]; `quant::simd::SimdBackend`
+//! wraps it behind the common `PqBackend` trait.
+
+pub mod kernel;
+pub(crate) mod lanes;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub use kernel::run_fused;
+
+/// Instruction-set architectures the fused kernel can dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar fallback — bit-identical, always available.
+    Scalar,
+    /// aarch64 NEON (128-bit, 4 × f32).
+    Neon,
+    /// x86-64 AVX2 (256-bit, 8 × f32).
+    Avx2,
+    /// x86-64 AVX-512F (512-bit, 16 × f32). Compiled only with the
+    /// `avx512` cargo feature (the intrinsics need rustc >= 1.89).
+    Avx512,
+}
+
+impl Isa {
+    /// Stable lowercase name (used by `VECSZ_FORCE_ISA`, `--isa` and the
+    /// `BENCH_*.json` metadata).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Neon => "neon",
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+        }
+    }
+
+    /// Parse a [`name`](Self::name).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "neon" => Some(Isa::Neon),
+            "avx2" => Some(Isa::Avx2),
+            "avx512" | "avx512f" => Some(Isa::Avx512),
+            _ => None,
+        }
+    }
+
+    /// Native f32 lanes per vector register.
+    pub fn native_lanes(self) -> usize {
+        match self {
+            Isa::Scalar => 1,
+            Isa::Neon => 4,
+            Isa::Avx2 => 8,
+            Isa::Avx512 => 16,
+        }
+    }
+
+    /// Can the host execute this ISA's instructions?
+    pub fn is_available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+            Isa::Avx512 => std::arch::is_x86_feature_detected!("avx512f"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Every ISA the fused kernel can run on this host, best first
+    /// (the test matrix iterates this).
+    pub fn available() -> Vec<Isa> {
+        [Isa::Avx512, Isa::Avx2, Isa::Neon, Isa::Scalar]
+            .into_iter()
+            .filter(|i| i.is_available())
+            .collect()
+    }
+
+    /// Best ISA the host supports (ignoring any override).
+    pub fn detect_best() -> Isa {
+        Self::available().first().copied().unwrap_or(Isa::Scalar)
+    }
+
+    /// The ISA the dispatcher will actually use: a programmatic
+    /// [`force_isa`] override wins, then `VECSZ_FORCE_ISA`, then
+    /// [`detect_best`](Self::detect_best). Unavailable overrides are
+    /// ignored (with a warning for the env var).
+    pub fn active() -> Isa {
+        match state() {
+            STATE_AUTO => Isa::detect_best(),
+            s => from_idx(s - STATE_FORCED_BASE),
+        }
+    }
+
+    fn idx(self) -> u8 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Neon => 1,
+            Isa::Avx2 => 2,
+            Isa::Avx512 => 3,
+        }
+    }
+}
+
+fn from_idx(i: u8) -> Isa {
+    match i {
+        0 => Isa::Scalar,
+        1 => Isa::Neon,
+        2 => Isa::Avx2,
+        _ => Isa::Avx512,
+    }
+}
+
+/// Dispatch-override state: 0 = uninitialized (env not read yet),
+/// 1 = automatic detection, `STATE_FORCED_BASE + idx` = forced ISA.
+static STATE: AtomicU8 = AtomicU8::new(0);
+const STATE_AUTO: u8 = 1;
+const STATE_FORCED_BASE: u8 = 2;
+
+fn state() -> u8 {
+    let s = STATE.load(Ordering::Relaxed);
+    if s != 0 {
+        return s;
+    }
+    // first touch: honour VECSZ_FORCE_ISA once (empty counts as unset so
+    // CI matrices can pass it through unconditionally)
+    let s = match std::env::var("VECSZ_FORCE_ISA") {
+        Ok(v) if v.trim().is_empty() => STATE_AUTO,
+        Ok(v) => match Isa::parse(&v) {
+            Some(isa) if isa.is_available() => STATE_FORCED_BASE + isa.idx(),
+            Some(isa) => {
+                eprintln!(
+                    "vecsz: VECSZ_FORCE_ISA={} not available on this host; using {}",
+                    isa.name(),
+                    Isa::detect_best().name()
+                );
+                STATE_AUTO
+            }
+            None => {
+                eprintln!("vecsz: VECSZ_FORCE_ISA='{v}' not recognized; using auto detection");
+                STATE_AUTO
+            }
+        },
+        Err(_) => STATE_AUTO,
+    };
+    // racing first-touchers compute the same value; plain store is fine
+    STATE.store(s, Ordering::Relaxed);
+    s
+}
+
+/// Force the dispatcher to `isa` (benchmarking/test hook; the CLI `--isa`
+/// flag lands here). `None` — and an unavailable ISA, which is ignored —
+/// restores the default precedence (`VECSZ_FORCE_ISA`, then detection) by
+/// clearing the state so the env var is re-read on the next touch; a
+/// programmatic force must not permanently erase the env override.
+/// Returns the now-active ISA.
+pub fn force_isa(isa: Option<Isa>) -> Isa {
+    match isa {
+        Some(i) if i.is_available() => STATE.store(STATE_FORCED_BASE + i.idx(), Ordering::Relaxed),
+        _ => STATE.store(0, Ordering::Relaxed),
+    }
+    Isa::active()
+}
+
+/// Target features this binary was *compiled* with (the `-C target-cpu`
+/// axis, as opposed to the runtime-detected ISA) — recorded in the
+/// `BENCH_*.json` metadata so perf baselines are never diffed across
+/// incompatible builds.
+pub fn compiled_target_features() -> String {
+    let mut feats: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if cfg!(target_feature = "sse4.1") {
+            feats.push("sse4.1");
+        }
+        if cfg!(target_feature = "avx") {
+            feats.push("avx");
+        }
+        if cfg!(target_feature = "avx2") {
+            feats.push("avx2");
+        }
+        if cfg!(target_feature = "avx512f") {
+            feats.push("avx512f");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    feats.push("neon");
+    if feats.is_empty() {
+        feats.push("baseline");
+    }
+    format!("{}:{}", std::env::consts::ARCH, feats.join("+"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for isa in [Isa::Scalar, Isa::Neon, Isa::Avx2, Isa::Avx512] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("AVX2"), Some(Isa::Avx2));
+        assert_eq!(Isa::parse("avx512f"), Some(Isa::Avx512));
+        assert_eq!(Isa::parse("mmx"), None);
+    }
+
+    #[test]
+    fn scalar_always_available_and_listed_last() {
+        assert!(Isa::Scalar.is_available());
+        let avail = Isa::available();
+        assert_eq!(*avail.last().unwrap(), Isa::Scalar);
+        assert!(avail.contains(&Isa::detect_best()));
+        // best-first ordering: native lane counts are non-increasing
+        for w in avail.windows(2) {
+            assert!(w[0].native_lanes() >= w[1].native_lanes());
+        }
+    }
+
+    #[test]
+    fn force_isa_roundtrip() {
+        // baseline respects a VECSZ_FORCE_ISA the test run may carry (the
+        // scalar-forced CI job does), so compare against it, not detection
+        let baseline = Isa::active();
+        assert_eq!(force_isa(Some(Isa::Scalar)), Isa::Scalar);
+        assert_eq!(Isa::active(), Isa::Scalar);
+        // unavailable forces are ignored and restore env-then-detect
+        #[cfg(not(target_arch = "aarch64"))]
+        assert_eq!(force_isa(Some(Isa::Neon)), baseline);
+        assert_eq!(force_isa(None), baseline, "None must re-honour the env override");
+    }
+
+    #[test]
+    fn compiled_features_nonempty() {
+        let f = compiled_target_features();
+        assert!(f.contains(':'), "{f}");
+    }
+}

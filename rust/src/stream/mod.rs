@@ -139,12 +139,12 @@ fn encode_chunk(
     let mut cfg = cfg;
     if let Some(ts) = opts.chunk_autotune {
         if field.data.len() >= CHUNK_AUTOTUNE_MIN_ELEMS
-            && matches!(cfg.backend, BackendChoice::Vec { .. })
+            && matches!(cfg.backend, BackendChoice::Vec { .. } | BackendChoice::Simd { .. })
         {
             let eb = cfg.eb.resolve(&field.data);
             let r = autotune(&field, eb, cfg.radius, cfg.padding, &opts.tune_widths, ts);
             cfg.block_size = r.best.block_size;
-            cfg.backend = BackendChoice::Vec { width: r.best.width };
+            cfg.backend = r.best.backend_choice();
         }
     }
     let backend = cfg.backend.instantiate();
@@ -157,6 +157,7 @@ fn encode_chunk(
         block_size: body.block_size as u32,
         width: match cfg.backend {
             BackendChoice::Vec { width } => width as u8,
+            BackendChoice::Simd { width } => width as u8 | format::WIDTH_SIMD_FLAG,
             _ => 0,
         },
     };
@@ -1542,11 +1543,15 @@ mod tests {
             let c = dec.decode_chunk(k).unwrap();
             assert_eq!(c.data, &rec.data[c.lead_offset * 256..(c.lead_offset + 64) * 256]);
         }
-        // the recorded configs come from the §III-E candidate grid
+        // the recorded configs come from the §III-E candidate grid; the
+        // width byte's high bit flags the simd backend and the low bits
+        // must still be a grid width either way
         let idx = dec.load_index().unwrap();
         for e in &idx.entries {
             assert!([8, 16, 32, 64].contains(&e.meta.block_size), "bs {}", e.meta.block_size);
-            assert!([8u8, 16].contains(&e.meta.width), "width {}", e.meta.width);
+            assert!([8u8, 16].contains(&e.meta.lane_width()), "width {}", e.meta.width);
+            let label = e.meta.backend_label();
+            assert!(["vec8", "vec16", "simd8", "simd16"].contains(&label.as_str()), "{label}");
         }
     }
 

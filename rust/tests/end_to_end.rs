@@ -62,7 +62,8 @@ fn every_suite_roundtrips_within_bound() {
 
 #[test]
 fn backends_produce_interchangeable_dualquant_streams() {
-    // psz / vec8 / vec16 must produce byte-identical containers
+    // psz / vec8 / vec16 / simd8 / simd16 must produce byte-identical
+    // containers — on every ISA the host can dispatch the simd kernel to
     let ds = suite("cesm", Scale::Small, 2).unwrap();
     let field = subsample(&ds.fields[1], 100_000);
     let mk = |backend| {
@@ -74,6 +75,14 @@ fn backends_produce_interchangeable_dualquant_streams() {
     let c = mk(BackendChoice::Vec { width: 16 });
     assert_eq!(a, b, "psz vs vec8 containers differ");
     assert_eq!(b, c, "vec8 vs vec16 containers differ");
+    for isa in vecsz::simd::Isa::available() {
+        vecsz::simd::force_isa(Some(isa));
+        let s8 = mk(BackendChoice::Simd { width: 8 });
+        let s16 = mk(BackendChoice::Simd { width: 16 });
+        assert_eq!(a, s8, "psz vs simd8 containers differ on {}", isa.name());
+        assert_eq!(a, s16, "psz vs simd16 containers differ on {}", isa.name());
+    }
+    vecsz::simd::force_isa(None);
 }
 
 #[test]
