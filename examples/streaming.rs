@@ -91,5 +91,17 @@ fn main() -> vecsz::Result<()> {
         "random access: chunk {mid}/{n_chunks} and rows 100..164 decoded \
          without touching the rest of the container ✔"
     );
+
+    // -- 5. column ranges: every chunk overlaps, so all chunks decode
+    //       chunk-parallel and the extent is gathered per slab -------------
+    let (lo, hi) = (COLS / 4, COLS / 2);
+    let cols = ra.decode_cols(lo..hi, 4)?;
+    let expect: Vec<f32> = serial
+        .data
+        .chunks(COLS)
+        .flat_map(|row| row[lo..hi].to_vec())
+        .collect();
+    assert_eq!(cols, expect);
+    println!("column range {lo}..{hi} gathered from all chunks ✔");
     Ok(())
 }

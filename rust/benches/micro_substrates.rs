@@ -2,23 +2,26 @@
 //! substrate stages surrounding the dual-quant hot path: Huffman encode/
 //! decode, the lossless pass, block gather/scatter, the P&Q backends head
 //! to head (autovectorized `vec` vs explicit-intrinsics fused `simd`, one
-//! and four threads) and sequential block decode. These locate the non-P&Q
-//! bottlenecks that Table III's Amdahl analysis attributes the residual
-//! runtime to.
+//! and four threads) and the decode side: the cascading scalar reference
+//! vs the reverse-Lorenzo wavefront backends, plus the full decode stage
+//! at 1/4 threads. These locate the non-P&Q bottlenecks that Table III's
+//! Amdahl analysis attributes the residual runtime to.
 
 use vecsz::bench::{bench, BenchOpts, BenchStats};
 use vecsz::blocks::{gather_block, BlockShape, Dims, HaloBlock};
-use vecsz::compressor::{pq_stage, BackendChoice, Config, EbMode};
+use vecsz::compressor::{compress, decompress, pq_stage, BackendChoice, Config, EbMode};
 use vecsz::coordinator::pool::ThreadPool;
 use vecsz::data::Field;
 use vecsz::huffman;
 use vecsz::lossless;
 use vecsz::padding::{PadGranularity, PadScalars, PadValue, PaddingPolicy};
-use vecsz::quant::decode::decode_block_dualquant;
+use vecsz::quant::decode::{
+    decode_block_dualquant, DecodeBackend, ScalarDecodeBackend, SimdDecodeBackend,
+};
 use vecsz::quant::psz::PszBackend;
 use vecsz::quant::simd::SimdBackend;
 use vecsz::quant::vectorized::VecBackend;
-use vecsz::quant::{DqConfig, PqBackend};
+use vecsz::quant::{CodesKind, DqConfig, PqBackend};
 use vecsz::util::prng::Pcg32;
 
 /// One machine-readable result row for `BENCH_entropy.json`.
@@ -227,9 +230,10 @@ fn main() {
             pq_rows.push(json_row("pq", &be.name(), threads, &s));
         }
     }
-    write_pq_json(&pq_rows);
 
-    // sequential block decode (the decompression hot path)
+    // block decode head-to-head: the cascading scalar reference vs the
+    // reverse-Lorenzo wavefront backends (rows tracked in BENCH_pq.json —
+    // the decode half of the kernel trajectory)
     let mut halo = HaloBlock::new(shape);
     let mut rec = vec![0.0f32; elems];
     let s = bench("decode (cascading Lorenzo reverse) 4Mi elems", blocks.len() * 4, opts, || {
@@ -247,4 +251,43 @@ fn main() {
         }
     });
     println!("{}", s.row());
+    pq_rows.push(json_row("decode-kernel", "block-scalar", 1, &s));
+
+    let mut batch_rec = vec![0.0f32; blocks.len()];
+    for de in [
+        &ScalarDecodeBackend as &dyn DecodeBackend,
+        &SimdDecodeBackend::new(8),
+        &SimdDecodeBackend::new(16),
+    ] {
+        let s = bench(
+            &format!("decode kernel [{}] 4Mi elems 2D", de.name()),
+            blocks.len() * 4,
+            opts,
+            || {
+                de.decode(CodesKind::DualQuant, &cfg, &qcodes, &outv, 0, &pads, &mut batch_rec);
+                std::hint::black_box(&batch_rec);
+            },
+        );
+        println!("{}", s.row());
+        pq_rows.push(json_row("decode-kernel", &de.name(), 1, &s));
+    }
+
+    // full decode stage (entropy + outlier expansion + block-parallel
+    // wavefront reconstruction + scatter) through `decompress` at 1 and 4
+    // threads — the decompression mirror of the pq_stage rows above
+    let bench_cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+    let (container, _) = compress(&pq_field, &bench_cfg).expect("bench field compresses");
+    for threads in [1usize, 4] {
+        let s = bench(
+            &format!("decode stage (v1 container) 1Mi-elem 2D {threads}T"),
+            pq_field.data.len() * 4,
+            opts,
+            || {
+                std::hint::black_box(decompress(&container, threads).unwrap());
+            },
+        );
+        println!("{}", s.row());
+        pq_rows.push(json_row("decode_stage", "v1", threads, &s));
+    }
+    write_pq_json(&pq_rows);
 }

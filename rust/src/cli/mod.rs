@@ -21,8 +21,17 @@ pub struct Args {
 }
 
 /// Known boolean switches (no value).
-const SWITCHES: &[&str] =
-    &["help", "quick", "full", "verbose", "no-lossless", "csv", "stream", "tune-chunks"];
+const SWITCHES: &[&str] = &[
+    "help",
+    "quick",
+    "full",
+    "verbose",
+    "no-lossless",
+    "csv",
+    "stream",
+    "tune-chunks",
+    "verify-steps",
+];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {

@@ -8,8 +8,10 @@
 //! too: Huffman chunks fan out across the pool while the three lossless
 //! streams compress on scoped helper threads (see [`encode_body`]).
 //!
-//! `decompress` reverses it; the block scan is sequential *within* a block
-//! (the cascading Lorenzo reverse) and parallel *across* blocks.
+//! `decompress` reverses it through the decode backend engine
+//! ([`crate::quant::decode`]): the SIMD reverse-Lorenzo wavefront kernel on
+//! the active ISA (bit-identical to the scalar reference), batch-decoded
+//! and parallel *across* blocks.
 //!
 //! The section encode/decode cores ([`encode_body`]/[`decode_body`]) are
 //! shared with the chunked streaming engine in [`crate::stream`]: a v2
@@ -17,7 +19,7 @@
 //! transparently handles both container versions.
 
 use crate::bitio::{get_uvarint, put_uvarint};
-use crate::blocks::{gather_block, scatter_block, BlockShape, HaloBlock};
+use crate::blocks::{gather_block, scatter_block, BlockShape};
 use crate::coordinator::pool::{parallel_chunks_mut, ThreadPool};
 use crate::data::Field;
 use crate::error::{Result, VszError};
@@ -26,7 +28,7 @@ use crate::huffman;
 use crate::lossless;
 use crate::metrics::{value_range, SizeStats};
 use crate::padding::{compute_scalars, PadScalars, PaddingPolicy};
-use crate::quant::decode::decode_block;
+use crate::quant::decode::default_decode_backend;
 use crate::quant::psz::PszBackend;
 use crate::quant::simd::SimdBackend;
 use crate::quant::sz14::Sz14Backend;
@@ -390,12 +392,20 @@ pub fn compress(field: &Field, cfg: &Config) -> Result<(Vec<u8>, CompressStats)>
     Ok((bytes, stats))
 }
 
+/// Blocks per reconstruction batch handed to the decode backend at once —
+/// bounds the per-worker scratch while amortizing the backend's per-call
+/// setup, mirroring `pq_stage`'s gather batch.
+const DECODE_BATCH: usize = 64;
+
 /// Reconstruct a field payload from its parsed header + sections.
 ///
 /// Shared by the v1 decompressor and the per-chunk streaming decoder
 /// (where `header.dims` describes the chunk slab, not the whole field).
-/// Block reconstruction is sequential within a block (the cascading
-/// Lorenzo reverse) and parallel across blocks.
+/// Block reconstruction goes through the [`crate::quant::decode`] backend
+/// engine — the SIMD reverse-Lorenzo wavefront on the active ISA
+/// (`VECSZ_FORCE_ISA`/`--isa` govern decode exactly like compress), the
+/// scalar reference under forced-scalar dispatch; every backend is
+/// bit-identical. Blocks are batch-decoded and parallel across workers.
 pub(crate) fn decode_body(header: &Header, sections: &[Section], threads: usize) -> Result<Vec<f32>> {
     let dims = header.dims;
     if dims.is_empty() {
@@ -473,31 +483,40 @@ pub(crate) fn decode_body(header: &Header, sections: &[Section], threads: usize)
     // block-parallel reconstruction; workers write disjoint field regions
     // because blocks partition the field. A shared &mut would alias at the
     // slice level though, so each worker re-derives its region through the
-    // raw pointer (see `util::SendPtr`).
+    // raw pointer (see `util::SendPtr`). Each worker's contiguous block
+    // range decodes in DECODE_BATCH-block batches through the backend,
+    // then scatters each block back into place.
+    let backend = default_decode_backend();
+    let backend = backend.as_ref();
     let mut out_field = vec![0.0f32; dims.len()];
     let fp = SendPtr::new(out_field.as_mut_ptr());
     let codes_ref = &codes;
     let outv_ref = &outv;
     let pads_ref = &pads;
     let mut block_ids: Vec<usize> = (0..nb).collect();
-    parallel_chunks_mut(&mut block_ids, 1, threads, |_, _, my_blocks| {
-        let mut halo = HaloBlock::new(shape);
-        let mut rec = vec![0.0f32; elems];
+    parallel_chunks_mut(&mut block_ids, 1, threads, |_, b0, my_blocks| {
+        let n_my = my_blocks.len();
+        let mut rec = vec![0.0f32; DECODE_BATCH.min(n_my) * elems];
         // SAFETY: scatter_block writes only the elements of block b, and
         // blocks are disjoint by construction.
         let field_mut = unsafe { std::slice::from_raw_parts_mut(fp.get(), dims.len()) };
-        for &b in my_blocks.iter() {
-            decode_block(
+        let mut done = 0usize;
+        while done < n_my {
+            let take = (n_my - done).min(DECODE_BATCH);
+            let base = b0 + done;
+            backend.decode(
                 header.codes_kind,
                 &dq,
-                &codes_ref[b * elems..(b + 1) * elems],
-                &outv_ref[b * elems..(b + 1) * elems],
+                &codes_ref[base * elems..(base + take) * elems],
+                &outv_ref[base * elems..(base + take) * elems],
+                base,
                 pads_ref,
-                b,
-                &mut halo,
-                &mut rec,
+                &mut rec[..take * elems],
             );
-            scatter_block(&rec, &dims, bs, b, field_mut);
+            for k in 0..take {
+                scatter_block(&rec[k * elems..(k + 1) * elems], &dims, bs, base + k, field_mut);
+            }
+            done += take;
         }
     });
 

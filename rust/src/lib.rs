@@ -12,12 +12,15 @@
 //! * [`stream`] — the chunked streaming engine (`StreamCompressor`/
 //!   `StreamDecompressor` over `std::io::Read`/`Write`) for out-of-core
 //!   fields, chunk-parallel decode, per-chunk autotuning and index-driven
-//!   random access (`decode_chunk`/`decode_range`/`decode_rows`).
+//!   random access (`decode_chunk`/`decode_range`/`decode_rows`, plus
+//!   `decode_dim`/`decode_cols` for column/plane ranges along any axis).
 //! * [`data`] — synthetic SDRBench-like dataset suites.
 //! * [`metrics`] — PSNR / rate-distortion evaluation.
 //! * [`autotune`] — block-size/lane-width/backend autotuning.
 //! * [`simd`] — explicit-intrinsics lane layer with runtime ISA dispatch
-//!   (AVX2 / AVX-512F / NEON / scalar) behind `quant::simd::SimdBackend`.
+//!   (AVX2 / AVX-512F / NEON / scalar) behind `quant::simd::SimdBackend`
+//!   (forward) and `quant::decode::SimdDecodeBackend` (the reverse-Lorenzo
+//!   wavefront decode).
 //! * [`roofline`] — ERT-like machine characterization.
 
 pub mod autotune;

@@ -41,9 +41,10 @@ COMMANDS
              zero|avg-global|..., --threads N, --isa scalar|neon|avx2|avx512
              (--isa pins the simd backend's runtime ISA dispatch; also
              settable via the VECSZ_FORCE_ISA environment variable)
-  decompress --input F.vsz --out F.f32 [--threads N]
+  decompress --input F.vsz --out F.f32 [--threads N] [--isa ...]
              (accepts every container version: monolithic v1, chunked
-             v2 and indexed v3)
+             v2 and indexed v3; --isa/VECSZ_FORCE_ISA govern the SIMD
+             reverse-Lorenzo decode kernel too)
   stream     compress   --input F.f32 --dims NxM --out F.vsz
                         [--chunk-rows N] [--threads N] [--tune-chunks
                         [--sample-pct P] [--iterations N]] + compress flags
@@ -56,9 +57,13 @@ COMMANDS
                         (print the header and the per-chunk index of a
                         VSZ3 container: offsets, sizes, rows, config)
              extract    --input F.vsz --out F.f32 [--threads N]
-                        (--chunk K | --rows LO:HI)
-                        (random access: decode one chunk or a row range,
-                        reading only the footer + the frames it covers)
+                        (--chunk K | --rows LO:HI | --cols LO:HI |
+                         --planes LO:HI)
+                        (random access: one chunk or a row range read only
+                        the footer + the frames they cover; --cols slices
+                        the last axis and --planes the middle axis of a 3D
+                        field — every chunk overlaps those, so all chunks
+                        decode chunk-parallel and the extent is gathered)
   batch      --suite NAME|all [--out-dir D] [--threads N]
              [--stream [--chunk-rows N]] + compress flags
              (whole dataset suite through the pool, one field per worker)
@@ -70,9 +75,11 @@ COMMANDS
               padding|table3|stability|all> [--out-dir results] [--quick]
   gen-data   --suite NAME --out-dir D [--full]
   pipeline   --suite NAME --steps N [--out-dir D]
-             [--stream [--chunk-rows N] [--tune-chunks]]
+             [--stream [--chunk-rows N] [--tune-chunks]] [--verify-steps]
              (--stream writes each step as an indexed VSZ3 container;
-             --tune-chunks tunes per chunk instead of per step)
+             --tune-chunks tunes per chunk instead of per step;
+             --verify-steps decodes each step back through the decode
+             engine and checks the bound before the sink sees it)
   info       [--artifacts DIR]
 ";
 
@@ -93,9 +100,15 @@ fn parse_common(a: &Args) -> Result<Config> {
     let pad = a.str_or("padding", "zero");
     cfg.padding = PaddingPolicy::parse(pad)
         .ok_or_else(|| VszError::config(format!("bad --padding {pad}")))?;
+    apply_isa_flag(a)?;
+    Ok(cfg)
+}
+
+/// Honour `--isa`: pins the runtime dispatch of BOTH simd kernels — the
+/// fused forward pass and the reverse-Lorenzo decode wavefront (same
+/// effect as VECSZ_FORCE_ISA; unavailable ISAs are clamped).
+fn apply_isa_flag(a: &Args) -> Result<()> {
     if let Some(s) = a.get("isa") {
-        // benchmarking override for the simd backend's runtime dispatch
-        // (same effect as VECSZ_FORCE_ISA; unavailable ISAs are clamped)
         let isa = vecsz::simd::Isa::parse(s)
             .ok_or_else(|| VszError::config(format!("bad --isa {s} (scalar|neon|avx2|avx512)")))?;
         let active = vecsz::simd::force_isa(Some(isa));
@@ -103,7 +116,7 @@ fn parse_common(a: &Args) -> Result<Config> {
             eprintln!("--isa {s}: not available on this host; dispatching to {}", active.name());
         }
     }
-    Ok(cfg)
+    Ok(())
 }
 
 fn load_inputs(a: &Args) -> Result<Vec<Field>> {
@@ -157,6 +170,7 @@ fn cmd_decompress(a: &Args) -> Result<()> {
     let input = a.get("input").ok_or_else(|| VszError::config("--input required"))?;
     let out = a.get("out").ok_or_else(|| VszError::config("--out required"))?;
     let threads = a.usize_or("threads", 1)?;
+    apply_isa_flag(a)?;
     let bytes = std::fs::read(input)?;
     let field = decompress(&bytes, threads)?;
     dio::write_f32_file(Path::new(out), &field.data)?;
@@ -174,10 +188,17 @@ fn require_out(a: &Args) -> Result<String> {
     Ok(a.get("out").ok_or_else(|| VszError::config("--out required"))?.to_string())
 }
 
+fn parse_lo_hi(s: &str, flag: &str) -> Result<(usize, usize)> {
+    s.split_once(':')
+        .and_then(|(lo, hi)| Some((lo.parse().ok()?, hi.parse().ok()?)))
+        .ok_or_else(|| VszError::config(format!("--{flag}: expected LO:HI")))
+}
+
 fn cmd_stream(a: &Args) -> Result<()> {
     let mode = a.positional.first().map(|s| s.as_str()).unwrap_or("");
     let input = a.get("input").ok_or_else(|| VszError::config("--input required"))?.to_string();
     let threads = a.usize_or("threads", 1)?;
+    apply_isa_flag(a)?;
     match mode {
         "compress" => {
             let out = require_out(a)?;
@@ -280,36 +301,53 @@ fn cmd_stream(a: &Args) -> Result<()> {
             let out = require_out(a)?;
             let fin = std::fs::File::open(&input)?;
             let mut dec = vecsz::stream::StreamDecompressor::new(BufReader::new(fin))?;
+            let ndim = dec.header().header.dims.ndim;
             let chunk = a.get("chunk").map(|s| s.to_string());
             let rows = a.get("rows").map(|s| s.to_string());
-            let data = match (chunk, rows) {
-                (Some(k), None) => {
-                    let k: usize = k
-                        .parse()
-                        .map_err(|_| VszError::config("--chunk: not an integer"))?;
-                    let c = dec.decode_chunk(k)?;
-                    println!(
-                        "{input}: chunk {k} = rows {}..{} ({} values)",
-                        c.lead_offset,
-                        c.lead_offset + c.lead_extent,
-                        c.data.len()
-                    );
-                    c.data
-                }
-                (None, Some(r)) => {
-                    let (lo, hi) = r
-                        .split_once(':')
-                        .and_then(|(lo, hi)| Some((lo.parse().ok()?, hi.parse().ok()?)))
-                        .ok_or_else(|| VszError::config("--rows: expected LO:HI"))?;
-                    let data = dec.decode_rows(lo..hi, threads)?;
-                    println!("{input}: rows {lo}..{hi} ({} values)", data.len());
-                    data
-                }
-                _ => {
+            let cols = a.get("cols").map(|s| s.to_string());
+            let planes = a.get("planes").map(|s| s.to_string());
+            let selectors =
+                [&chunk, &rows, &cols, &planes].iter().filter(|s| s.is_some()).count();
+            if selectors != 1 {
+                return Err(VszError::config(
+                    "extract: exactly one of --chunk K, --rows LO:HI, --cols LO:HI \
+                     or --planes LO:HI required",
+                ));
+            }
+            let data = if let Some(k) = chunk {
+                let k: usize =
+                    k.parse().map_err(|_| VszError::config("--chunk: not an integer"))?;
+                let c = dec.decode_chunk(k)?;
+                println!(
+                    "{input}: chunk {k} = rows {}..{} ({} values)",
+                    c.lead_offset,
+                    c.lead_offset + c.lead_extent,
+                    c.data.len()
+                );
+                c.data
+            } else if let Some(r) = rows {
+                let (lo, hi) = parse_lo_hi(&r, "rows")?;
+                let data = dec.decode_rows(lo..hi, threads)?;
+                println!("{input}: rows {lo}..{hi} ({} values)", data.len());
+                data
+            } else if let Some(r) = cols {
+                // the last (fastest-varying) axis: true columns in 2D & 3D
+                let (lo, hi) = parse_lo_hi(&r, "cols")?;
+                let data = dec.decode_cols(lo..hi, threads)?;
+                println!("{input}: cols {lo}..{hi} ({} values)", data.len());
+                data
+            } else {
+                // middle-axis range of a 3D field: the lateral plane set
+                if ndim != 3 {
                     return Err(VszError::config(
-                        "extract: exactly one of --chunk K or --rows LO:HI required",
-                    ))
+                        "--planes needs a 3D field (use --rows / --cols otherwise)",
+                    ));
                 }
+                let r = planes.unwrap();
+                let (lo, hi) = parse_lo_hi(&r, "planes")?;
+                let data = dec.decode_dim(1, lo..hi, threads)?;
+                println!("{input}: planes {lo}..{hi} ({} values)", data.len());
+                data
             };
             dio::write_f32_file(Path::new(&out), &data)?;
             println!("wrote {out}");
@@ -513,6 +551,7 @@ fn cmd_pipeline(a: &Args) -> Result<()> {
         queue_depth: 2,
         chunked,
         chunk_autotune: a.has("tune-chunks"),
+        verify: a.has("verify-steps"),
     };
     let nm = name.clone();
     let report = run_stream(
@@ -572,6 +611,10 @@ fn cmd_info(a: &Args) -> Result<()> {
         vecsz::simd::Isa::active().name(),
         avail.join(","),
         vecsz::simd::compiled_target_features()
+    );
+    println!(
+        "decode kernel: {}",
+        vecsz::quant::decode::default_decode_backend().name()
     );
     let dir = a.str_or("artifacts", "artifacts");
     match vecsz::runtime::Manifest::load(Path::new(dir)) {

@@ -1,18 +1,52 @@
-//! Decompression of quant-code streams — the sequential (cascading)
-//! reverse path of both algorithms.
+//! Decompression of quant-code streams — the reverse (reconstruction) path
+//! of both algorithms, behind a backend hierarchy mirroring the compress
+//! side.
 //!
-//! Decompression keeps the RAW dependence (each element needs its already-
-//! reconstructed neighbours), which is why the paper vectorizes compression
-//! only (§III-A). Blocks are still independent, so the coordinator
-//! parallelizes *across* blocks.
+//! # The decode backend hierarchy
+//!
+//! Reconstruction keeps a RAW dependence — each element needs its already-
+//! reconstructed neighbours — which is why the paper vectorizes compression
+//! only (§III-A). Two implementations share the [`DecodeBackend`] trait:
+//!
+//! * [`ScalarDecodeBackend`] — the cascading halo-buffer loop
+//!   ([`decode_block_dualquant`] / [`decode_block_sz14`]). **The
+//!   bit-exactness reference** the SIMD backend is tested against.
+//! * [`SimdDecodeBackend`] — the explicit-intrinsics reverse-Lorenzo
+//!   **wavefront** kernel ([`crate::simd::decode`]): in 2D/3D the cells of
+//!   an anti-diagonal `i + j = d` are mutually independent (their
+//!   neighbours live on diagonals `d-1`/`d-2`), so `W` lanes reconstruct
+//!   `W` wavefront cells at once over a skewed per-diagonal layout; 3D
+//!   sweeps plane by plane against the fully reconstructed up-plane. 1D is
+//!   a true west prefix dependency and falls back to the scalar cascade on
+//!   every ISA.
+//!
+//! # ISA dispatch & the bit-exactness guarantee
+//!
+//! [`SimdDecodeBackend::new`] snapshots [`crate::simd::Isa::active`] — so
+//! `VECSZ_FORCE_ISA`, the CLI `--isa` flag and [`crate::simd::force_isa`]
+//! govern decode exactly as they govern compress — and
+//! [`default_decode_backend`] is what `compressor::decode_body` (and
+//! through it every container/stream decode path) dispatches on: the
+//! wavefront kernel on the active SIMD ISA, the scalar reference when the
+//! dispatch resolves to scalar.
+//!
+//! Every backend produces **bit-identical** output on every ISA: the
+//! wavefront keeps the reference's exact f32 sequence per cell (halo-fill
+//! precedence, `predict_halo`'s `(w+n+u)-(nw+nu+wu)+nwu` order, the
+//! `(code as i32 - radius) as f32` delta, the final `dq * twice_eb`
+//! scale), and outlier substitution is mask+select on `codes ==
+//! OUTLIER_CODE`. The matrix in this module's tests enforces equality
+//! against the scalar reference across dims × odd block sizes × every
+//! host-reachable ISA, on encoder output and on adversarial raw streams.
 
 use super::{CodesKind, DqConfig, OUTLIER_CODE};
 use crate::blocks::HaloBlock;
 use crate::lorenzo::{for_each_coord, predict_halo};
 use crate::padding::PadScalars;
+use crate::simd::{run_reverse, Isa};
 
 /// Reconstruct one block from its code/outlier streams into `out` (length
-/// `bs^d`, data units).
+/// `bs^d`, data units) — the scalar reference path.
 pub fn decode_block(
     kind: CodesKind,
     cfg: &DqConfig,
@@ -86,10 +120,134 @@ pub fn decode_block_sz14(
     });
 }
 
+/// Block-reconstruction backend — the decode-side mirror of
+/// [`super::PqBackend`].
+///
+/// `codes`/`outv` hold `nb = codes.len() / shape.elems()` blocks
+/// back-to-back (the P&Q output layout); `out` receives the reconstructed
+/// data-unit values in the same layout; `block_base` is the global index of
+/// the first block (padding scalars are indexed globally). Every
+/// implementation must be bit-identical to [`ScalarDecodeBackend`].
+pub trait DecodeBackend: Send + Sync {
+    fn name(&self) -> String;
+    #[allow(clippy::too_many_arguments)]
+    fn decode(
+        &self,
+        kind: CodesKind,
+        cfg: &DqConfig,
+        codes: &[u16],
+        outv: &[f32],
+        block_base: usize,
+        pads: &PadScalars,
+        out: &mut [f32],
+    );
+}
+
+/// The cascading halo-buffer reference decoder.
+pub struct ScalarDecodeBackend;
+
+impl DecodeBackend for ScalarDecodeBackend {
+    fn name(&self) -> String {
+        "scalar-ref".into()
+    }
+
+    fn decode(
+        &self,
+        kind: CodesKind,
+        cfg: &DqConfig,
+        codes: &[u16],
+        outv: &[f32],
+        block_base: usize,
+        pads: &PadScalars,
+        out: &mut [f32],
+    ) {
+        let elems = cfg.shape.elems();
+        assert_eq!(codes.len() % elems, 0, "codes not a whole number of blocks");
+        let nb = codes.len() / elems;
+        assert_eq!(outv.len(), nb * elems);
+        assert_eq!(out.len(), nb * elems);
+        let mut halo = HaloBlock::new(cfg.shape);
+        for b in 0..nb {
+            decode_block(
+                kind,
+                cfg,
+                &codes[b * elems..(b + 1) * elems],
+                &outv[b * elems..(b + 1) * elems],
+                pads,
+                block_base + b,
+                &mut halo,
+                &mut out[b * elems..(b + 1) * elems],
+            );
+        }
+    }
+}
+
+/// The explicit-intrinsics wavefront decoder; `width` ∈ {4, 8, 16} gates
+/// the ISA tier exactly as on the compress side (the wavefront itself
+/// always steps by the native register width — decode diagonals are short,
+/// so a wider unroll chunk would only grow the scalar tails).
+#[derive(Clone, Copy, Debug)]
+pub struct SimdDecodeBackend {
+    pub width: usize,
+    isa: Isa,
+}
+
+impl SimdDecodeBackend {
+    /// Backend on the active (detected or forced) ISA.
+    pub fn new(width: usize) -> Self {
+        Self::with_isa(width, Isa::active())
+    }
+
+    /// Backend pinned to `isa` (test/bench hook). An ISA the host cannot
+    /// run is clamped to the detected best, so construction never yields
+    /// an inexecutable kernel.
+    pub fn with_isa(width: usize, isa: Isa) -> Self {
+        assert!(matches!(width, 4 | 8 | 16), "supported lane widths: 4, 8, 16");
+        let isa = if isa.is_available() { isa } else { Isa::detect_best() };
+        Self { width, isa }
+    }
+
+    /// The ISA this instance dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+}
+
+impl DecodeBackend for SimdDecodeBackend {
+    fn name(&self) -> String {
+        format!("simd{}/{}", self.width, self.isa.name())
+    }
+
+    fn decode(
+        &self,
+        kind: CodesKind,
+        cfg: &DqConfig,
+        codes: &[u16],
+        outv: &[f32],
+        block_base: usize,
+        pads: &PadScalars,
+        out: &mut [f32],
+    ) {
+        run_reverse(self.isa, self.width, kind, cfg, codes, outv, block_base, pads, out);
+    }
+}
+
+/// The decoder the container/stream decode paths dispatch to: the
+/// wavefront kernel on the active ISA, or the scalar reference when
+/// dispatch resolves to scalar (so `VECSZ_FORCE_ISA=scalar` and `--isa
+/// scalar` exercise the reference end to end).
+pub fn default_decode_backend() -> Box<dyn DecodeBackend> {
+    match Isa::active() {
+        Isa::Scalar => Box::new(ScalarDecodeBackend),
+        isa => Box::new(SimdDecodeBackend::with_isa(16, isa)),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::blocks::BlockShape;
+    use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
     use crate::quant::psz::PszBackend;
     use crate::quant::sz14::Sz14Backend;
     use crate::quant::test_support::random_batch;
@@ -207,5 +365,230 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    // -------------------- decode backend bit-exactness matrix --------------------
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn decode_with(
+        be: &dyn DecodeBackend,
+        kind: CodesKind,
+        cfg: &DqConfig,
+        codes: &[u16],
+        outv: &[f32],
+        pads: &PadScalars,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; codes.len()];
+        be.decode(kind, cfg, codes, outv, 0, pads, &mut out);
+        out
+    }
+
+    /// The acceptance matrix: SimdDecodeBackend == ScalarDecodeBackend,
+    /// bit for bit, across all dims, odd block sizes, both code kinds and
+    /// **every ISA reachable on this host** — on real encoder output.
+    #[test]
+    fn matrix_simd_decode_matches_scalar_reference_every_isa() {
+        let mut rng = Pcg32::seeded(777);
+        for &(ndim, bs) in &[(1usize, 64usize), (1, 7), (2, 8), (2, 5), (2, 16), (3, 8), (3, 5)] {
+            let shape = BlockShape::new(ndim, bs);
+            let cfg = DqConfig::new(1e-3, 512, shape);
+            for smooth in [true, false] {
+                let (blocks, pads) = random_batch(&mut rng, shape, 5, 4.0, smooth);
+                for (enc, kind) in [
+                    (&PszBackend as &dyn PqBackend, CodesKind::DualQuant),
+                    (&Sz14Backend, CodesKind::Sz14),
+                ] {
+                    let mut codes = vec![0u16; blocks.len()];
+                    let mut outv = vec![0.0f32; blocks.len()];
+                    enc.run(&cfg, &blocks, 0, &pads, &mut codes, &mut outv);
+                    let r0 = decode_with(&ScalarDecodeBackend, kind, &cfg, &codes, &outv, &pads);
+                    for isa in Isa::available() {
+                        for w in [4usize, 8, 16] {
+                            let be = SimdDecodeBackend::with_isa(w, isa);
+                            let r1 = decode_with(&be, kind, &cfg, &codes, &outv, &pads);
+                            assert_eq!(
+                                bits(&r0),
+                                bits(&r1),
+                                "{kind:?} ndim={ndim} bs={bs} smooth={smooth} w={w} isa={}",
+                                isa.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Adversarial raw streams (not encoder output): arbitrary codes with
+    /// outlier holes, arbitrary outlier values, per-axis edge scalars of
+    /// wildly different magnitudes — equality must hold for ANY input.
+    #[test]
+    fn matrix_adversarial_raw_streams_every_isa() {
+        let mut rng = Pcg32::seeded(888);
+        for &(ndim, bs) in &[(1usize, 9usize), (2, 3), (2, 7), (2, 12), (3, 3), (3, 6)] {
+            let shape = BlockShape::new(ndim, bs);
+            let elems = shape.elems();
+            let nb = 4usize;
+            for &(radius, out_pct) in &[(2u16, 60u32), (8, 25), (512, 5), (40_000, 10)] {
+                let cfg = DqConfig::new(1e-2, radius, shape);
+                let cap = (2 * radius as u32).min(65_535);
+                let codes: Vec<u16> = (0..nb * elems)
+                    .map(|_| {
+                        if rng.bounded(100) < out_pct {
+                            OUTLIER_CODE
+                        } else {
+                            (1 + rng.bounded(cap - 1)) as u16
+                        }
+                    })
+                    .collect();
+                let outv: Vec<f32> =
+                    (0..nb * elems).map(|_| (rng.next_f32() * 2.0 - 1.0) * 1e4).collect();
+                let scalars: Vec<f32> = (0..nb * ndim)
+                    .map(|q| [1000.0f32, -0.37, 12.5][q % 3] * (1.0 + q as f32))
+                    .collect();
+                let pads = PadScalars {
+                    policy: PaddingPolicy::new(PadValue::Avg, PadGranularity::Edge),
+                    scalars,
+                    ndim,
+                };
+                for kind in [CodesKind::DualQuant, CodesKind::Sz14] {
+                    let r0 = decode_with(&ScalarDecodeBackend, kind, &cfg, &codes, &outv, &pads);
+                    for isa in Isa::available() {
+                        let be = SimdDecodeBackend::with_isa(16, isa);
+                        let r1 = decode_with(&be, kind, &cfg, &codes, &outv, &pads);
+                        assert_eq!(
+                            bits(&r0),
+                            bits(&r1),
+                            "{kind:?} ndim={ndim} bs={bs} radius={radius} isa={}",
+                            isa.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_outlier_blocks_every_isa() {
+        // every element an outlier: the wavefront must pass the verbatim
+        // values through (scaled for dual-quant) and cascade nothing
+        for &(ndim, bs) in &[(1usize, 8usize), (2, 8), (3, 4)] {
+            let shape = BlockShape::new(ndim, bs);
+            let elems = shape.elems();
+            let cfg = DqConfig::new(0.5, 8, shape); // twice_eb = 1.0
+            let codes = vec![OUTLIER_CODE; elems];
+            let outv: Vec<f32> = (0..elems).map(|l| l as f32 - 3.0).collect();
+            let pads = PadScalars {
+                policy: PaddingPolicy::new(PadValue::Zero, PadGranularity::Global),
+                scalars: vec![0.0],
+                ndim,
+            };
+            for kind in [CodesKind::DualQuant, CodesKind::Sz14] {
+                for isa in Isa::available() {
+                    let be = SimdDecodeBackend::with_isa(8, isa);
+                    let r = decode_with(&be, kind, &cfg, &codes, &outv, &pads);
+                    assert_eq!(bits(&r), bits(&outv), "{kind:?} ndim={ndim} isa={}", isa.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_isa_randomized_decode_equivalence() {
+        // randomized shape, eb, batch AND a randomized ISA+width per case;
+        // decode through the wavefront, cross-check the scalar reference
+        // and the roundtrip bound in one pass
+        check("simd-decode-equivalence", 60, |g| {
+            let ndim = 1 + g.rng.bounded(3) as usize;
+            let bs = *g.choose(&[3usize, 4, 5, 8, 12, 16]);
+            let shape = BlockShape::new(ndim, bs);
+            let eb = *g.choose(&[1e-2f64, 1e-3, 1e-4]);
+            let cfg = DqConfig::new(eb, 512, shape);
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let (blocks, pads) = random_batch(&mut rng, shape, 3, 5.0, g.rng.next_f32() < 0.5);
+            let mut codes = vec![0u16; blocks.len()];
+            let mut outv = vec![0.0f32; blocks.len()];
+            PszBackend.run(&cfg, &blocks, 0, &pads, &mut codes, &mut outv);
+            let avail = Isa::available();
+            let isa = avail[g.rng.bounded(avail.len() as u32) as usize];
+            let w = *g.choose(&[4usize, 8, 16]);
+            let be = SimdDecodeBackend::with_isa(w, isa);
+            let r0 =
+                decode_with(&ScalarDecodeBackend, CodesKind::DualQuant, &cfg, &codes, &outv, &pads);
+            let r1 = decode_with(&be, CodesKind::DualQuant, &cfg, &codes, &outv, &pads);
+            if bits(&r0) != bits(&r1) {
+                return Err(format!("simd{w}/{} diverged ndim={ndim} bs={bs}", isa.name()));
+            }
+            let tol = (eb + 1e-6) as f32;
+            for (r, d) in r1.iter().zip(&blocks) {
+                if (r - d).abs() > tol {
+                    return Err(format!("bound violated: |{r} - {d}| > {tol}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batched_decode_matches_per_block_decode() {
+        // block_base indexing: decoding blocks [2, 5) as a batch must equal
+        // decoding each block alone with its global index
+        let shape = BlockShape::new(2, 8);
+        let cfg = DqConfig::new(1e-3, 512, shape);
+        let elems = shape.elems();
+        let mut rng = Pcg32::seeded(99);
+        let (blocks, pads) = random_batch(&mut rng, shape, 5, 3.0, true);
+        let mut codes = vec![0u16; blocks.len()];
+        let mut outv = vec![0.0f32; blocks.len()];
+        PszBackend.run(&cfg, &blocks, 0, &pads, &mut codes, &mut outv);
+        for be in [&ScalarDecodeBackend as &dyn DecodeBackend, &SimdDecodeBackend::new(8)] {
+            let mut batch = vec![0.0f32; 3 * elems];
+            be.decode(
+                CodesKind::DualQuant,
+                &cfg,
+                &codes[2 * elems..5 * elems],
+                &outv[2 * elems..5 * elems],
+                2,
+                &pads,
+                &mut batch,
+            );
+            for (k, b) in (2usize..5).enumerate() {
+                let mut one = vec![0.0f32; elems];
+                be.decode(
+                    CodesKind::DualQuant,
+                    &cfg,
+                    &codes[b * elems..(b + 1) * elems],
+                    &outv[b * elems..(b + 1) * elems],
+                    b,
+                    &pads,
+                    &mut one,
+                );
+                assert_eq!(
+                    bits(&batch[k * elems..(k + 1) * elems]),
+                    bits(&one),
+                    "{} block {b}",
+                    be.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_backend_identity_and_default_dispatch() {
+        let be = SimdDecodeBackend::new(8);
+        assert_eq!(be.name(), format!("simd8/{}", be.isa().name()));
+        assert!(be.isa().is_available());
+        assert_eq!(ScalarDecodeBackend.name(), "scalar-ref");
+        // the default decoder follows the active dispatch: scalar reference
+        // when the dispatch resolves to scalar, the wavefront otherwise
+        let def = default_decode_backend();
+        if Isa::active() == Isa::Scalar {
+            assert_eq!(def.name(), "scalar-ref");
+        } else {
+            assert_eq!(def.name(), format!("simd16/{}", Isa::active().name()));
+        }
     }
 }

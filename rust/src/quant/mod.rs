@@ -24,6 +24,12 @@
 //! A fifth implementation lives in `runtime::PjrtBackend`: the same math
 //! as an AOT-compiled XLA artifact.
 //!
+//! The decompression side has its own mirror hierarchy behind
+//! [`decode::DecodeBackend`]: the cascading scalar reference and the SIMD
+//! reverse-Lorenzo **wavefront** backend (anti-diagonal cells are
+//! dependency-free), dispatched through the same ISA machinery — see the
+//! [`decode`] module doc.
+//!
 //! # ISA dispatch & the bit-exactness guarantee
 //!
 //! `SimdBackend::new` snapshots [`crate::simd::Isa::active`]: the best ISA

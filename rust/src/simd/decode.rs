@@ -1,0 +1,542 @@
+//! The SIMD reverse-Lorenzo (decode) wavefront kernel.
+//!
+//! Decompression reconstructs each element from its *already reconstructed*
+//! neighbours, so the forward kernel's trick — rows are independent because
+//! prediction reads pre-quantized values — does not apply: in 2D the
+//! recurrence `dq[i][j] = (w + n) - nw + delta` depends on the same row
+//! (west) **and** the previous row (north). What is dependency-free is the
+//! **anti-diagonal wavefront**: every cell on `i + j = d` depends only on
+//! cells of diagonals `d-1` and `d-2`, so all of them can be reconstructed
+//! in parallel lanes. In 3D, planes are processed in order (the up-plane is
+//! then fully reconstructed) and the same 2D wavefront sweeps each plane,
+//! with four extra neighbour loads from the previous plane. 1D has a true
+//! west prefix dependency and stays scalar on every ISA, as the paper notes
+//! for the reverse scan (§III-A).
+//!
+//! # Skewed storage
+//!
+//! Cells of one diagonal are `bs - 1` apart in row-major order — a
+//! gather/scatter pattern AVX2/NEON cannot store efficiently. The kernel
+//! therefore runs on a **skewed layout**: one buffer of `bs + 2` slots per
+//! diagonal (`slot(i) = i + 1`), so every neighbour read becomes a
+//! contiguous unaligned vector load:
+//!
+//! * `w  = (i, j-1)`  → diagonal `d-1`, slot `i+1`
+//! * `n  = (i-1, j)`  → diagonal `d-1`, slot `i`
+//! * `nw = (i-1, j-1)` → diagonal `d-2`, slot `i`
+//! * `u/wu/nu/nwu` → the up-plane's diagonals `d / d-1 / d-1 / d-2` at the
+//!   same slots.
+//!
+//! Slot 0 of every diagonal holds the row-halo padding scalar, slot `d+2`
+//! the column-halo scalar, and two *virtual* diagonals (`d = -1, -2`) in
+//! front carry the halo values the first cells read — the same
+//! broadcast-halo substitution `kernel::run_fused` uses forward, so the
+//! unified per-cell expression never branches on borders. A scalar prologue
+//! skews the code/outlier streams into `(addend, substitute, flag)` arrays
+//! (performing the only int→f32 conversions, so the vector path needs no
+//! radius cap), and a scalar epilogue de-skews and applies the final
+//! `dq * twice_eb` scale.
+//!
+//! # Bit-exactness
+//!
+//! Every cell computes exactly the scalar reference's f32 sequence: halo
+//! values from the same `fill_halo` precedence (highest axis wins shared
+//! cells), `predict_halo`'s operation order `(w+n+u)-(nw+nu+wu)+nwu`, the
+//! same `(code as i32 - radius) as f32` delta, and the same final scale.
+//! Outlier substitution is mask+select on the pre-computed flag, matching
+//! the reference's branch. Lane partitioning cannot change per-cell order,
+//! so output is bit-identical to `decode_block_dualquant` /
+//! `decode_block_sz14` on every ISA — enforced by the matrix in
+//! `quant::decode`.
+
+#[cfg(target_arch = "x86_64")]
+use super::lanes::Avx2Lane;
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+use super::lanes::Avx512Lane;
+#[cfg(target_arch = "aarch64")]
+use super::lanes::NeonLane;
+use super::lanes::{LaneF32, ScalarLane};
+use super::Isa;
+use crate::padding::PadScalars;
+use crate::quant::{prequant, CodesKind, DqConfig, OUTLIER_CODE};
+
+/// Run the reverse-Lorenzo wavefront kernel over a gathered-block batch on
+/// `isa`. `codes`/`outv` hold `nb = codes.len() / shape.elems()` blocks
+/// back-to-back (the `PqBackend::run` output layout); `out` receives the
+/// reconstructed data-unit values in the same layout; `block_base` is the
+/// global index of the first block (padding scalars are indexed globally).
+///
+/// Safe for any arguments: an unavailable `isa` falls back to the best
+/// detected one. Unlike the forward kernel there is no radius cap — the
+/// vector path performs no int↔f32 conversions (the scalar prologue does
+/// them with the reference's exact casts).
+#[allow(clippy::too_many_arguments)]
+pub fn run_reverse(
+    isa: Isa,
+    width: usize,
+    kind: CodesKind,
+    cfg: &DqConfig,
+    codes: &[u16],
+    outv: &[f32],
+    block_base: usize,
+    pads: &PadScalars,
+    out: &mut [f32],
+) {
+    assert!(matches!(width, 4 | 8 | 16), "supported lane widths: 4, 8, 16");
+    let isa = if isa.is_available() { isa } else { Isa::detect_best() };
+    // a width narrower than the native register cannot fill one vector;
+    // drop to the widest ISA whose register fits (same rule as run_fused)
+    let isa = match isa {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        Isa::Avx512 if width < 16 => Isa::Avx2,
+        Isa::Avx2 if width < 8 => Isa::Scalar,
+        Isa::Neon if width < 4 => Isa::Scalar,
+        other => other,
+    };
+    match isa {
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        // SAFETY: AVX-512F availability was checked by `is_available`
+        Isa::Avx512 => unsafe { batch_avx512(kind, cfg, codes, outv, block_base, pads, out) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: AVX2 availability was checked by `is_available`
+        Isa::Avx2 => unsafe { batch_avx2(kind, cfg, codes, outv, block_base, pads, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally guaranteed on aarch64
+        Isa::Neon => unsafe {
+            batch_rev::<NeonLane>(kind, cfg, codes, outv, block_base, pads, out)
+        },
+        // SAFETY: the scalar lane type has no CPU or alignment
+        // requirements; all pointer arithmetic is bounds-derived
+        _ => unsafe { batch_rev::<ScalarLane>(kind, cfg, codes, outv, block_base, pads, out) },
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn batch_avx2(
+    kind: CodesKind,
+    cfg: &DqConfig,
+    codes: &[u16],
+    outv: &[f32],
+    block_base: usize,
+    pads: &PadScalars,
+    out: &mut [f32],
+) {
+    batch_rev::<Avx2Lane>(kind, cfg, codes, outv, block_base, pads, out)
+}
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+#[target_feature(enable = "avx512f")]
+unsafe fn batch_avx512(
+    kind: CodesKind,
+    cfg: &DqConfig,
+    codes: &[u16],
+    outv: &[f32],
+    block_base: usize,
+    pads: &PadScalars,
+    out: &mut [f32],
+) {
+    batch_rev::<Avx512Lane>(kind, cfg, codes, outv, block_base, pads, out)
+}
+
+/// Scratch geometry of one skewed plane: `ndiag + 2` diagonal buffers
+/// (two leading virtual ones) of `stride = bs + 2` slots each.
+#[derive(Clone, Copy)]
+struct Skew {
+    bs: usize,
+    stride: usize,
+    ndiag: usize,
+}
+
+impl Skew {
+    fn new(bs: usize) -> Self {
+        Self { bs, stride: bs + 2, ndiag: 2 * bs - 1 }
+    }
+
+    fn plane_len(&self) -> usize {
+        (self.ndiag + 2) * self.stride
+    }
+
+    /// Skewed position of cell `(i, j)`: diagonal `i + j`, slot `i + 1`
+    /// (diagonal buffers are shifted by the two virtual ones).
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> usize {
+        (i + j + 2) * self.stride + i + 1
+    }
+}
+
+/// Pre-fill one plane's halo slots: slot 0 of every diagonal carries the
+/// row-halo scalar, slot `d + 2` of diagonal `d` (for `d <= bs - 2`, plus
+/// the virtual `d = -1`) the column-halo scalar, and the virtual `d = -2`
+/// buffer's slot 0 the shared corner — which `fill_halo`'s ascending-axis
+/// write order resolves to the column scalar in 2D and 3D alike.
+fn fill_plane_halos(plane: &mut [f32], sk: Skew, rowh: f32, colh: f32) {
+    for db in 0..sk.ndiag + 2 {
+        plane[db * sk.stride] = rowh;
+    }
+    plane[0] = colh; // virtual diagonal -2, slot 0: the corner
+    for db in 1..=sk.bs {
+        // diagonals d = -1 ..= bs-2 (shifted: db = d + 2), slot d + 2 = db
+        plane[db * sk.stride + db] = colh;
+    }
+}
+
+/// Skew one plane's code/outlier streams into `(addend, substitute, flag)`
+/// — the only int→f32 conversions of the decode, done with the scalar
+/// reference's exact casts: `(code as i32 - radius) as f32`, times
+/// `twice_eb` for SZ-1.4 (which cascades in data units).
+#[allow(clippy::too_many_arguments)]
+fn skew_inputs(
+    kind: CodesKind,
+    codes: &[u16],
+    outv: &[f32],
+    radius: i32,
+    twice_eb: f32,
+    sk: Skew,
+    askew: &mut [f32],
+    sskew: &mut [f32],
+    fskew: &mut [f32],
+) {
+    let bs = sk.bs;
+    for i in 0..bs {
+        for j in 0..bs {
+            let l = i * bs + j;
+            let p = sk.at(i, j);
+            if codes[l] == OUTLIER_CODE {
+                askew[p] = 0.0;
+                sskew[p] = outv[l];
+                fskew[p] = 1.0;
+            } else {
+                let a = (codes[l] as i32 - radius) as f32;
+                askew[p] = match kind {
+                    CodesKind::DualQuant => a,
+                    CodesKind::Sz14 => a * twice_eb,
+                };
+                sskew[p] = 0.0;
+                fskew[p] = 0.0;
+            }
+        }
+    }
+}
+
+/// One wavefront sweep over a skewed plane. `up` is the previous plane's
+/// skewed buffer (3D) or `None` (2D — the up/nu/wu/nwu terms vanish).
+///
+/// # Safety
+/// `V`'s ISA must be executable on the current CPU; all buffers must have
+/// `sk.plane_len()` elements.
+#[inline(always)]
+unsafe fn wave_plane<V: LaneF32>(
+    cur: &mut [f32],
+    up: Option<&[f32]>,
+    askew: &[f32],
+    sskew: &[f32],
+    fskew: &[f32],
+    sk: Skew,
+) {
+    let bs = sk.bs;
+    let stride = sk.stride;
+    let half = V::splat(0.5);
+    let cp = cur.as_mut_ptr();
+    let ap = askew.as_ptr();
+    let sp = sskew.as_ptr();
+    let fp = fskew.as_ptr();
+    for d in 0..sk.ndiag {
+        let lo = d.saturating_sub(bs - 1);
+        let hi = d.min(bs - 1);
+        let cb = (d + 2) * stride;
+        let p1 = cb - stride;
+        let p2 = cb - 2 * stride;
+        let mut i = lo;
+        // vector body: all lanes of a diagonal are independent (their
+        // neighbours live on diagonals d-1/d-2, already reconstructed)
+        while i + V::LANES <= hi + 1 {
+            let w = V::load(cp.add(p1 + i + 1));
+            let n = V::load(cp.add(p1 + i));
+            let nw = V::load(cp.add(p2 + i));
+            // predict_halo order: 2D (w + n) - nw;
+            // 3D (w + n + u) - (nw + nu + wu) + nwu
+            let pred = match up {
+                None => w.add(n).sub(nw),
+                Some(u) => {
+                    let upb = u.as_ptr();
+                    w.add(n)
+                        .add(V::load(upb.add(cb + i + 1)))
+                        .sub(nw.add(V::load(upb.add(p1 + i))).add(V::load(upb.add(p1 + i + 1))))
+                        .add(V::load(upb.add(p2 + i)))
+                }
+            };
+            let t = pred.add(V::load(ap.add(cb + i + 1)));
+            let m = V::load(fp.add(cb + i + 1)).lt(half);
+            V::select(m, t, V::load(sp.add(cb + i + 1))).store(cp.add(cb + i + 1));
+            i += V::LANES;
+        }
+        // scalar tail — same per-cell expression, plain Rust f32 ops
+        while i <= hi {
+            let w = *cp.add(p1 + i + 1);
+            let n = *cp.add(p1 + i);
+            let nw = *cp.add(p2 + i);
+            let pred = match up {
+                None => (w + n) - nw,
+                Some(u) => {
+                    ((w + n) + u[cb + i + 1]) - ((nw + u[p1 + i]) + u[p1 + i + 1]) + u[p2 + i]
+                }
+            };
+            let t = pred + askew[cb + i + 1];
+            let dq = if fskew[cb + i + 1] < 0.5 { t } else { sskew[cb + i + 1] };
+            *cp.add(cb + i + 1) = dq;
+            i += 1;
+        }
+    }
+}
+
+/// The generic reverse batch: scalar prologue (skew), wavefront sweep(s),
+/// scalar epilogue (de-skew + final scale). 1D takes the sequential
+/// cascade — the west recurrence is a true prefix dependency.
+///
+/// # Safety
+/// `V`'s ISA must be executable on the current CPU.
+///
+/// `inline(always)` collapses the batch into its `#[target_feature]` entry
+/// point so the lane wrappers fold into a feature-enabled context (same
+/// rationale as the forward kernel).
+#[inline(always)]
+unsafe fn batch_rev<V: LaneF32>(
+    kind: CodesKind,
+    cfg: &DqConfig,
+    codes: &[u16],
+    outv: &[f32],
+    block_base: usize,
+    pads: &PadScalars,
+    out: &mut [f32],
+) {
+    let shape = cfg.shape;
+    let elems = shape.elems();
+    let bs = shape.bs;
+    assert_eq!(codes.len() % elems, 0, "codes not a whole number of blocks");
+    let nb = codes.len() / elems;
+    assert_eq!(outv.len(), nb * elems);
+    assert_eq!(out.len(), nb * elems);
+    let radius = cfg.radius as i32;
+    let twice_eb = cfg.twice_eb();
+    let hie = cfg.half_inv_eb();
+    // halo scalars enter the cascade pre-quantized for dual-quant (the
+    // cascade runs in the prequant domain) and verbatim for SZ-1.4
+    let pad = |gb: usize, axis: usize| match kind {
+        CodesKind::DualQuant => prequant(pads.edge_scalar(gb, axis), hie),
+        CodesKind::Sz14 => pads.edge_scalar(gb, axis),
+    };
+    // final per-element transform back to data units
+    let finish = |dq: f32| match kind {
+        CodesKind::DualQuant => dq * twice_eb,
+        CodesKind::Sz14 => dq,
+    };
+
+    if shape.ndim == 1 {
+        for b in 0..nb {
+            let bc = &codes[b * elems..(b + 1) * elems];
+            let bv = &outv[b * elems..(b + 1) * elems];
+            let bo = &mut out[b * elems..(b + 1) * elems];
+            let mut prev = pad(block_base + b, 0);
+            for l in 0..bs {
+                let v = if bc[l] == OUTLIER_CODE {
+                    bv[l]
+                } else {
+                    let a = (bc[l] as i32 - radius) as f32;
+                    match kind {
+                        CodesKind::DualQuant => prev + a,
+                        CodesKind::Sz14 => prev + a * twice_eb,
+                    }
+                };
+                prev = v;
+                bo[l] = finish(v);
+            }
+        }
+        return;
+    }
+
+    let sk = Skew::new(bs);
+    let psz = sk.plane_len();
+    let mut askew = vec![0.0f32; psz];
+    let mut sskew = vec![0.0f32; psz];
+    let mut fskew = vec![0.0f32; psz];
+    let mut cur = vec![0.0f32; psz];
+    let mut up = if shape.ndim == 3 { vec![0.0f32; psz] } else { Vec::new() };
+    let plane_elems = bs * bs;
+
+    for b in 0..nb {
+        let gb = block_base + b;
+        let bc = &codes[b * elems..(b + 1) * elems];
+        let bv = &outv[b * elems..(b + 1) * elems];
+        let bo = &mut out[b * elems..(b + 1) * elems];
+        if shape.ndim == 2 {
+            // halo precedence: row halo = axis 0, column halo (and the
+            // corner, written last by fill_halo) = axis 1
+            fill_plane_halos(&mut cur, sk, pad(gb, 0), pad(gb, 1));
+            skew_inputs(kind, bc, bv, radius, twice_eb, sk, &mut askew, &mut sskew, &mut fskew);
+            wave_plane::<V>(&mut cur, None, &askew, &sskew, &fskew, sk);
+            for i in 0..bs {
+                for j in 0..bs {
+                    bo[i * bs + j] = finish(cur[sk.at(i, j)]);
+                }
+            }
+        } else {
+            // 3D halo precedence (fill order axis0 -> axis1 -> axis2):
+            // in-plane row halo = axis 1, column halo + corner = axis 2;
+            // the k = 0 up-plane is the axis-0 halo plane, whose own row/
+            // column borders resolve to axis 1/2 by the same write order
+            let (p1, p2) = (pad(gb, 1), pad(gb, 2));
+            up.fill(pad(gb, 0));
+            fill_plane_halos(&mut up, sk, p1, p2);
+            fill_plane_halos(&mut cur, sk, p1, p2);
+            for k in 0..bs {
+                let pc = &bc[k * plane_elems..(k + 1) * plane_elems];
+                let pv = &bv[k * plane_elems..(k + 1) * plane_elems];
+                skew_inputs(
+                    kind, pc, pv, radius, twice_eb, sk, &mut askew, &mut sskew, &mut fskew,
+                );
+                wave_plane::<V>(&mut cur, Some(up.as_slice()), &askew, &sskew, &fskew, sk);
+                let po = &mut bo[k * plane_elems..(k + 1) * plane_elems];
+                for i in 0..bs {
+                    for j in 0..bs {
+                        po[i * bs + j] = finish(cur[sk.at(i, j)]);
+                    }
+                }
+                // the finished plane becomes the up-plane; halo slots of
+                // both buffers are constants, filled once above
+                std::mem::swap(&mut up, &mut cur);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blocks::BlockShape;
+    use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
+
+    fn zero_pads(ndim: usize) -> PadScalars {
+        PadScalars {
+            policy: PaddingPolicy::new(PadValue::Zero, PadGranularity::Global),
+            scalars: vec![0.0],
+            ndim,
+        }
+    }
+
+    // The cross-backend / cross-ISA equivalence matrix lives in
+    // quant::decode; here: direct kernel sanity on hand-computed cases.
+    #[test]
+    fn known_1d_case_reverses_algorithm2() {
+        // the forward known case: data [1,2,4,4] @ eb 0.5, pad 0 encodes to
+        // codes [513, 513, 514, 512] (radius 512); reverse must return the
+        // rounded originals
+        let shape = BlockShape::new(1, 4);
+        let cfg = DqConfig::new(0.5, 512, shape);
+        let codes = vec![513u16, 513, 514, 512];
+        let outv = vec![0.0f32; 4];
+        for isa in Isa::available() {
+            let mut out = vec![0.0f32; 4];
+            run_reverse(
+                isa,
+                8,
+                CodesKind::DualQuant,
+                &cfg,
+                &codes,
+                &outv,
+                0,
+                &zero_pads(1),
+                &mut out,
+            );
+            assert_eq!(out, vec![1.0, 2.0, 4.0, 4.0], "isa {}", isa.name());
+        }
+    }
+
+    #[test]
+    fn known_2d_case_with_outlier() {
+        // 2x2 block, eb 0.5 (twice_eb = 1, prequant = round), zero pads,
+        // radius 4. codes [5, 4, OUT, 6], outlier value 9:
+        //   (0,0): pred = 0        -> dq = 1
+        //   (0,1): pred = w=1      -> dq = 1
+        //   (1,0): outlier         -> dq = 9
+        //   (1,1): pred = 9+1-1=9  -> dq = 11
+        let shape = BlockShape::new(2, 2);
+        let cfg = DqConfig::new(0.5, 4, shape);
+        let codes = vec![5u16, 4, OUTLIER_CODE, 6];
+        let outv = vec![0.0f32, 0.0, 9.0, 0.0];
+        for isa in Isa::available() {
+            let mut out = vec![0.0f32; 4];
+            run_reverse(
+                isa,
+                16,
+                CodesKind::DualQuant,
+                &cfg,
+                &codes,
+                &outv,
+                0,
+                &zero_pads(2),
+                &mut out,
+            );
+            assert_eq!(out, vec![1.0, 1.0, 9.0, 11.0], "isa {}", isa.name());
+        }
+    }
+
+    #[test]
+    fn unavailable_isa_falls_back() {
+        let shape = BlockShape::new(1, 4);
+        let cfg = DqConfig::new(0.5, 512, shape);
+        let codes = vec![513u16, 513, 514, 512];
+        let outv = vec![0.0f32; 4];
+        let mut out = vec![0.0f32; 4];
+        // forcing an ISA the host may lack must still produce the answer
+        run_reverse(
+            Isa::Avx512,
+            16,
+            CodesKind::DualQuant,
+            &cfg,
+            &codes,
+            &outv,
+            0,
+            &zero_pads(1),
+            &mut out,
+        );
+        assert_eq!(out, vec![1.0, 2.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn giant_radius_is_fine_without_a_cap() {
+        // decode performs no vector int conversions, so radii beyond the
+        // forward kernel's MAX_VECTOR_RADIUS need no scalar rerouting
+        let shape = BlockShape::new(2, 4);
+        let cfg = DqConfig::new(0.5, 40_000, shape);
+        let codes = vec![40_001u16; 16];
+        let outv = vec![0.0f32; 16];
+        let mut expect = vec![0.0f32; 16];
+        run_reverse(
+            Isa::Scalar,
+            8,
+            CodesKind::DualQuant,
+            &cfg,
+            &codes,
+            &outv,
+            0,
+            &zero_pads(2),
+            &mut expect,
+        );
+        for isa in Isa::available() {
+            let mut out = vec![0.0f32; 16];
+            run_reverse(
+                isa,
+                8,
+                CodesKind::DualQuant,
+                &cfg,
+                &codes,
+                &outv,
+                0,
+                &zero_pads(2),
+                &mut out,
+            );
+            assert_eq!(out, expect, "isa {}", isa.name());
+        }
+    }
+}

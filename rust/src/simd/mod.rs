@@ -20,6 +20,13 @@
 //!   gone; the `dq` scratch block remains only because neighbour rows need
 //!   it). Operation order is exactly `(w+n+u)-(nw+nu+wu)+nwu`, so output is
 //!   bit-identical to `PszBackend`/`VecBackend` on every ISA.
+//! * [`decode`] — the reverse-Lorenzo **wavefront** kernel: decompression
+//!   reconstructs from already-reconstructed neighbours, so the independent
+//!   axis is the anti-diagonal (`i + j = d`) wavefront, swept west to east
+//!   over a skewed per-diagonal layout that turns every neighbour read into
+//!   a contiguous vector load; 3D sweeps plane by plane against the fully
+//!   reconstructed up-plane, 1D stays scalar (true west prefix dependency).
+//!   Bit-identical to the scalar reference decode on every ISA.
 //! * [`Isa`] — runtime CPU dispatch. The best ISA is detected once via
 //!   `is_x86_feature_detected!` (NEON is architecturally guaranteed on
 //!   aarch64) and can be overridden for benchmarking/testing with the
@@ -28,14 +35,18 @@
 //!   falls back to the detected one — the dispatcher never executes an
 //!   instruction the CPU lacks.
 //!
-//! The public entry point is [`run_fused`]; `quant::simd::SimdBackend`
-//! wraps it behind the common `PqBackend` trait.
+//! The public entry points are [`run_fused`] and [`run_reverse`];
+//! `quant::simd::SimdBackend` wraps the former behind the common
+//! `PqBackend` trait, `quant::decode::SimdDecodeBackend` the latter behind
+//! `DecodeBackend`.
 
+pub mod decode;
 pub mod kernel;
 pub(crate) mod lanes;
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+pub use decode::run_reverse;
 pub use kernel::run_fused;
 
 /// Instruction-set architectures the fused kernel can dispatch to.

@@ -31,6 +31,11 @@
 //!   [`decode_rows`](StreamDecompressor::decode_rows) an arbitrary part of
 //!   a huge field reading only the header, the footer and the frames it
 //!   needs. Multi-chunk ranges decode chunk-parallel through the pool.
+//!   [`decode_dim`](StreamDecompressor::decode_dim) /
+//!   [`decode_cols`](StreamDecompressor::decode_cols) extend random access
+//!   to the non-leading axes (column/plane ranges): every chunk overlaps
+//!   such a range, so all chunks decode chunk-parallel in bounded batches
+//!   and the requested extent is gathered from each slab.
 //! * With [`StreamOptions::chunk_autotune`] the compressor re-runs the
 //!   §III-E autotune heuristic on each chunk's slab (size-gated), so the
 //!   (block size × lane width) configuration tracks non-stationary fields;
@@ -56,7 +61,7 @@ use crate::error::{Result, VszError};
 use crate::format::{self, ChunkIndexEntry, ChunkMeta, Frame, Header, Section, StreamHeader};
 use crate::quant::CodesKind;
 use crate::util::crc32;
-use crate::util::{bytes_to_f32, f32_as_bytes};
+use crate::util::{f32_as_bytes, f32_as_bytes_mut};
 
 /// Upper bound on a single section payload accepted from a stream (guards
 /// allocations against forged lengths).
@@ -485,9 +490,12 @@ pub fn compress_stream<R: Read, W: Write>(
 
 /// [`compress_stream`] with explicit writer options.
 ///
-/// Reads whole chunk-span-sized buffers so `push` takes its zero-copy
-/// whole-slab path and memory stays bounded by one slab (plus the
-/// compressor's in-flight window) no matter how large the input file is.
+/// Reads directly into one reused, chunk-span-sized f32 slab (sized once
+/// from the span), so `push` takes its zero-copy whole-slab path, no
+/// per-chunk byte→f32 conversion buffer is allocated, and memory stays
+/// bounded by one slab (plus the compressor's in-flight window) no matter
+/// how large the input file is — the cheap half of the memory-mapped-input
+/// roadmap item.
 pub fn compress_stream_with<R: Read, W: Write>(
     mut input: R,
     out: W,
@@ -497,12 +505,14 @@ pub fn compress_stream_with<R: Read, W: Write>(
     opts: StreamOptions,
 ) -> Result<StreamStats> {
     let mut sc = StreamCompressor::with_options(out, dims, cfg, chunk_span, opts)?;
-    let chunk_bytes =
-        sc.chunk_span.saturating_mul(sc.row_elems).saturating_mul(4).clamp(4, MAX_READ_CHUNK_BYTES);
-    let mut buf = vec![0u8; chunk_bytes];
+    let slab_elems =
+        sc.chunk_span.saturating_mul(sc.row_elems).clamp(1, MAX_READ_CHUNK_BYTES / 4);
+    let mut slab = vec![0.0f32; slab_elems];
     loop {
-        // fill the buffer completely (short `read`s happen on pipes and
-        // sockets) so each push is one whole slab when possible
+        // fill the slab completely (short `read`s happen on pipes and
+        // sockets) so each push is one whole chunk when possible; the
+        // bytes land straight in the f32 buffer (LE host, as everywhere)
+        let buf = f32_as_bytes_mut(&mut slab);
         let mut filled = 0usize;
         while filled < buf.len() {
             let n = input.read(&mut buf[filled..])?;
@@ -517,9 +527,10 @@ pub fn compress_stream_with<R: Read, W: Write>(
         if filled % 4 != 0 {
             return Err(VszError::format("input length is not a multiple of 4 bytes"));
         }
-        sc.push(&bytes_to_f32(&buf[..filled]))?;
-        if filled < buf.len() {
-            break; // EOF mid-buffer
+        let short = filled < slab_elems * 4;
+        sc.push(&slab[..filled / 4])?;
+        if short {
+            break; // EOF mid-slab
         }
     }
     let (_, stats) = sc.finish()?;
@@ -937,7 +948,7 @@ impl<R: Read + Seek> StreamDecompressor<R> {
 
     /// Random access by leading-dim position: decode rows `[rows.start,
     /// rows.end)` of the field, touching only the chunks that overlap the
-    /// range.
+    /// range. Equivalent to [`decode_dim`](Self::decode_dim) with `dim = 0`.
     pub fn decode_rows(&mut self, rows: Range<usize>, threads: usize) -> Result<Vec<f32>> {
         let total = self.header.header.dims.shape[0];
         if rows.start >= rows.end || rows.end > total {
@@ -961,6 +972,107 @@ impl<R: Read + Seek> StreamDecompressor<R> {
         let skip = skip_rows * row_elems;
         let take = (rows.end - rows.start) * row_elems;
         Ok(data[skip..skip + take].to_vec())
+    }
+
+    /// Random access along **any** dimension: return the sub-field whose
+    /// `dim`-axis extent is clipped to `range` (all other axes full), in
+    /// field row-major order.
+    ///
+    /// `dim = 0` prunes to the covering chunks (chunks tile the leading
+    /// dimension). For `dim >= 1` every chunk overlaps the range, so all
+    /// chunks are decoded — chunk-parallel, in pool-sized batches so memory
+    /// stays bounded by the batch plus the gathered output, never the full
+    /// field — and the requested extent is gathered from each slab.
+    pub fn decode_dim(
+        &mut self,
+        dim: usize,
+        range: Range<usize>,
+        threads: usize,
+    ) -> Result<Vec<f32>> {
+        let dims = self.header.header.dims;
+        if dim >= dims.ndim {
+            return Err(VszError::config(format!(
+                "dim {dim} out of range (field has {} dims)",
+                dims.ndim
+            )));
+        }
+        if dim == 0 {
+            return self.decode_rows(range, threads);
+        }
+        let total = dims.shape[dim];
+        if range.start >= range.end || range.end > total {
+            return Err(VszError::config(format!(
+                "dim-{dim} range {}..{} out of range (extent {total})",
+                range.start, range.end
+            )));
+        }
+        let n = self.load_index()?.n_chunks();
+        let threads = threads.max(1);
+        let pool = if threads > 1 && n > 1 { Some(ThreadPool::new(threads)) } else { None };
+        let kept_row = match dim {
+            1 => range.len() * dims.shape[2],
+            _ => range.len(),
+        };
+        let mut out = Vec::with_capacity(dims.len() / dims.shape[dim] * range.len());
+        let mut k = 0usize;
+        while k < n {
+            let take = (n - k).min(threads.max(2));
+            let mut batch = Vec::with_capacity(take);
+            for kk in k..k + take {
+                batch.push(self.parse_indexed_frame(kk)?);
+            }
+            let extents: Vec<usize> = batch.iter().map(|(h, _)| h.dims.shape[0]).collect();
+            let slabs = decode_batch(batch, pool.as_ref())?;
+            for (slab, extent) in slabs.iter().zip(extents) {
+                gather_dim_range(slab, extent, dims, dim, &range, kept_row, &mut out);
+            }
+            k += take;
+        }
+        Ok(out)
+    }
+
+    /// Random access by column position: decode columns `[cols.start,
+    /// cols.end)` — the last (fastest-varying) axis — of every row/plane.
+    /// Shorthand for [`decode_dim`](Self::decode_dim) with
+    /// `dim = ndim - 1`.
+    pub fn decode_cols(&mut self, cols: Range<usize>, threads: usize) -> Result<Vec<f32>> {
+        let last = self.header.header.dims.ndim - 1;
+        self.decode_dim(last, cols, threads)
+    }
+}
+
+/// Append the `dim`-axis `range` extent of one decoded slab (leading-dim
+/// extent `extent`, full field dims `dims`) to `out`, preserving row-major
+/// order. Slabs arrive in lead order, so plain appending reassembles the
+/// sub-field.
+fn gather_dim_range(
+    slab: &[f32],
+    extent: usize,
+    dims: Dims,
+    dim: usize,
+    range: &Range<usize>,
+    kept_row: usize,
+    out: &mut Vec<f32>,
+) {
+    let (d1, d2) = (dims.shape[1], dims.shape[2]);
+    debug_assert_eq!(slab.len(), extent * d1 * d2);
+    match dim {
+        1 => {
+            // contiguous run of range.len() * d2 per leading index
+            for i0 in 0..extent {
+                let base = i0 * d1 * d2 + range.start * d2;
+                out.extend_from_slice(&slab[base..base + kept_row]);
+            }
+        }
+        2 => {
+            for i0 in 0..extent {
+                for i1 in 0..d1 {
+                    let base = (i0 * d1 + i1) * d2 + range.start;
+                    out.extend_from_slice(&slab[base..base + kept_row]);
+                }
+            }
+        }
+        _ => unreachable!("dim 0 is the pruned decode_rows path"),
     }
 }
 
@@ -1119,6 +1231,7 @@ mod tests {
     use super::*;
     use crate::compressor::{compress, decompress, BackendChoice, Config};
     use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
+    use crate::util::bytes_to_f32;
     use crate::util::prng::Pcg32;
 
     fn smooth_field(dims: Dims, seed: u64) -> Field {
@@ -1404,6 +1517,85 @@ mod tests {
         assert!(dec.decode_range(2..2, 1).is_err());
         assert!(dec.decode_rows(40..30, 1).is_err());
         assert!(dec.decode_rows(0..113, 1).is_err());
+    }
+
+    #[test]
+    fn decode_cols_matches_full_decode_2d() {
+        let field = smooth_field(Dims::d2(96, 40), 211);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 16).unwrap();
+        assert!(stats.n_chunks >= 6);
+        let full = decompress_chunked(&bytes, 1).unwrap();
+        let (lo, hi) = (7usize, 29usize);
+        let expect: Vec<f32> =
+            (0..96).flat_map(|r| full.data[r * 40 + lo..r * 40 + hi].to_vec()).collect();
+        for threads in [1usize, 2, 7] {
+            let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+            let cols = dec.decode_cols(lo..hi, threads).unwrap();
+            assert_eq!(cols, expect, "{threads} threads");
+            // decode_dim(1) is the same axis on a 2D field
+            let via_dim = dec.decode_dim(1, lo..hi, threads).unwrap();
+            assert_eq!(via_dim, expect);
+        }
+        // full-width column range == full decode
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        assert_eq!(dec.decode_cols(0..40, 2).unwrap(), full.data);
+    }
+
+    #[test]
+    fn decode_dim_matches_full_decode_3d_all_axes() {
+        let field = smooth_field(Dims::d3(24, 10, 12), 223);
+        let cfg = Config { eb: EbMode::Abs(1e-3), block_size: 4, ..Config::default() };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 4).unwrap();
+        assert!(stats.n_chunks >= 6);
+        let full = decompress_chunked(&bytes, 1).unwrap();
+        let at = |k: usize, i: usize, j: usize| full.data[(k * 10 + i) * 12 + j];
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        // dim 0 (pruned chunks) via decode_dim == decode_rows
+        assert_eq!(
+            dec.decode_dim(0, 5..17, 2).unwrap(),
+            dec.decode_rows(5..17, 2).unwrap()
+        );
+        // dim 1: middle-axis plane range [3, 8)
+        let mut expect = Vec::new();
+        for k in 0..24 {
+            for i in 3..8 {
+                for j in 0..12 {
+                    expect.push(at(k, i, j));
+                }
+            }
+        }
+        for threads in [1usize, 3] {
+            assert_eq!(dec.decode_dim(1, 3..8, threads).unwrap(), expect, "{threads}T");
+        }
+        // dim 2: column range [2, 9) via decode_cols
+        let mut expect = Vec::new();
+        for k in 0..24 {
+            for i in 0..10 {
+                for j in 2..9 {
+                    expect.push(at(k, i, j));
+                }
+            }
+        }
+        assert_eq!(dec.decode_cols(2..9, 2).unwrap(), expect);
+    }
+
+    #[test]
+    fn decode_dim_rejects_bad_inputs() {
+        let field = smooth_field(Dims::d2(48, 20), 227);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, _) = compress_chunked(&field, &cfg, 16).unwrap();
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        assert!(dec.decode_dim(2, 0..1, 1).is_err(), "dim beyond ndim accepted");
+        assert!(dec.decode_dim(1, 5..5, 1).is_err(), "empty range accepted");
+        assert!(dec.decode_dim(1, 0..21, 1).is_err(), "overlong range accepted");
+        assert!(dec.decode_cols(19..21, 1).is_err());
+        // v2 containers carry no index: column access reports that cleanly
+        let opts = StreamOptions { version: format::VERSION2, ..StreamOptions::default() };
+        let (v2, _) = compress_chunked_with(&field, &cfg, 16, opts).unwrap();
+        let mut dec2 = StreamDecompressor::new(std::io::Cursor::new(&v2)).unwrap();
+        let err = dec2.decode_cols(0..5, 1).unwrap_err();
+        assert!(err.to_string().contains("no chunk index"), "{err}");
     }
 
     #[test]

@@ -87,6 +87,15 @@ pub fn f32_as_bytes(xs: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
 }
 
+/// Reinterpret a mutable f32 slice as bytes (LE host, like
+/// [`f32_as_bytes`]) — lets readers fill an f32 slab directly, with no
+/// per-chunk byte→f32 conversion buffer.
+pub fn f32_as_bytes_mut(xs: &mut [f32]) -> &mut [u8] {
+    // SAFETY: every byte pattern is a valid f32 and vice versa, alignment
+    // of u8 is 1, and the borrow is exclusive for the returned lifetime.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut u8, xs.len() * 4) }
+}
+
 /// Copy bytes into a f32 vec (handles the unaligned case).
 pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
     assert_eq!(bytes.len() % 4, 0, "byte length must be a multiple of 4");
@@ -119,5 +128,14 @@ mod tests {
         let xs = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
         let bytes = f32_as_bytes(&xs).to_vec();
         assert_eq!(bytes_to_f32(&bytes), xs);
+    }
+
+    #[test]
+    fn f32_bytes_mut_fills_in_place() {
+        let mut xs = vec![0.0f32; 2];
+        let b = f32_as_bytes_mut(&mut xs);
+        b[..4].copy_from_slice(&1.5f32.to_le_bytes());
+        b[4..].copy_from_slice(&(-2.25f32).to_le_bytes());
+        assert_eq!(xs, vec![1.5, -2.25]);
     }
 }

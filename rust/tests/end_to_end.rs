@@ -132,3 +132,43 @@ fn decompression_is_deterministic_across_thread_counts() {
     let r8 = decompress(&bytes, 8).unwrap();
     assert_eq!(r1.data, r8.data);
 }
+
+#[test]
+fn decode_is_bit_identical_across_isas_on_every_container_version() {
+    // the acceptance criterion: decoding the SAME container bytes under
+    // every reachable ISA — including the forced-scalar reference path —
+    // must produce bit-identical fields, for v1 (monolithic), v2 (chunked)
+    // and v3 (indexed) containers and for both code kinds.
+    // (force_isa flips are safe under parallel test execution precisely
+    // because every backend is bit-identical on every ISA.)
+    let ds = suite("cesm", Scale::Small, 7).unwrap();
+    let field = subsample(&ds.fields[0], 80_000);
+    for backend in [BackendChoice::Vec { width: 8 }, BackendChoice::Sz14] {
+        let cfg = Config { backend, eb: EbMode::Abs(1e-3), ..Config::default() };
+        let v1 = compress(&field, &cfg).unwrap().0;
+        let v3 = vecsz::stream::compress_chunked(&field, &cfg, 16).unwrap().0;
+        let v2_opts = vecsz::stream::StreamOptions {
+            version: vecsz::format::VERSION2,
+            ..vecsz::stream::StreamOptions::default()
+        };
+        let v2 = vecsz::stream::compress_chunked_with(&field, &cfg, 16, v2_opts).unwrap().0;
+        for (tag, bytes) in [("v1", &v1), ("v2", &v2), ("v3", &v3)] {
+            let baseline = decompress(bytes, 2).unwrap();
+            for isa in vecsz::simd::Isa::available() {
+                vecsz::simd::force_isa(Some(isa));
+                let rec = decompress(bytes, 2).unwrap();
+                let same = baseline
+                    .data
+                    .iter()
+                    .zip(&rec.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(
+                    same && baseline.data.len() == rec.data.len(),
+                    "{tag} {backend:?}: decode diverged on {}",
+                    isa.name()
+                );
+            }
+            vecsz::simd::force_isa(None);
+        }
+    }
+}
