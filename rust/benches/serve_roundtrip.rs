@@ -1,0 +1,110 @@
+//! `cargo bench --bench serve_roundtrip` — the `vsz serve` service layer:
+//! request round-trips through a real loopback TCP connection against an
+//! in-process server (framing + admission + shared-pool scheduling all on
+//! the measured path). Single-connection compress/decompress latency plus
+//! a 4-connection concurrent compress run (the admission/scheduler path
+//! the smoke test gates). Emits `BENCH_serve.json`; honour
+//! `VECSZ_BENCH_QUICK=1` in CI.
+
+use vecsz::bench::{bench, BenchOpts, BenchStats};
+use vecsz::blocks::Dims;
+use vecsz::data::Field;
+use vecsz::server::{Client, ServeConfig, Server};
+use vecsz::util::prng::Pcg32;
+
+const ROWS: usize = 512;
+const COLS: usize = 256;
+const SPAN: usize = 64;
+const EB: f64 = 1e-3;
+
+fn json_row(op: &str, conns: usize, s: &BenchStats) -> String {
+    format!(
+        "{{\"op\":\"{op}\",\"threads\":{conns},\"mb_per_s\":{:.1},\
+         \"mean_s\":{:.6},\"min_s\":{:.6},\"samples\":{}}}",
+        s.mean_mb_s(),
+        s.mean_s,
+        s.min_s,
+        s.samples
+    )
+}
+
+fn walk_field(name: &str, seed: u64) -> Field {
+    let dims = Dims::d2(ROWS, COLS);
+    let mut rng = Pcg32::seeded(seed);
+    let mut x = 0.0f32;
+    let data: Vec<f32> = (0..dims.len())
+        .map(|_| {
+            x += (rng.next_f32() - 0.5) * 0.1;
+            x
+        })
+        .collect();
+    Field::new(name, dims, data)
+}
+
+fn main() {
+    let opts = BenchOpts::from_env();
+    let srv = Server::bind("127.0.0.1:0", ServeConfig { threads: 4, ..ServeConfig::default() })
+        .expect("bind");
+    let addr = srv.local_addr().expect("addr").to_string();
+    let server = std::thread::spawn(move || srv.run().expect("server run"));
+
+    let field = walk_field("bench", 7);
+    let dims_s = format!("{ROWS}x{COLS}");
+    let raw_bytes = field.data.len() * 4;
+    let mut rows: Vec<String> = Vec::new();
+
+    // ---- single connection: compress round-trip latency ----
+    let mut c = Client::connect(&addr).expect("connect");
+    let s = bench("serve compress 1 conn", raw_bytes, opts, || {
+        let (bytes, _) = c.compress("bench", &dims_s, EB, SPAN, &field.data).unwrap();
+        std::hint::black_box(bytes);
+    });
+    println!("{}", s.row());
+    rows.push(json_row("serve-compress", 1, &s));
+
+    // ---- single connection: decompress round-trip latency ----
+    let (container, _) = c.compress("bench", &dims_s, EB, SPAN, &field.data).unwrap();
+    let s = bench("serve decompress 1 conn", raw_bytes, opts, || {
+        let (samples, _) = c.decompress(&container).unwrap();
+        std::hint::black_box(samples);
+    });
+    println!("{}", s.row());
+    rows.push(json_row("serve-decompress", 1, &s));
+
+    // ---- 4 connections compressing concurrently (the scheduler path) ----
+    let fields: Vec<Field> = (0..4).map(|i| walk_field("cc", 100 + i as u64)).collect();
+    let mut clients: Vec<Client> =
+        (0..4).map(|_| Client::connect(&addr).expect("connect")).collect();
+    let s = bench("serve compress 4 conns", raw_bytes * 4, opts, || {
+        std::thread::scope(|scope| {
+            for (cl, f) in clients.iter_mut().zip(fields.iter()) {
+                let dims_s = &dims_s;
+                scope.spawn(move || {
+                    let (bytes, _) = cl.compress(&f.name, dims_s, EB, SPAN, &f.data).unwrap();
+                    std::hint::black_box(bytes);
+                });
+            }
+        });
+    });
+    println!("{}", s.row());
+    rows.push(json_row("serve-compress-4conn", 4, &s));
+
+    c.shutdown().expect("shutdown");
+    drop(c);
+    drop(clients);
+    server.join().expect("server exits");
+
+    let doc = format!(
+        "{{\n  \"workload\": \"serve-loopback-{ROWS}x{COLS}-span{SPAN}\",\n  \
+         \"n_elems\": {},\n  \"raw_bytes\": {raw_bytes},\n  \
+         \"isa\": \"{}\",\n  \"target_features\": \"{}\",\n  \"rows\": [\n    {}\n  ]\n}}\n",
+        field.data.len(),
+        vecsz::simd::Isa::active().name(),
+        vecsz::simd::compiled_target_features(),
+        rows.join(",\n    ")
+    );
+    match std::fs::write("BENCH_serve.json", &doc) {
+        Ok(()) => println!("    (wrote BENCH_serve.json)"),
+        Err(e) => eprintln!("    (could not write BENCH_serve.json: {e})"),
+    }
+}

@@ -1,13 +1,18 @@
 //! `BENCH_*.json` regression gate — the CI `compare-bench` step.
 //!
-//! The bench targets (`micro_substrates`, `stream_access`) emit
-//! machine-readable throughput rows; CI diffs a fresh run against the
-//! baselines committed under `ci/bench-baselines/` and fails the job when
-//! any matched row lost more than the tolerated fraction of throughput.
-//! Rows are matched by `(op, format, threads)`; rows present on only one
-//! side are reported but never fail the gate (new benchmarks must be able
-//! to land before their baseline exists, and baselines must survive a
-//! renamed row without blocking CI).
+//! The bench targets (`micro_substrates`, `stream_access`,
+//! `serve_roundtrip`) emit machine-readable throughput rows; CI diffs a
+//! fresh run against the baselines committed under `ci/bench-baselines/`
+//! and fails the job when any matched row lost more than the tolerated
+//! fraction of throughput. Rows are matched by `(op, format, threads)`;
+//! rows present on only one side are reported but never fail the gate
+//! (new benchmarks must be able to land before their baseline exists, and
+//! baselines must survive a renamed row without blocking CI). The
+//! complementary [`missing_required`] presence gate covers the hole that
+//! leniency opens: CI names the row families that must exist in every
+//! fresh run (the decode-kernel / decode-stage rows of `BENCH_pq.json`,
+//! the serve rows of `BENCH_serve.json`), and the job fails if a bench
+//! quietly stops emitting them.
 //!
 //! Both documents carry the runtime-dispatched SIMD `isa` (and the
 //! compiled `target_features`) in their metadata. When the two sides
@@ -123,6 +128,24 @@ pub fn compare_files(baseline: &str, fresh: &str, tolerance_pct: f64) -> Result<
     compare_docs(&b, &f, tolerance_pct)
 }
 
+/// Presence gate: every `required` prefix must match at least one row key
+/// (`op/format@threads`) across the fresh documents. Returns the prefixes
+/// with no match — unmatched-rows-never-fail makes the diff gate lenient
+/// by design, so without this a bench that silently stops emitting its
+/// rows (say the decode-kernel or serve rows) would pass CI forever;
+/// `bench-compare --require` turns "these rows exist" into a hard check.
+pub fn missing_required(fresh_docs: &[Json], required: &[String]) -> Result<Vec<String>> {
+    let mut keys = Vec::new();
+    for doc in fresh_docs {
+        keys.extend(rows_of(doc)?.into_iter().map(|(k, _)| k));
+    }
+    Ok(required
+        .iter()
+        .filter(|req| !keys.iter().any(|k| k.starts_with(req.as_str())))
+        .cloned()
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +231,30 @@ mod tests {
         let r = compare_docs(&base, &fresh, 25.0).unwrap();
         assert_eq!(r.rows.len(), 0);
         assert_eq!(r.unmatched.len(), 1);
+    }
+
+    #[test]
+    fn required_prefixes_match_across_documents() {
+        let pq = doc(
+            r#"{"op":"decode-kernel","format":"simd16","threads":1,"mb_per_s":9.0},
+               {"op":"decode_stage","format":"v1","threads":4,"mb_per_s":9.0}"#,
+        );
+        let serve = doc(r#"{"op":"serve-compress","threads":1,"mb_per_s":9.0}"#);
+        let req = |names: &[&str]| names.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        let missing = missing_required(
+            &[pq.clone(), serve.clone()],
+            &req(&["decode-kernel", "decode_stage", "serve-compress"]),
+        )
+        .unwrap();
+        assert!(missing.is_empty(), "all present: {missing:?}");
+        // a prefix covers every (format, threads) variant of the op
+        assert!(missing_required(&[pq.clone()], &req(&["decode"])).unwrap().is_empty());
+        // absent rows are reported by name, in order
+        let missing =
+            missing_required(&[pq], &req(&["serve-compress", "decode-kernel"])).unwrap();
+        assert_eq!(missing, req(&["serve-compress"]));
+        // malformed documents error rather than silently passing the gate
+        assert!(missing_required(&[parse("{}").unwrap()], &req(&["x"])).is_err());
     }
 
     #[test]

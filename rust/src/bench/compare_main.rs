@@ -2,17 +2,22 @@
 //! committed baselines.
 //!
 //!     bench-compare --baseline ../ci/bench-baselines --fresh . [--tolerance 25]
+//!                   [--require decode-kernel,decode_stage,serve-compress]
 //!
 //! Every `BENCH_*.json` in the fresh directory is compared against the
 //! same-named file in the baseline directory (missing baseline files are
 //! reported and skipped — a brand-new bench must be able to land first).
 //! Exit code 1 when any matched row lost more than `--tolerance` percent
-//! of its baseline throughput.
+//! of its baseline throughput, or when a `--require` prefix (matched
+//! against the fresh `op/format@threads` row keys) has no fresh row at
+//! all — the lenient unmatched-rows rule would otherwise let a bench that
+//! stopped emitting its rows pass forever.
 
 use std::process::ExitCode;
 
-use vecsz::bench::compare::compare_files;
+use vecsz::bench::compare::{compare_files, missing_required};
 use vecsz::cli::Args;
+use vecsz::util::json;
 
 fn run() -> Result<bool, vecsz::error::VszError> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -20,6 +25,10 @@ fn run() -> Result<bool, vecsz::error::VszError> {
     let baseline_dir = a.str_or("baseline", "../ci/bench-baselines").to_string();
     let fresh_dir = a.str_or("fresh", ".").to_string();
     let tolerance = a.f64_or("tolerance", 25.0)?;
+    let required: Vec<String> = a
+        .get("require")
+        .map(|s| s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
+        .unwrap_or_default();
     a.reject_unknown()?;
 
     let mut fresh_files: Vec<String> = std::fs::read_dir(&fresh_dir)?
@@ -61,6 +70,24 @@ fn run() -> Result<bool, vecsz::error::VszError> {
         }
         if report.regressions().count() > 0 {
             ok = false;
+        }
+    }
+
+    if !required.is_empty() {
+        let mut docs = Vec::with_capacity(fresh_files.len());
+        for name in &fresh_files {
+            docs.push(json::parse(&std::fs::read_to_string(format!("{fresh_dir}/{name}"))?)?);
+        }
+        let missing = missing_required(&docs, &required)?;
+        for m in &missing {
+            println!("required rows '{m}*': no fresh bench row matches — MISSING");
+            ok = false;
+        }
+        if missing.is_empty() {
+            println!(
+                "required rows present: {}",
+                required.iter().map(String::as_str).collect::<Vec<_>>().join(", ")
+            );
         }
     }
     Ok(ok)

@@ -31,6 +31,7 @@ const SWITCHES: &[&str] = &[
     "stream",
     "tune-chunks",
     "verify-steps",
+    "status",
 ];
 
 impl Args {

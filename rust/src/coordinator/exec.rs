@@ -1,0 +1,616 @@
+//! Job-graph executor — the dispatch layer between the raw [`ThreadPool`]
+//! and the higher-level schedulers.
+//!
+//! The pool (`pool.rs`) is a plain FIFO injector: it knows nothing about
+//! job identity, ordering constraints or flow control. Everything above it
+//! — the chunk scheduler (`sched`), the batch driver, the `vsz serve`
+//! service — needs the same four facilities, so they live here once:
+//!
+//! * **Dependencies** — a job may name previously submitted jobs that must
+//!   reach a terminal state first. Submission order gives a natural DAG
+//!   (forward references are rejected), so cycles are impossible.
+//! * **Priorities** — among ready jobs, higher [`JobSpec::priority`] runs
+//!   first; ties run in submission order (FIFO), which keeps the plain
+//!   `scatter_gather` path byte-for-byte deterministic.
+//! * **Cancellation** — a [`CancelToken`] flips jobs to
+//!   [`JobStatus::Cancelled`] before they start; running jobs may poll the
+//!   token cooperatively. A cancelled dependency cancels its dependents; a
+//!   failed (panicked) dependency fails them.
+//! * **Bounded submission** — at most `capacity` jobs may be outstanding
+//!   (submitted but not yet terminal); [`Executor::submit`] blocks until a
+//!   slot frees, so producers cannot grow the queue unboundedly.
+//!
+//! Results come back on a **completion-ordered channel** ([`Executor::recv`]):
+//! whichever job finishes first is received first, tagged with its
+//! [`JobId`]. Callers that need submission order (scatter/gather) reorder by
+//! id; callers that stream (the ordered container sink) forward completions
+//! as they arrive.
+//!
+//! Exactly one status is delivered per submitted job — run, cancelled,
+//! poisoned or panicked — and the status is sent strictly *after* the job
+//! closure has been consumed or dropped. That ordering is the soundness
+//! anchor for the scoped (borrowing) entry points in `pool.rs`: receiving
+//! `n` statuses proves all `n` job closures are dead, so no borrow of the
+//! caller's frame can escape.
+
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::coordinator::pool::ThreadPool;
+use crate::error::{Result, VszError};
+
+/// Monotonic per-executor job handle (assigned from 0 in submission order).
+pub type JobId = u64;
+
+/// Cooperative cancellation flag, cloneable across threads.
+///
+/// Cancelling before a job starts turns it into [`JobStatus::Cancelled`]
+/// without running it; a job that is already running can poll
+/// [`is_cancelled`](Self::is_cancelled) and bail early (its return value is
+/// still delivered as [`JobStatus::Done`] then — cancellation observed
+/// mid-run is the job's own business).
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Per-job submission parameters.
+#[derive(Clone, Debug, Default)]
+pub struct JobSpec {
+    /// Higher runs first among ready jobs; ties in submission order.
+    pub priority: i32,
+    /// Ids of previously submitted jobs that must finish first.
+    pub deps: Vec<JobId>,
+    /// Checked immediately before the job runs.
+    pub cancel: Option<CancelToken>,
+}
+
+impl JobSpec {
+    pub fn with_priority(priority: i32) -> Self {
+        Self { priority, ..Self::default() }
+    }
+
+    pub fn after(deps: Vec<JobId>) -> Self {
+        Self { deps, ..Self::default() }
+    }
+}
+
+/// Terminal state of one job.
+#[derive(Debug)]
+pub enum JobStatus<R> {
+    /// Ran to completion.
+    Done(R),
+    /// Skipped: its token was cancelled before it started, or a dependency
+    /// was cancelled.
+    Cancelled,
+    /// The job panicked (message captured), or a dependency failed.
+    Failed(String),
+}
+
+impl<R> JobStatus<R> {
+    /// Unwrap `Done`, panicking with the failure message otherwise — the
+    /// scatter/gather convention (a panicking job panics the caller).
+    pub fn expect_done(self) -> R {
+        match self {
+            JobStatus::Done(r) => r,
+            JobStatus::Cancelled => panic!("job cancelled"),
+            JobStatus::Failed(m) => panic!("worker job failed: {m}"),
+        }
+    }
+}
+
+/// How a popped job is to be disposed of.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Disposition {
+    Run,
+    Cancelled,
+    DepFailed,
+}
+
+/// Outcome kind reported back to the graph (the `R`-typed payload travels
+/// on the executor's channel instead).
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Outcome {
+    Ok,
+    Cancelled,
+    Failed,
+}
+
+/// Type-erased job body: told its disposition, it sends exactly one
+/// `(JobId, JobStatus<R>)` on the executor's channel — after dropping or
+/// consuming the user closure — and returns the outcome kind for
+/// dependency propagation.
+type ErasedJob = Box<dyn FnOnce(Disposition) -> Outcome + Send + 'static>;
+
+struct PendingJob {
+    body: ErasedJob,
+    deps_left: usize,
+    priority: i32,
+    seq: u64,
+    cancel: Option<CancelToken>,
+    /// Set when a dependency terminated abnormally; overrides `Run`.
+    poison: Option<Disposition>,
+}
+
+/// Ready-heap key: higher priority first, then FIFO by submission sequence.
+#[derive(PartialEq, Eq)]
+struct ReadyKey {
+    priority: i32,
+    seq: u64,
+    id: JobId,
+}
+
+impl Ord for ReadyKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.priority
+            .cmp(&other.priority)
+            .then_with(|| other.seq.cmp(&self.seq)) // max-heap: smaller seq wins
+    }
+}
+
+impl PartialOrd for ReadyKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Default)]
+struct ExecState {
+    jobs: HashMap<JobId, PendingJob>,
+    ready: BinaryHeap<ReadyKey>,
+    dependents: HashMap<JobId, Vec<JobId>>,
+    /// Terminal outcome of every finished job (late-submitted dependents
+    /// resolve against this).
+    done: HashMap<JobId, Outcome>,
+    /// Submitted jobs whose status has not been sent yet.
+    outstanding: usize,
+    next_seq: u64,
+}
+
+struct ExecShared {
+    state: Mutex<ExecState>,
+    /// Signalled when `outstanding` drops below capacity.
+    room: Condvar,
+    pool: Arc<crate::coordinator::pool::PoolShared>,
+}
+
+impl ExecShared {
+    /// Run (or dispose of) the highest-priority ready job. Called from a
+    /// pool worker; exactly one tick is enqueued per job that becomes
+    /// ready, so the pop below always finds an entry.
+    fn run_one(self: &Arc<Self>) {
+        let (id, body, disp) = {
+            let mut st = self.state.lock().unwrap();
+            let key = st.ready.pop().expect("tick without ready job");
+            let job = st.jobs.remove(&key.id).expect("ready job missing");
+            let disp = job.poison.unwrap_or_else(|| match &job.cancel {
+                Some(t) if t.is_cancelled() => Disposition::Cancelled,
+                _ => Disposition::Run,
+            });
+            (key.id, job.body, disp)
+        };
+        // The body consumes/drops the user closure, then sends the status.
+        let outcome = (body)(disp);
+        let newly_ready = {
+            let mut st = self.state.lock().unwrap();
+            st.done.insert(id, outcome);
+            st.outstanding -= 1;
+            let mut ready = Vec::new();
+            if let Some(deps) = st.dependents.remove(&id) {
+                for d in deps {
+                    let job = st.jobs.get_mut(&d).expect("dependent vanished");
+                    job.deps_left -= 1;
+                    match outcome {
+                        Outcome::Ok => {}
+                        Outcome::Cancelled => {
+                            job.poison.get_or_insert(Disposition::Cancelled);
+                        }
+                        Outcome::Failed => job.poison = Some(Disposition::DepFailed),
+                    }
+                    if job.deps_left == 0 {
+                        st.ready.push(ReadyKey { priority: job.priority, seq: job.seq, id: d });
+                        ready.push(());
+                    }
+                }
+            }
+            self.room.notify_all();
+            ready
+        };
+        for _ in newly_ready {
+            self.enqueue_tick();
+        }
+    }
+
+    fn enqueue_tick(self: &Arc<Self>) {
+        let sh = Arc::clone(self);
+        self.pool.push(Box::new(move || sh.run_one()));
+    }
+}
+
+/// Job-graph executor over a borrowed [`ThreadPool`].
+///
+/// Lightweight: holds scheduling state and a result channel; the worker
+/// threads belong to the pool, so many executors (one per batch call, one
+/// per server request) can share one pool concurrently.
+pub struct Executor<R: Send> {
+    shared: Arc<ExecShared>,
+    /// Master sender — keeps `rx` connected while jobs are in flight.
+    tx: Sender<(JobId, JobStatus<R>)>,
+    rx: Receiver<(JobId, JobStatus<R>)>,
+    capacity: usize,
+    next_id: JobId,
+}
+
+impl<R: Send + 'static> Executor<R> {
+    /// Executor with at most `capacity` outstanding jobs (≥ 1); `submit`
+    /// blocks when full.
+    pub fn new(pool: &ThreadPool, capacity: usize) -> Self {
+        // SAFETY: R: 'static and `submit` requires 'static closures, so no
+        // borrow can outlive the pool queue.
+        unsafe { Self::new_unchecked(pool, capacity) }
+    }
+
+    /// Submit a job; blocks while the executor is at capacity. Returns the
+    /// job's id (also carried by its status on the result channel).
+    pub fn submit(
+        &mut self,
+        spec: JobSpec,
+        f: impl FnOnce() -> R + Send + 'static,
+    ) -> Result<JobId> {
+        // SAFETY: f is 'static — nothing to outlive.
+        unsafe { self.submit_unchecked(spec, f) }
+    }
+}
+
+impl<R: Send> Executor<R> {
+    /// [`Executor::new`] without the `'static` bound on `R`.
+    ///
+    /// # Safety
+    /// Every closure later passed to [`submit_unchecked`](Self::submit_unchecked)
+    /// may borrow non-`'static` data; the caller must receive a status for
+    /// every submitted job (via [`recv`](Self::recv)) before any borrowed
+    /// data goes out of scope. A status is sent only after the job closure
+    /// has been consumed or dropped, so `n` received statuses prove all `n`
+    /// closures are dead.
+    pub(crate) unsafe fn new_unchecked(pool: &ThreadPool, capacity: usize) -> Self {
+        let (tx, rx) = channel();
+        Self {
+            shared: Arc::new(ExecShared {
+                state: Mutex::new(ExecState::default()),
+                room: Condvar::new(),
+                pool: Arc::clone(pool.shared()),
+            }),
+            tx,
+            rx,
+            capacity: capacity.max(1),
+            next_id: 0,
+        }
+    }
+
+    /// [`Executor::submit`] without the `'static` bound on the closure.
+    ///
+    /// # Safety
+    /// See [`new_unchecked`](Self::new_unchecked): the caller must drain
+    /// this job's status before any data `f` borrows goes out of scope.
+    pub(crate) unsafe fn submit_unchecked(
+        &mut self,
+        spec: JobSpec,
+        f: impl FnOnce() -> R + Send,
+    ) -> Result<JobId> {
+        let id = self.next_id;
+        for &d in &spec.deps {
+            if d >= id {
+                return Err(VszError::config(format!(
+                    "job {id}: dependency {d} not yet submitted (forward references \
+                     would allow cycles)"
+                )));
+            }
+        }
+        self.next_id += 1;
+        let tx = self.tx.clone();
+        let cancel = spec.cancel.clone();
+        let body: Box<dyn FnOnce(Disposition) -> Outcome + Send + '_> =
+            Box::new(move |disp: Disposition| {
+                let (status, outcome) = match disp {
+                    Disposition::Run => {
+                        // catch_unwind consumes `f`: by the time the status
+                        // is built the user closure (and everything it
+                        // borrows) is gone, normally or by unwind.
+                        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+                            Ok(r) => (JobStatus::Done(r), Outcome::Ok),
+                            Err(p) => (JobStatus::Failed(panic_msg(&p)), Outcome::Failed),
+                        }
+                    }
+                    Disposition::Cancelled => {
+                        drop(f); // closure dies before the status is sent
+                        (JobStatus::Cancelled, Outcome::Cancelled)
+                    }
+                    Disposition::DepFailed => {
+                        drop(f);
+                        (JobStatus::Failed("dependency failed".into()), Outcome::Failed)
+                    }
+                };
+                let _ = tx.send((id, status));
+                outcome
+            });
+        // SAFETY: per the caller contract the job's status is drained
+        // before any 'env borrow in `f` dies, and the status is sent
+        // strictly after `f` is consumed/dropped — so the erased body never
+        // touches dead borrows even though the pool queue is 'static.
+        let body: ErasedJob = std::mem::transmute(body);
+
+        let mut st = self.shared.state.lock().unwrap();
+        while st.outstanding >= self.capacity {
+            st = self.shared.room.wait(st).unwrap();
+        }
+        st.outstanding += 1;
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        let mut deps_left = 0usize;
+        let mut poison = None;
+        for &d in &spec.deps {
+            if let Some(out) = st.done.get(&d) {
+                match out {
+                    Outcome::Ok => {}
+                    Outcome::Cancelled => {
+                        poison.get_or_insert(Disposition::Cancelled);
+                    }
+                    Outcome::Failed => poison = Some(Disposition::DepFailed),
+                }
+            } else {
+                st.dependents.entry(d).or_default().push(id);
+                deps_left += 1;
+            }
+        }
+        st.jobs.insert(
+            id,
+            PendingJob { body, deps_left, priority: spec.priority, seq, cancel, poison },
+        );
+        let ready_now = deps_left == 0;
+        if ready_now {
+            st.ready.push(ReadyKey { priority: spec.priority, seq, id });
+        }
+        drop(st);
+        if ready_now {
+            self.shared.enqueue_tick();
+        }
+        Ok(id)
+    }
+
+    /// Next status in completion order; blocks. `None` only if the channel
+    /// somehow closed (cannot happen while the executor holds its master
+    /// sender).
+    pub fn recv(&self) -> Option<(JobId, JobStatus<R>)> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking [`recv`](Self::recv).
+    pub fn try_recv(&self) -> Option<(JobId, JobStatus<R>)> {
+        match self.rx.try_recv() {
+            Ok(m) => Some(m),
+            Err(TryRecvError::Empty | TryRecvError::Disconnected) => None,
+        }
+    }
+
+    /// Jobs submitted so far (also the next id to be assigned).
+    pub fn submitted(&self) -> u64 {
+        self.next_id
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "job panicked".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    fn drain<R: Send>(exec: &Executor<R>, n: usize) -> Vec<(JobId, JobStatus<R>)> {
+        (0..n).map(|_| exec.recv().expect("status")).collect()
+    }
+
+    #[test]
+    fn dependency_ordering_is_respected() {
+        let pool = ThreadPool::new(4);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut exec: Executor<()> = Executor::new(&pool, 64);
+        // diamond: a -> {b, c} -> d
+        let mk = |tag: &'static str| {
+            let order = Arc::clone(&order);
+            move || {
+                order.lock().unwrap().push(tag);
+            }
+        };
+        let a = exec.submit(JobSpec::default(), mk("a")).unwrap();
+        let b = exec.submit(JobSpec::after(vec![a]), mk("b")).unwrap();
+        let c = exec.submit(JobSpec::after(vec![a]), mk("c")).unwrap();
+        let _d = exec.submit(JobSpec::after(vec![b, c]), mk("d")).unwrap();
+        for (_, st) in drain(&exec, 4) {
+            st.expect_done();
+        }
+        let seen = order.lock().unwrap().clone();
+        assert_eq!(seen[0], "a");
+        assert_eq!(seen[3], "d");
+        assert_eq!(seen.len(), 4);
+    }
+
+    #[test]
+    fn dep_on_already_finished_job_runs() {
+        let pool = ThreadPool::new(2);
+        let mut exec: Executor<u32> = Executor::new(&pool, 8);
+        let a = exec.submit(JobSpec::default(), || 1).unwrap();
+        let (_, st) = exec.recv().unwrap();
+        assert!(matches!(st, JobStatus::Done(1)));
+        // a is terminal before b is submitted
+        let _b = exec.submit(JobSpec::after(vec![a]), || 2).unwrap();
+        let (_, st) = exec.recv().unwrap();
+        assert!(matches!(st, JobStatus::Done(2)));
+    }
+
+    #[test]
+    fn forward_dependency_is_rejected() {
+        let pool = ThreadPool::new(1);
+        let mut exec: Executor<()> = Executor::new(&pool, 4);
+        assert!(exec.submit(JobSpec::after(vec![0]), || ()).is_err());
+    }
+
+    #[test]
+    fn cancellation_mid_graph_skips_job_and_dependents() {
+        let pool = ThreadPool::new(2);
+        let mut exec: Executor<u32> = Executor::new(&pool, 16);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = Arc::clone(&gate);
+        let a = exec
+            .submit(JobSpec::default(), move || {
+                let (m, cv) = &*g;
+                let mut open = m.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                1
+            })
+            .unwrap();
+        let token = CancelToken::new();
+        let spec = JobSpec { deps: vec![a], cancel: Some(token.clone()), ..JobSpec::default() };
+        let b = exec.submit(spec, || 2).unwrap();
+        let c = exec.submit(JobSpec::after(vec![b]), || 3).unwrap();
+        // cancel b while a is still running, then release a
+        token.cancel();
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let mut statuses: HashMap<JobId, JobStatus<u32>> =
+            drain(&exec, 3).into_iter().collect();
+        assert!(matches!(statuses.remove(&a), Some(JobStatus::Done(1))));
+        assert!(matches!(statuses.remove(&b), Some(JobStatus::Cancelled)));
+        assert!(matches!(statuses.remove(&c), Some(JobStatus::Cancelled)));
+    }
+
+    #[test]
+    fn panic_is_contained_and_fails_dependents() {
+        let pool = ThreadPool::new(2);
+        let mut exec: Executor<u32> = Executor::new(&pool, 16);
+        let a = exec.submit(JobSpec::default(), || panic!("boom-{}", 7)).unwrap();
+        let b = exec.submit(JobSpec::after(vec![a]), || 2).unwrap();
+        let c = exec.submit(JobSpec::default(), || 3).unwrap();
+        let statuses: HashMap<JobId, JobStatus<u32>> = drain(&exec, 3).into_iter().collect();
+        match statuses.get(&a) {
+            Some(JobStatus::Failed(m)) => assert!(m.contains("boom-7"), "{m}"),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(statuses.get(&b), Some(JobStatus::Failed(_))));
+        // unrelated work is unaffected
+        assert!(matches!(statuses.get(&c), Some(JobStatus::Done(3))));
+    }
+
+    #[test]
+    fn bounded_queue_blocks_submit() {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let submitted = Arc::new(AtomicUsize::new(0));
+        let g = Arc::clone(&gate);
+        let s = Arc::clone(&submitted);
+        let h = std::thread::spawn(move || {
+            let pool = ThreadPool::new(1);
+            let mut exec: Executor<()> = Executor::new(&pool, 1);
+            let gg = Arc::clone(&g);
+            exec.submit(JobSpec::default(), move || {
+                let (m, cv) = &*gg;
+                let mut open = m.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            })
+            .unwrap();
+            s.store(1, Ordering::SeqCst);
+            // capacity 1 and one job outstanding: this must block until
+            // the gate opens
+            exec.submit(JobSpec::default(), || ()).unwrap();
+            s.store(2, Ordering::SeqCst);
+            drain(&exec, 2);
+        });
+        while submitted.load(Ordering::SeqCst) < 1 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(submitted.load(Ordering::SeqCst), 1, "second submit should be blocked");
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        h.join().unwrap();
+        assert_eq!(submitted.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn priorities_order_ready_work() {
+        let pool = ThreadPool::new(1);
+        let mut exec: Executor<&'static str> = Executor::new(&pool, 16);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let g = Arc::clone(&gate);
+        // occupy the single worker so later submissions pile up as ready
+        exec.submit(JobSpec::default(), move || {
+            let (m, cv) = &*g;
+            let mut open = m.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            "gate"
+        })
+        .unwrap();
+        exec.submit(JobSpec::with_priority(0), || "low").unwrap();
+        exec.submit(JobSpec::with_priority(5), || "high").unwrap();
+        {
+            let (m, cv) = &*gate;
+            *m.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let order: Vec<&str> =
+            drain(&exec, 3).into_iter().map(|(_, st)| st.expect_done()).collect();
+        assert_eq!(order, vec!["gate", "high", "low"]);
+    }
+
+    #[test]
+    fn determinism_across_thread_counts() {
+        let run = |threads: usize| -> Vec<u64> {
+            let pool = ThreadPool::new(threads);
+            let mut exec: Executor<u64> = Executor::new(&pool, 32);
+            for i in 0..40u64 {
+                exec.submit(JobSpec::default(), move || i * i + 1).unwrap();
+            }
+            let mut out = vec![0u64; 40];
+            for (id, st) in drain(&exec, 40) {
+                out[id as usize] = st.expect_done();
+            }
+            out
+        };
+        let r1 = run(1);
+        assert_eq!(r1, run(2));
+        assert_eq!(r1, run(7));
+    }
+}

@@ -1,5 +1,18 @@
-//! Layer-3 coordination: thread pool / parallel-for (the paper's OpenMP
-//! analog) and the streaming compression pipeline (see `pipeline`).
+//! Layer-3 coordination, split into three layers (bottom up):
+//!
+//! * [`pool`] — raw substrate: thread pool / parallel-for (the paper's
+//!   OpenMP analog), a FIFO injector with no job identity.
+//! * [`exec`] — job-graph executor on top of the pool: dependencies,
+//!   priorities, cancellation, bounded submission and a completion-ordered
+//!   result channel. `scatter_gather` is a thin wrapper over it.
+//! * [`sched`] — two-level (fields × chunks) scheduler on top of the
+//!   executor, interleaving chunk jobs from many fields across the whole
+//!   pool and feeding an asynchronous [`sched::OrderedWriter`] sink.
+//!
+//! [`pipeline`] (the time-step streaming driver and the batch driver)
+//! sits above all three.
 
+pub mod exec;
 pub mod pipeline;
 pub mod pool;
+pub mod sched;

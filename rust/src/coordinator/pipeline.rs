@@ -14,10 +14,12 @@ use crate::autotune::{autotune, TuneConfig, TuneSettings};
 use crate::compressor::{
     compress, default_block_size, Config, CompressStats, EbMode,
 };
+use crate::coordinator::exec::{Executor, JobSpec, JobStatus};
 use crate::coordinator::pool::ThreadPool;
+use crate::coordinator::sched::{self, FieldSpec};
 use crate::data::Field;
 use crate::error::{Result, VszError};
-use crate::metrics::SizeStats;
+use crate::metrics::{CompressionStats, SizeStats};
 use crate::stream;
 use crate::util::timer::{StageProfile, Timer};
 
@@ -103,6 +105,24 @@ impl PipelineReport {
         let tune: f64 = self.steps.iter().map(|s| s.tune_seconds).sum();
         100.0 * tune / self.total_seconds.max(f64::MIN_POSITIVE)
     }
+
+    /// Fold the per-step numbers into the crate-wide
+    /// [`CompressionStats`] aggregate (one compression op per step; the
+    /// producer-wait bubble counts as queue wait).
+    pub fn compression_stats(&self) -> CompressionStats {
+        let mut total = CompressionStats::new();
+        for s in &self.steps {
+            let mut one = CompressionStats::new();
+            one.record_compress(
+                s.stats.size.raw_bytes,
+                s.stats.size.compressed_bytes,
+                s.stats.pq_seconds,
+            );
+            one.record_queue_wait(s.stall_seconds);
+            total.merge(&one);
+        }
+        total
+    }
 }
 
 /// Run the pipeline over a producer of time-step fields, handing each
@@ -119,6 +139,9 @@ pub fn run_stream(
     let t_total = Timer::start();
     let rx = spawn_producer(producer, cfg.queue_depth);
 
+    // one shared worker pool for every chunked step (the old path built a
+    // fresh pool inside each step's streaming writer)
+    let pool = cfg.chunked.map(|_| ThreadPool::new(cfg.base.threads.max(1)));
     let mut report = PipelineReport::default();
     let mut current: Option<TuneConfig> = None;
     let mut step = 0usize;
@@ -149,9 +172,25 @@ pub fn run_stream(
             c.block_size = tc.block_size;
             c.backend = tc.backend_choice();
         }
-        let (bytes, stats) = match cfg.chunked {
-            Some(span) => compress_step_chunked(&field, &c, eb, span, &cfg)?,
-            None => compress(&field, &c)?,
+        let (field, bytes, stats) = match cfg.chunked {
+            Some(span) => {
+                // move the field into the scheduler's shared slab; every
+                // chunk job drops its handle before its status is sent, so
+                // after the call the Arc is sole-owned again
+                let shared = Arc::new(vec![field]);
+                let pool = pool.as_ref().expect("pool exists in chunked mode");
+                let (bytes, stats) =
+                    compress_step_chunked(&shared, &c, eb, span, &cfg, pool)?;
+                let field = Arc::try_unwrap(shared)
+                    .map_err(|_| VszError::runtime("chunk job leaked a field handle"))?
+                    .pop()
+                    .expect("one field per step");
+                (field, bytes, stats)
+            }
+            None => {
+                let (bytes, stats) = compress(&field, &c)?;
+                (field, bytes, stats)
+            }
         };
         if cfg.verify {
             verify_step(step, &field, &bytes, stats.eb, c.threads)?;
@@ -198,15 +237,18 @@ fn verify_step(step: usize, field: &Field, bytes: &[u8], eb: f64, threads: usize
 }
 
 /// Compress one time-step through the indexed streaming container (the
-/// out-of-core path of [`run_stream`]) and map its [`stream::StreamStats`]
+/// out-of-core path of [`run_stream`]), scheduling its chunks on the
+/// pipeline's shared pool, and map the resulting [`stream::StreamStats`]
 /// onto the per-step [`CompressStats`] the report carries.
 fn compress_step_chunked(
-    field: &Field,
+    shared: &Arc<Vec<Field>>,
     c: &Config,
     eb: f64,
     span: usize,
     cfg: &PipelineConfig,
+    pool: &ThreadPool,
 ) -> Result<(Vec<u8>, CompressStats)> {
+    let field = &shared[0];
     // the chunked writer requires an absolute bound; eb is already
     // resolved against this field
     let mut c = *c;
@@ -217,7 +259,10 @@ fn compress_step_chunked(
         ..stream::StreamOptions::default()
     };
     let backend_name = c.backend.instantiate().name();
-    let (bytes, s) = stream::compress_chunked_with(field, &c, span, opts)?;
+    let spec = FieldSpec { cfg: c, span, opts };
+    let mut results =
+        sched::compress_fields_chunked(pool, Arc::clone(shared), &[spec], None)?;
+    let sched::FieldResult { bytes, stats: s } = results.pop().expect("one result per field");
     let bs = if c.block_size == 0 { default_block_size(field.dims.ndim) } else { c.block_size };
     let mut profile = StageProfile::new();
     profile.add("pq", s.pq_seconds);
@@ -293,18 +338,33 @@ impl BatchItem {
     }
 }
 
-/// Multi-field batch driver: push a whole dataset suite through the
-/// [`ThreadPool`], compressing fields concurrently (`pool_threads`
-/// workers). Parallelism is across fields; each field compresses
-/// single-threaded on its worker. With `chunked = Some(chunk_span)` every
-/// field is written as a v2 chunked streaming container (range-relative
-/// bounds are resolved per field first); otherwise as a v1 container.
-/// Results come back in input order.
+/// Multi-field batch driver over the two-level scheduler.
+///
+/// With `chunked = Some(chunk_span)` every field is written as an indexed
+/// chunked streaming container and — unlike the old one-worker-per-field
+/// driver — every field is decomposed into chunk jobs that interleave
+/// across the whole pool, so a batch of mixed-size fields keeps all
+/// `pool_threads` workers busy until the last chunk (range-relative bounds
+/// are resolved per field first). Without `chunked`, fields compress as
+/// monolithic v1 containers, one job per field, through the same executor.
+/// Results come back in input order, byte-identical for any pool width.
 pub fn compress_batch(
     fields: Vec<Field>,
     cfg: &Config,
     pool_threads: usize,
     chunked: Option<usize>,
+) -> Result<Vec<BatchItem>> {
+    compress_batch_traced(fields, cfg, pool_threads, chunked, None)
+}
+
+/// [`compress_batch`] with an optional scheduler trace hook (test
+/// instrumentation for the chunk-interleaving regression test).
+pub fn compress_batch_traced(
+    fields: Vec<Field>,
+    cfg: &Config,
+    pool_threads: usize,
+    chunked: Option<usize>,
+    trace: Option<sched::TraceHook>,
 ) -> Result<Vec<BatchItem>> {
     if fields.is_empty() {
         return Ok(Vec::new());
@@ -312,26 +372,43 @@ pub fn compress_batch(
     let mut cfg = *cfg;
     cfg.threads = 1;
     let n = fields.len();
-    let shared = Arc::new(fields);
     let pool = ThreadPool::new(pool_threads.max(1));
-    let results = pool.scatter_gather(n, move |i| -> Result<BatchItem> {
-        let f = &shared[i];
-        if let Some(span) = chunked {
-            let mut c = cfg;
-            if matches!(c.eb, EbMode::Rel(_)) {
-                c.eb = EbMode::Abs(c.eb.resolve(&f.data));
-            }
-            let (bytes, stats) = stream::compress_chunked(f, &c, span)?;
-            Ok(BatchItem {
-                name: f.name.clone(),
-                bytes,
-                raw_bytes: stats.raw_bytes,
-                compressed_bytes: stats.compressed_bytes,
-                n_outliers: stats.n_outliers,
-                pq_seconds: stats.pq_seconds,
-                n_chunks: stats.n_chunks,
+
+    if let Some(span) = chunked {
+        let names: Vec<String> = fields.iter().map(|f| f.name.clone()).collect();
+        let specs: Vec<FieldSpec> = fields
+            .iter()
+            .map(|f| {
+                let mut c = cfg;
+                if matches!(c.eb, EbMode::Rel(_)) {
+                    c.eb = EbMode::Abs(c.eb.resolve(&f.data));
+                }
+                FieldSpec { cfg: c, span, opts: stream::StreamOptions::default() }
             })
-        } else {
+            .collect();
+        let results = sched::compress_fields_chunked(&pool, Arc::new(fields), &specs, trace)?;
+        return Ok(results
+            .into_iter()
+            .zip(names)
+            .map(|(r, name)| BatchItem {
+                name,
+                raw_bytes: r.stats.raw_bytes,
+                compressed_bytes: r.stats.compressed_bytes,
+                n_outliers: r.stats.n_outliers,
+                pq_seconds: r.stats.pq_seconds,
+                n_chunks: r.stats.n_chunks,
+                bytes: r.bytes,
+            })
+            .collect());
+    }
+
+    // v1 containers: one job per field, through the executor
+    let shared = Arc::new(fields);
+    let mut exec: Executor<Result<BatchItem>> = Executor::new(&pool, n);
+    for i in 0..n {
+        let shared = Arc::clone(&shared);
+        exec.submit(JobSpec::default(), move || {
+            let f = &shared[i];
             let (bytes, stats) = compress(f, &cfg)?;
             Ok(BatchItem {
                 name: f.name.clone(),
@@ -342,9 +419,34 @@ pub fn compress_batch(
                 pq_seconds: stats.pq_seconds,
                 n_chunks: 1,
             })
+        })?;
+    }
+    let mut out: Vec<Option<BatchItem>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        let (id, status) =
+            exec.recv().ok_or_else(|| VszError::runtime("executor channel closed"))?;
+        match status {
+            JobStatus::Done(Ok(item)) => out[id as usize] = Some(item),
+            JobStatus::Done(Err(e)) => return Err(e),
+            JobStatus::Cancelled => return Err(VszError::runtime("batch job cancelled")),
+            JobStatus::Failed(m) => {
+                return Err(VszError::runtime(format!("batch job failed: {m}")))
+            }
         }
-    });
-    results.into_iter().collect()
+    }
+    Ok(out.into_iter().map(|o| o.expect("missing batch item")).collect())
+}
+
+/// Fold a batch run into the crate-wide [`CompressionStats`] aggregate
+/// (one compression op per field).
+pub fn batch_stats(items: &[BatchItem]) -> CompressionStats {
+    let mut total = CompressionStats::new();
+    for it in items {
+        let mut one = CompressionStats::new();
+        one.record_compress(it.raw_bytes, it.compressed_bytes, it.pq_seconds);
+        total.merge(&one);
+    }
+    total
 }
 
 #[cfg(test)]
@@ -445,6 +547,78 @@ mod tests {
                 assert!((o - r).abs() <= 1e-3 + 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn chunked_batch_bytes_independent_of_pool_width() {
+        // the hard invariant: chunk-level scheduling must not change a
+        // single output byte relative to the serial streaming writer
+        let fields: Vec<Field> = (0..4).map(step_field).collect();
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let serial = compress_batch(fields.clone(), &cfg, 1, Some(16)).unwrap();
+        for threads in [2usize, 7] {
+            let par = compress_batch(fields.clone(), &cfg, threads, Some(16)).unwrap();
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.bytes, b.bytes, "{} at {threads} threads", a.name);
+            }
+        }
+        for (i, item) in serial.iter().enumerate() {
+            let (reference, _) = stream::compress_chunked(&fields[i], &cfg, 16).unwrap();
+            assert_eq!(item.bytes, reference, "{}", item.name);
+        }
+    }
+
+    #[test]
+    fn mixed_batch_interleaves_chunk_jobs_across_fields() {
+        // worker-starvation regression: one large + one small field must
+        // not serialize field-by-field — the first two chunk jobs to start
+        // always come from distinct fields under round-robin submission
+        let mk = |name: &str, rows: usize, seed: u64| {
+            let dims = Dims::d2(rows, 64);
+            let mut rng = Pcg32::seeded(seed);
+            let data: Vec<f32> = (0..dims.len()).map(|_| rng.next_f32()).collect();
+            Field::new(name.to_string(), dims, data)
+        };
+        let fields = vec![mk("big", 128, 11), mk("small", 32, 12)];
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let seen = Arc::new(std::sync::Mutex::new(Vec::<(usize, usize)>::new()));
+        let hook: crate::coordinator::sched::TraceHook = {
+            let seen = Arc::clone(&seen);
+            Arc::new(move |f, c| seen.lock().unwrap().push((f, c)))
+        };
+        let traced =
+            compress_batch_traced(fields.clone(), &cfg, 2, Some(16), Some(hook)).unwrap();
+        let order = seen.lock().unwrap().clone();
+        assert_eq!(order.len(), 8 + 2, "every chunk job traced");
+        assert_ne!(order[0].0, order[1].0, "first two chunk jobs from distinct fields");
+        // interleaved scheduling stays byte-identical to the serial path
+        let serial = compress_batch(fields, &cfg, 1, Some(16)).unwrap();
+        for (a, b) in serial.iter().zip(&traced) {
+            assert_eq!(a.bytes, b.bytes, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn batch_and_pipeline_fill_compression_stats() {
+        let fields: Vec<Field> = (0..3).map(step_field).collect();
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let items = compress_batch(fields, &cfg, 2, None).unwrap();
+        let s = batch_stats(&items);
+        assert_eq!(s.compress_ops, 3);
+        assert_eq!(s.bytes_in as usize, items.iter().map(|i| i.raw_bytes).sum::<usize>());
+        assert!(s.min_ratio > 1.0 && s.min_ratio <= s.max_ratio);
+        assert!(s.mean_ratio() >= s.min_ratio && s.mean_ratio() <= s.max_ratio);
+
+        let pcfg = PipelineConfig { retune_every: 0, ..PipelineConfig::default() };
+        let report = run_stream(
+            |i| if i < 2 { Some(step_field(i)) } else { None },
+            pcfg,
+            |_, _| Ok(()),
+        )
+        .unwrap();
+        let ps = report.compression_stats();
+        assert_eq!(ps.compress_ops, 2);
+        assert!(ps.queue_wait_s >= 0.0);
     }
 
     #[test]

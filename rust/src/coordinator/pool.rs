@@ -10,7 +10,6 @@
 //! * [`ThreadPool`] — a persistent pool with a shared injector queue for
 //!   the streaming coordinator (decode side, pipeline stages).
 
-use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
 /// Scoped parallel iteration over `data` in `nthreads` contiguous spans.
@@ -55,12 +54,21 @@ pub fn parallel_chunks_mut<T: Send, R: Send>(
     results.into_iter().map(|r| r.unwrap()).collect()
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+pub(crate) type Job = Box<dyn FnOnce() + Send + 'static>;
 
-struct PoolShared {
+pub(crate) struct PoolShared {
     queue: Mutex<std::collections::VecDeque<Job>>,
     available: Condvar,
     shutdown: Mutex<bool>,
+}
+
+impl PoolShared {
+    /// Enqueue a job on the injector — the hook the `exec` layer uses to
+    /// push dispatch ticks without borrowing the [`ThreadPool`] itself.
+    pub(crate) fn push(&self, job: Job) {
+        self.queue.lock().unwrap().push_back(job);
+        self.available.notify_one();
+    }
 }
 
 /// Persistent worker pool with FIFO dispatch. Used by the streaming
@@ -110,10 +118,15 @@ impl ThreadPool {
         self.workers.len()
     }
 
+    /// The shared injector state (for the `exec` layer, which outlives any
+    /// one borrow of the pool).
+    pub(crate) fn shared(&self) -> &Arc<PoolShared> {
+        &self.shared
+    }
+
     /// Submit a job.
     pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
-        self.shared.queue.lock().unwrap().push_back(Box::new(job));
-        self.shared.available.notify_one();
+        self.shared.push(Box::new(job));
     }
 
     /// Submit `n` indexed jobs and wait for all of them.
@@ -130,44 +143,39 @@ impl ThreadPool {
     /// out sub-slices of one borrowed symbol/payload buffer). Blocks until
     /// every job closure has been destroyed — run to completion or dropped —
     /// so no borrow escapes the call.
+    ///
+    /// Implemented as a thin wrapper over [`exec::Executor`]: `n` jobs with
+    /// equal priority and no dependencies, results reordered from the
+    /// completion-ordered channel back to submission order.
     pub fn scoped_scatter_gather<'env, R: Send + 'env>(
         &self,
         n: usize,
         f: impl Fn(usize) -> R + Send + Sync + 'env,
     ) -> Vec<R> {
-        // The struct's declaration order is the guaranteed drop order: a
-        // job's Arc clone of the user closure dies strictly before its
-        // Sender clone does — on completion and on unwind alike — so
-        // channel disconnection proves no worker still executes or owns
-        // any part of `f`.
-        struct JobEnv<F, T> {
-            f: Arc<F>,
-            tx: mpsc::Sender<(usize, T)>,
-        }
+        use crate::coordinator::exec::{Executor, JobSpec, JobStatus};
         let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        // SAFETY: the drain loop below receives exactly `n` statuses
+        // before returning. The executor sends a job's status strictly
+        // after the job closure (the Arc clone of `f` and its captures)
+        // has been consumed or dropped, so `n` received statuses prove
+        // every clone of `f` is dead and this frame's Arc is the sole
+        // owner: no 'env borrow survives the call. A panicking job still
+        // sends a status (Failed), which panics the caller below — borrows
+        // cannot escape on that path either.
+        let mut exec = unsafe { Executor::<R>::new_unchecked(self, n.max(1)) };
         for i in 0..n {
-            let env = JobEnv { f: Arc::clone(&f), tx: tx.clone() };
-            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
-                let r = (env.f)(i);
-                let _ = env.tx.send((i, r));
-            });
-            // SAFETY: the job only borrows data living at least as long as
-            // 'env. The receive loop below runs until every clone of `tx`
-            // is gone; by JobEnv's drop order each job has dropped its Arc
-            // clone of `f` strictly before its Sender, so disconnection
-            // implies every job is dead and `f` on this frame is the sole
-            // owner of the user closure. Jobs therefore never outlive this
-            // call — whether it returns normally or panics on a missing
-            // result — and no 'env borrow escapes.
-            let job: Job = unsafe { std::mem::transmute(job) };
-            self.shared.queue.lock().unwrap().push_back(job);
-            self.shared.available.notify_one();
+            let g = Arc::clone(&f);
+            unsafe { exec.submit_unchecked(JobSpec::default(), move || g(i)) }
+                .expect("dependency-free submission cannot fail");
         }
-        drop(tx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for (i, r) in rx {
-            out[i] = Some(r);
+        for _ in 0..n {
+            let (id, status) = exec.recv().expect("missing result");
+            match status {
+                JobStatus::Done(r) => out[id as usize] = Some(r),
+                JobStatus::Cancelled => unreachable!("no cancel token was attached"),
+                JobStatus::Failed(m) => panic!("worker job failed: {m}"),
+            }
         }
         out.into_iter().map(|r| r.expect("missing result")).collect()
     }

@@ -1,0 +1,430 @@
+//! Two-level (fields × chunks) scheduler over the job-graph executor.
+//!
+//! The old batch driver pinned **one worker per field**, so a batch of one
+//! large and three tiny fields left most of the pool idle once the tiny
+//! fields finished. This layer decomposes every field into its container
+//! chunks (the same geometry the streaming writer uses — see
+//! `stream::plan_chunks`) and submits the chunk jobs **round-robin across
+//! fields** (`f0c0, f1c0, …, f0c1, f1c1, …`). Ready jobs dispatch FIFO at
+//! equal priority, so chunks of many fields are interleaved across the
+//! whole pool from the first tick and a long field can never starve the
+//! others — nor the reverse.
+//!
+//! Completed frames arrive in *completion* order on the executor channel
+//! and are forwarded to an [`OrderedWriter`]: an asynchronous sink thread
+//! that holds a per-field reorder buffer and assembles each container
+//! (header → frames in chunk order → trailer → index footer) exactly as
+//! `stream::StreamCompressor` does. Encode workers therefore never stall
+//! on container-ordered I/O, and the output is **byte-identical** to the
+//! sequential single-field path for any thread count — a hard invariant
+//! covered by tests here and in `pipeline`.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+
+use crate::blocks::Dims;
+use crate::coordinator::exec::{Executor, JobSpec, JobStatus};
+use crate::coordinator::pool::ThreadPool;
+use crate::data::Field;
+use crate::error::{Result, VszError};
+use crate::format::{self, ChunkIndexEntry, ChunkMeta};
+use crate::stream::{self, ChunkOut, ChunkPlan, StreamOptions, StreamStats};
+
+/// Observation hook for scheduler job starts: called on the worker thread
+/// with `(field_index, chunk_index)` immediately before a chunk encodes.
+/// Test instrumentation (the interleaving regression test); `None` in
+/// production paths.
+pub type TraceHook = Arc<dyn Fn(usize, usize) + Send + Sync>;
+
+/// Per-field compression request for [`compress_fields_chunked`].
+#[derive(Clone, Copy, Debug)]
+pub struct FieldSpec {
+    /// Compression config; the error bound must already be absolute
+    /// (resolve `Rel` against the field first, as the batch driver does).
+    pub cfg: crate::compressor::Config,
+    /// Chunk span (leading-dim extent); 0 picks the default span.
+    pub span: usize,
+    /// Writer options (container version, per-chunk autotuning).
+    pub opts: StreamOptions,
+}
+
+/// One assembled container plus its run statistics.
+#[derive(Clone, Debug)]
+pub struct FieldResult {
+    pub bytes: Vec<u8>,
+    pub stats: StreamStats,
+}
+
+/// Message from the gather loop to the ordered sink: one encoded frame of
+/// one field's container.
+struct FrameMsg {
+    field: usize,
+    chunk: u64,
+    frame: Vec<u8>,
+    out: ChunkOut,
+}
+
+/// Reorder state of one field's container inside the [`OrderedWriter`].
+struct Lane {
+    buf: Vec<u8>,
+    index: Vec<ChunkIndexEntry>,
+    pending: BTreeMap<u64, (Vec<u8>, u64, ChunkMeta)>,
+    next: u64,
+    total: u64,
+    version: u16,
+    stats: StreamStats,
+}
+
+impl Lane {
+    fn append(&mut self, frame: &[u8], lead_extent: u64, meta: ChunkMeta) {
+        if self.version >= format::VERSION3 {
+            self.index.push(ChunkIndexEntry {
+                offset: self.buf.len() as u64,
+                frame_len: frame.len() as u64,
+                lead_extent,
+                meta,
+            });
+        }
+        self.buf.extend_from_slice(frame);
+        self.stats.compressed_bytes += frame.len();
+        self.next += 1;
+    }
+
+    fn finish(mut self) -> Result<FieldResult> {
+        if self.next != self.total {
+            return Err(VszError::runtime(format!(
+                "ordered writer: {} of {} chunks written",
+                self.next, self.total
+            )));
+        }
+        let mut tail = Vec::new();
+        format::write_trailer(&mut tail, self.total);
+        if self.version >= format::VERSION3 {
+            format::write_index_footer(&mut tail, &self.index);
+        }
+        self.buf.extend_from_slice(&tail);
+        self.stats.compressed_bytes += tail.len();
+        Ok(FieldResult { bytes: self.buf, stats: self.stats })
+    }
+}
+
+/// Asynchronous completion-order → container-order sink.
+///
+/// Owns a dedicated writer thread: frames arrive in whatever order the
+/// pool finishes them, are buffered per field until their predecessors
+/// have been written, and each container is laid out byte-identically to
+/// the serial streaming writer. Producers hand frames off through
+/// [`sender`](Self::sender) and never block on ordering.
+pub struct OrderedWriter {
+    tx: Option<Sender<FrameMsg>>,
+    handle: std::thread::JoinHandle<Result<Vec<FieldResult>>>,
+}
+
+impl OrderedWriter {
+    /// One lane per field, seeded with the field's encoded stream header.
+    fn new(lanes: Vec<Lane>) -> Self {
+        let (tx, rx) = channel::<FrameMsg>();
+        let handle = std::thread::spawn(move || {
+            let mut lanes = lanes;
+            for msg in rx {
+                let lane = &mut lanes[msg.field];
+                lane.stats.n_chunks += 1;
+                lane.stats.n_outliers += msg.out.n_outliers;
+                lane.stats.pq_seconds += msg.out.pq_seconds;
+                lane.pending.insert(msg.chunk, (msg.frame, msg.out.lead_extent, msg.out.meta));
+                while let Some((frame, lead, meta)) = {
+                    let key = lane.next;
+                    lane.pending.remove(&key)
+                } {
+                    lane.append(&frame, lead, meta);
+                }
+            }
+            lanes.into_iter().map(Lane::finish).collect()
+        });
+        Self { tx: Some(tx), handle }
+    }
+
+    fn sender(&self) -> Sender<FrameMsg> {
+        self.tx.as_ref().expect("writer already finished").clone()
+    }
+
+    /// Close the channel and collect the assembled containers.
+    fn finish(mut self) -> Result<Vec<FieldResult>> {
+        drop(self.tx.take());
+        self.handle.join().map_err(|_| VszError::runtime("ordered writer panicked"))?
+    }
+}
+
+/// Chunk dims of `dims` restricted to `extent` leading rows.
+fn chunk_dims(dims: Dims, extent: usize) -> Dims {
+    let mut shape = dims.shape;
+    shape[0] = extent;
+    Dims { shape, ndim: dims.ndim }
+}
+
+/// Compress many fields to chunked (v3 by default) containers with
+/// chunk-level parallelism interleaved across fields.
+///
+/// The workhorse behind `pipeline::compress_batch`, the chunked
+/// `run_stream` path and the `vsz serve` service. Output is byte-identical
+/// to calling [`stream::compress_chunked_with`] per field, for any pool
+/// width.
+pub fn compress_fields_chunked(
+    pool: &ThreadPool,
+    fields: Arc<Vec<Field>>,
+    specs: &[FieldSpec],
+    trace: Option<TraceHook>,
+) -> Result<Vec<FieldResult>> {
+    assert_eq!(fields.len(), specs.len(), "one spec per field");
+    if fields.is_empty() {
+        return Ok(Vec::new());
+    }
+    // resolve geometry once per field (also validates every spec before
+    // any work is submitted)
+    let plans: Vec<ChunkPlan> = fields
+        .iter()
+        .zip(specs)
+        .map(|(f, s)| stream::plan_chunks(f.dims, &s.cfg, s.span, s.opts))
+        .collect::<Result<Vec<_>>>()?;
+    let lanes: Vec<Lane> = fields
+        .iter()
+        .zip(specs)
+        .zip(&plans)
+        .map(|((f, s), p)| Lane {
+            buf: p.header.clone(),
+            index: Vec::new(),
+            pending: BTreeMap::new(),
+            next: 0,
+            total: p.n_chunks(f.dims) as u64,
+            version: s.opts.version,
+            stats: StreamStats {
+                raw_bytes: f.dims.len() * 4,
+                n_elements: f.dims.len(),
+                compressed_bytes: p.header.len(),
+                ..StreamStats::default()
+            },
+        })
+        .collect();
+    let writer = OrderedWriter::new(lanes);
+    let sink = writer.sender();
+
+    type ChunkDone = (usize, u64, Result<(Vec<u8>, ChunkOut)>);
+    // bounded submission window: enough to keep every worker fed plus a
+    // small lead, small enough that slab copies stay bounded
+    let mut exec: Executor<ChunkDone> = Executor::new(pool, (pool.threads() * 2).max(4));
+    let n_chunks: Vec<usize> =
+        plans.iter().zip(fields.iter()).map(|(p, f)| p.n_chunks(f.dims)).collect();
+    let total_jobs: usize = n_chunks.iter().sum();
+    let rounds = n_chunks.iter().copied().max().unwrap_or(0);
+
+    let mut first_err: Option<VszError> = None;
+    let mut received = 0usize;
+    let forward = |status: JobStatus<ChunkDone>,
+                   received: &mut usize,
+                   first_err: &mut Option<VszError>| {
+        *received += 1;
+        match status {
+            JobStatus::Done((fi, ci, Ok((frame, out)))) => {
+                let _ = sink.send(FrameMsg { field: fi, chunk: ci, frame, out });
+            }
+            JobStatus::Done((_, _, Err(e))) => {
+                first_err.get_or_insert(e);
+            }
+            JobStatus::Cancelled => {
+                first_err.get_or_insert(VszError::runtime("chunk job cancelled"));
+            }
+            JobStatus::Failed(m) => {
+                first_err.get_or_insert(VszError::runtime(format!("chunk job failed: {m}")));
+            }
+        }
+    };
+
+    // round-robin across fields: chunk c of every field before chunk c+1
+    // of any — workers see an interleaved stream from the first tick
+    for round in 0..rounds {
+        for (fi, plan) in plans.iter().enumerate() {
+            if round >= n_chunks[fi] {
+                continue;
+            }
+            let (cfg, span, opts) = (plan.cfg, plan.span, specs[fi].opts);
+            let fields = Arc::clone(&fields);
+            let trace = trace.clone();
+            exec.submit(JobSpec::default(), move || {
+                if let Some(t) = &trace {
+                    t(fi, round);
+                }
+                let f = &fields[fi];
+                let row_elems = f.dims.shape[1] * f.dims.shape[2];
+                let start = round * span;
+                let extent = (f.dims.shape[0] - start).min(span);
+                let data = f.data[start * row_elems..(start + extent) * row_elems].to_vec();
+                let field = Field::new(format!("chunk{round}"), chunk_dims(f.dims, extent), data);
+                let mut c = cfg;
+                c.threads = 1; // parallelism is across chunks here
+                (fi, round as u64, stream::encode_chunk(round as u64, field, c, false, opts))
+            })?;
+            // keep the sink fed while submitting (frames stream to the
+            // writer as they finish; ordering is the writer's job)
+            while let Some((_, status)) = exec.try_recv() {
+                forward(status, &mut received, &mut first_err);
+            }
+        }
+    }
+    while received < total_jobs {
+        let (_, status) = exec.recv().expect("executor channel closed");
+        forward(status, &mut received, &mut first_err);
+    }
+    drop(sink);
+    let results = writer.finish();
+    match first_err {
+        Some(e) => Err(e),
+        None => results,
+    }
+}
+
+/// Single-field convenience over [`compress_fields_chunked`] — the shared-
+/// pool replacement for `stream::compress_chunked_with` used by the
+/// chunked `run_stream` path and the server.
+pub fn compress_field_chunked(
+    pool: &ThreadPool,
+    field: Field,
+    cfg: &crate::compressor::Config,
+    span: usize,
+    opts: StreamOptions,
+) -> Result<(Vec<u8>, StreamStats)> {
+    let spec = FieldSpec { cfg: *cfg, span, opts };
+    let results = compress_fields_chunked(pool, Arc::new(vec![field]), &[spec], None)?;
+    let r = results.into_iter().next().expect("one result per field");
+    Ok((r.bytes, r.stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressor::{Config, EbMode};
+    use crate::util::prng::Pcg32;
+    use std::sync::{Condvar, Mutex};
+    use std::time::Duration;
+
+    fn field(name: &str, rows: usize, cols: usize, seed: u64) -> Field {
+        let dims = Dims::d2(rows, cols);
+        let mut rng = Pcg32::seeded(seed);
+        let mut x = 0.0f32;
+        let data: Vec<f32> = (0..dims.len())
+            .map(|_| {
+                x += (rng.next_f32() - 0.5) * 0.1;
+                x
+            })
+            .collect();
+        Field::new(name.to_string(), dims, data)
+    }
+
+    fn abs_cfg(eb: f64) -> Config {
+        Config { eb: EbMode::Abs(eb), ..Config::default() }
+    }
+
+    #[test]
+    fn scheduler_output_is_byte_identical_to_serial_writer() {
+        let fields = vec![field("a", 96, 64, 1), field("b", 32, 64, 2), field("c", 64, 48, 3)];
+        let cfg = abs_cfg(1e-3);
+        let specs: Vec<FieldSpec> = fields
+            .iter()
+            .map(|_| FieldSpec { cfg, span: 16, opts: StreamOptions::default() })
+            .collect();
+        // reference: the serial streaming writer, field by field
+        let reference: Vec<Vec<u8>> = fields
+            .iter()
+            .map(|f| stream::compress_chunked(f, &cfg, 16).unwrap().0)
+            .collect();
+        for threads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(threads);
+            let out =
+                compress_fields_chunked(&pool, Arc::new(fields.clone()), &specs, None).unwrap();
+            for (i, r) in out.iter().enumerate() {
+                assert_eq!(
+                    r.bytes, reference[i],
+                    "field {i} bytes differ at {threads} threads"
+                );
+                assert!(r.stats.n_chunks >= 2);
+                assert_eq!(r.stats.compressed_bytes, r.bytes.len());
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_size_batch_interleaves_chunks_from_distinct_fields() {
+        // one large and one small field, two workers. Round-robin
+        // submission + FIFO dispatch puts f0c0 and f1c0 on the two workers
+        // first; the rendezvous below *blocks* both jobs until two are in
+        // flight simultaneously, proving chunks of ≥2 distinct fields run
+        // concurrently (the starvation regression).
+        let fields = vec![field("big", 128, 64, 4), field("small", 32, 64, 5)];
+        let cfg = abs_cfg(1e-3);
+        let specs: Vec<FieldSpec> = fields
+            .iter()
+            .map(|_| FieldSpec { cfg, span: 16, opts: StreamOptions::default() })
+            .collect();
+        let seen = Arc::new((Mutex::new(Vec::<(usize, usize)>::new()), Condvar::new()));
+        let hook: TraceHook = {
+            let seen = Arc::clone(&seen);
+            Arc::new(move |f, c| {
+                let (m, cv) = &*seen;
+                let mut v = m.lock().unwrap();
+                v.push((f, c));
+                if v.len() >= 2 {
+                    cv.notify_all();
+                } else {
+                    // first job blocks until a second one starts
+                    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+                    while v.len() < 2 {
+                        let left = deadline.saturating_duration_since(std::time::Instant::now());
+                        assert!(!left.is_zero(), "no second job started: workers starved");
+                        let (vv, _) = cv.wait_timeout(v, left).unwrap();
+                        v = vv;
+                    }
+                }
+            })
+        };
+        let pool = ThreadPool::new(2);
+        let out = compress_fields_chunked(
+            &pool,
+            Arc::new(fields.clone()),
+            &specs,
+            Some(hook),
+        )
+        .unwrap();
+        let order = seen.0.lock().unwrap().clone();
+        assert_ne!(order[0].0, order[1].0, "first two jobs must come from distinct fields");
+        // interleaving must not cost correctness: still byte-identical
+        for (i, r) in out.iter().enumerate() {
+            let (reference, _) = stream::compress_chunked(&fields[i], &cfg, 16).unwrap();
+            assert_eq!(r.bytes, reference, "field {i}");
+        }
+    }
+
+    #[test]
+    fn default_span_and_stats_match_serial_writer() {
+        let f = field("d", 64, 64, 6);
+        let cfg = abs_cfg(5e-4);
+        let pool = ThreadPool::new(3);
+        let (bytes, stats) =
+            compress_field_chunked(&pool, f.clone(), &cfg, 0, StreamOptions::default()).unwrap();
+        let (reference, ref_stats) = stream::compress_chunked(&f, &cfg, 0).unwrap();
+        assert_eq!(bytes, reference);
+        assert_eq!(stats.n_chunks, ref_stats.n_chunks);
+        assert_eq!(stats.n_elements, ref_stats.n_elements);
+        assert_eq!(stats.n_outliers, ref_stats.n_outliers);
+        assert_eq!(stats.compressed_bytes, ref_stats.compressed_bytes);
+        assert_eq!(stats.raw_bytes, ref_stats.raw_bytes);
+    }
+
+    #[test]
+    fn invalid_spec_is_rejected_before_any_work() {
+        let f = field("e", 32, 32, 7);
+        let pool = ThreadPool::new(2);
+        let cfg = Config { eb: EbMode::Rel(1e-3), ..Config::default() };
+        let err = compress_field_chunked(&pool, f, &cfg, 16, StreamOptions::default());
+        assert!(err.is_err(), "relative eb must be rejected by the planner");
+    }
+}

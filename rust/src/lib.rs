@@ -21,6 +21,10 @@
 //!   (AVX2 / AVX-512F / NEON / scalar) behind `quant::simd::SimdBackend`
 //!   (forward) and `quant::decode::SimdDecodeBackend` (the reverse-Lorenzo
 //!   wavefront decode).
+//! * [`coordinator`] — thread pool, job-graph executor and the two-level
+//!   fields×chunks scheduler (plus the streaming/batch drivers on top).
+//! * [`server`] — `vsz serve`: a framed-TCP compression service over the
+//!   shared scheduler, with admission control and lifetime statistics.
 //! * [`roofline`] — ERT-like machine characterization.
 
 pub mod autotune;
@@ -42,6 +46,7 @@ pub mod lossless;
 pub mod padding;
 pub mod quant;
 pub mod runtime;
+pub mod server;
 pub mod simd;
 pub mod stream;
 pub mod util;

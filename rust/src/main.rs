@@ -11,6 +11,7 @@
 //!   roofline    machine ceilings + dual-quant OI model
 //!   figure      regenerate a paper table/figure (see `figure list`)
 //!   gen-data    write a synthetic suite to raw f32 files
+//!   serve       long-running framed-TCP compression service
 //!   pipeline    streaming time-series compression demo
 //!   info        artifact manifest + host summary
 
@@ -74,6 +75,13 @@ COMMANDS
   figure     <table1|table2|fig1|fig3|fig4|fig5|fig6_7|fig8|fig9|fig10|
               padding|table3|stability|all> [--out-dir results] [--quick]
   gen-data   --suite NAME --out-dir D [--full]
+  serve      [--addr HOST:PORT] [--threads N] [--max-inflight-mb MB]
+             [--max-conns N] [--chunk-rows N] | --status [--addr HOST:PORT]
+             (long-running framed-TCP compression service: compress /
+             decompress / extract / stats requests over one shared chunk
+             pool; requests past the in-flight byte cap are rejected with
+             a busy frame; --status queries a running server's lifetime
+             CompressionStats)
   pipeline   --suite NAME --steps N [--out-dir D]
              [--stream [--chunk-rows N] [--tune-chunks]] [--verify-steps]
              (--stream writes each step as an indexed VSZ3 container;
@@ -601,6 +609,32 @@ fn cmd_pipeline(a: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(a: &Args) -> Result<()> {
+    use vecsz::server::{Client, ServeConfig, Server};
+    let addr = a.str_or("addr", "127.0.0.1:7227").to_string();
+    if a.has("status") {
+        let mut c = Client::connect(&addr)?;
+        println!("{}", c.stats()?);
+        return Ok(());
+    }
+    let cfg = ServeConfig {
+        threads: a.usize_or("threads", 4)?,
+        max_inflight_bytes: (a.usize_or("max-inflight-mb", 256)? as u64) << 20,
+        max_conns: a.usize_or("max-conns", 32)?,
+        chunk_rows: a.usize_or("chunk-rows", 0)?,
+    };
+    apply_isa_flag(a)?;
+    let srv = Server::bind(&addr, cfg)?;
+    println!(
+        "vsz serve: listening on {} ({} pool threads, {} in-flight cap, {} conns)",
+        srv.local_addr()?,
+        cfg.threads.max(1),
+        human_bytes(cfg.max_inflight_bytes),
+        cfg.max_conns,
+    );
+    srv.run()
+}
+
 fn cmd_info(a: &Args) -> Result<()> {
     println!("vecsz {}", vecsz::version());
     let h = roofline::host_info();
@@ -644,6 +678,7 @@ fn dispatch(a: &Args) -> Result<()> {
         "roofline" => cmd_roofline(a),
         "figure" => cmd_figure(a),
         "gen-data" => cmd_gen_data(a),
+        "serve" => cmd_serve(a),
         "pipeline" => cmd_pipeline(a),
         "info" => cmd_info(a),
         "" | "help" => {

@@ -69,6 +69,166 @@ pub fn roundtrip_tolerance(eb: f64, range: f64) -> f64 {
     eb * 1.0001 + 4.0 * f32::EPSILON as f64 * range.abs()
 }
 
+/// Aggregated operation statistics of a compression service or driver —
+/// the numbers a long-running `vsz serve` process reports, also filled by
+/// the batch and pipeline drivers.
+///
+/// Designed around `merge`: per-request / per-field / per-step stats are
+/// recorded independently (often on different threads) and folded into a
+/// lifetime aggregate. `Default` is the merge identity (note the min/max
+/// ratio sentinels), and `merge` is commutative, so the fold order never
+/// matters.
+#[derive(Clone, Debug)]
+pub struct CompressionStats {
+    pub compress_ops: u64,
+    pub decompress_ops: u64,
+    pub extract_ops: u64,
+    pub errors: u64,
+    /// Raw bytes entering compression (or compressed bytes entering
+    /// decompression).
+    pub bytes_in: u64,
+    /// Bytes produced.
+    pub bytes_out: u64,
+    /// Smallest per-operation compression ratio seen (`f64::INFINITY`
+    /// until the first compression — the merge identity).
+    pub min_ratio: f64,
+    /// Largest per-operation compression ratio seen
+    /// (`f64::NEG_INFINITY` until the first compression).
+    pub max_ratio: f64,
+    ratio_sum: f64,
+    ratio_count: u64,
+    /// Seconds requests spent queued before work started.
+    pub queue_wait_s: f64,
+    /// Seconds spent compressing (worker time).
+    pub compress_s: f64,
+    /// Seconds spent decompressing.
+    pub decompress_s: f64,
+}
+
+impl Default for CompressionStats {
+    fn default() -> Self {
+        Self {
+            compress_ops: 0,
+            decompress_ops: 0,
+            extract_ops: 0,
+            errors: 0,
+            bytes_in: 0,
+            bytes_out: 0,
+            min_ratio: f64::INFINITY,
+            max_ratio: f64::NEG_INFINITY,
+            ratio_sum: 0.0,
+            ratio_count: 0,
+            queue_wait_s: 0.0,
+            compress_s: 0.0,
+            decompress_s: 0.0,
+        }
+    }
+}
+
+impl CompressionStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one compression: `raw` bytes in, `compressed` bytes out.
+    pub fn record_compress(&mut self, raw: usize, compressed: usize, seconds: f64) {
+        self.compress_ops += 1;
+        self.bytes_in += raw as u64;
+        self.bytes_out += compressed as u64;
+        self.compress_s += seconds;
+        let ratio = raw as f64 / compressed.max(1) as f64;
+        self.min_ratio = self.min_ratio.min(ratio);
+        self.max_ratio = self.max_ratio.max(ratio);
+        self.ratio_sum += ratio;
+        self.ratio_count += 1;
+    }
+
+    /// Record one decompression: `compressed` bytes in, `raw` bytes out.
+    pub fn record_decompress(&mut self, compressed: usize, raw: usize, seconds: f64) {
+        self.decompress_ops += 1;
+        self.bytes_in += compressed as u64;
+        self.bytes_out += raw as u64;
+        self.decompress_s += seconds;
+    }
+
+    /// Record one partial decode (random-access extract).
+    pub fn record_extract(&mut self, compressed: usize, raw: usize, seconds: f64) {
+        self.extract_ops += 1;
+        self.bytes_in += compressed as u64;
+        self.bytes_out += raw as u64;
+        self.decompress_s += seconds;
+    }
+
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    pub fn record_queue_wait(&mut self, seconds: f64) {
+        self.queue_wait_s += seconds;
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.compress_ops + self.decompress_ops + self.extract_ops
+    }
+
+    /// Mean per-operation compression ratio (0 before any compression).
+    pub fn mean_ratio(&self) -> f64 {
+        if self.ratio_count == 0 {
+            0.0
+        } else {
+            self.ratio_sum / self.ratio_count as f64
+        }
+    }
+
+    /// Fold `other` into `self`. Commutative and associative (sums,
+    /// min/max); `Default` is the identity.
+    pub fn merge(&mut self, other: &CompressionStats) {
+        self.compress_ops += other.compress_ops;
+        self.decompress_ops += other.decompress_ops;
+        self.extract_ops += other.extract_ops;
+        self.errors += other.errors;
+        self.bytes_in += other.bytes_in;
+        self.bytes_out += other.bytes_out;
+        self.min_ratio = self.min_ratio.min(other.min_ratio);
+        self.max_ratio = self.max_ratio.max(other.max_ratio);
+        self.ratio_sum += other.ratio_sum;
+        self.ratio_count += other.ratio_count;
+        self.queue_wait_s += other.queue_wait_s;
+        self.compress_s += other.compress_s;
+        self.decompress_s += other.decompress_s;
+    }
+
+    /// Render as a JSON object (the `vsz serve` stats response payload;
+    /// non-finite ratios serialize as null to stay valid JSON).
+    pub fn to_json(&self) -> String {
+        fn num(x: f64) -> String {
+            if x.is_finite() {
+                format!("{x:.6}")
+            } else {
+                "null".to_string()
+            }
+        }
+        format!(
+            "{{\"compress_ops\":{},\"decompress_ops\":{},\"extract_ops\":{},\
+             \"errors\":{},\"bytes_in\":{},\"bytes_out\":{},\"min_ratio\":{},\
+             \"max_ratio\":{},\"mean_ratio\":{},\"queue_wait_s\":{},\
+             \"compress_s\":{},\"decompress_s\":{}}}",
+            self.compress_ops,
+            self.decompress_ops,
+            self.extract_ops,
+            self.errors,
+            self.bytes_in,
+            self.bytes_out,
+            num(self.min_ratio),
+            num(self.max_ratio),
+            num(self.mean_ratio()),
+            num(self.queue_wait_s),
+            num(self.compress_s),
+            num(self.decompress_s),
+        )
+    }
+}
+
 /// Value range of a field (used by relative error bounds).
 pub fn value_range(xs: &[f32]) -> f64 {
     let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
@@ -120,5 +280,87 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn mismatched_lengths_panic() {
         distortion(&[1.0], &[1.0, 2.0]);
+    }
+
+    fn sample_stats(seed: u64) -> CompressionStats {
+        let mut s = CompressionStats::new();
+        s.record_compress(4000 + seed as usize, 500, 0.25);
+        s.record_compress(8000, 1000 + seed as usize, 0.5);
+        s.record_decompress(500, 4000, 0.125);
+        s.record_extract(100, 800, 0.01);
+        s.record_queue_wait(0.002 * (seed + 1) as f64);
+        if seed % 2 == 0 {
+            s.record_error();
+        }
+        s
+    }
+
+    fn assert_stats_eq(a: &CompressionStats, b: &CompressionStats) {
+        assert_eq!(a.compress_ops, b.compress_ops);
+        assert_eq!(a.decompress_ops, b.decompress_ops);
+        assert_eq!(a.extract_ops, b.extract_ops);
+        assert_eq!(a.errors, b.errors);
+        assert_eq!(a.bytes_in, b.bytes_in);
+        assert_eq!(a.bytes_out, b.bytes_out);
+        assert_eq!(a.min_ratio, b.min_ratio);
+        assert_eq!(a.max_ratio, b.max_ratio);
+        assert!((a.mean_ratio() - b.mean_ratio()).abs() < 1e-12);
+        assert!((a.queue_wait_s - b.queue_wait_s).abs() < 1e-12);
+        assert!((a.compress_s - b.compress_s).abs() < 1e-12);
+        assert!((a.decompress_s - b.decompress_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compression_stats_record_and_ratios() {
+        let mut s = CompressionStats::new();
+        assert_eq!(s.mean_ratio(), 0.0);
+        s.record_compress(4000, 500, 0.1);
+        s.record_compress(4000, 2000, 0.1);
+        assert_eq!(s.compress_ops, 2);
+        assert_eq!(s.min_ratio, 2.0);
+        assert_eq!(s.max_ratio, 8.0);
+        assert_eq!(s.mean_ratio(), 5.0);
+        assert_eq!(s.bytes_in, 8000);
+        assert_eq!(s.bytes_out, 2500);
+        assert_eq!(s.total_ops(), 2);
+    }
+
+    #[test]
+    fn compression_stats_merge_identity() {
+        // default is the identity on both sides
+        let s = sample_stats(1);
+        let mut left = CompressionStats::default();
+        left.merge(&s);
+        assert_stats_eq(&left, &s);
+        let mut right = s.clone();
+        right.merge(&CompressionStats::default());
+        assert_stats_eq(&right, &s);
+        // min/max sentinels survive an identity-only merge
+        let mut empty = CompressionStats::default();
+        empty.merge(&CompressionStats::default());
+        assert_eq!(empty.min_ratio, f64::INFINITY);
+        assert_eq!(empty.max_ratio, f64::NEG_INFINITY);
+        assert_eq!(empty.total_ops(), 0);
+    }
+
+    #[test]
+    fn compression_stats_merge_commutes() {
+        let (a, b) = (sample_stats(3), sample_stats(10));
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_stats_eq(&ab, &ba);
+        assert_eq!(ab.total_ops(), a.total_ops() + b.total_ops());
+    }
+
+    #[test]
+    fn compression_stats_json_is_parseable() {
+        let j = crate::util::json::parse(&sample_stats(2).to_json()).unwrap();
+        assert_eq!(j.get("compress_ops").unwrap().as_usize(), Some(2));
+        assert!(j.get("min_ratio").unwrap().as_f64().unwrap() > 1.0);
+        // empty stats: non-finite ratios must serialize as null
+        let e = crate::util::json::parse(&CompressionStats::default().to_json()).unwrap();
+        assert_eq!(e.get("min_ratio"), Some(&crate::util::json::Json::Null));
     }
 }

@@ -1,0 +1,615 @@
+//! `vsz serve` — a long-running compression service over framed TCP.
+//!
+//! The service puts the layer-3 scheduler ([`crate::coordinator::sched`])
+//! behind a socket: one shared [`ThreadPool`] executes chunk jobs from
+//! every in-flight request, so a big compress from one client and a small
+//! one from another interleave at chunk granularity instead of queueing
+//! whole requests behind each other.
+//!
+//! ## Wire protocol
+//!
+//! Every frame on the wire is `u32 LE length` + `length` payload bytes.
+//!
+//! A **request** is a single frame:
+//!
+//! ```text
+//! u8 opcode | u32 LE hdr_len | hdr_len bytes JSON header | raw body
+//! ```
+//!
+//! | opcode | op         | header keys                          | body          |
+//! |--------|------------|--------------------------------------|---------------|
+//! | 1      | compress   | `dims`, `eb` (+ `name`, `block`,     | raw f32 LE    |
+//! |        |            | `backend`, `chunk_rows`)             | samples       |
+//! | 2      | decompress | —                                    | vsz container |
+//! | 3      | extract    | `rows: [lo, hi]`                     | v3 container  |
+//! | 4      | stats      | —                                    | —             |
+//! | 5      | shutdown   | —                                    | —             |
+//!
+//! A **response** is one or more frames, each `u8 kind` + payload:
+//! `0 = data` (streamed result slices, may repeat), `1 = end` (terminal;
+//! JSON per-request stats), `2 = error` (terminal; message), `3 = busy`
+//! (terminal; admission control rejected the request).
+//!
+//! ## Admission control
+//!
+//! The server bounds the bytes it holds in flight: a request whose body
+//! would push the running total past [`ServeConfig::max_inflight_bytes`]
+//! is rejected with a `busy` frame instead of queueing unboundedly — the
+//! client retries with backoff. Connections beyond
+//! [`ServeConfig::max_conns`] are likewise rejected with `busy` at accept
+//! time. The connection stays usable after a `busy` or `error` response;
+//! only the request is dropped.
+//!
+//! ## Statistics
+//!
+//! Each data-path response's `end` frame carries that request's numbers;
+//! a `stats` request returns the lifetime [`CompressionStats`] aggregate
+//! (merged across every request the server has handled) plus uptime and
+//! in-flight gauges. `vsz serve --status` is a thin client over it.
+
+use std::io::{Cursor, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Instant;
+
+use crate::compressor::{decompress, BackendChoice, Config, EbMode};
+use crate::coordinator::pool::ThreadPool;
+use crate::coordinator::sched;
+use crate::data::{io as dio, Field};
+use crate::error::{Result, VszError};
+use crate::metrics::CompressionStats;
+use crate::stream::{StreamDecompressor, StreamOptions};
+use crate::util::json::{self, Json};
+
+/// Request opcodes (first body byte of a request frame).
+pub const OP_COMPRESS: u8 = 1;
+pub const OP_DECOMPRESS: u8 = 2;
+pub const OP_EXTRACT: u8 = 3;
+pub const OP_STATS: u8 = 4;
+pub const OP_SHUTDOWN: u8 = 5;
+
+/// Response frame kinds (first byte of a response frame).
+pub const KIND_DATA: u8 = 0;
+pub const KIND_END: u8 = 1;
+pub const KIND_ERROR: u8 = 2;
+pub const KIND_BUSY: u8 = 3;
+
+/// Upper bound on a single frame — rejects bogus length prefixes before
+/// the allocation, not after.
+const MAX_FRAME: usize = 1 << 30;
+
+/// Result payloads are streamed back in slices of this size.
+const DATA_SLICE: usize = 1 << 20;
+
+/// Server tuning knobs (`vsz serve` flags map onto these 1:1).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Chunk-worker pool width shared by all requests.
+    pub threads: usize,
+    /// Admission cap: total request-body bytes in flight.
+    pub max_inflight_bytes: u64,
+    /// Accept cap: concurrent client connections.
+    pub max_conns: usize,
+    /// Default compress chunk span (rows); 0 picks the container default.
+    /// A request's `chunk_rows` header key overrides it.
+    pub chunk_rows: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { threads: 4, max_inflight_bytes: 256 << 20, max_conns: 32, chunk_rows: 0 }
+    }
+}
+
+/// State shared between the accept loop and every connection handler.
+struct Shared {
+    cfg: ServeConfig,
+    addr: SocketAddr,
+    pool: ThreadPool,
+    inflight: AtomicU64,
+    active_conns: AtomicUsize,
+    stats: Mutex<CompressionStats>,
+    stop: AtomicBool,
+    started: Instant,
+}
+
+/// Holds admitted bytes against the in-flight gauge; releases on drop so
+/// an error path can never leak admission budget.
+struct Admission<'a> {
+    gauge: &'a AtomicU64,
+    bytes: u64,
+}
+
+impl Drop for Admission<'_> {
+    fn drop(&mut self) {
+        self.gauge.fetch_sub(self.bytes, Ordering::SeqCst);
+    }
+}
+
+fn admit(shared: &Shared, bytes: u64) -> Option<Admission<'_>> {
+    let prev = shared.inflight.fetch_add(bytes, Ordering::SeqCst);
+    if prev + bytes > shared.cfg.max_inflight_bytes {
+        shared.inflight.fetch_sub(bytes, Ordering::SeqCst);
+        None
+    } else {
+        Some(Admission { gauge: &shared.inflight, bytes })
+    }
+}
+
+/// The `vsz serve` listener. `bind` then `run`; `run` returns after a
+/// `shutdown` request has been served and every connection has drained.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    pub fn bind(addr: &str, cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let pool = ThreadPool::new(cfg.threads.max(1));
+        let shared = Arc::new(Shared {
+            cfg,
+            addr,
+            pool,
+            inflight: AtomicU64::new(0),
+            active_conns: AtomicUsize::new(0),
+            stats: Mutex::new(CompressionStats::new()),
+            stop: AtomicBool::new(false),
+            started: Instant::now(),
+        });
+        Ok(Server { listener, shared })
+    }
+
+    /// The bound address (resolves the port when bound to `:0` in tests).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept loop: one handler thread per connection, all sharing the
+    /// chunk pool. Returns once a `shutdown` request is served (the
+    /// handler sets the stop flag, then pokes the listener awake).
+    pub fn run(self) -> Result<()> {
+        let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+        for conn in self.listener.incoming() {
+            if self.shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let mut stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            if self.shared.active_conns.load(Ordering::SeqCst) >= self.shared.cfg.max_conns {
+                let _ = write_kind_frame(&mut stream, KIND_BUSY, b"connection limit reached");
+                continue;
+            }
+            self.shared.active_conns.fetch_add(1, Ordering::SeqCst);
+            let shared = Arc::clone(&self.shared);
+            handlers.push(thread::spawn(move || {
+                let peer = stream.peer_addr().ok();
+                if let Err(e) = handle_conn(&shared, stream) {
+                    eprintln!("vsz serve: connection {peer:?}: {e}");
+                }
+                shared.active_conns.fetch_sub(1, Ordering::SeqCst);
+            }));
+            handlers.retain(|h| !h.is_finished());
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// One persistent connection: requests are served in order until the
+/// client closes its end.
+fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
+    loop {
+        let req = match read_frame(&mut stream)? {
+            Some(b) => b,
+            None => return Ok(()),
+        };
+        if req.len() < 5 {
+            write_kind_frame(&mut stream, KIND_ERROR, b"request frame shorter than its header")?;
+            continue;
+        }
+        let op = req[0];
+        let hdr_len = u32::from_le_bytes(req[1..5].try_into().unwrap()) as usize;
+        if 5 + hdr_len > req.len() {
+            write_kind_frame(&mut stream, KIND_ERROR, b"header length exceeds request frame")?;
+            continue;
+        }
+        let hdr = if hdr_len == 0 {
+            Json::Obj(Vec::new())
+        } else {
+            let text = std::str::from_utf8(&req[5..5 + hdr_len])
+                .map_err(|_| VszError::format("request header is not UTF-8"))?;
+            match json::parse(text) {
+                Ok(j) => j,
+                Err(e) => {
+                    let msg = format!("bad header: {e}");
+                    write_kind_frame(&mut stream, KIND_ERROR, msg.as_bytes())?;
+                    continue;
+                }
+            }
+        };
+        let body = &req[5 + hdr_len..];
+        match op {
+            OP_STATS => {
+                let j = status_json(shared);
+                write_kind_frame(&mut stream, KIND_END, j.as_bytes())?;
+            }
+            OP_SHUTDOWN => {
+                shared.stop.store(true, Ordering::SeqCst);
+                write_kind_frame(&mut stream, KIND_END, b"{\"ok\":true}")?;
+                stream.flush()?;
+                // unblock the accept loop so it observes the stop flag
+                let _ = TcpStream::connect(shared.addr);
+            }
+            OP_COMPRESS | OP_DECOMPRESS | OP_EXTRACT => {
+                let guard = match admit(shared, body.len() as u64) {
+                    Some(g) => g,
+                    None => {
+                        let msg = format!(
+                            "{} request bytes would exceed the {}-byte in-flight cap",
+                            body.len(),
+                            shared.cfg.max_inflight_bytes
+                        );
+                        write_kind_frame(&mut stream, KIND_BUSY, msg.as_bytes())?;
+                        continue;
+                    }
+                };
+                match process(shared, op, &hdr, body) {
+                    Ok((data, end_json)) => {
+                        for slice in data.chunks(DATA_SLICE) {
+                            write_kind_frame(&mut stream, KIND_DATA, slice)?;
+                        }
+                        write_kind_frame(&mut stream, KIND_END, end_json.as_bytes())?;
+                    }
+                    Err(e) => {
+                        shared.stats.lock().unwrap().record_error();
+                        write_kind_frame(&mut stream, KIND_ERROR, e.to_string().as_bytes())?;
+                    }
+                }
+                drop(guard);
+            }
+            other => {
+                let msg = format!("unknown opcode {other}");
+                write_kind_frame(&mut stream, KIND_ERROR, msg.as_bytes())?;
+            }
+        }
+    }
+}
+
+/// Execute one data-path request; returns the result payload and the
+/// per-request stats JSON for the `end` frame.
+fn process(shared: &Shared, op: u8, hdr: &Json, body: &[u8]) -> Result<(Vec<u8>, String)> {
+    let t = Instant::now();
+    match op {
+        OP_COMPRESS => {
+            let dims_s = hdr
+                .req("dims")?
+                .as_str()
+                .ok_or_else(|| VszError::format("compress: 'dims' must be a string like 512x512"))?;
+            let dims = dio::parse_dims(dims_s)?;
+            let eb = hdr
+                .req("eb")?
+                .as_f64()
+                .ok_or_else(|| VszError::format("compress: 'eb' must be a number"))?;
+            if body.len() != dims.len() * 4 {
+                return Err(VszError::format(format!(
+                    "compress: body is {} bytes, dims {dims_s} needs {}",
+                    body.len(),
+                    dims.len() * 4
+                )));
+            }
+            let name = hdr.get("name").and_then(Json::as_str).unwrap_or("field").to_string();
+            let data: Vec<f32> = body
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            let mut cfg = Config { eb: EbMode::Abs(eb), ..Config::default() };
+            if let Some(b) = hdr.get("block").and_then(Json::as_usize) {
+                cfg.block_size = b;
+            }
+            if let Some(s) = hdr.get("backend").and_then(Json::as_str) {
+                cfg.backend = BackendChoice::parse(s)
+                    .ok_or_else(|| VszError::config(format!("compress: bad backend '{s}'")))?;
+            }
+            let span =
+                hdr.get("chunk_rows").and_then(Json::as_usize).unwrap_or(shared.cfg.chunk_rows);
+            let field = Field::new(name, dims, data);
+            let (bytes, stats) = sched::compress_field_chunked(
+                &shared.pool,
+                field,
+                &cfg,
+                span,
+                StreamOptions::default(),
+            )?;
+            let secs = t.elapsed().as_secs_f64();
+            shared.stats.lock().unwrap().record_compress(
+                stats.raw_bytes,
+                stats.compressed_bytes,
+                secs,
+            );
+            let end = format!(
+                "{{\"op\":\"compress\",\"raw_bytes\":{},\"compressed_bytes\":{},\
+                 \"n_chunks\":{},\"ratio\":{:.4},\"seconds\":{:.6}}}",
+                stats.raw_bytes,
+                stats.compressed_bytes,
+                stats.n_chunks,
+                stats.ratio(),
+                secs
+            );
+            Ok((bytes, end))
+        }
+        OP_DECOMPRESS => {
+            let field = decompress(body, shared.cfg.threads.max(1))?;
+            let mut out = Vec::with_capacity(field.data.len() * 4);
+            for x in &field.data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            let secs = t.elapsed().as_secs_f64();
+            shared.stats.lock().unwrap().record_decompress(body.len(), out.len(), secs);
+            let end = format!(
+                "{{\"op\":\"decompress\",\"compressed_bytes\":{},\"raw_bytes\":{},\
+                 \"seconds\":{:.6}}}",
+                body.len(),
+                out.len(),
+                secs
+            );
+            Ok((out, end))
+        }
+        OP_EXTRACT => {
+            let rows = hdr
+                .req("rows")?
+                .as_array()
+                .ok_or_else(|| VszError::format("extract: 'rows' must be [lo, hi]"))?;
+            let (lo, hi) = match rows {
+                [lo, hi] => (
+                    lo.as_usize().ok_or_else(|| VszError::format("extract: bad row lo"))?,
+                    hi.as_usize().ok_or_else(|| VszError::format("extract: bad row hi"))?,
+                ),
+                _ => return Err(VszError::format("extract: 'rows' must be [lo, hi]")),
+            };
+            let mut dec = StreamDecompressor::new(Cursor::new(body))?;
+            let data = dec.decode_rows(lo..hi, shared.cfg.threads.max(1))?;
+            let mut out = Vec::with_capacity(data.len() * 4);
+            for x in &data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            let secs = t.elapsed().as_secs_f64();
+            shared.stats.lock().unwrap().record_extract(body.len(), out.len(), secs);
+            let end = format!(
+                "{{\"op\":\"extract\",\"rows\":[{lo},{hi}],\"raw_bytes\":{},\
+                 \"seconds\":{:.6}}}",
+                out.len(),
+                secs
+            );
+            Ok((out, end))
+        }
+        _ => unreachable!("process() is only called for data-path opcodes"),
+    }
+}
+
+/// The `stats` response: lifetime aggregate + gauges.
+fn status_json(shared: &Shared) -> String {
+    let stats = shared.stats.lock().unwrap().to_json();
+    format!(
+        "{{\"uptime_s\":{:.3},\"active_conns\":{},\"inflight_bytes\":{},\
+         \"pool_threads\":{},\"stats\":{stats}}}",
+        shared.started.elapsed().as_secs_f64(),
+        shared.active_conns.load(Ordering::SeqCst),
+        shared.inflight.load(Ordering::SeqCst),
+        shared.cfg.threads.max(1),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// framing
+
+fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// One `kind` response frame (length prefix covers the kind byte).
+fn write_kind_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> Result<()> {
+    w.write_all(&((payload.len() + 1) as u32).to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame; `None` on a clean EOF before the length prefix (the
+/// peer closed between frames), an error on a mid-frame truncation.
+fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        let n = r.read(&mut len[got..])?;
+        if n == 0 {
+            if got == 0 {
+                return Ok(None);
+            }
+            return Err(VszError::format("frame: truncated length prefix"));
+        }
+        got += n;
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(VszError::format(format!("frame: {n} bytes exceeds the 1 GiB frame cap")));
+    }
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(Some(buf))
+}
+
+// ---------------------------------------------------------------------------
+// client
+
+/// Thin blocking client for the framed protocol; used by the integration
+/// tests, the serve bench and `vsz serve --status`.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)? })
+    }
+
+    /// One request/response exchange; accumulates data frames until the
+    /// terminal frame and returns `(payload, end-frame JSON)`.
+    fn request(&mut self, op: u8, header: &str, body: &[u8]) -> Result<(Vec<u8>, String)> {
+        let mut payload = Vec::with_capacity(5 + header.len() + body.len());
+        payload.push(op);
+        payload.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        payload.extend_from_slice(header.as_bytes());
+        payload.extend_from_slice(body);
+        write_frame(&mut self.stream, &payload)?;
+        self.stream.flush()?;
+        let mut data = Vec::new();
+        loop {
+            let frame = read_frame(&mut self.stream)?
+                .ok_or_else(|| VszError::runtime("server closed the connection mid-response"))?;
+            let (kind, rest) = frame
+                .split_first()
+                .ok_or_else(|| VszError::format("empty response frame"))?;
+            match *kind {
+                KIND_DATA => data.extend_from_slice(rest),
+                KIND_END => return Ok((data, String::from_utf8_lossy(rest).into_owned())),
+                KIND_ERROR => {
+                    return Err(VszError::runtime(format!(
+                        "server error: {}",
+                        String::from_utf8_lossy(rest)
+                    )))
+                }
+                KIND_BUSY => {
+                    return Err(VszError::runtime(format!(
+                        "server busy: {}",
+                        String::from_utf8_lossy(rest)
+                    )))
+                }
+                other => {
+                    return Err(VszError::format(format!("unknown response frame kind {other}")))
+                }
+            }
+        }
+    }
+
+    /// Compress `samples` (row-major, dims like `"512x512"`) under an
+    /// absolute error bound; returns the container bytes and the
+    /// per-request stats JSON.
+    pub fn compress(
+        &mut self,
+        name: &str,
+        dims: &str,
+        eb: f64,
+        chunk_rows: usize,
+        samples: &[f32],
+    ) -> Result<(Vec<u8>, String)> {
+        let mut body = Vec::with_capacity(samples.len() * 4);
+        for x in samples {
+            body.extend_from_slice(&x.to_le_bytes());
+        }
+        let hdr = format!(
+            "{{\"name\":\"{name}\",\"dims\":\"{dims}\",\"eb\":{eb},\"chunk_rows\":{chunk_rows}}}"
+        );
+        self.request(OP_COMPRESS, &hdr, &body)
+    }
+
+    /// Decompress a container back to its samples.
+    pub fn decompress(&mut self, container: &[u8]) -> Result<(Vec<f32>, String)> {
+        let (bytes, end) = self.request(OP_DECOMPRESS, "{}", container)?;
+        Ok((bytes_to_f32(&bytes)?, end))
+    }
+
+    /// Random-access extract of rows `lo..hi` from an indexed (v3)
+    /// container.
+    pub fn extract(
+        &mut self,
+        container: &[u8],
+        lo: usize,
+        hi: usize,
+    ) -> Result<(Vec<f32>, String)> {
+        let hdr = format!("{{\"rows\":[{lo},{hi}]}}");
+        let (bytes, end) = self.request(OP_EXTRACT, &hdr, container)?;
+        Ok((bytes_to_f32(&bytes)?, end))
+    }
+
+    /// Lifetime server statistics as a JSON string.
+    pub fn stats(&mut self) -> Result<String> {
+        Ok(self.request(OP_STATS, "{}", &[])?.1)
+    }
+
+    /// Ask the server to stop accepting and drain.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.request(OP_SHUTDOWN, "{}", &[]).map(|_| ())
+    }
+}
+
+fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        return Err(VszError::format("response body is not a whole number of f32s"));
+    }
+    Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect())
+}
+
+/// True when `e` is an admission-control rejection (retry with backoff)
+/// rather than a hard failure.
+pub fn is_busy(e: &VszError) -> bool {
+    matches!(e, VszError::Runtime(m) if m.starts_with("server busy"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_kind_frame(&mut buf, KIND_END, b"{}").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), [&[KIND_END][..], b"{}"].concat());
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF between frames");
+    }
+
+    #[test]
+    fn truncated_length_prefix_is_an_error() {
+        let mut r = Cursor::new(vec![5u8, 0]);
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn admission_gauge_rejects_and_releases() {
+        let shared = Shared {
+            cfg: ServeConfig { max_inflight_bytes: 100, ..ServeConfig::default() },
+            addr: "127.0.0.1:0".parse().unwrap(),
+            pool: ThreadPool::new(1),
+            inflight: AtomicU64::new(0),
+            active_conns: AtomicUsize::new(0),
+            stats: Mutex::new(CompressionStats::new()),
+            stop: AtomicBool::new(false),
+            started: Instant::now(),
+        };
+        let a = admit(&shared, 60).expect("fits");
+        assert!(admit(&shared, 60).is_none(), "would exceed the cap");
+        assert_eq!(shared.inflight.load(Ordering::SeqCst), 60, "reject must not leak budget");
+        drop(a);
+        assert_eq!(shared.inflight.load(Ordering::SeqCst), 0);
+        let b = admit(&shared, 100).expect("exact fit admits");
+        drop(b);
+    }
+
+    #[test]
+    fn busy_errors_are_recognizable() {
+        assert!(is_busy(&VszError::runtime("server busy: cap")));
+        assert!(!is_busy(&VszError::runtime("server error: boom")));
+    }
+}

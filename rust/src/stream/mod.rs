@@ -122,11 +122,89 @@ pub fn default_chunk_span(dims: Dims, block_size: usize) -> usize {
 }
 
 /// Per-chunk numbers sent back from encode workers.
-struct ChunkOut {
-    n_outliers: usize,
-    pq_seconds: f64,
-    lead_extent: u64,
-    meta: ChunkMeta,
+pub(crate) struct ChunkOut {
+    pub(crate) n_outliers: usize,
+    pub(crate) pq_seconds: f64,
+    pub(crate) lead_extent: u64,
+    pub(crate) meta: ChunkMeta,
+}
+
+/// Resolved geometry + header of a chunked container, shared between
+/// [`StreamCompressor`] and the `coordinator::sched` chunk scheduler so the
+/// two paths stay byte-identical by construction: same validation, same
+/// block-size/span rounding, same encoded stream header.
+pub(crate) struct ChunkPlan {
+    /// Input config with `block_size` resolved (never 0).
+    pub(crate) cfg: Config,
+    /// Chunk span (leading-dim extent), block-row aligned.
+    pub(crate) span: usize,
+    /// Encoded stream header (the container's first bytes).
+    pub(crate) header: Vec<u8>,
+}
+
+impl ChunkPlan {
+    /// Leading-dim extent of chunk `i` under this plan.
+    pub(crate) fn extent(&self, dims: Dims, i: usize) -> usize {
+        (dims.shape[0] - (i * self.span).min(dims.shape[0])).min(self.span)
+    }
+
+    pub(crate) fn n_chunks(&self, dims: Dims) -> usize {
+        dims.shape[0].div_ceil(self.span)
+    }
+}
+
+/// Validate a chunked-compression request and resolve its geometry (the
+/// front half of [`StreamCompressor::with_options`], reused by the chunk
+/// scheduler).
+pub(crate) fn plan_chunks(
+    dims: Dims,
+    cfg: &Config,
+    chunk_span: usize,
+    opts: StreamOptions,
+) -> Result<ChunkPlan> {
+    if opts.version != format::VERSION2 && opts.version != format::VERSION3 {
+        return Err(VszError::config(format!("unsupported stream version {}", opts.version)));
+    }
+    if opts.chunk_autotune.is_some() && opts.version < format::VERSION3 {
+        return Err(VszError::config(
+            "per-chunk autotuning needs the v3 container (the per-chunk \
+             block size must be recorded in the frame and index)",
+        ));
+    }
+    let eb = match cfg.eb {
+        EbMode::Abs(e) if e > 0.0 && e.is_finite() => e,
+        EbMode::Abs(_) => return Err(VszError::config("invalid absolute error bound")),
+        EbMode::Rel(_) => {
+            return Err(VszError::config(
+                "streaming requires an absolute error bound (--eb), not a relative one",
+            ))
+        }
+    };
+    if dims.is_empty() {
+        return Err(VszError::config("empty field"));
+    }
+    let bs = if cfg.block_size == 0 { default_block_size(dims.ndim) } else { cfg.block_size };
+    let mut cfg = *cfg;
+    cfg.block_size = bs;
+    let span = if chunk_span == 0 { default_chunk_span(dims, bs) } else { chunk_span };
+    let span = span.div_ceil(bs) * bs;
+    let codes_kind = match cfg.backend {
+        crate::compressor::BackendChoice::Sz14 => CodesKind::Sz14,
+        _ => CodesKind::DualQuant,
+    };
+    let header = StreamHeader {
+        header: Header {
+            dims,
+            codes_kind,
+            eb,
+            radius: cfg.radius,
+            block_size: bs as u32,
+            padding: cfg.padding.normalized(),
+        },
+        chunk_span: span as u64,
+        version: opts.version,
+    };
+    Ok(ChunkPlan { cfg, span, header: format::write_stream_header(&header)? })
 }
 
 /// Encode one slab sub-field into a framed chunk (free function so the
@@ -134,7 +212,7 @@ struct ChunkOut {
 /// enabled the §III-E heuristic runs on this slab first and the winning
 /// (block size × lane width) replaces the base config — the choice is
 /// returned in [`ChunkOut::meta`] so the writer can index it.
-fn encode_chunk(
+pub(crate) fn encode_chunk(
     index: u64,
     field: Field,
     cfg: Config,
@@ -236,49 +314,8 @@ impl<W: Write> StreamCompressor<W> {
         chunk_span: usize,
         opts: StreamOptions,
     ) -> Result<Self> {
-        if opts.version != format::VERSION2 && opts.version != format::VERSION3 {
-            return Err(VszError::config(format!("unsupported stream version {}", opts.version)));
-        }
-        if opts.chunk_autotune.is_some() && opts.version < format::VERSION3 {
-            return Err(VszError::config(
-                "per-chunk autotuning needs the v3 container (the per-chunk \
-                 block size must be recorded in the frame and index)",
-            ));
-        }
-        let eb = match cfg.eb {
-            EbMode::Abs(e) if e > 0.0 && e.is_finite() => e,
-            EbMode::Abs(_) => return Err(VszError::config("invalid absolute error bound")),
-            EbMode::Rel(_) => {
-                return Err(VszError::config(
-                    "streaming requires an absolute error bound (--eb), not a relative one",
-                ))
-            }
-        };
-        if dims.is_empty() {
-            return Err(VszError::config("empty field"));
-        }
-        let bs = if cfg.block_size == 0 { default_block_size(dims.ndim) } else { cfg.block_size };
-        let mut cfg = *cfg;
-        cfg.block_size = bs;
-        let span = if chunk_span == 0 { default_chunk_span(dims, bs) } else { chunk_span };
-        let span = span.div_ceil(bs) * bs;
-        let codes_kind = match cfg.backend {
-            crate::compressor::BackendChoice::Sz14 => CodesKind::Sz14,
-            _ => CodesKind::DualQuant,
-        };
-        let header = StreamHeader {
-            header: Header {
-                dims,
-                codes_kind,
-                eb,
-                radius: cfg.radius,
-                block_size: bs as u32,
-                padding: cfg.padding.normalized(),
-            },
-            chunk_span: span as u64,
-            version: opts.version,
-        };
-        let hdr = format::write_stream_header(&header)?;
+        let plan = plan_chunks(dims, cfg, chunk_span, opts)?;
+        let ChunkPlan { cfg, span, header: hdr } = plan;
         out.write_all(&hdr)?;
 
         let threads = cfg.threads.max(1);

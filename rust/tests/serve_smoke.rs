@@ -1,0 +1,151 @@
+//! `vsz serve` smoke tests: an in-process server on an ephemeral port,
+//! driven by the library `Client` over real TCP.
+//!
+//! Covers the ISSUE-6 acceptance criteria for the service layer:
+//! * ≥4 concurrent compress requests complete, and the returned container
+//!   bytes are **bit-identical** to a local single-threaded
+//!   `stream::compress_chunked` of the same field (the scheduler's
+//!   byte-identity invariant holds across the wire);
+//! * round-trip: server-side decompress of a server-built container
+//!   returns the exact f32 bit pattern of a local decode;
+//! * random-access extract of a row range matches the local slice;
+//! * a `stats` request reflects the work done;
+//! * a server with a tiny admission cap rejects with `busy` and stays
+//!   usable afterwards.
+
+use std::thread;
+
+use vecsz::compressor::{Config, EbMode};
+use vecsz::data::Field;
+use vecsz::server::{is_busy, Client, ServeConfig, Server};
+use vecsz::stream;
+use vecsz::util::prng::Pcg32;
+
+fn smooth_field(name: &str, rows: usize, cols: usize, seed: u64) -> Field {
+    let dims = vecsz::blocks::Dims::d2(rows, cols);
+    let mut rng = Pcg32::seeded(seed);
+    let mut x = 0.0f32;
+    let data: Vec<f32> = (0..dims.len())
+        .map(|_| {
+            x += (rng.next_f32() - 0.5) * 0.1;
+            x
+        })
+        .collect();
+    Field::new(name, dims, data)
+}
+
+fn start_server(cfg: ServeConfig) -> (String, thread::JoinHandle<()>) {
+    let srv = Server::bind("127.0.0.1:0", cfg).expect("bind ephemeral port");
+    let addr = srv.local_addr().unwrap().to_string();
+    let h = thread::spawn(move || srv.run().expect("server run"));
+    (addr, h)
+}
+
+fn local_reference(field: &Field, eb: f64, span: usize) -> Vec<u8> {
+    let cfg = Config { eb: EbMode::Abs(eb), threads: 1, ..Config::default() };
+    let (bytes, _) = stream::compress_chunked(field, &cfg, span).expect("local reference");
+    bytes
+}
+
+#[test]
+fn concurrent_requests_roundtrip_bit_exactly() {
+    const EB: f64 = 1e-3;
+    const SPAN: usize = 16;
+    let (addr, server) = start_server(ServeConfig { threads: 2, ..ServeConfig::default() });
+
+    // 5 clients compress distinct fields concurrently over separate
+    // connections — more requests in flight than pool threads.
+    let workers: Vec<_> = (0..5)
+        .map(|i| {
+            let addr = addr.clone();
+            thread::spawn(move || {
+                let field = smooth_field(&format!("f{i}"), 64 + 16 * i, 48, 0x5EED + i as u64);
+                let dims = format!("{}x{}", 64 + 16 * i, 48);
+                let mut c = Client::connect(&addr).expect("connect");
+                let (bytes, end) =
+                    c.compress(&field.name, &dims, EB, SPAN, &field.data).expect("compress");
+                assert!(end.contains("\"op\":\"compress\""), "end frame: {end}");
+                (field, bytes)
+            })
+        })
+        .collect();
+
+    for w in workers {
+        let (field, served) = w.join().expect("client thread");
+        let reference = local_reference(&field, EB, SPAN);
+        assert_eq!(
+            served, reference,
+            "{}: server container must be bit-identical to the local serial writer",
+            field.name
+        );
+    }
+
+    // round-trip one container through the server decoder and compare the
+    // exact f32 bit pattern against the local decode path
+    let field = smooth_field("rt", 96, 48, 7);
+    let mut c = Client::connect(&addr).expect("connect");
+    let (container, _) = c.compress("rt", "96x48", EB, SPAN, &field.data).expect("compress");
+    let (decoded, end) = c.decompress(&container).expect("decompress");
+    assert!(end.contains("\"op\":\"decompress\""), "end frame: {end}");
+    let local = vecsz::compressor::decompress(&container, 1).expect("local decode");
+    assert_eq!(decoded.len(), local.data.len());
+    for (k, (a, b)) in decoded.iter().zip(local.data.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "value {k} differs from the local decode");
+    }
+    for (k, (a, b)) in decoded.iter().zip(field.data.iter()).enumerate() {
+        assert!((a - b).abs() <= EB as f32 * 1.0001, "value {k} breaks the bound");
+    }
+
+    // random access: rows 20..52 span two chunks; must equal the local
+    // row-range decode bit for bit
+    let (rows, end) = c.extract(&container, 20, 52).expect("extract");
+    assert!(end.contains("\"op\":\"extract\""), "end frame: {end}");
+    let mut dec = stream::StreamDecompressor::new(std::io::Cursor::new(&container[..])).unwrap();
+    let local_rows = dec.decode_rows(20..52, 1).unwrap();
+    assert_eq!(rows.len(), local_rows.len());
+    for (a, b) in rows.iter().zip(local_rows.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // lifetime stats reflect everything the server has done
+    let stats = c.stats().expect("stats");
+    let j = vecsz::util::json::parse(&stats).expect("stats json parses");
+    let lifetime = j.get("stats").expect("lifetime aggregate");
+    let compress_ops = lifetime.get("compress_ops").and_then(|v| v.as_f64()).unwrap();
+    assert!(compress_ops >= 6.0, "expected >= 6 compress ops, stats: {stats}");
+    assert_eq!(lifetime.get("decompress_ops").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(lifetime.get("extract_ops").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(j.get("inflight_bytes").and_then(|v| v.as_f64()), Some(0.0));
+
+    c.shutdown().expect("shutdown");
+    drop(c);
+    server.join().expect("server thread exits after shutdown");
+}
+
+#[test]
+fn admission_cap_rejects_with_busy_and_recovers() {
+    // cap far below one request's body: every compress is rejected busy
+    let (addr, server) = start_server(ServeConfig {
+        threads: 1,
+        max_inflight_bytes: 1024,
+        ..ServeConfig::default()
+    });
+    let field = smooth_field("big", 64, 64, 3);
+    let mut c = Client::connect(&addr).expect("connect");
+    let err = c.compress("big", "64x64", 1e-3, 16, &field.data).unwrap_err();
+    assert!(is_busy(&err), "expected a busy rejection, got: {err}");
+
+    // the connection survives the rejection: a request under the cap works
+    let small = smooth_field("small", 8, 16, 4);
+    let (bytes, _) = c.compress("small", "8x16", 1e-3, 8, &small.data).expect("fits under cap");
+    assert_eq!(bytes, local_reference(&small, 1e-3, 8));
+
+    // the rejected request must not leak admission budget
+    let stats = c.stats().expect("stats");
+    let j = vecsz::util::json::parse(&stats).unwrap();
+    assert_eq!(j.get("inflight_bytes").and_then(|v| v.as_f64()), Some(0.0), "stats: {stats}");
+
+    c.shutdown().expect("shutdown");
+    drop(c);
+    server.join().expect("server thread exits");
+}
