@@ -160,8 +160,9 @@ impl ThreadPool {
         // has been consumed or dropped, so `n` received statuses prove
         // every clone of `f` is dead and this frame's Arc is the sole
         // owner: no 'env borrow survives the call. A panicking job still
-        // sends a status (Failed), which panics the caller below — borrows
-        // cannot escape on that path either.
+        // sends a status (Failed); the drain records it and only re-panics
+        // after all n statuses have arrived, so the unwind cannot start
+        // while a still-live closure borrows this frame.
         let mut exec = unsafe { Executor::<R>::new_unchecked(self, n.max(1)) };
         for i in 0..n {
             let g = Arc::clone(&f);
@@ -169,13 +170,25 @@ impl ThreadPool {
                 .expect("dependency-free submission cannot fail");
         }
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        // Drain ALL n statuses before reacting to a failure: a status is
+        // only sent once that job's closure is dead, so the caller frame
+        // (and the 'env borrows anchored to it) must not unwind while any
+        // status — hence any live closure — is still outstanding.
+        let mut failure: Option<String> = None;
         for _ in 0..n {
             let (id, status) = exec.recv().expect("missing result");
             match status {
                 JobStatus::Done(r) => out[id as usize] = Some(r),
-                JobStatus::Cancelled => unreachable!("no cancel token was attached"),
-                JobStatus::Failed(m) => panic!("worker job failed: {m}"),
+                JobStatus::Cancelled => {
+                    failure.get_or_insert_with(|| "job cancelled".to_string());
+                }
+                JobStatus::Failed(m) => {
+                    failure.get_or_insert(m);
+                }
             }
+        }
+        if let Some(m) = failure {
+            panic!("worker job failed: {m}");
         }
         out.into_iter().map(|r| r.expect("missing result")).collect()
     }
@@ -244,6 +257,33 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.submit(|| {});
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn scoped_failure_drains_all_jobs_before_panicking() {
+        let pool = ThreadPool::new(2);
+        let finished = AtomicUsize::new(0);
+        let data: Vec<u64> = (0..64).collect();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scoped_scatter_gather(8, |i| {
+                if i == 0 {
+                    panic!("early failure");
+                }
+                // slow borrowers: still reading the caller's stack long
+                // after job 0 has already failed
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                let s = data[i * 8..(i + 1) * 8].iter().sum::<u64>();
+                finished.fetch_add(1, Ordering::SeqCst);
+                s
+            })
+        }));
+        let payload = result.expect_err("a failed job must panic the caller");
+        let msg = payload.downcast_ref::<String>().expect("string payload");
+        assert!(msg.contains("early failure"), "{msg}");
+        // the caller only unwound after draining every status, i.e. after
+        // all 7 borrowing jobs ran to completion — none was left alive
+        // referencing the (now dead) stack frame
+        assert_eq!(finished.load(Ordering::SeqCst), 7);
     }
 
     #[test]

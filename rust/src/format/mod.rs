@@ -425,6 +425,29 @@ pub fn is_chunked_container(data: &[u8]) -> bool {
     data.len() >= 4 && (&data[..4] == MAGIC2 || &data[..4] == MAGIC3)
 }
 
+/// Parse just the field dims from a container's leading bytes — single-shot
+/// (v1) or chunked (v2/v3) — without touching sections or payload. Lets the
+/// server bound a request's decoded-output memory before admitting it.
+pub fn peek_dims(data: &[u8]) -> Result<Dims> {
+    if is_chunked_container(data) {
+        if data.len() < STREAM_HEADER_LEN {
+            return Err(VszError::format("truncated stream header"));
+        }
+        return Ok(read_stream_header(&data[..STREAM_HEADER_LEN])?.header.dims);
+    }
+    let mut c = Cursor::new(data);
+    match c.take(4) {
+        Some(m) if m == MAGIC => {}
+        Some(_) => return Err(VszError::format("bad magic (not a .vsz container)")),
+        None => return Err(VszError::format("truncated magic")),
+    }
+    let version = c.u16().ok_or_else(|| VszError::format("truncated version"))?;
+    if version != VERSION {
+        return Err(VszError::format(format!("unsupported version {version}")));
+    }
+    Ok(read_header_fields(&mut c)?.dims)
+}
+
 /// Serialize a v2/v3 stream header (fixed [`STREAM_HEADER_LEN`] bytes);
 /// the magic and version word follow `sh.version`. Errors on any other
 /// version (the `StreamHeader` fields are public, so a hand-built header
@@ -697,6 +720,22 @@ mod tests {
 
     fn sample_stream_header_v3() -> StreamHeader {
         StreamHeader { version: VERSION3, ..sample_stream_header() }
+    }
+
+    #[test]
+    fn peek_dims_reads_every_container_flavor() {
+        // chunked v2/v3: dims come from the fixed-size stream header
+        for sh in [sample_stream_header(), sample_stream_header_v3()] {
+            let bytes = write_stream_header(&sh).unwrap();
+            assert_eq!(peek_dims(&bytes).unwrap(), sh.header.dims);
+            assert!(peek_dims(&bytes[..10]).is_err(), "truncated stream header");
+        }
+        // single-shot v1: dims come from the header fields after the magic
+        let header = sample_header();
+        let v1 = write_container(&header, &[]);
+        assert_eq!(peek_dims(&v1).unwrap(), header.dims);
+        assert!(peek_dims(b"XXXXXXXXXXXX").is_err(), "bad magic");
+        assert!(peek_dims(b"XX").is_err(), "truncated magic");
     }
 
     #[test]

@@ -32,10 +32,14 @@
 //!
 //! ## Admission control
 //!
-//! The server bounds the bytes it holds in flight: a request whose body
-//! would push the running total past [`ServeConfig::max_inflight_bytes`]
-//! is rejected with a `busy` frame instead of queueing unboundedly — the
-//! client retries with backoff. Connections beyond
+//! The server bounds the bytes it holds in flight. Each data-path request
+//! is charged its body **plus** the buffers it will materialize — the
+//! parsed f32 copy for compress, the decoded output (read from the
+//! container header dims, which can be many times the compressed body)
+//! for decompress/extract. A request whose charge would push the running
+//! total past [`ServeConfig::max_inflight_bytes`] is rejected with a
+//! `busy` frame instead of queueing unboundedly — the client retries with
+//! backoff. Connections beyond
 //! [`ServeConfig::max_conns`] are likewise rejected with `busy` at accept
 //! time. The connection stays usable after a `busy` or `error` response;
 //! only the request is dropped.
@@ -59,6 +63,7 @@ use crate::coordinator::pool::ThreadPool;
 use crate::coordinator::sched;
 use crate::data::{io as dio, Field};
 use crate::error::{Result, VszError};
+use crate::format;
 use crate::metrics::CompressionStats;
 use crate::stream::{StreamDecompressor, StreamOptions};
 use crate::util::json::{self, Json};
@@ -88,7 +93,9 @@ const DATA_SLICE: usize = 1 << 20;
 pub struct ServeConfig {
     /// Chunk-worker pool width shared by all requests.
     pub threads: usize,
-    /// Admission cap: total request-body bytes in flight.
+    /// Admission cap: total bytes in flight, counting each request's body
+    /// plus its expected decoded output (see the module-level admission
+    /// notes).
     pub max_inflight_bytes: u64,
     /// Accept cap: concurrent client connections.
     pub max_conns: usize,
@@ -130,11 +137,54 @@ impl Drop for Admission<'_> {
 
 fn admit(shared: &Shared, bytes: u64) -> Option<Admission<'_>> {
     let prev = shared.inflight.fetch_add(bytes, Ordering::SeqCst);
-    if prev + bytes > shared.cfg.max_inflight_bytes {
+    if prev.saturating_add(bytes) > shared.cfg.max_inflight_bytes {
         shared.inflight.fetch_sub(bytes, Ordering::SeqCst);
         None
     } else {
         Some(Admission { gauge: &shared.inflight, bytes })
+    }
+}
+
+/// Bytes a data-path request holds in flight: its body plus the largest
+/// buffer the request will materialize — the parsed f32 copy for compress,
+/// the decoded output (derived from the container header dims, which can be
+/// many times the compressed body) for decompress/extract. This is what the
+/// admission cap charges, so it bounds real memory, not just wire bytes.
+fn inflight_cost(op: u8, hdr: &Json, body: &[u8]) -> Result<u64> {
+    let body_len = body.len() as u64;
+    let extra = match op {
+        OP_COMPRESS => body_len,
+        OP_DECOMPRESS => dims_bytes(&format::peek_dims(body)?),
+        OP_EXTRACT => {
+            let dims = format::peek_dims(body)?;
+            let (lo, hi) = parse_rows(hdr)?;
+            let row_bytes =
+                (dims.shape[1] as u64).saturating_mul(dims.shape[2] as u64).saturating_mul(4);
+            (hi.saturating_sub(lo) as u64).saturating_mul(row_bytes)
+        }
+        _ => 0,
+    };
+    Ok(body_len.saturating_add(extra))
+}
+
+/// Decoded size of a full field in bytes (saturating: header axes are
+/// individually bounded but their product may not fit).
+fn dims_bytes(dims: &crate::blocks::Dims) -> u64 {
+    dims.shape.iter().fold(4u64, |acc, &s| acc.saturating_mul(s as u64))
+}
+
+/// The `rows: [lo, hi]` header key of an extract request.
+fn parse_rows(hdr: &Json) -> Result<(usize, usize)> {
+    let rows = hdr
+        .req("rows")?
+        .as_array()
+        .ok_or_else(|| VszError::format("extract: 'rows' must be [lo, hi]"))?;
+    match rows {
+        [lo, hi] => Ok((
+            lo.as_usize().ok_or_else(|| VszError::format("extract: bad row lo"))?,
+            hi.as_usize().ok_or_else(|| VszError::format("extract: bad row hi"))?,
+        )),
+        _ => Err(VszError::format("extract: 'rows' must be [lo, hi]")),
     }
 }
 
@@ -224,8 +274,13 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
         let hdr = if hdr_len == 0 {
             Json::Obj(Vec::new())
         } else {
-            let text = std::str::from_utf8(&req[5..5 + hdr_len])
-                .map_err(|_| VszError::format("request header is not UTF-8"))?;
+            let text = match std::str::from_utf8(&req[5..5 + hdr_len]) {
+                Ok(t) => t,
+                Err(_) => {
+                    write_kind_frame(&mut stream, KIND_ERROR, b"request header is not UTF-8")?;
+                    continue;
+                }
+            };
             match json::parse(text) {
                 Ok(j) => j,
                 Err(e) => {
@@ -249,12 +304,20 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
                 let _ = TcpStream::connect(shared.addr);
             }
             OP_COMPRESS | OP_DECOMPRESS | OP_EXTRACT => {
-                let guard = match admit(shared, body.len() as u64) {
+                let cost = match inflight_cost(op, &hdr, body) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        shared.stats.lock().unwrap().record_error();
+                        write_kind_frame(&mut stream, KIND_ERROR, e.to_string().as_bytes())?;
+                        continue;
+                    }
+                };
+                let guard = match admit(shared, cost) {
                     Some(g) => g,
                     None => {
                         let msg = format!(
-                            "{} request bytes would exceed the {}-byte in-flight cap",
-                            body.len(),
+                            "request needs {cost} in-flight bytes (body + decoded output), \
+                             exceeding the {}-byte cap",
                             shared.cfg.max_inflight_bytes
                         );
                         write_kind_frame(&mut stream, KIND_BUSY, msg.as_bytes())?;
@@ -363,17 +426,7 @@ fn process(shared: &Shared, op: u8, hdr: &Json, body: &[u8]) -> Result<(Vec<u8>,
             Ok((out, end))
         }
         OP_EXTRACT => {
-            let rows = hdr
-                .req("rows")?
-                .as_array()
-                .ok_or_else(|| VszError::format("extract: 'rows' must be [lo, hi]"))?;
-            let (lo, hi) = match rows {
-                [lo, hi] => (
-                    lo.as_usize().ok_or_else(|| VszError::format("extract: bad row lo"))?,
-                    hi.as_usize().ok_or_else(|| VszError::format("extract: bad row hi"))?,
-                ),
-                _ => return Err(VszError::format("extract: 'rows' must be [lo, hi]")),
-            };
+            let (lo, hi) = parse_rows(hdr)?;
             let mut dec = StreamDecompressor::new(Cursor::new(body))?;
             let data = dec.decode_rows(lo..hi, shared.cfg.threads.max(1))?;
             let mut out = Vec::with_capacity(data.len() * 4);

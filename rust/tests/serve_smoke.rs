@@ -13,11 +13,15 @@
 //! * a server with a tiny admission cap rejects with `busy` and stays
 //!   usable afterwards.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::thread;
 
 use vecsz::compressor::{Config, EbMode};
 use vecsz::data::Field;
-use vecsz::server::{is_busy, Client, ServeConfig, Server};
+use vecsz::server::{
+    is_busy, Client, ServeConfig, Server, KIND_END, KIND_ERROR, OP_SHUTDOWN, OP_STATS,
+};
 use vecsz::stream;
 use vecsz::util::prng::Pcg32;
 
@@ -120,6 +124,75 @@ fn concurrent_requests_roundtrip_bit_exactly() {
     c.shutdown().expect("shutdown");
     drop(c);
     server.join().expect("server thread exits after shutdown");
+}
+
+/// Hand-rolled framed request for malformed-input tests the library
+/// `Client` cannot express; returns the first response frame.
+fn raw_request(s: &mut TcpStream, op: u8, hdr: &[u8], body: &[u8]) -> Vec<u8> {
+    let mut p = Vec::with_capacity(5 + hdr.len() + body.len());
+    p.push(op);
+    p.extend_from_slice(&(hdr.len() as u32).to_le_bytes());
+    p.extend_from_slice(hdr);
+    p.extend_from_slice(body);
+    s.write_all(&(p.len() as u32).to_le_bytes()).unwrap();
+    s.write_all(&p).unwrap();
+    s.flush().unwrap();
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len).unwrap();
+    let mut frame = vec![0u8; u32::from_le_bytes(len) as usize];
+    s.read_exact(&mut frame).unwrap();
+    frame
+}
+
+#[test]
+fn non_utf8_header_gets_error_frame_and_connection_survives() {
+    let (addr, server) = start_server(ServeConfig { threads: 1, ..ServeConfig::default() });
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    // invalid UTF-8 header bytes: must get an error frame, not a hangup
+    let frame = raw_request(&mut s, OP_STATS, &[0xff, 0xfe, 0xfd], &[]);
+    assert_eq!(frame[0], KIND_ERROR, "frame: {frame:?}");
+    let msg = String::from_utf8_lossy(&frame[1..]);
+    assert!(msg.contains("UTF-8"), "unexpected error message: {msg}");
+    // same connection keeps serving well-formed requests
+    let frame = raw_request(&mut s, OP_STATS, b"{}", &[]);
+    assert_eq!(frame[0], KIND_END, "connection must survive the bad header");
+    let frame = raw_request(&mut s, OP_SHUTDOWN, b"{}", &[]);
+    assert_eq!(frame[0], KIND_END);
+    drop(s);
+    server.join().expect("server thread exits");
+}
+
+#[test]
+fn decoded_output_counts_against_admission_cap() {
+    // A constant field compresses to a tiny container whose decoded output
+    // (64*64*4 = 16384 bytes) dwarfs it; the cap sits between the two, so
+    // admission must reject on the decoded size, not the wire bytes.
+    let dims = vecsz::blocks::Dims::d2(64, 64);
+    let field = Field::new("zeros", dims, vec![0.0f32; dims.len()]);
+    let container = local_reference(&field, 1e-3, 64);
+    assert!(
+        (container.len() as u64) < 8192,
+        "premise: compressed body ({} bytes) alone fits the cap",
+        container.len()
+    );
+    let (addr, server) = start_server(ServeConfig {
+        threads: 1,
+        max_inflight_bytes: 8192,
+        ..ServeConfig::default()
+    });
+    let mut c = Client::connect(&addr).expect("connect");
+    let err = c.decompress(&container).unwrap_err();
+    assert!(is_busy(&err), "expected busy on decoded-output size, got: {err}");
+    // nothing leaked, and small work still runs
+    let small = smooth_field("small", 8, 16, 9);
+    let (bytes, _) = c.compress("small", "8x16", 1e-3, 8, &small.data).expect("fits");
+    assert_eq!(bytes, local_reference(&small, 1e-3, 8));
+    let stats = c.stats().expect("stats");
+    let j = vecsz::util::json::parse(&stats).unwrap();
+    assert_eq!(j.get("inflight_bytes").and_then(|v| v.as_f64()), Some(0.0), "stats: {stats}");
+    c.shutdown().expect("shutdown");
+    drop(c);
+    server.join().expect("server thread exits");
 }
 
 #[test]
