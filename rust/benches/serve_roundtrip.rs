@@ -9,7 +9,7 @@
 use vecsz::bench::{bench, BenchOpts, BenchStats};
 use vecsz::blocks::Dims;
 use vecsz::data::Field;
-use vecsz::server::{Client, ServeConfig, Server};
+use vecsz::server::{Client, RetryPolicy, ServeConfig, Server};
 use vecsz::util::prng::Pcg32;
 
 const ROWS: usize = 512;
@@ -53,19 +53,26 @@ fn main() {
     let raw_bytes = field.data.len() * 4;
     let mut rows: Vec<String> = Vec::new();
 
+    // transient `busy` replies (admission pressure) retry with backoff
+    // instead of failing the whole bench run
+    let policy = RetryPolicy::default();
+
     // ---- single connection: compress round-trip latency ----
     let mut c = Client::connect(&addr).expect("connect");
     let s = bench("serve compress 1 conn", raw_bytes, opts, || {
-        let (bytes, _) = c.compress("bench", &dims_s, EB, SPAN, &field.data).unwrap();
+        let (bytes, _) = c
+            .with_retry(&policy, |c| c.compress("bench", &dims_s, EB, SPAN, &field.data))
+            .unwrap();
         std::hint::black_box(bytes);
     });
     println!("{}", s.row());
     rows.push(json_row("serve-compress", 1, &s));
 
     // ---- single connection: decompress round-trip latency ----
-    let (container, _) = c.compress("bench", &dims_s, EB, SPAN, &field.data).unwrap();
+    let (container, _) =
+        c.with_retry(&policy, |c| c.compress("bench", &dims_s, EB, SPAN, &field.data)).unwrap();
     let s = bench("serve decompress 1 conn", raw_bytes, opts, || {
-        let (samples, _) = c.decompress(&container).unwrap();
+        let (samples, _) = c.with_retry(&policy, |c| c.decompress(&container)).unwrap();
         std::hint::black_box(samples);
     });
     println!("{}", s.row());
@@ -79,8 +86,11 @@ fn main() {
         std::thread::scope(|scope| {
             for (cl, f) in clients.iter_mut().zip(fields.iter()) {
                 let dims_s = &dims_s;
+                let policy = &policy;
                 scope.spawn(move || {
-                    let (bytes, _) = cl.compress(&f.name, dims_s, EB, SPAN, &f.data).unwrap();
+                    let (bytes, _) = cl
+                        .with_retry(policy, |cl| cl.compress(&f.name, dims_s, EB, SPAN, &f.data))
+                        .unwrap();
                     std::hint::black_box(bytes);
                 });
             }

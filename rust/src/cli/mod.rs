@@ -32,6 +32,7 @@ const SWITCHES: &[&str] = &[
     "tune-chunks",
     "verify-steps",
     "status",
+    "resume",
 ];
 
 impl Args {

@@ -24,7 +24,7 @@ use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 
 use crate::blocks::Dims;
-use crate::coordinator::exec::{Executor, JobSpec, JobStatus};
+use crate::coordinator::exec::{CancelToken, Executor, JobSpec, JobStatus};
 use crate::coordinator::pool::ThreadPool;
 use crate::data::Field;
 use crate::error::{Result, VszError};
@@ -176,6 +176,23 @@ pub fn compress_fields_chunked(
     specs: &[FieldSpec],
     trace: Option<TraceHook>,
 ) -> Result<Vec<FieldResult>> {
+    compress_fields_chunked_with(pool, fields, specs, trace, None)
+}
+
+/// [`compress_fields_chunked`] with an optional [`CancelToken`] shared by
+/// every chunk job of the batch. Cancelling the token makes queued jobs
+/// complete as `Cancelled` (the executor skips them before they start) and
+/// makes running jobs bail at their next cooperative check; the call then
+/// returns a "chunk job cancelled" [`VszError`] instead of a container.
+/// `vsz serve` uses this to tie a request deadline / client disconnect to
+/// all of the request's outstanding work.
+pub fn compress_fields_chunked_with(
+    pool: &ThreadPool,
+    fields: Arc<Vec<Field>>,
+    specs: &[FieldSpec],
+    trace: Option<TraceHook>,
+    cancel: Option<CancelToken>,
+) -> Result<Vec<FieldResult>> {
     assert_eq!(fields.len(), specs.len(), "one spec per field");
     if fields.is_empty() {
         return Ok(Vec::new());
@@ -250,9 +267,16 @@ pub fn compress_fields_chunked(
             let (cfg, span, opts) = (plan.cfg, plan.span, specs[fi].opts);
             let fields = Arc::clone(&fields);
             let trace = trace.clone();
-            exec.submit(JobSpec::default(), move || {
+            let cancel_job = cancel.clone();
+            let spec = JobSpec { cancel: cancel.clone(), ..JobSpec::default() };
+            exec.submit(spec, move || {
                 if let Some(t) = &trace {
                     t(fi, round);
+                }
+                // cooperative check for jobs already dequeued when the
+                // token flipped: skip the encode, report cancellation
+                if cancel_job.as_ref().is_some_and(|t| t.is_cancelled()) {
+                    return (fi, round as u64, Err(VszError::runtime("chunk job cancelled")));
                 }
                 let f = &fields[fi];
                 let row_elems = f.dims.shape[1] * f.dims.shape[2];
@@ -293,8 +317,21 @@ pub fn compress_field_chunked(
     span: usize,
     opts: StreamOptions,
 ) -> Result<(Vec<u8>, StreamStats)> {
+    compress_field_chunked_with(pool, field, cfg, span, opts, None)
+}
+
+/// Single-field [`compress_fields_chunked_with`]: one request, one optional
+/// cancel token covering all of its chunk jobs.
+pub fn compress_field_chunked_with(
+    pool: &ThreadPool,
+    field: Field,
+    cfg: &crate::compressor::Config,
+    span: usize,
+    opts: StreamOptions,
+    cancel: Option<CancelToken>,
+) -> Result<(Vec<u8>, StreamStats)> {
     let spec = FieldSpec { cfg: *cfg, span, opts };
-    let results = compress_fields_chunked(pool, Arc::new(vec![field]), &[spec], None)?;
+    let results = compress_fields_chunked_with(pool, Arc::new(vec![field]), &[spec], None, cancel)?;
     let r = results.into_iter().next().expect("one result per field");
     Ok((r.bytes, r.stats))
 }
@@ -417,6 +454,31 @@ mod tests {
         assert_eq!(stats.n_outliers, ref_stats.n_outliers);
         assert_eq!(stats.compressed_bytes, ref_stats.compressed_bytes);
         assert_eq!(stats.raw_bytes, ref_stats.raw_bytes);
+    }
+
+    #[test]
+    fn cancelled_token_aborts_batch_with_cancelled_error() {
+        // the first chunk job to start flips the shared token; every job
+        // (including that one, via the cooperative check) must then report
+        // cancellation and the batch must surface it as a single error
+        let f = field("x", 96, 64, 8);
+        let cfg = abs_cfg(1e-3);
+        let pool = ThreadPool::new(2);
+        let token = CancelToken::new();
+        let hook: TraceHook = {
+            let t = token.clone();
+            Arc::new(move |_, _| t.cancel())
+        };
+        let spec = FieldSpec { cfg, span: 16, opts: StreamOptions::default() };
+        let err = compress_fields_chunked_with(
+            &pool,
+            Arc::new(vec![f]),
+            &[spec],
+            Some(hook),
+            Some(token),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cancelled"), "unexpected error: {err}");
     }
 
     #[test]

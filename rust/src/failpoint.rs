@@ -1,0 +1,277 @@
+//! Deterministic fault injection for crash/corruption testing.
+//!
+//! A *failpoint* is a named site in the code (e.g. `chunk_encode`,
+//! `frame_write`, `serve_frame_io`) that consults this module on every
+//! pass. With no configuration the check is a single relaxed atomic
+//! load of a `false` flag — zero allocation, no locks, no syscalls —
+//! so shipping the hooks in release builds costs nothing.
+//!
+//! Configuration comes from the `VECSZ_FAILPOINTS` environment
+//! variable, parsed once per process. The grammar is a semicolon-
+//! separated list of rules:
+//!
+//! ```text
+//! VECSZ_FAILPOINTS = rule (';' rule)*
+//! rule             = site ':' hit '=' action
+//! action           = 'panic' | 'err' | 'torn' | 'delay(' millis ')'
+//! ```
+//!
+//! `site` names the failpoint, `hit` is the 1-based pass count at
+//! which the rule fires (hit counters are per-site and process-wide),
+//! and `action` is what happens:
+//!
+//! * `panic` — the site panics (simulates a crashed worker / killed
+//!   process when the caller aborts on panic).
+//! * `err`   — the site reports an injected [`VszError::Runtime`].
+//! * `torn`  — for write sites: only a prefix of the buffer is
+//!   written before the injected error (simulates a torn write /
+//!   power cut mid-`write`). Non-write sites treat it like `err`.
+//! * `delay(ms)` — the site sleeps `ms` milliseconds, then proceeds
+//!   normally. Used to simulate a stuck chunk job so deadline /
+//!   cancellation paths can be exercised deterministically.
+//!
+//! Example: `VECSZ_FAILPOINTS='chunk_encode:3=panic;frame_write:2=torn'`
+//! panics the third chunk encode and tears the second frame write.
+//!
+//! Tests that cannot set the environment before process start can use
+//! [`set_config_for_tests`] to (re)install a configuration
+//! programmatically; it is test-oriented but safe — it swaps the
+//! active rule table under a lock.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// What a matched rule does at the site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Panic at the site (simulated crash).
+    Panic,
+    /// Return an injected error from the site.
+    Err,
+    /// Write only a prefix, then error (torn write). `usize` is the
+    /// number of bytes to let through; `usize::MAX` means "half".
+    Torn,
+    /// Sleep this many milliseconds, then continue normally.
+    Delay(u64),
+}
+
+struct Rule {
+    /// 1-based hit number at which the rule fires.
+    hit: u64,
+    action: Action,
+}
+
+struct Registry {
+    /// site name -> rules for that site (usually one).
+    rules: HashMap<String, Vec<Rule>>,
+    /// site name -> passes so far.
+    counters: HashMap<String, AtomicU64>,
+}
+
+/// Fast-path gate: false until a non-empty config is installed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<Registry> {
+    REGISTRY.get_or_init(|| {
+        let cfg = std::env::var("VECSZ_FAILPOINTS").unwrap_or_default();
+        let reg = parse_config(&cfg);
+        if !reg.rules.is_empty() {
+            ARMED.store(true, Ordering::Release);
+        }
+        Mutex::new(reg)
+    })
+}
+
+fn parse_config(cfg: &str) -> Registry {
+    let mut rules: HashMap<String, Vec<Rule>> = HashMap::new();
+    for part in cfg.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let Some((site_hit, action)) = part.split_once('=') else {
+            continue;
+        };
+        let Some((site, hit)) = site_hit.split_once(':') else {
+            continue;
+        };
+        let Ok(hit) = hit.trim().parse::<u64>() else {
+            continue;
+        };
+        let action = match action.trim() {
+            "panic" => Action::Panic,
+            "err" => Action::Err,
+            "torn" => Action::Torn,
+            a if a.starts_with("delay(") && a.ends_with(')') => {
+                match a["delay(".len()..a.len() - 1].trim().parse::<u64>() {
+                    Ok(ms) => Action::Delay(ms),
+                    Err(_) => continue,
+                }
+            }
+            _ => continue,
+        };
+        rules.entry(site.trim().to_string()).or_default().push(Rule { hit: hit.max(1), action });
+    }
+    Registry { rules, counters: HashMap::new() }
+}
+
+/// Install a configuration programmatically (tests that cannot set
+/// `VECSZ_FAILPOINTS` before the process starts). Replaces any prior
+/// rules and resets all hit counters. Pass `""` to disarm.
+pub fn set_config_for_tests(cfg: &str) {
+    let reg = registry();
+    let mut g = match reg.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    *g = parse_config(cfg);
+    ARMED.store(!g.rules.is_empty(), Ordering::Release);
+}
+
+/// True when any rule is installed. A `false` here is the entire cost
+/// of an unconfigured failpoint.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Acquire)
+}
+
+/// Record one pass through `site` and return the action to take, if
+/// any rule matches this pass. The common path (nothing configured)
+/// is a single atomic load.
+#[inline]
+pub fn check(site: &str) -> Option<Action> {
+    if !armed() {
+        return None;
+    }
+    check_slow(site)
+}
+
+#[cold]
+fn check_slow(site: &str) -> Option<Action> {
+    let mut g = match registry().lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    if !g.rules.contains_key(site) {
+        return None;
+    }
+    if !g.counters.contains_key(site) {
+        g.counters.insert(site.to_string(), AtomicU64::new(0));
+    }
+    let n = {
+        let c = g.counters.get(site).expect("counter just inserted");
+        c.fetch_add(1, Ordering::Relaxed) + 1
+    };
+    let rules = g.rules.get(site)?;
+    rules.iter().find(|r| r.hit == n).map(|r| r.action)
+}
+
+/// Evaluate `site` and turn `Panic`/`Err`/`Torn` into their effect;
+/// returns `Ok(())` on no-match or after a completed `Delay`. For
+/// sites that have no buffer to tear, `Torn` behaves like `Err`.
+pub fn hit(site: &str) -> crate::Result<()> {
+    match check(site) {
+        None => Ok(()),
+        Some(Action::Delay(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(Action::Panic) => panic!("failpoint '{site}' panic injected"),
+        Some(Action::Err) | Some(Action::Torn) => {
+            Err(crate::VszError::runtime(format!("failpoint '{site}' error injected")))
+        }
+    }
+}
+
+/// Write-site helper: runs `buf` through `site`'s rule before handing
+/// it to `write`. `Torn` writes the first half of `buf` (at least one
+/// byte when non-empty) and then reports the injected error, so the
+/// output stream is left with a realistic partial frame.
+pub fn write_through<W: std::io::Write>(
+    site: &str,
+    w: &mut W,
+    buf: &[u8],
+) -> crate::Result<()> {
+    match check(site) {
+        None => {
+            w.write_all(buf)?;
+            Ok(())
+        }
+        Some(Action::Delay(ms)) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            w.write_all(buf)?;
+            Ok(())
+        }
+        Some(Action::Panic) => panic!("failpoint '{site}' panic injected"),
+        Some(Action::Err) => {
+            Err(crate::VszError::runtime(format!("failpoint '{site}' error injected")))
+        }
+        Some(Action::Torn) => {
+            let cut = (buf.len() / 2).max(usize::from(!buf.is_empty()));
+            w.write_all(&buf[..cut])?;
+            let _ = w.flush();
+            Err(crate::VszError::runtime(format!("failpoint '{site}' torn write injected")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global; serialize tests that reconfigure it.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn parse_grammar_and_fire_order() {
+        let _g = lock();
+        set_config_for_tests("alpha:2=err;beta:1=delay(0);gamma:1=torn");
+        assert!(armed());
+        // first pass through alpha: no action; second: err
+        assert_eq!(check("alpha"), None);
+        assert_eq!(check("alpha"), Some(Action::Err));
+        assert_eq!(check("alpha"), None);
+        // unknown site never matches and never allocates a counter entry
+        assert_eq!(check("nope"), None);
+        // delay(0) completes and hit() maps it to Ok
+        assert!(hit("beta").is_ok());
+        // torn on a non-write site degrades to an error
+        assert!(hit("gamma").is_err());
+        set_config_for_tests("");
+        assert!(!armed());
+        assert_eq!(check("alpha"), None);
+    }
+
+    #[test]
+    fn torn_write_leaves_prefix() {
+        let _g = lock();
+        set_config_for_tests("tw:1=torn");
+        let mut out = Vec::new();
+        let err = write_through("tw", &mut out, &[1u8, 2, 3, 4]).unwrap_err();
+        assert!(err.to_string().contains("torn"), "{err}");
+        assert_eq!(out, vec![1u8, 2]);
+        // the rule fired once; the next write goes through whole
+        write_through("tw", &mut out, &[9u8]).unwrap();
+        assert_eq!(out, vec![1u8, 2, 9]);
+        set_config_for_tests("");
+    }
+
+    #[test]
+    fn malformed_rules_are_ignored() {
+        let _g = lock();
+        set_config_for_tests("bad;also:bad;x:0=panic;y:1=delay(nope);z:1=err");
+        // x:0 is clamped to hit 1; z parses; the rest are dropped
+        assert_eq!(check("z"), Some(Action::Err));
+        assert_eq!(check("x"), Some(Action::Panic));
+        assert_eq!(check("bad"), None);
+        assert_eq!(check("also"), None);
+        assert_eq!(check("y"), None);
+        set_config_for_tests("");
+    }
+}

@@ -24,7 +24,10 @@
 //! * [`coordinator`] — thread pool, job-graph executor and the two-level
 //!   fields×chunks scheduler (plus the streaming/batch drivers on top).
 //! * [`server`] — `vsz serve`: a framed-TCP compression service over the
-//!   shared scheduler, with admission control and lifetime statistics.
+//!   shared scheduler, with admission control, per-request deadlines +
+//!   cancellation, and lifetime statistics.
+//! * [`failpoint`] — deterministic, env-gated fault injection
+//!   (`VECSZ_FAILPOINTS`) for crash/corruption testing.
 //! * [`roofline`] — ERT-like machine characterization.
 
 pub mod autotune;
@@ -36,6 +39,7 @@ pub mod compressor;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod failpoint;
 pub mod figures;
 pub mod format;
 pub mod metrics;

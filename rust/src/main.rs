@@ -47,11 +47,16 @@ COMMANDS
              v2 and indexed v3; --isa/VECSZ_FORCE_ISA govern the SIMD
              reverse-Lorenzo decode kernel too)
   stream     compress   --input F.f32 --dims NxM --out F.vsz
-                        [--chunk-rows N] [--threads N] [--tune-chunks
-                        [--sample-pct P] [--iterations N]] + compress flags
+                        [--chunk-rows N] [--threads N] [--resume]
+                        [--tune-chunks [--sample-pct P] [--iterations N]]
+                        + compress flags
                         (absolute --eb required; bounded memory; chunk
                         pipeline across --threads workers; --tune-chunks
-                        re-runs the block/lane autotuner per chunk)
+                        re-runs the block/lane autotuner per chunk;
+                        --resume scans a partial --out for its last
+                        CRC-valid chunk, truncates after it and continues
+                        — the finished container is byte-identical to an
+                        uninterrupted run)
              decompress --input F.vsz --out F.f32 [--threads N]
                         (chunk-parallel decode via the thread pool)
              inspect    --input F.vsz
@@ -65,6 +70,13 @@ COMMANDS
                         the last axis and --planes the middle axis of a 3D
                         field — every chunk overlaps those, so all chunks
                         decode chunk-parallel and the extent is gathered)
+             salvage    --input F.vsz [--out F.f32]
+                        (best-effort recovery of a damaged container:
+                        walks the file front to back, reconstructs every
+                        CRC-valid chunk, quarantines the rest and prints a
+                        JSON hole report; --out writes the recovered field
+                        with holes zero-filled. Needs an intact stream
+                        header)
   batch      --suite NAME|all [--out-dir D] [--threads N]
              [--stream [--chunk-rows N]] + compress flags
              (whole dataset suite through the pool, one field per worker)
@@ -76,11 +88,15 @@ COMMANDS
               padding|table3|stability|all> [--out-dir results] [--quick]
   gen-data   --suite NAME --out-dir D [--full]
   serve      [--addr HOST:PORT] [--threads N] [--max-inflight-mb MB]
-             [--max-conns N] [--chunk-rows N] | --status [--addr HOST:PORT]
+             [--max-conns N] [--chunk-rows N] [--request-timeout-ms MS]
+             | --status [--addr HOST:PORT]
              (long-running framed-TCP compression service: compress /
              decompress / extract / stats requests over one shared chunk
              pool; requests past the in-flight byte cap are rejected with
-             a busy frame; --status queries a running server's lifetime
+             a busy frame; --request-timeout-ms sets a per-request
+             deadline — an expired or disconnected request cancels its
+             queued chunk jobs and replies busy, so callers can retry;
+             --status queries a running server's lifetime
              CompressionStats)
   pipeline   --suite NAME --steps N [--out-dir D]
              [--stream [--chunk-rows N] [--tune-chunks]] [--verify-steps]
@@ -234,6 +250,38 @@ fn cmd_stream(a: &Args) -> Result<()> {
                 )));
             }
             std::fs::create_dir_all(Path::new(&out).parent().unwrap_or(Path::new(".")))?;
+            if a.has("resume") {
+                if let Some(state) = scan_partial(&out) {
+                    if state.complete {
+                        println!("{out}: container already complete; nothing to resume");
+                        return Ok(());
+                    }
+                    let mut fout =
+                        std::fs::OpenOptions::new().read(true).write(true).open(&out)?;
+                    fout.set_len(state.truncate_at)?;
+                    std::io::Seek::seek(&mut fout, std::io::SeekFrom::End(0))?;
+                    let stats = vecsz::stream::resume_stream_with(
+                        fin,
+                        BufWriter::new(fout),
+                        dims,
+                        &cfg,
+                        chunk_rows,
+                        opts,
+                        &state,
+                    )?;
+                    println!(
+                        "resumed {input} -> {out} at chunk {} (row {}): {} -> {} in {} chunks  CR {:.2}x",
+                        state.n_chunks_done,
+                        state.rows_done,
+                        human_bytes(stats.raw_bytes as u64),
+                        human_bytes(stats.compressed_bytes as u64),
+                        stats.n_chunks,
+                        stats.ratio(),
+                    );
+                    return Ok(());
+                }
+                // no usable prefix (missing file or torn header): start over
+            }
             let fout = std::fs::File::create(&out)?;
             // compress_stream_with reads whole chunk-span slabs, so memory
             // stays bounded by one slab regardless of file size
@@ -361,10 +409,53 @@ fn cmd_stream(a: &Args) -> Result<()> {
             println!("wrote {out}");
             Ok(())
         }
+        "salvage" => {
+            let fin = std::fs::File::open(&input)?;
+            let mut dec = vecsz::stream::StreamDecompressor::new(BufReader::new(fin))?;
+            let (chunks, report) = dec.salvage()?;
+            // JSON hole report on stdout; prose on stderr so scripts can
+            // pipe the report straight into a tool
+            println!("{}", report.to_json());
+            if let Some(out) = a.get("out") {
+                let d = dec.header().header.dims;
+                let row_elems = d.shape[1] * d.shape[2];
+                let mut data = vec![0.0f32; d.len()];
+                for c in &chunks {
+                    let start = c.lead_offset * row_elems;
+                    data[start..start + c.data.len()].copy_from_slice(&c.data);
+                }
+                dio::write_f32_file(Path::new(out), &data)?;
+                eprintln!(
+                    "wrote {out}: {} of {} rows recovered, {} hole(s) zero-filled",
+                    report.rows_recovered,
+                    report.total_rows,
+                    report.holes.len(),
+                );
+            } else {
+                eprintln!(
+                    "{input}: recovered {}/{} chunks ({}/{} rows); pass --out F.f32 to \
+                     write the reconstruction",
+                    report.recovered.len(),
+                    report.total_chunks,
+                    report.rows_recovered,
+                    report.total_rows,
+                );
+            }
+            Ok(())
+        }
         other => Err(VszError::config(format!(
-            "stream: expected 'compress', 'decompress', 'inspect' or 'extract', got '{other}'"
+            "stream: expected 'compress', 'decompress', 'inspect', 'extract' or 'salvage', \
+             got '{other}'"
         ))),
     }
+}
+
+/// `--resume` preflight: scan the partial output for its CRC-valid chunk
+/// prefix. `None` (missing file, unreadable header) means nothing is
+/// salvageable and the compression starts from scratch.
+fn scan_partial(path: &str) -> Option<vecsz::stream::ResumeState> {
+    let f = std::fs::File::open(path).ok()?;
+    vecsz::stream::scan_resumable(BufReader::new(f)).ok()
 }
 
 fn cmd_batch(a: &Args) -> Result<()> {
@@ -610,11 +701,13 @@ fn cmd_pipeline(a: &Args) -> Result<()> {
 }
 
 fn cmd_serve(a: &Args) -> Result<()> {
-    use vecsz::server::{Client, ServeConfig, Server};
+    use vecsz::server::{Client, RetryPolicy, ServeConfig, Server};
     let addr = a.str_or("addr", "127.0.0.1:7227").to_string();
     if a.has("status") {
+        // a briefly-busy server is not a reason for a status probe to
+        // fail: retry with capped backoff like any other client
         let mut c = Client::connect(&addr)?;
-        println!("{}", c.stats()?);
+        println!("{}", c.with_retry(&RetryPolicy::default(), |c| c.stats())?);
         return Ok(());
     }
     let cfg = ServeConfig {
@@ -622,6 +715,7 @@ fn cmd_serve(a: &Args) -> Result<()> {
         max_inflight_bytes: (a.usize_or("max-inflight-mb", 256)? as u64) << 20,
         max_conns: a.usize_or("max-conns", 32)?,
         chunk_rows: a.usize_or("chunk-rows", 0)?,
+        request_timeout_ms: a.usize_or("request-timeout-ms", 0)? as u64,
     };
     apply_isa_flag(a)?;
     let srv = Server::bind(&addr, cfg)?;

@@ -44,6 +44,22 @@
 //! time. The connection stays usable after a `busy` or `error` response;
 //! only the request is dropped.
 //!
+//! ## Deadlines and cancellation
+//!
+//! Every data-path request carries a [`CancelToken`] shared by all of its
+//! chunk jobs. A per-request deadline ([`ServeConfig::request_timeout_ms`],
+//! overridable per request with a `timeout_ms` header key) arms a watchdog
+//! that flips the token when the deadline passes **or** the client
+//! disconnects mid-request: queued chunk jobs are skipped by the executor,
+//! running ones bail at their next cooperative check, and the reply is a
+//! `busy` frame naming the deadline — the same retryable class as an
+//! admission reject. The admission budget is released as soon as the
+//! handler replies (RAII), so a timed-out request can never leak in-flight
+//! bytes. Handler sockets additionally run under read/write timeouts: an
+//! idle connection may wait forever for its next request, but once a frame
+//! starts it must complete within [`IO_TIMEOUT`], and response writes to a
+//! stuck peer are bounded the same way.
+//!
 //! ## Statistics
 //!
 //! Each data-path response's `end` frame carries that request's numbers;
@@ -54,13 +70,15 @@
 use std::io::{Cursor, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::{self, JoinHandle};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::compressor::{decompress, BackendChoice, Config, EbMode};
+use crate::coordinator::exec::CancelToken;
 use crate::coordinator::pool::ThreadPool;
 use crate::coordinator::sched;
+use crate::failpoint;
 use crate::data::{io as dio, Field};
 use crate::error::{Result, VszError};
 use crate::format;
@@ -88,6 +106,17 @@ const MAX_FRAME: usize = 1 << 30;
 /// Result payloads are streamed back in slices of this size.
 const DATA_SLICE: usize = 1 << 20;
 
+/// Once a request frame has started arriving (or a response write has
+/// started), it must complete within this bound; a peer that stalls
+/// mid-frame gets its connection closed instead of pinning a handler
+/// thread forever. Idle waits between requests are unbounded.
+const IO_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Socket poll granularity: the read timeout installed on handler
+/// sockets, which also bounds how often the per-request watchdog checks
+/// for client disconnect and deadline expiry.
+const POLL_INTERVAL: Duration = Duration::from_millis(100);
+
 /// Server tuning knobs (`vsz serve` flags map onto these 1:1).
 #[derive(Clone, Copy, Debug)]
 pub struct ServeConfig {
@@ -102,11 +131,21 @@ pub struct ServeConfig {
     /// Default compress chunk span (rows); 0 picks the container default.
     /// A request's `chunk_rows` header key overrides it.
     pub chunk_rows: usize,
+    /// Per-request deadline in milliseconds; 0 disables the deadline. A
+    /// request's `timeout_ms` header key overrides it. An expired deadline
+    /// cancels the request's chunk jobs and replies `busy`.
+    pub request_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { threads: 4, max_inflight_bytes: 256 << 20, max_conns: 32, chunk_rows: 0 }
+        Self {
+            threads: 4,
+            max_inflight_bytes: 256 << 20,
+            max_conns: 32,
+            chunk_rows: 0,
+            request_timeout_ms: 0,
+        }
     }
 }
 
@@ -142,6 +181,95 @@ fn admit(shared: &Shared, bytes: u64) -> Option<Admission<'_>> {
         None
     } else {
         Some(Admission { gauge: &shared.inflight, bytes })
+    }
+}
+
+/// Lock the lifetime stats, recovering from poisoning: the aggregate is
+/// plain counters (always internally consistent), and one panicked handler
+/// must not take every other connection's stats path down with it.
+fn stats_lock(shared: &Shared) -> MutexGuard<'_, CompressionStats> {
+    shared.stats.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Deadline + liveness context of one in-flight data-path request.
+struct RequestCtx {
+    cancel: CancelToken,
+    deadline: Option<Instant>,
+    timeout_ms: u64,
+}
+
+impl RequestCtx {
+    fn new(timeout_ms: u64) -> Self {
+        let deadline =
+            (timeout_ms > 0).then(|| Instant::now() + Duration::from_millis(timeout_ms));
+        Self { cancel: CancelToken::new(), deadline, timeout_ms }
+    }
+
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+}
+
+/// Per-request watchdog: flips the request's [`CancelToken`] when the
+/// deadline passes or the client's socket reaches EOF mid-request. The
+/// handler signals completion through the condvar pair; the thread is
+/// detached (never joined) so finishing a request costs no watchdog
+/// latency — it observes the done flag within one poll interval and exits.
+struct Watchdog {
+    done: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Watchdog {
+    fn spawn(stream: &TcpStream, ctx: &RequestCtx) -> Watchdog {
+        let done = Arc::new((Mutex::new(false), Condvar::new()));
+        let cancel = ctx.cancel.clone();
+        let deadline = ctx.deadline;
+        // the clone shares the fd; the handler does not read while the
+        // request is in flight, so peeking from here races nothing
+        let peer = stream.try_clone().ok();
+        let signal = Arc::clone(&done);
+        thread::spawn(move || {
+            let (m, cv) = &*signal;
+            let mut fin = m.lock().unwrap_or_else(|p| p.into_inner());
+            loop {
+                if *fin {
+                    return;
+                }
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    cancel.cancel();
+                    return;
+                }
+                // a zero-byte peek is EOF: the client went away, so the
+                // work it was waiting for should stop. The socket's read
+                // timeout bounds this to one poll interval.
+                if let Some(s) = &peer {
+                    let mut b = [0u8; 1];
+                    drop(fin); // don't hold the lock across a blocking peek
+                    let gone = matches!(s.peek(&mut b), Ok(0));
+                    fin = m.lock().unwrap_or_else(|p| p.into_inner());
+                    if gone && !*fin {
+                        cancel.cancel();
+                        return;
+                    }
+                    if *fin {
+                        return;
+                    }
+                }
+                let (g, _) = cv
+                    .wait_timeout(fin, POLL_INTERVAL)
+                    .unwrap_or_else(|p| p.into_inner());
+                fin = g;
+            }
+        });
+        Watchdog { done }
+    }
+}
+
+impl Drop for Watchdog {
+    fn drop(&mut self) {
+        let (m, cv) = &*self.done;
+        *m.lock().unwrap_or_else(|p| p.into_inner()) = true;
+        cv.notify_all();
     }
 }
 
@@ -235,6 +363,11 @@ impl Server {
                 let _ = write_kind_frame(&mut stream, KIND_BUSY, b"connection limit reached");
                 continue;
             }
+            // poll-interval read timeout (idle waits loop on it; mid-frame
+            // stalls are bounded by IO_TIMEOUT in read_request_frame) and a
+            // hard write timeout against stuck peers
+            let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+            let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
             self.shared.active_conns.fetch_add(1, Ordering::SeqCst);
             let shared = Arc::clone(&self.shared);
             handlers.push(thread::spawn(move || {
@@ -257,7 +390,7 @@ impl Server {
 /// client closes its end.
 fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
     loop {
-        let req = match read_frame(&mut stream)? {
+        let req = match read_request_frame(shared, &mut stream)? {
             Some(b) => b,
             None => return Ok(()),
         };
@@ -266,7 +399,7 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
             continue;
         }
         let op = req[0];
-        let hdr_len = u32::from_le_bytes(req[1..5].try_into().unwrap()) as usize;
+        let hdr_len = u32::from_le_bytes([req[1], req[2], req[3], req[4]]) as usize;
         if 5 + hdr_len > req.len() {
             write_kind_frame(&mut stream, KIND_ERROR, b"header length exceeds request frame")?;
             continue;
@@ -307,7 +440,7 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
                 let cost = match inflight_cost(op, &hdr, body) {
                     Ok(c) => c,
                     Err(e) => {
-                        shared.stats.lock().unwrap().record_error();
+                        stats_lock(shared).record_error();
                         write_kind_frame(&mut stream, KIND_ERROR, e.to_string().as_bytes())?;
                         continue;
                     }
@@ -324,15 +457,35 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
                         continue;
                     }
                 };
-                match process(shared, op, &hdr, body) {
+                let timeout_ms = hdr
+                    .get("timeout_ms")
+                    .and_then(Json::as_usize)
+                    .map(|v| v as u64)
+                    .unwrap_or(shared.cfg.request_timeout_ms);
+                let ctx = RequestCtx::new(timeout_ms);
+                let watchdog = Watchdog::spawn(&stream, &ctx);
+                let outcome = process(shared, op, &hdr, body, &ctx);
+                drop(watchdog);
+                match outcome {
                     Ok((data, end_json)) => {
                         for slice in data.chunks(DATA_SLICE) {
                             write_kind_frame(&mut stream, KIND_DATA, slice)?;
                         }
                         write_kind_frame(&mut stream, KIND_END, end_json.as_bytes())?;
                     }
+                    Err(e) if ctx.cancel.is_cancelled() && ctx.expired() => {
+                        // deadline-cancelled work replies busy — the same
+                        // retryable class as an admission reject. The guard
+                        // drop below returns the budget immediately.
+                        stats_lock(shared).record_error();
+                        let msg = format!(
+                            "request deadline exceeded ({} ms); {e}",
+                            ctx.timeout_ms
+                        );
+                        write_kind_frame(&mut stream, KIND_BUSY, msg.as_bytes())?;
+                    }
                     Err(e) => {
-                        shared.stats.lock().unwrap().record_error();
+                        stats_lock(shared).record_error();
                         write_kind_frame(&mut stream, KIND_ERROR, e.to_string().as_bytes())?;
                     }
                 }
@@ -347,9 +500,19 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
 }
 
 /// Execute one data-path request; returns the result payload and the
-/// per-request stats JSON for the `end` frame.
-fn process(shared: &Shared, op: u8, hdr: &Json, body: &[u8]) -> Result<(Vec<u8>, String)> {
+/// per-request stats JSON for the `end` frame. `ctx` carries the request's
+/// cancel token (shared with every chunk job it spawns) and deadline.
+fn process(
+    shared: &Shared,
+    op: u8,
+    hdr: &Json,
+    body: &[u8],
+    ctx: &RequestCtx,
+) -> Result<(Vec<u8>, String)> {
     let t = Instant::now();
+    if ctx.cancel.is_cancelled() || ctx.expired() {
+        return Err(VszError::runtime("request cancelled before work started"));
+    }
     match op {
         OP_COMPRESS => {
             let dims_s = hdr
@@ -371,7 +534,7 @@ fn process(shared: &Shared, op: u8, hdr: &Json, body: &[u8]) -> Result<(Vec<u8>,
             let name = hdr.get("name").and_then(Json::as_str).unwrap_or("field").to_string();
             let data: Vec<f32> = body
                 .chunks_exact(4)
-                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                 .collect();
             let mut cfg = Config { eb: EbMode::Abs(eb), ..Config::default() };
             if let Some(b) = hdr.get("block").and_then(Json::as_usize) {
@@ -384,19 +547,16 @@ fn process(shared: &Shared, op: u8, hdr: &Json, body: &[u8]) -> Result<(Vec<u8>,
             let span =
                 hdr.get("chunk_rows").and_then(Json::as_usize).unwrap_or(shared.cfg.chunk_rows);
             let field = Field::new(name, dims, data);
-            let (bytes, stats) = sched::compress_field_chunked(
+            let (bytes, stats) = sched::compress_field_chunked_with(
                 &shared.pool,
                 field,
                 &cfg,
                 span,
                 StreamOptions::default(),
+                Some(ctx.cancel.clone()),
             )?;
             let secs = t.elapsed().as_secs_f64();
-            shared.stats.lock().unwrap().record_compress(
-                stats.raw_bytes,
-                stats.compressed_bytes,
-                secs,
-            );
+            stats_lock(shared).record_compress(stats.raw_bytes, stats.compressed_bytes, secs);
             let end = format!(
                 "{{\"op\":\"compress\",\"raw_bytes\":{},\"compressed_bytes\":{},\
                  \"n_chunks\":{},\"ratio\":{:.4},\"seconds\":{:.6}}}",
@@ -410,12 +570,15 @@ fn process(shared: &Shared, op: u8, hdr: &Json, body: &[u8]) -> Result<(Vec<u8>,
         }
         OP_DECOMPRESS => {
             let field = decompress(body, shared.cfg.threads.max(1))?;
+            if ctx.cancel.is_cancelled() {
+                return Err(VszError::runtime("request cancelled during decode"));
+            }
             let mut out = Vec::with_capacity(field.data.len() * 4);
             for x in &field.data {
                 out.extend_from_slice(&x.to_le_bytes());
             }
             let secs = t.elapsed().as_secs_f64();
-            shared.stats.lock().unwrap().record_decompress(body.len(), out.len(), secs);
+            stats_lock(shared).record_decompress(body.len(), out.len(), secs);
             let end = format!(
                 "{{\"op\":\"decompress\",\"compressed_bytes\":{},\"raw_bytes\":{},\
                  \"seconds\":{:.6}}}",
@@ -429,12 +592,15 @@ fn process(shared: &Shared, op: u8, hdr: &Json, body: &[u8]) -> Result<(Vec<u8>,
             let (lo, hi) = parse_rows(hdr)?;
             let mut dec = StreamDecompressor::new(Cursor::new(body))?;
             let data = dec.decode_rows(lo..hi, shared.cfg.threads.max(1))?;
+            if ctx.cancel.is_cancelled() {
+                return Err(VszError::runtime("request cancelled during extract"));
+            }
             let mut out = Vec::with_capacity(data.len() * 4);
             for x in &data {
                 out.extend_from_slice(&x.to_le_bytes());
             }
             let secs = t.elapsed().as_secs_f64();
-            shared.stats.lock().unwrap().record_extract(body.len(), out.len(), secs);
+            stats_lock(shared).record_extract(body.len(), out.len(), secs);
             let end = format!(
                 "{{\"op\":\"extract\",\"rows\":[{lo},{hi}],\"raw_bytes\":{},\
                  \"seconds\":{:.6}}}",
@@ -449,14 +615,15 @@ fn process(shared: &Shared, op: u8, hdr: &Json, body: &[u8]) -> Result<(Vec<u8>,
 
 /// The `stats` response: lifetime aggregate + gauges.
 fn status_json(shared: &Shared) -> String {
-    let stats = shared.stats.lock().unwrap().to_json();
+    let stats = stats_lock(shared).to_json();
     format!(
         "{{\"uptime_s\":{:.3},\"active_conns\":{},\"inflight_bytes\":{},\
-         \"pool_threads\":{},\"stats\":{stats}}}",
+         \"pool_threads\":{},\"request_timeout_ms\":{},\"stats\":{stats}}}",
         shared.started.elapsed().as_secs_f64(),
         shared.active_conns.load(Ordering::SeqCst),
         shared.inflight.load(Ordering::SeqCst),
         shared.cfg.threads.max(1),
+        shared.cfg.request_timeout_ms,
     )
 }
 
@@ -471,10 +638,82 @@ fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
 
 /// One `kind` response frame (length prefix covers the kind byte).
 fn write_kind_frame<W: Write>(w: &mut W, kind: u8, payload: &[u8]) -> Result<()> {
+    if failpoint::armed() {
+        // route the assembled frame through the `serve_frame_write` site so
+        // fault tests can tear or fail server responses deterministically
+        let mut buf = Vec::with_capacity(5 + payload.len());
+        buf.extend_from_slice(&((payload.len() + 1) as u32).to_le_bytes());
+        buf.push(kind);
+        buf.extend_from_slice(payload);
+        return failpoint::write_through("serve_frame_write", w, &buf);
+    }
     w.write_all(&((payload.len() + 1) as u32).to_le_bytes())?;
     w.write_all(&[kind])?;
     w.write_all(payload)?;
     Ok(())
+}
+
+/// True for the error kinds a socket read/write timeout produces.
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Server-side frame read over a socket carrying a [`POLL_INTERVAL`] read
+/// timeout. Waiting for the *start* of a request is unbounded (an idle
+/// connection is fine, though a set stop flag ends it); once the first
+/// byte has arrived the whole frame must complete within [`IO_TIMEOUT`].
+/// `None` on clean EOF or shutdown-while-idle.
+fn read_request_frame(shared: &Shared, stream: &mut TcpStream) -> Result<Option<Vec<u8>>> {
+    failpoint::hit("serve_frame_read")?;
+    let mut len = [0u8; 4];
+    let mut got = 0usize;
+    let mut started: Option<Instant> = None;
+    while got < 4 {
+        match stream.read(&mut len[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                return Err(VszError::format("frame: truncated length prefix"));
+            }
+            Ok(n) => {
+                started.get_or_insert_with(Instant::now);
+                got += n;
+            }
+            Err(e) if would_block(&e) => match started {
+                None => {
+                    if shared.stop.load(Ordering::SeqCst) {
+                        return Ok(None);
+                    }
+                }
+                Some(t0) if t0.elapsed() > IO_TIMEOUT => {
+                    return Err(VszError::runtime("frame: stalled mid-length-prefix"));
+                }
+                Some(_) => {}
+            },
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let n = u32::from_le_bytes(len) as usize;
+    if n > MAX_FRAME {
+        return Err(VszError::format(format!("frame: {n} bytes exceeds the 1 GiB frame cap")));
+    }
+    let t0 = started.unwrap_or_else(Instant::now);
+    let mut buf = vec![0u8; n];
+    let mut off = 0usize;
+    while off < n {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => return Err(VszError::format("frame: truncated payload")),
+            Ok(k) => off += k,
+            Err(e) if would_block(&e) => {
+                if t0.elapsed() > IO_TIMEOUT {
+                    return Err(VszError::runtime("frame: stalled mid-payload"));
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(buf))
 }
 
 /// Read one frame; `None` on a clean EOF before the length prefix (the
@@ -603,19 +842,94 @@ impl Client {
     pub fn shutdown(&mut self) -> Result<()> {
         self.request(OP_SHUTDOWN, "{}", &[]).map(|_| ())
     }
+
+    /// Run `f` against this client, retrying transient `busy`/timeout
+    /// rejections (see [`is_retryable`]) under `policy`'s capped
+    /// exponential backoff + jitter. Hard errors and exhausted retries
+    /// propagate the last error unchanged. The connection stays usable
+    /// across `busy` rejections, so retries reuse it.
+    pub fn with_retry<T>(
+        &mut self,
+        policy: &RetryPolicy,
+        mut f: impl FnMut(&mut Client) -> Result<T>,
+    ) -> Result<T> {
+        // cheap decorrelation seed; exactness is irrelevant, only spread
+        let seed = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64 ^ d.as_secs())
+            .unwrap_or(0x9E3779B97F4A7C15);
+        let mut rng = crate::util::prng::Pcg32::seeded(seed);
+        let mut attempt = 0u32;
+        loop {
+            match f(self) {
+                Ok(v) => return Ok(v),
+                Err(e) if is_retryable(&e) && attempt < policy.max_retries => {
+                    thread::sleep(policy.delay(attempt, rng.next_f32() as f64));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
 }
 
 fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
     if bytes.len() % 4 != 0 {
         return Err(VszError::format("response body is not a whole number of f32s"));
     }
-    Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect())
+    Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
 }
 
 /// True when `e` is an admission-control rejection (retry with backoff)
-/// rather than a hard failure.
+/// rather than a hard failure. Deadline-cancelled requests reply on the
+/// same `busy` channel, so they are also recognized here.
 pub fn is_busy(e: &VszError) -> bool {
     matches!(e, VszError::Runtime(m) if m.starts_with("server busy"))
+}
+
+/// True when `e` is a socket-level timeout (the peer stalled, or a client
+/// read/write timeout fired locally).
+pub fn is_timeout(e: &VszError) -> bool {
+    matches!(e, VszError::Io(io) if would_block(io))
+}
+
+/// True for the transient error class [`Client::with_retry`] retries:
+/// admission/deadline `busy` rejections and socket timeouts.
+pub fn is_retryable(e: &VszError) -> bool {
+    is_busy(e) || is_timeout(e)
+}
+
+/// Bounded retry with capped exponential backoff + jitter for transient
+/// `busy`/timeout rejections.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 = a single attempt).
+    pub max_retries: u32,
+    /// First backoff delay; doubles per retry.
+    pub base_delay: Duration,
+    /// Backoff ceiling.
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_retries: 5,
+            base_delay: Duration::from_millis(25),
+            max_delay: Duration::from_secs(2),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (0-based): `base * 2^attempt`,
+    /// capped, with up to +50% multiplicative jitter so a herd of
+    /// rejected clients does not retry in lockstep.
+    fn delay(&self, attempt: u32, jitter: f64) -> Duration {
+        let exp = self.base_delay.saturating_mul(1u32 << attempt.min(16));
+        let capped = exp.min(self.max_delay);
+        capped.mul_f64(1.0 + 0.5 * jitter.clamp(0.0, 1.0))
+    }
 }
 
 #[cfg(test)]
@@ -664,5 +978,36 @@ mod tests {
     fn busy_errors_are_recognizable() {
         assert!(is_busy(&VszError::runtime("server busy: cap")));
         assert!(!is_busy(&VszError::runtime("server error: boom")));
+    }
+
+    #[test]
+    fn retryable_classification_covers_busy_and_timeouts() {
+        assert!(is_retryable(&VszError::runtime("server busy: cap")));
+        let t = std::io::Error::new(std::io::ErrorKind::WouldBlock, "stall");
+        assert!(is_retryable(&VszError::Io(t)));
+        let t = std::io::Error::new(std::io::ErrorKind::TimedOut, "stall");
+        assert!(is_timeout(&VszError::Io(t)));
+        assert!(!is_retryable(&VszError::runtime("server error: boom")));
+        assert!(!is_retryable(&VszError::format("bad frame")));
+    }
+
+    #[test]
+    fn retry_policy_backoff_is_capped_and_jittered() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.delay(0, 0.0), Duration::from_millis(25));
+        assert_eq!(p.delay(3, 0.0), Duration::from_millis(200));
+        assert_eq!(p.delay(30, 0.0), Duration::from_secs(2), "exponent must cap, not overflow");
+        assert_eq!(p.delay(1, 1.0), Duration::from_millis(75));
+        assert_eq!(p.delay(2, 7.5), Duration::from_millis(150), "jitter factor clamps to [0,1]");
+    }
+
+    #[test]
+    fn request_ctx_deadline_expiry() {
+        let ctx = RequestCtx::new(0);
+        assert!(ctx.deadline.is_none() && !ctx.expired(), "0 disables the deadline");
+        let ctx = RequestCtx::new(1);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(ctx.expired());
+        assert!(!ctx.cancel.is_cancelled(), "expiry alone does not flip the token");
     }
 }

@@ -219,6 +219,7 @@ pub(crate) fn encode_chunk(
     overlap_aux: bool,
     opts: StreamOptions,
 ) -> Result<(Vec<u8>, ChunkOut)> {
+    crate::failpoint::hit("chunk_encode")?;
     let mut cfg = cfg;
     if let Some(ts) = opts.chunk_autotune {
         if field.data.len() >= CHUNK_AUTOTUNE_MIN_ELEMS
@@ -373,7 +374,7 @@ impl<W: Write> StreamCompressor<W> {
                 meta,
             });
         }
-        self.out.write_all(frame)?;
+        crate::failpoint::write_through("frame_write", &mut self.out, frame)?;
         self.stats.compressed_bytes += frame.len();
         self.next_write += 1;
         Ok(())
@@ -534,14 +535,25 @@ pub fn compress_stream<R: Read, W: Write>(
 /// how large the input file is — the cheap half of the memory-mapped-input
 /// roadmap item.
 pub fn compress_stream_with<R: Read, W: Write>(
-    mut input: R,
+    input: R,
     out: W,
     dims: Dims,
     cfg: &Config,
     chunk_span: usize,
     opts: StreamOptions,
 ) -> Result<StreamStats> {
-    let mut sc = StreamCompressor::with_options(out, dims, cfg, chunk_span, opts)?;
+    let sc = StreamCompressor::with_options(out, dims, cfg, chunk_span, opts)?;
+    drive_stream(input, sc)
+}
+
+/// Pump a raw little-endian f32 reader through an already-constructed
+/// compressor (fresh or [resumed](StreamCompressor::resume)) to
+/// completion: the shared back half of [`compress_stream_with`] and
+/// [`resume_stream_with`].
+fn drive_stream<R: Read, W: Write>(
+    mut input: R,
+    mut sc: StreamCompressor<W>,
+) -> Result<StreamStats> {
     let slab_elems =
         sc.chunk_span.saturating_mul(sc.row_elems).clamp(1, MAX_READ_CHUNK_BYTES / 4);
     let mut slab = vec![0.0f32; slab_elems];
@@ -843,6 +855,7 @@ impl<R: Read> StreamDecompressor<R> {
             None => Ok(None),
             Some((h, sections)) => {
                 let extent = h.dims.shape[0];
+                crate::failpoint::hit("chunk_decode")?;
                 let data = decode_body(&h, &sections, 1)?;
                 Ok(Some(DecodedChunk {
                     index: self.next_index - 1,
@@ -1125,12 +1138,19 @@ fn decode_batch(
             let shared = Arc::new(batch);
             let shared2 = Arc::clone(&shared);
             let results = pool.scatter_gather(shared.len(), move |i| {
+                crate::failpoint::hit("chunk_decode")?;
                 let (h, sections) = &shared2[i];
                 decode_body(h, sections, 1)
             });
             results.into_iter().collect()
         }
-        _ => batch.iter().map(|(h, sections)| decode_body(h, sections, 1)).collect(),
+        _ => batch
+            .iter()
+            .map(|(h, sections)| {
+                crate::failpoint::hit("chunk_decode")?;
+                decode_body(h, sections, 1)
+            })
+            .collect(),
     }
 }
 
@@ -1261,6 +1281,500 @@ pub fn decompress_chunked(bytes: &[u8], threads: usize) -> Result<Field> {
     }
     debug_assert_eq!(data.len(), dims.shape[0] * row_elems);
     Ok(Field::new("decompressed", dims, data))
+}
+
+// ------------------------------------------- crash recovery: salvage
+
+/// One quarantined span of a damaged container: the chunks that could not
+/// be reconstructed between two recovered (or terminal) positions.
+#[derive(Clone, Debug)]
+pub struct SalvageHole {
+    /// First missing chunk index.
+    pub chunk_index: u64,
+    /// Number of consecutive missing chunks.
+    pub n_chunks: u64,
+    /// Leading-dim rows the hole covers.
+    pub rows: Range<usize>,
+    /// Byte offset where the damage was first observed.
+    pub byte_offset: u64,
+    /// What went wrong (CRC mismatch, truncation, decode failure, …).
+    pub reason: String,
+}
+
+/// Outcome of a [`StreamDecompressor::salvage`] walk.
+#[derive(Clone, Debug, Default)]
+pub struct SalvageReport {
+    /// Chunks the container should hold (from header dims / chunk span).
+    pub total_chunks: u64,
+    /// Leading-dim rows the full field holds.
+    pub total_rows: usize,
+    /// Indices of the chunks reconstructed bit-exactly (CRC-verified).
+    pub recovered: Vec<u64>,
+    /// Quarantined spans, in file order.
+    pub holes: Vec<SalvageHole>,
+    /// Rows covered by recovered chunks.
+    pub rows_recovered: usize,
+    /// Whether the v3 index footer loaded and validated.
+    pub footer_ok: bool,
+    /// Whether a CRC-valid END trailer was seen.
+    pub trailer_found: bool,
+}
+
+impl SalvageReport {
+    /// Fully intact: every chunk recovered and the terminal records agree.
+    pub fn is_complete(&self) -> bool {
+        self.holes.is_empty() && self.recovered.len() as u64 == self.total_chunks
+    }
+
+    /// Hole report as JSON (the `vsz stream salvage` output).
+    pub fn to_json(&self) -> String {
+        let holes: Vec<String> = self
+            .holes
+            .iter()
+            .map(|h| {
+                format!(
+                    "{{\"chunk\":{},\"n_chunks\":{},\"rows\":[{},{}],\"byte_offset\":{},\
+                     \"reason\":\"{}\"}}",
+                    h.chunk_index,
+                    h.n_chunks,
+                    h.rows.start,
+                    h.rows.end,
+                    h.byte_offset,
+                    h.reason.replace('\\', "\\\\").replace('"', "\\\"")
+                )
+            })
+            .collect();
+        format!(
+            "{{\"total_chunks\":{},\"recovered_chunks\":{},\"rows_recovered\":{},\
+             \"total_rows\":{},\"footer_ok\":{},\"trailer_found\":{},\"complete\":{},\
+             \"holes\":[{}]}}",
+            self.total_chunks,
+            self.recovered.len(),
+            self.rows_recovered,
+            self.total_rows,
+            self.footer_ok,
+            self.trailer_found,
+            self.is_complete(),
+            holes.join(",")
+        )
+    }
+}
+
+impl<R: Read + Seek> StreamDecompressor<R> {
+    /// Best-effort reconstruction of a damaged container.
+    ///
+    /// When the v3 index footer loads and validates, every entry is tried
+    /// independently: a chunk whose frame fails its CRC (or decode) is
+    /// quarantined and the walk continues at the next entry. When the
+    /// footer is missing or corrupt (torn tail, truncation, v2 input), the
+    /// file is walked front-to-back instead: frames parse sequentially,
+    /// and after a corrupt region the scan resynchronizes on the next
+    /// byte-offset whose frame parses CRC-clean with a plausible chunk
+    /// index and extent. Either way the result is every reconstructable
+    /// chunk (bit-exact — nothing CRC-failed is ever returned) plus a
+    /// [`SalvageReport`] naming the holes.
+    ///
+    /// The stream header itself must be intact — without its dims, error
+    /// bound and chunk span nothing can be reconstructed or validated.
+    pub fn salvage(&mut self) -> Result<(Vec<DecodedChunk>, SalvageReport)> {
+        let dims = self.header.header.dims;
+        let span = self.header.chunk_span as usize;
+        if span == 0 {
+            return Err(VszError::format("salvage: header declares a zero chunk span"));
+        }
+        let total_rows = dims.shape[0];
+        let total_chunks = total_rows.div_ceil(span) as u64;
+        let mut report = SalvageReport {
+            total_chunks,
+            total_rows,
+            ..SalvageReport::default()
+        };
+        // extent chunk `k` must have under the header geometry
+        let extent_of =
+            |k: u64| -> usize { (total_rows - (k as usize * span).min(total_rows)).min(span) };
+        let rows_of = |k: u64| -> Range<usize> {
+            let lo = (k as usize * span).min(total_rows);
+            lo..(lo + extent_of(k)).min(total_rows)
+        };
+
+        let mut out: Vec<DecodedChunk> = Vec::new();
+        if self.header.version >= format::VERSION3 {
+            if let Ok(idx) = self.read_index() {
+                // footer-guided: every frame's byte range is known, so a
+                // corrupt chunk quarantines alone and costs no resync
+                report.footer_ok = true;
+                report.trailer_found = true; // validate_index bounds the trailer
+                self.index = Some(idx.clone());
+                for k in 0..idx.n_chunks() {
+                    let e = idx.entries[k];
+                    match self
+                        .parse_indexed_frame(k)
+                        .and_then(|(h, sections)| {
+                            let extent = h.dims.shape[0];
+                            decode_body(&h, &sections, 1).map(|d| (extent, d))
+                        }) {
+                        Ok((extent, data)) => {
+                            out.push(DecodedChunk {
+                                index: k as u64,
+                                lead_offset: idx.lead_offsets[k],
+                                lead_extent: extent,
+                                data,
+                            });
+                            report.recovered.push(k as u64);
+                            report.rows_recovered += extent;
+                        }
+                        Err(err) => report.holes.push(SalvageHole {
+                            chunk_index: k as u64,
+                            n_chunks: 1,
+                            rows: rows_of(k as u64),
+                            byte_offset: e.offset,
+                            reason: err.to_string(),
+                        }),
+                    }
+                }
+                return Ok((out, report));
+            }
+        }
+
+        // sequential walk with resynchronization
+        let file_len = self.input.seek(SeekFrom::End(0))?;
+        let mut pos = format::STREAM_HEADER_LEN as u64;
+        let mut expected: u64 = 0;
+        let mut pending_hole: Option<(u64, u64, String)> = None; // (first chunk, byte, reason)
+        let mut close_hole =
+            |report: &mut SalvageReport, pending: &mut Option<(u64, u64, String)>, upto: u64| {
+                if let Some((first, byte, reason)) = pending.take() {
+                    if upto > first {
+                        report.holes.push(SalvageHole {
+                            chunk_index: first,
+                            n_chunks: upto - first,
+                            rows: (first as usize * span).min(total_rows)
+                                ..(upto as usize * span).min(total_rows),
+                            byte_offset: byte,
+                            reason,
+                        });
+                    }
+                }
+            };
+        while expected < total_chunks && pos < file_len {
+            self.input.seek(SeekFrom::Start(pos))?;
+            match read_frame_io(&mut self.input, self.header.version) {
+                Ok(Frame::Chunk { index, lead_extent, meta, sections }) => {
+                    let end = self.input.stream_position()?;
+                    let plausible = index >= expected
+                        && index < total_chunks
+                        && lead_extent as usize == extent_of(index);
+                    if !plausible {
+                        // CRC-clean but geometrically wrong (e.g. a stale
+                        // frame after truncation+rewrite): treat as damage
+                        if pending_hole.is_none() {
+                            pending_hole =
+                                Some((expected, pos, format!("implausible frame at {pos}")));
+                        }
+                        match self.resync(pos + 1, file_len, expected, total_chunks)? {
+                            Some(next) => pos = next,
+                            None => break,
+                        }
+                        continue;
+                    }
+                    if index > expected && pending_hole.is_none() {
+                        pending_hole = Some((expected, pos, "frames skipped".into()));
+                    }
+                    close_hole(&mut report, &mut pending_hole, index);
+                    let h = self.chunk_header(lead_extent as usize, meta);
+                    match decode_body(&h, &sections, 1) {
+                        Ok(data) => {
+                            out.push(DecodedChunk {
+                                index,
+                                lead_offset: (index as usize) * span,
+                                lead_extent: lead_extent as usize,
+                                data,
+                            });
+                            report.recovered.push(index);
+                            report.rows_recovered += lead_extent as usize;
+                        }
+                        Err(err) => report.holes.push(SalvageHole {
+                            chunk_index: index,
+                            n_chunks: 1,
+                            rows: rows_of(index),
+                            byte_offset: pos,
+                            reason: format!("decode failed: {err}"),
+                        }),
+                    }
+                    expected = index + 1;
+                    pos = end;
+                }
+                Ok(Frame::End { .. }) => {
+                    report.trailer_found = true;
+                    break;
+                }
+                Err(err) => {
+                    if pending_hole.is_none() {
+                        pending_hole = Some((expected, pos, err.to_string()));
+                    }
+                    match self.resync(pos + 1, file_len, expected, total_chunks)? {
+                        Some(next) => pos = next,
+                        None => break,
+                    }
+                }
+            }
+        }
+        // all chunks recovered: the loop exits before touching the
+        // trailer, so probe for it separately (report completeness only)
+        if !report.trailer_found && expected == total_chunks && pos < file_len {
+            self.input.seek(SeekFrom::Start(pos))?;
+            if let Ok(Frame::End { .. }) = read_frame_io(&mut self.input, self.header.version) {
+                report.trailer_found = true;
+            }
+        }
+        close_hole(&mut report, &mut pending_hole, total_chunks);
+        if expected < total_chunks && report.holes.last().map(|h| h.chunk_index + h.n_chunks)
+            != Some(total_chunks)
+        {
+            report.holes.push(SalvageHole {
+                chunk_index: expected,
+                n_chunks: total_chunks - expected,
+                rows: (expected as usize * span).min(total_rows)..total_rows,
+                byte_offset: file_len,
+                reason: "container ends early".into(),
+            });
+        }
+        Ok((out, report))
+    }
+
+    /// Scan forward from `from` for the next byte offset whose frame
+    /// parses CRC-clean with a plausible index/extent (or a valid END
+    /// trailer). Returns the offset to resume the walk at, or `None` when
+    /// the rest of the file yields nothing.
+    fn resync(
+        &mut self,
+        from: u64,
+        file_len: u64,
+        expected: u64,
+        total_chunks: u64,
+    ) -> Result<Option<u64>> {
+        let span = self.header.chunk_span as usize;
+        let total_rows = self.header.header.dims.shape[0];
+        let extent_of =
+            |k: u64| -> usize { (total_rows - (k as usize * span).min(total_rows)).min(span) };
+        let mut window = vec![0u8; 64 * 1024];
+        let mut base = from;
+        while base < file_len {
+            let take = window.len().min((file_len - base) as usize);
+            self.input.seek(SeekFrom::Start(base))?;
+            self.input.read_exact(&mut window[..take])?;
+            for i in 0..take {
+                let marker = window[i];
+                if marker != format::CHUNK_TAG && marker != format::END_TAG {
+                    continue;
+                }
+                let cand = base + i as u64;
+                self.input.seek(SeekFrom::Start(cand))?;
+                match read_frame_io(&mut self.input, self.header.version) {
+                    Ok(Frame::Chunk { index, lead_extent, .. })
+                        if index >= expected
+                            && index < total_chunks
+                            && lead_extent as usize == extent_of(index) =>
+                    {
+                        return Ok(Some(cand));
+                    }
+                    Ok(Frame::End { .. }) => return Ok(Some(cand)),
+                    _ => {}
+                }
+            }
+            base += take as u64;
+        }
+        Ok(None)
+    }
+}
+
+// -------------------------------------------- crash recovery: resume
+
+/// What a scan of a partial container found: everything needed to truncate
+/// after the last CRC-valid chunk and continue the run.
+#[derive(Clone, Debug)]
+pub struct ResumeState {
+    /// The partial container's stream header.
+    pub header: StreamHeader,
+    /// CRC-valid chunks on disk, contiguous from chunk 0.
+    pub n_chunks_done: u64,
+    /// Leading-dim rows those chunks cover.
+    pub rows_done: usize,
+    /// Byte offset just past the last valid chunk frame — truncate the
+    /// file here before resuming.
+    pub truncate_at: u64,
+    /// Index entries of the valid chunks (seeds the v3 footer).
+    pub index: Vec<ChunkIndexEntry>,
+    /// The container already ends in a valid trailer: nothing to resume.
+    pub complete: bool,
+}
+
+/// Scan a partial container for the longest CRC-valid chunk prefix.
+///
+/// Walks frames from the header forward; the walk stops at the first torn
+/// frame, CRC mismatch, out-of-order index or EOF. Chunks after a damaged
+/// one are ignored even if intact — resume rewrites everything past the
+/// truncation point, which is what makes the resumed output byte-identical
+/// to an uninterrupted run.
+pub fn scan_resumable<R: Read + Seek>(mut input: R) -> Result<ResumeState> {
+    input.seek(SeekFrom::Start(0))?;
+    let mut hdr = [0u8; format::STREAM_HEADER_LEN];
+    input.read_exact(&mut hdr)?;
+    let header = format::read_stream_header(&hdr)?;
+    let dims = header.header.dims;
+    let span = header.chunk_span as usize;
+    if span == 0 {
+        return Err(VszError::format("resume: header declares a zero chunk span"));
+    }
+    let total_rows = dims.shape[0];
+    let mut state = ResumeState {
+        header,
+        n_chunks_done: 0,
+        rows_done: 0,
+        truncate_at: format::STREAM_HEADER_LEN as u64,
+        index: Vec::new(),
+        complete: false,
+    };
+    loop {
+        let frame_start = input.stream_position()?;
+        match read_frame_io(&mut input, header.version) {
+            Ok(Frame::Chunk { index, lead_extent, meta, sections: _ }) => {
+                let remaining = total_rows - state.rows_done;
+                let extent = lead_extent as usize;
+                let good = index == state.n_chunks_done
+                    && extent <= remaining
+                    && (extent == span || extent == remaining);
+                if !good {
+                    break;
+                }
+                let end = input.stream_position()?;
+                state.index.push(ChunkIndexEntry {
+                    offset: frame_start,
+                    frame_len: end - frame_start,
+                    lead_extent,
+                    meta: meta.unwrap_or(ChunkMeta {
+                        block_size: header.header.block_size,
+                        width: 0,
+                    }),
+                });
+                state.n_chunks_done += 1;
+                state.rows_done += extent;
+                state.truncate_at = end;
+            }
+            Ok(Frame::End { n_chunks }) => {
+                state.complete =
+                    n_chunks == state.n_chunks_done && state.rows_done == total_rows;
+                break;
+            }
+            Err(_) => break,
+        }
+    }
+    Ok(state)
+}
+
+impl<W: Write> StreamCompressor<W> {
+    /// Continue an interrupted run. `out` must already be truncated to
+    /// [`ResumeState::truncate_at`] and positioned there; the compressor
+    /// seeds its chunk counter, leading-dim position, byte offset and
+    /// index entries from `state` and does **not** rewrite the header.
+    ///
+    /// The request's dims/config/span must reproduce the partial file's
+    /// header exactly — chunk geometry is what makes the resumed container
+    /// byte-identical to an uninterrupted run — otherwise this errors
+    /// before touching the output. Feed only the samples from
+    /// [`ResumeState::rows_done`] onward ([`resume_stream_with`] handles
+    /// the skip), then [`finish`](Self::finish) as usual; the trailer and
+    /// footer cover the pre-crash chunks too.
+    pub fn resume(
+        out: W,
+        dims: Dims,
+        cfg: &Config,
+        chunk_span: usize,
+        opts: StreamOptions,
+        state: &ResumeState,
+    ) -> Result<Self> {
+        let plan = plan_chunks(dims, cfg, chunk_span, opts)?;
+        let expect = format::write_stream_header(&state.header)?;
+        if plan.header != expect {
+            return Err(VszError::config(
+                "resume: dims/config/chunk-span do not reproduce the partial \
+                 container's header — resuming would not be byte-identical",
+            ));
+        }
+        if state.complete {
+            return Err(VszError::config("resume: container is already complete"));
+        }
+        let ChunkPlan { cfg, span, header: _ } = plan;
+        let threads = cfg.threads.max(1);
+        let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
+        let (tx, rx) = channel();
+        let row_elems = dims.shape[1] * dims.shape[2];
+        Ok(Self {
+            out,
+            cfg,
+            opts,
+            dims,
+            chunk_span: span,
+            row_elems,
+            total_elems: dims.len(),
+            received: state.rows_done * row_elems,
+            lead_done: state.rows_done,
+            buf: Vec::new(),
+            chunk_index: state.n_chunks_done,
+            stats: StreamStats {
+                raw_bytes: dims.len() * 4,
+                n_elements: dims.len(),
+                // byte offset on disk: header + valid frames — index
+                // entries for new chunks continue from here
+                compressed_bytes: state.truncate_at as usize,
+                n_chunks: state.n_chunks_done as usize,
+                ..StreamStats::default()
+            },
+            index: if opts.version >= format::VERSION3 {
+                state.index.clone()
+            } else {
+                Vec::new()
+            },
+            pool,
+            tx,
+            rx,
+            window: threads,
+            in_flight: 0,
+            next_write: state.n_chunks_done,
+            ready: BTreeMap::new(),
+        })
+    }
+}
+
+/// [`compress_stream_with`] for a resumed run: skips the raw samples the
+/// partial container already covers, then continues chunk-for-chunk. The
+/// final container is byte-identical to an uninterrupted
+/// [`compress_stream_with`] of the same input.
+pub fn resume_stream_with<R: Read, W: Write>(
+    mut input: R,
+    out: W,
+    dims: Dims,
+    cfg: &Config,
+    chunk_span: usize,
+    opts: StreamOptions,
+    state: &ResumeState,
+) -> Result<StreamStats> {
+    let sc = StreamCompressor::resume(out, dims, cfg, chunk_span, opts, state)?;
+    // discard the bytes of the rows already on disk (plain reads, so
+    // non-seekable inputs — pipes — resume too)
+    let mut skip = state.rows_done as u64 * sc.row_elems as u64 * 4;
+    let mut scratch = vec![0u8; 64 * 1024];
+    while skip > 0 {
+        let take = scratch.len().min(skip as usize);
+        let n = input.read(&mut scratch[..take])?;
+        if n == 0 {
+            return Err(VszError::format(
+                "resume: input ended before the already-compressed prefix",
+            ));
+        }
+        skip -= n as u64;
+    }
+    drive_stream(input, sc)
 }
 
 #[cfg(test)]
@@ -1650,13 +2164,145 @@ mod tests {
             assert!(dec.load_index().is_err(), "footer flip at {at} accepted");
             // the full decoder cross-checks the footer too
             assert!(decompress_chunked(&bad, 1).is_err(), "full decode accepted flip at {at}");
+            // salvage must fall back to the sequential walk and still
+            // recover every chunk — the frames and trailer are intact
+            let mut sdec = StreamDecompressor::new(std::io::Cursor::new(&bad)).unwrap();
+            let (_, report) = sdec.salvage().unwrap();
+            assert!(!report.footer_ok, "flip at {at}: footer accepted by salvage");
+            assert!(report.is_complete(), "flip at {at}: salvage lost chunks");
+            assert!(report.trailer_found, "flip at {at}: trailer missed");
         }
-        // footer truncations: random access must fail cleanly
+        // footer truncations: random access must fail cleanly, salvage
+        // must recover everything (only footer bytes are missing)
         for cut in [bytes.len() - 1, bytes.len() - 4, bytes.len() - ft + 2, start] {
             let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes[..cut])).unwrap();
             assert!(dec.load_index().is_err(), "cut at {cut} accepted");
             assert!(decompress_chunked(&bytes[..cut], 1).is_err());
+            let mut sdec = StreamDecompressor::new(std::io::Cursor::new(&bytes[..cut])).unwrap();
+            let (_, report) = sdec.salvage().unwrap();
+            assert!(report.is_complete(), "cut at {cut}: salvage lost chunks");
         }
+    }
+
+    #[test]
+    fn salvage_quarantines_a_corrupt_chunk_and_recovers_the_rest() {
+        let field = smooth_field(Dims::d2(64, 24), 211);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 16).unwrap();
+        assert_eq!(stats.n_chunks, 4);
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        let entries = dec.load_index().unwrap().entries.clone();
+        let reference: Vec<DecodedChunk> = (0..4).map(|k| dec.decode_chunk(k).unwrap()).collect();
+
+        // flip a payload byte inside chunk 1's frame: the footer is still
+        // valid, so the footer-guided path quarantines exactly that chunk
+        let mut bad = bytes.clone();
+        let mid = (entries[1].offset + entries[1].frame_len * 3 / 4) as usize;
+        bad[mid] ^= 0x5A;
+        let mut sdec = StreamDecompressor::new(std::io::Cursor::new(&bad)).unwrap();
+        let (chunks, report) = sdec.salvage().unwrap();
+        assert!(report.footer_ok);
+        assert_eq!(report.recovered, vec![0, 2, 3]);
+        assert_eq!(report.rows_recovered, 48);
+        assert_eq!(report.holes.len(), 1, "{:?}", report.holes);
+        assert_eq!(report.holes[0].chunk_index, 1);
+        assert_eq!(report.holes[0].n_chunks, 1);
+        assert_eq!(report.holes[0].rows, 16..32);
+        assert!(!report.is_complete());
+        for c in &chunks {
+            let r = &reference[c.index as usize];
+            assert_eq!(c.lead_offset, r.lead_offset);
+            assert_eq!(c.data, r.data, "salvaged chunk {} not bit-exact", c.index);
+        }
+        let json = report.to_json();
+        assert!(json.contains("\"complete\":false"), "{json}");
+        assert!(json.contains("\"rows\":[16,32]"), "{json}");
+
+        // damage the footer too: the sequential walk must resynchronize
+        // past the bad frame and recover the same three chunks
+        let flen = footer_total(&bad);
+        let blen = bad.len();
+        bad[blen - flen] ^= 0xFF;
+        let mut sdec = StreamDecompressor::new(std::io::Cursor::new(&bad)).unwrap();
+        let (chunks2, report2) = sdec.salvage().unwrap();
+        assert!(!report2.footer_ok);
+        assert!(report2.trailer_found, "sequential walk must still find the END trailer");
+        assert_eq!(report2.recovered, vec![0, 2, 3]);
+        assert_eq!(report2.holes.len(), 1);
+        assert_eq!(report2.holes[0].chunk_index, 1);
+        assert_eq!(chunks2.len(), chunks.len());
+        for (a, b) in chunks2.iter().zip(chunks.iter()) {
+            assert_eq!(a.data, b.data, "footer-guided and sequential salvage disagree");
+        }
+    }
+
+    #[test]
+    fn resume_completes_truncated_containers_byte_identically() {
+        let field = smooth_field(Dims::d2(64, 24), 223);
+        let cfg = Config { eb: EbMode::Abs(1e-3), threads: 1, ..Config::default() };
+        let (bytes, stats) = compress_chunked(&field, &cfg, 16).unwrap();
+        assert_eq!(stats.n_chunks, 4);
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&bytes)).unwrap();
+        let entries = dec.load_index().unwrap().entries.clone();
+        let raw: Vec<u8> = field.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+
+        // interrupt right after the header, at every clean frame boundary,
+        // and torn mid-frame: resume must complete each to the exact bytes
+        let mut cuts = vec![format::STREAM_HEADER_LEN as u64];
+        for e in &entries {
+            cuts.push(e.offset + e.frame_len);
+            cuts.push(e.offset + e.frame_len / 2);
+        }
+        for cut in cuts {
+            let prefix = &bytes[..cut as usize];
+            let state = scan_resumable(std::io::Cursor::new(prefix)).unwrap();
+            assert!(!state.complete, "cut {cut} cannot be complete");
+            assert!(state.truncate_at <= cut, "cut {cut}");
+            assert_eq!(state.rows_done, state.n_chunks_done as usize * 16);
+            let mut out = bytes[..state.truncate_at as usize].to_vec();
+            resume_stream_with(
+                std::io::Cursor::new(&raw[..]),
+                &mut out,
+                field.dims,
+                &cfg,
+                16,
+                StreamOptions::default(),
+                &state,
+            )
+            .unwrap();
+            assert_eq!(out, bytes, "cut {cut}: resumed container is not byte-identical");
+        }
+
+        // a complete container reports complete and refuses to resume
+        let state = scan_resumable(std::io::Cursor::new(&bytes[..])).unwrap();
+        assert!(state.complete);
+        assert_eq!(state.n_chunks_done, 4);
+        let err = StreamCompressor::resume(
+            Vec::new(),
+            field.dims,
+            &cfg,
+            16,
+            StreamOptions::default(),
+            &state,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("complete"), "{err}");
+
+        // mismatched settings are rejected before touching the output
+        let wrong = Config { eb: EbMode::Abs(2e-3), threads: 1, ..Config::default() };
+        let partial =
+            scan_resumable(std::io::Cursor::new(&bytes[..entries[1].offset as usize + 4])).unwrap();
+        assert_eq!(partial.n_chunks_done, 1);
+        let err = StreamCompressor::resume(
+            Vec::new(),
+            field.dims,
+            &wrong,
+            16,
+            StreamOptions::default(),
+            &partial,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("byte-identical"), "{err}");
     }
 
     #[test]

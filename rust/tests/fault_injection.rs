@@ -1,0 +1,322 @@
+//! Deterministic fault-injection tests (ISSUE-7): crash/torn-write
+//! recovery and deadline cancellation, driven by the `failpoint` module.
+//!
+//! The failpoint registry is process-global, so every test here serializes
+//! on one mutex and clears the configuration before returning — these
+//! tests must NOT share a binary with unrelated parallel tests.
+//!
+//! * kill-resume: a `vsz stream compress` subprocess is killed mid-run by
+//!   a `VECSZ_FAILPOINTS` panic/torn-write (site and hit configurable via
+//!   `VECSZ_FAILPOINTS_MATRIX`, the CI matrix hook); `--resume` must then
+//!   complete the container **byte-identically** to an uninterrupted run.
+//! * torn-write salvage: a torn frame write leaves a half-written frame;
+//!   `salvage()` must recover every intact chunk bit-exactly and report
+//!   the hole.
+//! * deadline cancellation: a failpoint-delayed chunk job makes a request
+//!   overrun its deadline; the reply must be `busy`, sibling jobs must
+//!   report cancellation, and the admission gauge must return to zero.
+//! * truncation sweep: every prefix of a valid container either salvages
+//!   cleanly or errors — never panics.
+
+use std::io::Cursor;
+use std::process::Command;
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use vecsz::compressor::{Config, EbMode};
+use vecsz::data::Field;
+use vecsz::failpoint;
+use vecsz::server::{is_busy, Client, ServeConfig, Server};
+use vecsz::stream::{self, StreamDecompressor};
+use vecsz::util::prng::Pcg32;
+
+/// Failpoints are process-global state: serialize every test in this
+/// binary (and recover from a poisoned lock — a failed test must not
+/// cascade).
+static FP_LOCK: Mutex<()> = Mutex::new(());
+
+fn fp_lock() -> MutexGuard<'static, ()> {
+    FP_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn smooth_field(name: &str, rows: usize, cols: usize, seed: u64) -> Field {
+    let dims = vecsz::blocks::Dims::d2(rows, cols);
+    let mut rng = Pcg32::seeded(seed);
+    let mut x = 0.0f32;
+    let data: Vec<f32> = (0..dims.len())
+        .map(|_| {
+            x += (rng.next_f32() - 0.5) * 0.1;
+            x
+        })
+        .collect();
+    Field::new(name, dims, data)
+}
+
+fn f32_le_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn serial_cfg(eb: f64) -> Config {
+    Config { eb: EbMode::Abs(eb), threads: 1, ..Config::default() }
+}
+
+fn start_server(cfg: ServeConfig) -> (String, std::thread::JoinHandle<()>) {
+    let srv = Server::bind("127.0.0.1:0", cfg).expect("bind ephemeral port");
+    let addr = srv.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || srv.run().expect("server run"));
+    (addr, h)
+}
+
+/// Scratch directory for subprocess artifacts, unique per test name so
+/// parallel `cargo test` binaries cannot collide.
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("vsz_fault_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("scratch dir");
+    dir
+}
+
+#[test]
+fn killed_compress_resumes_to_byte_identical_container() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    let dir = scratch("kill_resume");
+    let field = smooth_field("kr", 64, 48, 0xAB);
+    let input = dir.join("kr.f32");
+    std::fs::write(&input, f32_le_bytes(&field.data)).unwrap();
+    let out = dir.join("kr.vsz");
+    let reference_out = dir.join("kr_ref.vsz");
+    let _ = std::fs::remove_file(&out);
+
+    // the CI matrix can swap in any crash point; default: panic (simulated
+    // kill) while encoding the third chunk of eight
+    let fp = std::env::var("VECSZ_FAILPOINTS_MATRIX")
+        .unwrap_or_else(|_| "chunk_encode:3=panic".into());
+    let base_args = |out: &std::path::Path| {
+        vec![
+            "stream".to_string(),
+            "compress".to_string(),
+            "--input".into(),
+            input.to_str().unwrap().into(),
+            "--dims".into(),
+            "64x48".into(),
+            "--out".into(),
+            out.to_str().unwrap().to_string(),
+            "--eb".into(),
+            "1e-3".into(),
+            "--chunk-rows".into(),
+            "8".into(),
+        ]
+    };
+
+    // 1. the run dies at the injected fault, leaving a partial container
+    let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+        .args(base_args(&out))
+        .env("VECSZ_FAILPOINTS", &fp)
+        .status()
+        .expect("spawn vsz");
+    assert!(!status.success(), "failpoint '{fp}' should have aborted the compress");
+
+    // 2. --resume (no failpoints) completes the container
+    let mut resume_args = base_args(&out);
+    resume_args.push("--resume".into());
+    let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+        .args(&resume_args)
+        .env_remove("VECSZ_FAILPOINTS")
+        .status()
+        .expect("spawn vsz resume");
+    assert!(status.success(), "resume must succeed once the fault is gone");
+
+    // 3. an uninterrupted run of the same CLI is the byte-level reference
+    let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+        .args(base_args(&reference_out))
+        .env_remove("VECSZ_FAILPOINTS")
+        .status()
+        .expect("spawn vsz reference");
+    assert!(status.success());
+    let resumed = std::fs::read(&out).unwrap();
+    let reference = std::fs::read(&reference_out).unwrap();
+    assert_eq!(
+        resumed, reference,
+        "resumed container must be byte-identical to an uninterrupted run"
+    );
+
+    // and it decodes: the round-trip respects the bound
+    let mut dec = StreamDecompressor::new(Cursor::new(&resumed[..])).unwrap();
+    let mut decoded = Vec::new();
+    while let Some(c) = dec.next_chunk().unwrap() {
+        decoded.extend_from_slice(&c.data);
+    }
+    assert_eq!(decoded.len(), field.data.len());
+    for (a, b) in decoded.iter().zip(field.data.iter()) {
+        assert!((*a as f64 - *b as f64).abs() <= 1.0001e-3, "resumed container breaks the bound");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn torn_frame_write_salvages_the_valid_prefix() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    let field = smooth_field("torn", 48, 32, 0xC0); // span 8 -> 6 chunks
+    let cfg = serial_cfg(1e-3);
+    let (intact, _) = stream::compress_chunked(&field, &cfg, 8).unwrap();
+
+    // tear the third frame write: chunks 0 and 1 land whole, chunk 2 is
+    // half-written, nothing after it exists
+    let dir = scratch("torn");
+    let path = dir.join("torn.vsz");
+    failpoint::set_config_for_tests("frame_write:3=torn");
+    let err = stream::compress_stream_with(
+        Cursor::new(f32_le_bytes(&field.data)),
+        std::io::BufWriter::new(std::fs::File::create(&path).unwrap()),
+        field.dims,
+        &cfg,
+        8,
+        stream::StreamOptions::default(),
+    )
+    .unwrap_err();
+    failpoint::set_config_for_tests("");
+    assert!(err.to_string().contains("torn"), "unexpected error: {err}");
+
+    let mut dec = StreamDecompressor::new(std::fs::File::open(&path).unwrap()).unwrap();
+    let (chunks, report) = dec.salvage().expect("salvage walks the partial file");
+    assert_eq!(report.total_chunks, 6);
+    assert_eq!(report.recovered, vec![0, 1], "the two whole frames recover");
+    assert!(!report.is_complete());
+    assert!(!report.footer_ok && !report.trailer_found);
+    assert_eq!(report.holes.len(), 1, "holes: {:?}", report.holes);
+    assert_eq!(report.holes[0].chunk_index, 2);
+    assert_eq!(report.holes[0].n_chunks, 4);
+    assert_eq!(report.holes[0].rows, 16..48);
+    let json = report.to_json();
+    assert!(json.contains("\"complete\":false"), "{json}");
+
+    // recovered chunks are bit-exact against the intact container's decode
+    let mut reference = StreamDecompressor::new(Cursor::new(&intact[..])).unwrap();
+    for c in &chunks {
+        let r = reference.decode_chunk(c.index as usize).unwrap();
+        assert_eq!(c.lead_offset, r.lead_offset);
+        assert_eq!(c.data.len(), r.data.len());
+        for (a, b) in c.data.iter().zip(r.data.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "chunk {} differs", c.index);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deadline_expiry_cancels_chunk_jobs_and_recovers() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    // one worker + a 1000 ms stall on the first chunk encode: the three
+    // sibling jobs sit queued past the 150 ms deadline and must come back
+    // Cancelled when the executor dequeues them
+    let (addr, server) = start_server(ServeConfig {
+        threads: 1,
+        request_timeout_ms: 150,
+        ..ServeConfig::default()
+    });
+    let field = smooth_field("dl", 64, 48, 0x11); // span 16 -> 4 chunks
+    let cfg = serial_cfg(1e-3);
+    let (reference, _) = stream::compress_chunked(&field, &cfg, 16).unwrap();
+
+    failpoint::set_config_for_tests("chunk_encode:1=delay(1000)");
+    let mut c = Client::connect(&addr).expect("connect");
+    let t0 = Instant::now();
+    let err = c.compress("dl", "64x48", 1e-3, 16, &field.data).unwrap_err();
+    failpoint::set_config_for_tests("");
+    let waited = t0.elapsed();
+    assert!(is_busy(&err), "deadline reply must be busy-classified, got: {err}");
+    let msg = err.to_string();
+    assert!(msg.contains("deadline"), "reply must name the deadline: {msg}");
+    assert!(msg.contains("cancelled"), "sibling jobs must report cancellation: {msg}");
+    assert!(waited >= Duration::from_millis(150), "cannot reply before the deadline");
+
+    // same connection, fault gone: the request completes bit-identically
+    let (bytes, _) = c.compress("dl", "64x48", 1e-3, 16, &field.data).expect("recovers");
+    assert_eq!(bytes, reference, "post-deadline compress must be byte-identical");
+
+    // the timed-out request must not leak admission budget
+    let stats = c.stats().expect("stats");
+    let j = vecsz::util::json::parse(&stats).unwrap();
+    assert_eq!(
+        j.get("inflight_bytes").and_then(|v| v.as_f64()),
+        Some(0.0),
+        "admission gauge must return to zero: {stats}"
+    );
+    assert!(stats.contains("\"request_timeout_ms\":150"), "{stats}");
+
+    c.shutdown().expect("shutdown");
+    drop(c);
+    server.join().expect("server exits");
+}
+
+#[test]
+fn injected_response_write_error_fails_connection_not_server() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    let (addr, server) = start_server(ServeConfig { threads: 1, ..ServeConfig::default() });
+    // the very first response frame write errors: that connection dies,
+    // the server must keep accepting
+    failpoint::set_config_for_tests("serve_frame_write:1=err");
+    let mut c = Client::connect(&addr).expect("connect");
+    let err = c.stats().unwrap_err();
+    failpoint::set_config_for_tests("");
+    assert!(
+        err.to_string().contains("closed the connection") || matches!(err, vecsz::VszError::Io(_)),
+        "client should observe the dropped connection: {err}"
+    );
+    let mut c2 = Client::connect(&addr).expect("server still accepts");
+    assert!(c2.stats().is_ok(), "a fresh connection works");
+    c2.shutdown().expect("shutdown");
+    drop(c2);
+    server.join().expect("server exits");
+}
+
+#[test]
+fn every_prefix_of_a_container_salvages_or_errors_never_panics() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    let field = smooth_field("sweep", 32, 16, 0x77); // span 8 -> 4 chunks
+    let cfg = serial_cfg(1e-3);
+    let (container, _) = stream::compress_chunked(&field, &cfg, 8).unwrap();
+
+    let mut reference = StreamDecompressor::new(Cursor::new(&container[..])).unwrap();
+    let n_chunks = reference.load_index().unwrap().n_chunks();
+    let ref_chunks: Vec<Vec<f32>> =
+        (0..n_chunks).map(|k| reference.decode_chunk(k).unwrap().data).collect();
+
+    for cut in 0..=container.len() {
+        let prefix = container[..cut].to_vec();
+        // a cut inside the stream header cannot construct a decoder at
+        // all — a clean error, which is the contract
+        let Ok(mut dec) = StreamDecompressor::new(Cursor::new(prefix)) else { continue };
+        match dec.salvage() {
+            Ok((chunks, report)) => {
+                assert_eq!(
+                    chunks.len(),
+                    report.recovered.len(),
+                    "cut {cut}: report must count exactly the returned chunks"
+                );
+                assert!(report.rows_recovered <= report.total_rows, "cut {cut}");
+                for c in &chunks {
+                    // anything salvage hands back is bit-exact — a CRC-failed
+                    // chunk must be quarantined, never returned
+                    let r = &ref_chunks[c.index as usize];
+                    assert_eq!(c.data.len(), r.len(), "cut {cut} chunk {}", c.index);
+                    for (a, b) in c.data.iter().zip(r.iter()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "cut {cut} chunk {}", c.index);
+                    }
+                }
+                if cut == container.len() {
+                    assert!(report.is_complete(), "the untruncated container is complete");
+                }
+            }
+            Err(_) => {} // clean errors are acceptable; panics are not
+        }
+    }
+}
