@@ -2,8 +2,15 @@
 //! chunked compression (with and without per-chunk autotuning, so the
 //! tuner's overhead is a tracked number), full chunk-parallel decode, and
 //! random access through the VSZ3 index footer (single chunk and row
-//! range vs. decoding everything). Emits the machine-readable perf
-//! trajectory `BENCH_stream.json`; honour `VECSZ_BENCH_QUICK=1` in CI.
+//! range vs. decoding everything), plus the PR 8 `Dataset` handle:
+//! cold region reads (open + fill) vs. warm overlapping-window reads
+//! served from the decoded-chunk LRU cache. Emits the machine-readable
+//! perf trajectory `BENCH_stream.json`; honour `VECSZ_BENCH_QUICK=1`
+//! in CI.
+
+// The legacy random-access rows deliberately keep exercising the
+// deprecated StreamDecompressor wrappers so their cost stays tracked.
+#![allow(deprecated)]
 
 use vecsz::autotune::TuneSettings;
 use vecsz::bench::{bench, BenchOpts, BenchStats};
@@ -11,8 +18,8 @@ use vecsz::blocks::Dims;
 use vecsz::compressor::{BackendChoice, Config, EbMode};
 use vecsz::data::Field;
 use vecsz::stream::{
-    compress_chunked, compress_chunked_with, decompress_chunked, StreamDecompressor,
-    StreamOptions,
+    compress_chunked, compress_chunked_with, decompress_chunked, Dataset, DatasetOptions,
+    Region, StreamDecompressor, StreamOptions,
 };
 use vecsz::util::prng::Pcg32;
 
@@ -126,6 +133,50 @@ fn main() {
         );
         println!("{}", s.row());
         rows.push(json_row("decode-rows-half", threads, &s));
+    }
+
+    // ---- Dataset handle: cold open+read vs. warm overlapping windows ----
+    // Cold: a fresh handle per iteration pays open + index + chunk fill.
+    // Warm: one primed handle serves two overlapping row windows from the
+    // decoded-chunk LRU cache (zero chunk decodes once warm).
+    for threads in [1usize, 4] {
+        let s = bench(
+            &format!("dataset read cold: rows {lo}..{hi} {threads}T"),
+            range_bytes,
+            opts,
+            || {
+                let ds = Dataset::open_with(
+                    std::io::Cursor::new(&container),
+                    DatasetOptions { threads, ..DatasetOptions::default() },
+                )
+                .unwrap();
+                std::hint::black_box(ds.read(Region::Rows(lo..hi)).unwrap());
+            },
+        );
+        println!("{}", s.row());
+        rows.push(json_row("dataset-read-cold", threads, &s));
+    }
+    for threads in [1usize, 4] {
+        let ds = Dataset::open_with(
+            std::io::Cursor::new(&container),
+            DatasetOptions { threads, ..DatasetOptions::default() },
+        )
+        .unwrap();
+        // prime both overlapping windows so the measured loop is all hits
+        ds.read(Region::Rows(lo..hi)).unwrap();
+        ds.read(Region::Rows(lo + SPAN..hi + SPAN)).unwrap();
+        let warm_bytes = 2 * range_bytes;
+        let s = bench(
+            &format!("dataset read warm: overlapping rows {threads}T"),
+            warm_bytes,
+            opts,
+            || {
+                std::hint::black_box(ds.read(Region::Rows(lo..hi)).unwrap());
+                std::hint::black_box(ds.read(Region::Rows(lo + SPAN..hi + SPAN)).unwrap());
+            },
+        );
+        println!("{}", s.row());
+        rows.push(json_row("dataset-read-warm", threads, &s));
     }
 
     let doc = format!(

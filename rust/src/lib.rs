@@ -11,9 +11,11 @@
 //! * [`compressor`] — `compress`/`decompress` over whole in-memory fields.
 //! * [`stream`] — the chunked streaming engine (`StreamCompressor`/
 //!   `StreamDecompressor` over `std::io::Read`/`Write`) for out-of-core
-//!   fields, chunk-parallel decode, per-chunk autotuning and index-driven
-//!   random access (`decode_chunk`/`decode_range`/`decode_rows`, plus
-//!   `decode_dim`/`decode_cols` for column/plane ranges along any axis).
+//!   fields, chunk-parallel decode and per-chunk autotuning. Index-driven
+//!   random access lives behind [`stream::dataset`]: open a container
+//!   once as a `Dataset`, then `read` any `Region` (chunk / chunk range /
+//!   rows / axis range / all) through a memory-bounded decoded-chunk LRU
+//!   cache with single-flight, chunk-parallel miss filling.
 //! * [`data`] — synthetic SDRBench-like dataset suites.
 //! * [`metrics`] — PSNR / rate-distortion evaluation.
 //! * [`autotune`] — block-size/lane-width/backend autotuning.

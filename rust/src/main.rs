@@ -65,11 +65,12 @@ COMMANDS
              extract    --input F.vsz --out F.f32 [--threads N]
                         (--chunk K | --rows LO:HI | --cols LO:HI |
                          --planes LO:HI)
-                        (random access: one chunk or a row range read only
-                        the footer + the frames they cover; --cols slices
-                        the last axis and --planes the middle axis of a 3D
-                        field — every chunk overlaps those, so all chunks
-                        decode chunk-parallel and the extent is gathered)
+                        (random access through a Dataset handle: one chunk
+                        or a row range read only the footer + the frames
+                        they cover; --cols slices the last axis and
+                        --planes the middle axis of a 3D field — every
+                        chunk overlaps those, so all chunks decode
+                        chunk-parallel and the extent is gathered)
              salvage    --input F.vsz [--out F.f32]
                         (best-effort recovery of a damaged container:
                         walks the file front to back, reconstructs every
@@ -89,15 +90,18 @@ COMMANDS
   gen-data   --suite NAME --out-dir D [--full]
   serve      [--addr HOST:PORT] [--threads N] [--max-inflight-mb MB]
              [--max-conns N] [--chunk-rows N] [--request-timeout-ms MS]
-             | --status [--addr HOST:PORT]
+             [--cache-mb MB] | --status [--addr HOST:PORT]
              (long-running framed-TCP compression service: compress /
              decompress / extract / stats requests over one shared chunk
              pool; requests past the in-flight byte cap are rejected with
              a busy frame; --request-timeout-ms sets a per-request
              deadline — an expired or disconnected request cancels its
              queued chunk jobs and replies busy, so callers can retry;
-             --status queries a running server's lifetime
-             CompressionStats)
+             --cache-mb bounds the server-wide decoded-chunk cache —
+             repeated extract/decompress of the same container hit warm
+             slabs instead of re-decoding (0 disables); --status queries
+             a running server's lifetime CompressionStats plus the cache
+             hit/miss/eviction/resident gauges)
   pipeline   --suite NAME --steps N [--out-dir D]
              [--stream [--chunk-rows N] [--tune-chunks]] [--verify-steps]
              (--stream writes each step as an indexed VSZ3 container;
@@ -236,10 +240,11 @@ fn cmd_stream(a: &Args) -> Result<()> {
                 iterations: a.usize_or("iterations", 1)?,
                 ..TuneSettings::default()
             };
-            let opts = vecsz::stream::StreamOptions {
-                chunk_autotune: a.has("tune-chunks").then_some(tune),
-                ..vecsz::stream::StreamOptions::default()
-            };
+            let mut builder = vecsz::stream::StreamOptions::builder();
+            if a.has("tune-chunks") {
+                builder = builder.chunk_autotune_with(tune);
+            }
+            let opts = builder.build();
             let fin = std::fs::File::open(&input)?;
             let expect = dims.len() as u64 * 4;
             let got = fin.metadata()?.len();
@@ -354,10 +359,14 @@ fn cmd_stream(a: &Args) -> Result<()> {
             Ok(())
         }
         "extract" => {
+            use vecsz::stream::{Dataset, DatasetOptions, Region};
             let out = require_out(a)?;
             let fin = std::fs::File::open(&input)?;
-            let mut dec = vecsz::stream::StreamDecompressor::new(BufReader::new(fin))?;
-            let ndim = dec.header().header.dims.ndim;
+            let ds = Dataset::open_with(
+                BufReader::new(fin),
+                DatasetOptions { threads, ..DatasetOptions::default() },
+            )?;
+            let ndim = ds.header().header.dims.ndim;
             let chunk = a.get("chunk").map(|s| s.to_string());
             let rows = a.get("rows").map(|s| s.to_string());
             let cols = a.get("cols").map(|s| s.to_string());
@@ -373,23 +382,24 @@ fn cmd_stream(a: &Args) -> Result<()> {
             let data = if let Some(k) = chunk {
                 let k: usize =
                     k.parse().map_err(|_| VszError::config("--chunk: not an integer"))?;
-                let c = dec.decode_chunk(k)?;
+                let data = ds.read(Region::Chunk(k))?;
+                let r = ds.chunk_rows(k).expect("read validated the chunk index");
                 println!(
                     "{input}: chunk {k} = rows {}..{} ({} values)",
-                    c.lead_offset,
-                    c.lead_offset + c.lead_extent,
-                    c.data.len()
+                    r.start,
+                    r.end,
+                    data.len()
                 );
-                c.data
+                data
             } else if let Some(r) = rows {
                 let (lo, hi) = parse_lo_hi(&r, "rows")?;
-                let data = dec.decode_rows(lo..hi, threads)?;
+                let data = ds.read(Region::Rows(lo..hi))?;
                 println!("{input}: rows {lo}..{hi} ({} values)", data.len());
                 data
             } else if let Some(r) = cols {
                 // the last (fastest-varying) axis: true columns in 2D & 3D
                 let (lo, hi) = parse_lo_hi(&r, "cols")?;
-                let data = dec.decode_cols(lo..hi, threads)?;
+                let data = ds.read(Region::Dim { dim: ndim - 1, range: lo..hi })?;
                 println!("{input}: cols {lo}..{hi} ({} values)", data.len());
                 data
             } else {
@@ -401,7 +411,7 @@ fn cmd_stream(a: &Args) -> Result<()> {
                 }
                 let r = planes.unwrap();
                 let (lo, hi) = parse_lo_hi(&r, "planes")?;
-                let data = dec.decode_dim(1, lo..hi, threads)?;
+                let data = ds.read(Region::Dim { dim: 1, range: lo..hi })?;
                 println!("{input}: planes {lo}..{hi} ({} values)", data.len());
                 data
             };
@@ -716,15 +726,18 @@ fn cmd_serve(a: &Args) -> Result<()> {
         max_conns: a.usize_or("max-conns", 32)?,
         chunk_rows: a.usize_or("chunk-rows", 0)?,
         request_timeout_ms: a.usize_or("request-timeout-ms", 0)? as u64,
+        cache_bytes: (a.usize_or("cache-mb", 64)? as u64) << 20,
     };
     apply_isa_flag(a)?;
     let srv = Server::bind(&addr, cfg)?;
     println!(
-        "vsz serve: listening on {} ({} pool threads, {} in-flight cap, {} conns)",
+        "vsz serve: listening on {} ({} pool threads, {} in-flight cap, {} conns, \
+         {} chunk cache)",
         srv.local_addr()?,
         cfg.threads.max(1),
         human_bytes(cfg.max_inflight_bytes),
         cfg.max_conns,
+        human_bytes(cfg.cache_bytes),
     );
     srv.run()
 }

@@ -229,6 +229,83 @@ impl CompressionStats {
     }
 }
 
+/// Lock-free gauges of a decoded-chunk cache (`stream::dataset`): how many
+/// region reads were served from resident slabs, how many had to decode, how
+/// much was evicted to stay under the byte budget, and what is resident now.
+///
+/// All counters are atomics so a serving thread can snapshot them without
+/// taking the cache lock. A reader that joins an in-flight decode of the same
+/// chunk (single-flight dedup) counts as a hit — it was served without a
+/// decode of its own.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+    evictions: std::sync::atomic::AtomicU64,
+    resident_bytes: std::sync::atomic::AtomicU64,
+}
+
+impl CacheStats {
+    pub fn record_hit(&self) {
+        self.hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn record_miss(&self) {
+        self.misses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn record_eviction(&self) {
+        self.evictions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn add_resident(&self, bytes: u64) {
+        self.resident_bytes.fetch_add(bytes, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn sub_resident(&self, bytes: u64) {
+        self.resident_bytes.fetch_sub(bytes, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CacheSnapshot {
+        use std::sync::atomic::Ordering::Relaxed;
+        CacheSnapshot {
+            hits: self.hits.load(Relaxed),
+            misses: self.misses.load(Relaxed),
+            evictions: self.evictions.load(Relaxed),
+            resident_bytes: self.resident_bytes.load(Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`CacheStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub resident_bytes: u64,
+}
+
+impl CacheSnapshot {
+    /// Fraction of lookups served without a decode (0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Render as a JSON object (nested into the `vsz serve` status payload).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"hits\":{},\"misses\":{},\"evictions\":{},\"resident_bytes\":{}}}",
+            self.hits, self.misses, self.evictions, self.resident_bytes
+        )
+    }
+}
+
 /// Value range of a field (used by relative error bounds).
 pub fn value_range(xs: &[f32]) -> f64 {
     let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
@@ -352,6 +429,29 @@ mod tests {
         ba.merge(&a);
         assert_stats_eq(&ab, &ba);
         assert_eq!(ab.total_ops(), a.total_ops() + b.total_ops());
+    }
+
+    #[test]
+    fn cache_stats_snapshot_and_json() {
+        let s = CacheStats::default();
+        assert_eq!(s.snapshot(), CacheSnapshot::default());
+        assert_eq!(s.snapshot().hit_rate(), 0.0);
+        s.record_hit();
+        s.record_hit();
+        s.record_hit();
+        s.record_miss();
+        s.record_eviction();
+        s.add_resident(4096);
+        s.sub_resident(1024);
+        let snap = s.snapshot();
+        assert_eq!(snap.hits, 3);
+        assert_eq!(snap.misses, 1);
+        assert_eq!(snap.evictions, 1);
+        assert_eq!(snap.resident_bytes, 3072);
+        assert!((snap.hit_rate() - 0.75).abs() < 1e-12);
+        let j = crate::util::json::parse(&snap.to_json()).unwrap();
+        assert_eq!(j.get("hits").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("resident_bytes").unwrap().as_usize(), Some(3072));
     }
 
     #[test]

@@ -83,7 +83,8 @@ use crate::data::{io as dio, Field};
 use crate::error::{Result, VszError};
 use crate::format;
 use crate::metrics::CompressionStats;
-use crate::stream::{StreamDecompressor, StreamOptions};
+use crate::stream::dataset::{container_fingerprint, ChunkCache, Dataset, Region};
+use crate::stream::StreamOptions;
 use crate::util::json::{self, Json};
 
 /// Request opcodes (first body byte of a request frame).
@@ -135,6 +136,12 @@ pub struct ServeConfig {
     /// request's `timeout_ms` header key overrides it. An expired deadline
     /// cancels the request's chunk jobs and replies `busy`.
     pub request_timeout_ms: u64,
+    /// Decoded-chunk cache budget in bytes (`--cache-mb`): repeated
+    /// extract/decompress requests against the same container bytes hit
+    /// warm slabs instead of re-decoding. 0 disables the cache. Resident
+    /// slabs outlive requests, so this budget is separate from (and on top
+    /// of) the admission cap.
+    pub cache_bytes: u64,
 }
 
 impl Default for ServeConfig {
@@ -145,6 +152,7 @@ impl Default for ServeConfig {
             max_conns: 32,
             chunk_rows: 0,
             request_timeout_ms: 0,
+            cache_bytes: 64 << 20,
         }
     }
 }
@@ -153,7 +161,10 @@ impl Default for ServeConfig {
 struct Shared {
     cfg: ServeConfig,
     addr: SocketAddr,
-    pool: ThreadPool,
+    pool: Arc<ThreadPool>,
+    /// Server-wide decoded-chunk cache, keyed by container fingerprint so
+    /// requests carrying the same container bytes share warm slabs.
+    cache: Arc<ChunkCache>,
     inflight: AtomicU64,
     active_conns: AtomicUsize,
     stats: Mutex<CompressionStats>,
@@ -327,11 +338,12 @@ impl Server {
     pub fn bind(addr: &str, cfg: ServeConfig) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
-        let pool = ThreadPool::new(cfg.threads.max(1));
+        let pool = Arc::new(ThreadPool::new(cfg.threads.max(1)));
         let shared = Arc::new(Shared {
             cfg,
             addr,
             pool,
+            cache: Arc::new(ChunkCache::new(cfg.cache_bytes)),
             inflight: AtomicU64::new(0),
             active_conns: AtomicUsize::new(0),
             stats: Mutex::new(CompressionStats::new()),
@@ -569,12 +581,20 @@ fn process(
             Ok((bytes, end))
         }
         OP_DECOMPRESS => {
-            let field = decompress(body, shared.cfg.threads.max(1))?;
+            // v3 containers decode through the server-wide Dataset cache
+            // (bit-identical to `decompress`: same per-chunk decode, slabs
+            // concatenated in field order); older containers carry no
+            // index, so they take the legacy full-decode path.
+            let data = if body.starts_with(format::MAGIC3) {
+                open_dataset(shared, body)?.read(Region::All)?
+            } else {
+                decompress(body, shared.cfg.threads.max(1))?.data
+            };
             if ctx.cancel.is_cancelled() {
                 return Err(VszError::runtime("request cancelled during decode"));
             }
-            let mut out = Vec::with_capacity(field.data.len() * 4);
-            for x in &field.data {
+            let mut out = Vec::with_capacity(data.len() * 4);
+            for x in &data {
                 out.extend_from_slice(&x.to_le_bytes());
             }
             let secs = t.elapsed().as_secs_f64();
@@ -590,8 +610,7 @@ fn process(
         }
         OP_EXTRACT => {
             let (lo, hi) = parse_rows(hdr)?;
-            let mut dec = StreamDecompressor::new(Cursor::new(body))?;
-            let data = dec.decode_rows(lo..hi, shared.cfg.threads.max(1))?;
+            let data = open_dataset(shared, body)?.read(Region::Rows(lo..hi))?;
             if ctx.cancel.is_cancelled() {
                 return Err(VszError::runtime("request cancelled during extract"));
             }
@@ -613,17 +632,33 @@ fn process(
     }
 }
 
+/// A per-request [`Dataset`] handle over the request's container bytes,
+/// wired to the server-wide chunk cache and worker pool. The fingerprint
+/// key makes repeated requests against the same container share slabs.
+fn open_dataset<'a>(shared: &Shared, body: &'a [u8]) -> Result<Dataset<Cursor<&'a [u8]>>> {
+    Dataset::open_shared(
+        Cursor::new(body),
+        shared.cfg.threads.max(1),
+        Arc::clone(&shared.cache),
+        container_fingerprint(body),
+        Some(Arc::clone(&shared.pool)),
+    )
+}
+
 /// The `stats` response: lifetime aggregate + gauges.
 fn status_json(shared: &Shared) -> String {
     let stats = stats_lock(shared).to_json();
+    let cache = shared.cache.stats().snapshot().to_json();
     format!(
         "{{\"uptime_s\":{:.3},\"active_conns\":{},\"inflight_bytes\":{},\
-         \"pool_threads\":{},\"request_timeout_ms\":{},\"stats\":{stats}}}",
+         \"pool_threads\":{},\"request_timeout_ms\":{},\
+         \"cache_budget_bytes\":{},\"cache\":{cache},\"stats\":{stats}}}",
         shared.started.elapsed().as_secs_f64(),
         shared.active_conns.load(Ordering::SeqCst),
         shared.inflight.load(Ordering::SeqCst),
         shared.cfg.threads.max(1),
         shared.cfg.request_timeout_ms,
+        shared.cache.budget(),
     )
 }
 
@@ -958,7 +993,8 @@ mod tests {
         let shared = Shared {
             cfg: ServeConfig { max_inflight_bytes: 100, ..ServeConfig::default() },
             addr: "127.0.0.1:0".parse().unwrap(),
-            pool: ThreadPool::new(1),
+            pool: Arc::new(ThreadPool::new(1)),
+            cache: Arc::new(ChunkCache::new(0)),
             inflight: AtomicU64::new(0),
             active_conns: AtomicUsize::new(0),
             stats: Mutex::new(CompressionStats::new()),

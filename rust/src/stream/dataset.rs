@@ -1,0 +1,746 @@
+//! `Dataset`: open a VSZ3 container once, serve many region reads through a
+//! memory-bounded decoded-chunk cache.
+//!
+//! The v3 index footer makes every chunk independently decodable, but the
+//! [`StreamDecompressor`] random-access methods re-decode their chunks on
+//! every call and force the caller to pick an axis-specific entry point.
+//! This module turns that into an open-once / read-many handle:
+//!
+//! * [`Region`] is the one selector — `Chunk(k)`, `Chunks(range)`,
+//!   `Rows(range)`, `Dim { dim, range }` or `All` — and
+//!   [`Dataset::read`] is the one entry point. Every variant resolves to
+//!   the same chunk-fetch + gather core the legacy methods now wrap, so
+//!   results are bit-identical to them at any thread count.
+//! * [`ChunkCache`] holds decoded slabs (`Arc<Vec<f32>>`) keyed by
+//!   `(container, chunk)` under an LRU policy. **Cache-bounding
+//!   invariant:** after every insert the least-recently-used slabs are
+//!   evicted until resident bytes are `<= budget` — the budget is a hard
+//!   ceiling, even when that means evicting the slab just inserted; a
+//!   budget of 0 disables residency entirely. Hits, misses, evictions and
+//!   resident bytes are atomic [`metrics::CacheStats`] gauges, readable
+//!   without the cache lock.
+//! * **Single-flight invariant:** at most one decode of a given chunk is
+//!   in flight at a time. The first reader to miss claims the chunk and
+//!   decodes it; concurrent readers of the same chunk block on the claim
+//!   and receive the claimer's slab directly (even with a zero budget),
+//!   so N readers of a cold chunk cost exactly one decode. A claimer that
+//!   fails or unwinds publishes an error to its waiters — nobody blocks
+//!   forever on an abandoned claim.
+//! * Misses are filled **chunk-parallel**: the claimed chunks of a read
+//!   decode as one batch on the dataset's `coordinator` pool (shared with
+//!   `vsz serve`, or private to the handle). `Dim`-axis reads fetch in
+//!   pool-sized batches so memory stays bounded by the batch plus the
+//!   gathered output, exactly like the legacy `decode_dim`.
+//!
+//! [`Dataset`] is `Sync`: the reader sits behind a mutex (frame parse is
+//! cheap I/O; the expensive decode happens outside it) and the cache does
+//! its own locking, so one handle serves concurrent readers.
+//!
+//! [`metrics::CacheStats`]: crate::metrics::CacheStats
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Seek};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::compressor::decode_body;
+use crate::coordinator::pool::ThreadPool;
+use crate::error::{Result, VszError};
+use crate::format::StreamHeader;
+use crate::metrics::{CacheSnapshot, CacheStats};
+
+use super::{decode_batch, gather_dim_range, ChunkIndex, StreamDecompressor};
+
+/// What to read: the one selector behind [`Dataset::read`].
+///
+/// Migration from the deprecated [`StreamDecompressor`] methods:
+/// `decode_chunk(k)` → `Chunk(k)`, `decode_range(r, _)` → `Chunks(r)`,
+/// `decode_rows(r, _)` → `Rows(r)`, `decode_dim(d, r, _)` →
+/// `Dim { dim: d, range: r }`, `decode_cols(r, _)` →
+/// `Dim { dim: ndim - 1, range: r }`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Region {
+    /// One chunk's whole slab, in field order.
+    Chunk(usize),
+    /// A contiguous chunk range's slabs, concatenated in field order.
+    Chunks(Range<usize>),
+    /// Leading-dimension rows `[start, end)` — touches only the covering
+    /// chunks.
+    Rows(Range<usize>),
+    /// The sub-field whose `dim`-axis extent is clipped to `range` (all
+    /// other axes full), in field row-major order. `dim = 0` is the same
+    /// as `Rows`.
+    Dim { dim: usize, range: Range<usize> },
+    /// The whole field.
+    All,
+}
+
+/// How a resolved region pulls values out of each decoded slab.
+pub(crate) enum Gather {
+    /// Append whole slabs (chunks tile the field, so concatenation is the
+    /// field order).
+    Slabs,
+    /// Append each slab's overlap with this global row range.
+    Rows(Range<usize>),
+    /// Append each slab's `dim`-axis clip (dim >= 1; every chunk
+    /// overlaps).
+    DimRange { dim: usize, range: Range<usize>, kept_row: usize },
+}
+
+/// A validated region: which chunks to fetch and how to gather them.
+pub(crate) struct RegionPlan {
+    pub(crate) chunks: Range<usize>,
+    pub(crate) gather: Gather,
+    pub(crate) out_len: usize,
+}
+
+/// Validate `region` against the container geometry and plan the fetch.
+/// The bounds checks (and their error text) match the legacy methods.
+pub(crate) fn resolve_region(
+    header: &StreamHeader,
+    index: &ChunkIndex,
+    region: &Region,
+) -> Result<RegionPlan> {
+    let dims = header.header.dims;
+    let n = index.n_chunks();
+    let row_elems = dims.shape[1] * dims.shape[2];
+    match region {
+        Region::Chunk(k) => {
+            if *k >= n {
+                return Err(VszError::config(format!(
+                    "chunk {k} out of range (container has {n})"
+                )));
+            }
+            let extent = index.entries[*k].lead_extent as usize;
+            let out_len = extent * row_elems;
+            Ok(RegionPlan { chunks: *k..*k + 1, gather: Gather::Slabs, out_len })
+        }
+        Region::Chunks(r) => {
+            if r.start >= r.end || r.end > n {
+                return Err(VszError::config(format!(
+                    "chunk range {}..{} out of range (container has {n})",
+                    r.start, r.end
+                )));
+            }
+            let rows: usize = r.clone().map(|k| index.entries[k].lead_extent as usize).sum();
+            Ok(RegionPlan { chunks: r.clone(), gather: Gather::Slabs, out_len: rows * row_elems })
+        }
+        Region::Rows(rows) => {
+            let total = dims.shape[0];
+            if rows.start >= rows.end || rows.end > total {
+                return Err(VszError::config(format!(
+                    "row range {}..{} out of range (field has {total} rows)",
+                    rows.start, rows.end
+                )));
+            }
+            // lead_offsets is sorted and starts at 0, so the covering
+            // chunk of a row is the last offset <= it
+            let chunk_of = |row: usize| match index.lead_offsets.binary_search(&row) {
+                Ok(i) => i,
+                Err(i) => i - 1,
+            };
+            let first = chunk_of(rows.start);
+            let last = chunk_of(rows.end - 1);
+            Ok(RegionPlan {
+                chunks: first..last + 1,
+                gather: Gather::Rows(rows.clone()),
+                out_len: rows.len() * row_elems,
+            })
+        }
+        Region::Dim { dim, range } => {
+            if *dim >= dims.ndim {
+                return Err(VszError::config(format!(
+                    "dim {dim} out of range (field has {} dims)",
+                    dims.ndim
+                )));
+            }
+            if *dim == 0 {
+                return resolve_region(header, index, &Region::Rows(range.clone()));
+            }
+            let total = dims.shape[*dim];
+            if range.start >= range.end || range.end > total {
+                return Err(VszError::config(format!(
+                    "dim-{dim} range {}..{} out of range (extent {total})",
+                    range.start, range.end
+                )));
+            }
+            let kept_row = match dim {
+                1 => range.len() * dims.shape[2],
+                _ => range.len(),
+            };
+            Ok(RegionPlan {
+                chunks: 0..n,
+                gather: Gather::DimRange { dim: *dim, range: range.clone(), kept_row },
+                out_len: dims.len() / dims.shape[*dim] * range.len(),
+            })
+        }
+        Region::All => Ok(RegionPlan { chunks: 0..n, gather: Gather::Slabs, out_len: dims.len() }),
+    }
+}
+
+/// Append the gathered part of chunk `k`'s slab to `out`. Chunks arrive in
+/// lead order, so plain appending reassembles the sub-field.
+pub(crate) fn gather_into(
+    slab: &[f32],
+    k: usize,
+    header: &StreamHeader,
+    index: &ChunkIndex,
+    gather: &Gather,
+    out: &mut Vec<f32>,
+) {
+    let dims = header.header.dims;
+    match gather {
+        Gather::Slabs => out.extend_from_slice(slab),
+        Gather::Rows(rows) => {
+            let row_elems = dims.shape[1] * dims.shape[2];
+            let lead = index.lead_offsets[k];
+            let extent = index.entries[k].lead_extent as usize;
+            let lo = rows.start.max(lead) - lead;
+            let hi = rows.end.min(lead + extent) - lead;
+            out.extend_from_slice(&slab[lo * row_elems..hi * row_elems]);
+        }
+        Gather::DimRange { dim, range, kept_row } => {
+            let extent = index.entries[k].lead_extent as usize;
+            gather_dim_range(slab, extent, dims, *dim, range, *kept_row, out);
+        }
+    }
+}
+
+/// Uncached region read over a bare decoder — the shared core behind the
+/// deprecated `decode_*` methods. Same resolution, same gather, same
+/// batching and pool policy they always had, so outputs stay bit-identical.
+pub(crate) fn read_region_uncached<R: Read + Seek>(
+    dec: &mut StreamDecompressor<R>,
+    region: &Region,
+    threads: usize,
+) -> Result<Vec<f32>> {
+    dec.load_index()?;
+    let header = *dec.header();
+    let index = dec.index.as_ref().unwrap().clone();
+    let plan = resolve_region(&header, &index, region)?;
+    let threads = threads.max(1);
+    let n = plan.chunks.len();
+    let pool = if threads > 1 && n > 1 { Some(ThreadPool::new(threads)) } else { None };
+    // Dim reads touch every chunk, so they fetch in pool-sized batches to
+    // bound memory; the other shapes decode their whole (already pruned)
+    // range as one batch, exactly like the legacy methods.
+    let batch_cap = match plan.gather {
+        Gather::DimRange { .. } => threads.max(2),
+        _ => n.max(1),
+    };
+    let mut out = Vec::with_capacity(plan.out_len);
+    let mut k = plan.chunks.start;
+    while k < plan.chunks.end {
+        let take = (plan.chunks.end - k).min(batch_cap);
+        let mut batch = Vec::with_capacity(take);
+        for kk in k..k + take {
+            batch.push(dec.parse_indexed_frame(kk)?);
+        }
+        let slabs = decode_batch(batch, pool.as_ref())?;
+        for (i, slab) in slabs.iter().enumerate() {
+            gather_into(slab, k + i, &header, &index, &plan.gather, &mut out);
+        }
+        k += take;
+    }
+    Ok(out)
+}
+
+/// Stable identity for a container's cache entries when one [`ChunkCache`]
+/// is shared across containers (the `vsz serve` case, where each request
+/// carries its own body): FNV-1a 64 over the container bytes.
+pub fn container_fingerprint(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+type Key = (u64, u32);
+type SlabResult = std::result::Result<Arc<Vec<f32>>, String>;
+
+/// One in-flight decode: waiters block on `ready` until the claimer
+/// publishes a slab (or an error) into `slot`.
+#[derive(Default)]
+struct Flight {
+    slot: Mutex<Option<SlabResult>>,
+    ready: Condvar,
+}
+
+impl Flight {
+    fn wait(&self) -> Result<Arc<Vec<f32>>> {
+        let mut slot = self.slot.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            match slot.as_ref() {
+                Some(Ok(slab)) => return Ok(Arc::clone(slab)),
+                Some(Err(msg)) => return Err(VszError::runtime(msg.clone())),
+                None => slot = self.ready.wait(slot).unwrap_or_else(|p| p.into_inner()),
+            }
+        }
+    }
+}
+
+struct Resident {
+    data: Arc<Vec<f32>>,
+    /// This entry's position in the LRU order (its key in `lru`).
+    tick: u64,
+    bytes: u64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    slabs: HashMap<Key, Resident>,
+    /// Recency order: ascending tick = least- to most-recently used.
+    lru: BTreeMap<u64, Key>,
+    tick: u64,
+    resident_bytes: u64,
+    inflight: HashMap<Key, Arc<Flight>>,
+}
+
+enum Lookup {
+    /// Resident — counted as a hit, recency refreshed.
+    Hit(Arc<Vec<f32>>),
+    /// Another reader is decoding it — wait for their slab (also a hit:
+    /// served without a decode of our own).
+    Pending(Arc<Flight>),
+    /// The caller now owns the decode and MUST publish a result.
+    Claimed,
+}
+
+/// Memory-bounded LRU cache of decoded chunk slabs with single-flight
+/// miss filling. Sharable across [`Dataset`] handles (and across request
+/// containers via [`container_fingerprint`] keys).
+pub struct ChunkCache {
+    budget: u64,
+    state: Mutex<CacheState>,
+    stats: CacheStats,
+}
+
+impl ChunkCache {
+    /// A cache holding at most `budget_bytes` of decoded slabs; 0 disables
+    /// residency (single-flight dedup still applies).
+    pub fn new(budget_bytes: u64) -> Self {
+        Self {
+            budget: budget_bytes,
+            state: Mutex::new(CacheState::default()),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    /// The live hit/miss/eviction/resident gauges (lock-free reads).
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Number of resident slabs right now (test/diagnostic aid).
+    pub fn resident_chunks(&self) -> usize {
+        self.state.lock().unwrap_or_else(|p| p.into_inner()).slabs.len()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, CacheState> {
+        // Poison recovery is sound here: every mutation below keeps
+        // slabs/lru/resident_bytes consistent before releasing the lock.
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn lookup_or_claim(&self, key: Key) -> Lookup {
+        let mut st = self.lock();
+        if st.slabs.contains_key(&key) {
+            st.tick += 1;
+            let tick = st.tick;
+            let r = st.slabs.get_mut(&key).unwrap();
+            let old = r.tick;
+            r.tick = tick;
+            let data = Arc::clone(&r.data);
+            st.lru.remove(&old);
+            st.lru.insert(tick, key);
+            self.stats.record_hit();
+            return Lookup::Hit(data);
+        }
+        if let Some(fl) = st.inflight.get(&key) {
+            self.stats.record_hit();
+            return Lookup::Pending(Arc::clone(fl));
+        }
+        st.inflight.insert(key, Arc::new(Flight::default()));
+        self.stats.record_miss();
+        Lookup::Claimed
+    }
+
+    /// Resolve a claim: wake the waiters with `res`, then (on success and
+    /// a non-zero budget) make the slab resident and enforce the budget by
+    /// evicting least-recently-used slabs — strictly, even if that evicts
+    /// the slab just inserted.
+    fn publish(&self, key: Key, res: SlabResult) {
+        let mut st = self.lock();
+        if let Some(fl) = st.inflight.remove(&key) {
+            *fl.slot.lock().unwrap_or_else(|p| p.into_inner()) = Some(res.clone());
+            fl.ready.notify_all();
+        }
+        let data = match res {
+            Ok(data) if self.budget > 0 => data,
+            _ => return,
+        };
+        let bytes = (data.len() * std::mem::size_of::<f32>()) as u64;
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(old) = st.slabs.insert(key, Resident { data, tick, bytes }) {
+            st.lru.remove(&old.tick);
+            st.resident_bytes -= old.bytes;
+            self.stats.sub_resident(old.bytes);
+        }
+        st.lru.insert(tick, key);
+        st.resident_bytes += bytes;
+        self.stats.add_resident(bytes);
+        while st.resident_bytes > self.budget {
+            let (&t, &k) = match st.lru.iter().next() {
+                Some(e) => e,
+                None => break,
+            };
+            st.lru.remove(&t);
+            if let Some(r) = st.slabs.remove(&k) {
+                st.resident_bytes -= r.bytes;
+                self.stats.sub_resident(r.bytes);
+                self.stats.record_eviction();
+            }
+        }
+    }
+}
+
+/// Unwind safety for claimed chunks: publishes an error for every claim
+/// not yet resolved, so waiters never block on a claimer that panicked or
+/// bailed early.
+struct ClaimGuard<'a> {
+    cache: &'a ChunkCache,
+    pending: Vec<Key>,
+}
+
+impl ClaimGuard<'_> {
+    fn publish(&mut self, key: Key, res: SlabResult) {
+        self.pending.retain(|k| *k != key);
+        self.cache.publish(key, res);
+    }
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        for k in self.pending.drain(..) {
+            self.cache.publish(k, Err("chunk decode abandoned by its claimer".into()));
+        }
+    }
+}
+
+/// Construction knobs for a self-contained [`Dataset`].
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetOptions {
+    /// Decode parallelism for miss fills (the one thread setting — the
+    /// per-call `threads` parameters of the legacy methods are deprecated
+    /// in its favor).
+    pub threads: usize,
+    /// Decoded-slab cache budget in bytes; 0 disables caching.
+    pub cache_bytes: u64,
+}
+
+impl Default for DatasetOptions {
+    fn default() -> Self {
+        Self { threads: 1, cache_bytes: 64 << 20 }
+    }
+}
+
+/// Open-once random-access handle over a VSZ3 container: owns the reader
+/// and the loaded index, serves [`Region`] reads through a [`ChunkCache`].
+/// See the [module docs](self) for the cache-bounding and single-flight
+/// invariants.
+pub struct Dataset<R: Read + Seek> {
+    reader: Mutex<StreamDecompressor<R>>,
+    header: StreamHeader,
+    index: ChunkIndex,
+    cache: Arc<ChunkCache>,
+    container_id: u64,
+    pool: Option<Arc<ThreadPool>>,
+    threads: usize,
+    /// Chunk decodes performed by this handle — the test hook proving a
+    /// warm read decodes nothing.
+    decodes: AtomicU64,
+}
+
+impl<R: Read + Seek> Dataset<R> {
+    /// Open with [`DatasetOptions::default`]: single-threaded fills, a
+    /// private 64 MiB cache.
+    pub fn open(reader: R) -> Result<Self> {
+        Self::open_with(reader, DatasetOptions::default())
+    }
+
+    /// Open with a private cache and (for `threads > 1`) a private pool.
+    /// Errors on pre-v3 containers (no index, no random access).
+    pub fn open_with(reader: R, opts: DatasetOptions) -> Result<Self> {
+        let threads = opts.threads.max(1);
+        let pool = if threads > 1 { Some(Arc::new(ThreadPool::new(threads))) } else { None };
+        Self::build(reader, threads, Arc::new(ChunkCache::new(opts.cache_bytes)), 0, pool)
+    }
+
+    /// Open against a shared cache and pool (the `vsz serve` shape: one
+    /// server-wide cache, one worker pool, a short-lived handle per
+    /// request). `container_id` namespaces this container's chunks within
+    /// the shared cache — see [`container_fingerprint`].
+    pub fn open_shared(
+        reader: R,
+        threads: usize,
+        cache: Arc<ChunkCache>,
+        container_id: u64,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Result<Self> {
+        Self::build(reader, threads.max(1), cache, container_id, pool)
+    }
+
+    fn build(
+        reader: R,
+        threads: usize,
+        cache: Arc<ChunkCache>,
+        container_id: u64,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Result<Self> {
+        let mut dec = StreamDecompressor::new(reader)?;
+        let index = dec.load_index()?.clone();
+        let header = *dec.header();
+        Ok(Self {
+            reader: Mutex::new(dec),
+            header,
+            index,
+            cache,
+            container_id,
+            pool,
+            threads,
+            decodes: AtomicU64::new(0),
+        })
+    }
+
+    pub fn header(&self) -> &StreamHeader {
+        &self.header
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.index.n_chunks()
+    }
+
+    /// The leading-dim row range chunk `k` covers, if it exists.
+    pub fn chunk_rows(&self, k: usize) -> Option<Range<usize>> {
+        let e = self.index.entries.get(k)?;
+        let lo = self.index.lead_offsets[k];
+        Some(lo..lo + e.lead_extent as usize)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn cache(&self) -> &ChunkCache {
+        &self.cache
+    }
+
+    /// Snapshot of the cache gauges (shared caches aggregate across
+    /// handles).
+    pub fn cache_stats(&self) -> CacheSnapshot {
+        self.cache.stats().snapshot()
+    }
+
+    /// Chunk decodes this handle has performed — stays flat across
+    /// warm-cache reads.
+    pub fn decode_count(&self) -> u64 {
+        self.decodes.load(Ordering::Relaxed)
+    }
+
+    /// Read one region, bit-identical to the legacy `decode_*` method for
+    /// the same selection at any thread count. Resident chunks are served
+    /// from the cache; missing chunks decode once (single-flight) on the
+    /// pool and become resident within the byte budget.
+    pub fn read(&self, region: Region) -> Result<Vec<f32>> {
+        let plan = resolve_region(&self.header, &self.index, &region)?;
+        let batch_cap = match plan.gather {
+            Gather::DimRange { .. } => self.threads.max(2),
+            _ => plan.chunks.len().max(1),
+        };
+        let mut out = Vec::with_capacity(plan.out_len);
+        let mut k = plan.chunks.start;
+        while k < plan.chunks.end {
+            let take = (plan.chunks.end - k).min(batch_cap);
+            let slabs = self.fetch_chunks(k..k + take)?;
+            for (i, slab) in slabs.iter().enumerate() {
+                gather_into(slab, k + i, &self.header, &self.index, &plan.gather, &mut out);
+            }
+            k += take;
+        }
+        Ok(out)
+    }
+
+    /// Fetch one contiguous chunk range as slabs: classify every chunk as
+    /// resident / in-flight elsewhere / claimed here, decode the claims as
+    /// one chunk-parallel batch, publish them, then collect the waits.
+    fn fetch_chunks(&self, chunks: Range<usize>) -> Result<Vec<Arc<Vec<f32>>>> {
+        let base = chunks.start;
+        let mut slots: Vec<Option<Arc<Vec<f32>>>> = vec![None; chunks.len()];
+        let mut waits: Vec<(usize, Arc<Flight>)> = Vec::new();
+        let mut claimed: Vec<usize> = Vec::new();
+        for (i, k) in chunks.enumerate() {
+            match self.cache.lookup_or_claim(self.key(k)) {
+                Lookup::Hit(slab) => slots[i] = Some(slab),
+                Lookup::Pending(fl) => waits.push((i, fl)),
+                Lookup::Claimed => claimed.push(k),
+            }
+        }
+        let keys: Vec<Key> = claimed.iter().map(|&k| self.key(k)).collect();
+        let mut guard = ClaimGuard { cache: &self.cache, pending: keys };
+        if !claimed.is_empty() {
+            // Parse the claimed frames under the reader lock; decode
+            // outside it so concurrent readers of other chunks are not
+            // serialized behind the expensive part.
+            let mut frames = Vec::with_capacity(claimed.len());
+            {
+                let mut dec = self.reader.lock().unwrap_or_else(|p| p.into_inner());
+                for &k in &claimed {
+                    // On error the guard publishes the abandonment to any
+                    // waiters of the remaining claims.
+                    frames.push(dec.parse_indexed_frame(k)?);
+                }
+            }
+            let decodes = &self.decodes;
+            let job = move |i: usize| -> Result<Vec<f32>> {
+                crate::failpoint::hit("chunk_decode")?;
+                decodes.fetch_add(1, Ordering::Relaxed);
+                let (h, sections) = &frames[i];
+                decode_body(h, sections, 1)
+            };
+            let results: Vec<Result<Vec<f32>>> = match &self.pool {
+                Some(pool) if claimed.len() > 1 => pool.scoped_scatter_gather(claimed.len(), job),
+                _ => (0..claimed.len()).map(job).collect(),
+            };
+            let mut first_err: Option<VszError> = None;
+            for (&k, res) in claimed.iter().zip(results) {
+                match res {
+                    Ok(slab) => {
+                        let slab = Arc::new(slab);
+                        slots[k - base] = Some(Arc::clone(&slab));
+                        guard.publish(self.key(k), Ok(slab));
+                    }
+                    Err(e) => {
+                        guard.publish(self.key(k), Err(e.to_string()));
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+            }
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        }
+        for (i, fl) in waits {
+            slots[i] = Some(fl.wait()?);
+        }
+        Ok(slots.into_iter().map(|s| s.expect("every chunk classified")).collect())
+    }
+
+    fn key(&self, k: usize) -> Key {
+        (self.container_id, k as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slab(key: Key, n: usize) -> (Key, SlabResult) {
+        (key, Ok(Arc::new(vec![key.1 as f32; n])))
+    }
+
+    #[test]
+    fn cache_hits_after_publish_and_tracks_bytes() {
+        let c = ChunkCache::new(1 << 20);
+        let key = (7u64, 3u32);
+        assert!(matches!(c.lookup_or_claim(key), Lookup::Claimed));
+        let (_, res) = slab(key, 100);
+        c.publish(key, res);
+        match c.lookup_or_claim(key) {
+            Lookup::Hit(s) => assert_eq!(s.len(), 100),
+            _ => panic!("expected a hit"),
+        }
+        let snap = c.stats().snapshot();
+        assert_eq!((snap.hits, snap.misses, snap.evictions), (1, 1, 0));
+        assert_eq!(snap.resident_bytes, 400);
+        assert_eq!(c.resident_chunks(), 1);
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used_to_stay_under_budget() {
+        // budget fits two 100-element slabs, not three
+        let c = ChunkCache::new(900);
+        for k in 0..3u32 {
+            let key = (0, k);
+            assert!(matches!(c.lookup_or_claim(key), Lookup::Claimed));
+            if k == 2 {
+                // touch chunk 0 so chunk 1 is the LRU victim
+                match c.lookup_or_claim((0, 0)) {
+                    Lookup::Hit(_) => {}
+                    _ => panic!("chunk 0 should be resident"),
+                }
+            }
+            let (_, res) = slab(key, 100);
+            c.publish(key, res);
+        }
+        let snap = c.stats().snapshot();
+        assert_eq!(snap.evictions, 1);
+        assert!(snap.resident_bytes <= 900, "resident {}", snap.resident_bytes);
+        assert!(matches!(c.lookup_or_claim((0, 1)), Lookup::Claimed), "LRU chunk 1 evicted");
+        c.publish((0, 1), Err("abandon the re-claim".into()));
+    }
+
+    #[test]
+    fn zero_budget_disables_residency_but_not_single_flight() {
+        let c = ChunkCache::new(0);
+        let key = (0u64, 0u32);
+        assert!(matches!(c.lookup_or_claim(key), Lookup::Claimed));
+        // a second reader meanwhile joins the same flight
+        let fl = match c.lookup_or_claim(key) {
+            Lookup::Pending(fl) => fl,
+            _ => panic!("expected to join the in-flight decode"),
+        };
+        let (_, res) = slab(key, 10);
+        c.publish(key, res);
+        assert_eq!(fl.wait().unwrap().len(), 10);
+        assert_eq!(c.resident_chunks(), 0);
+        assert_eq!(c.stats().snapshot().resident_bytes, 0);
+        // next lookup is a fresh claim, not a hit
+        assert!(matches!(c.lookup_or_claim(key), Lookup::Claimed));
+        c.publish(key, Err("done".into()));
+    }
+
+    #[test]
+    fn claim_guard_publishes_abandonment_to_waiters() {
+        let c = ChunkCache::new(1 << 20);
+        let key = (1u64, 9u32);
+        assert!(matches!(c.lookup_or_claim(key), Lookup::Claimed));
+        let fl = match c.lookup_or_claim(key) {
+            Lookup::Pending(fl) => fl,
+            _ => panic!("expected pending"),
+        };
+        drop(ClaimGuard { cache: &c, pending: vec![key] });
+        let err = fl.wait().unwrap_err().to_string();
+        assert!(err.contains("abandoned"), "unexpected error: {err}");
+        // the claim slot was cleared — the chunk is claimable again
+        assert!(matches!(c.lookup_or_claim(key), Lookup::Claimed));
+        c.publish(key, Err("cleanup".into()));
+    }
+
+    #[test]
+    fn fingerprint_separates_containers() {
+        let a = container_fingerprint(b"VSZ3-container-a");
+        let b = container_fingerprint(b"VSZ3-container-b");
+        assert_ne!(a, b);
+        assert_eq!(a, container_fingerprint(b"VSZ3-container-a"));
+    }
+}

@@ -25,17 +25,16 @@
 //!   serial decode because slabs are assembled by offset.
 //! * The default output is the **v3 indexed container**: a CRC'd,
 //!   length-suffixed footer records every chunk's byte range, slab extent
-//!   and encode config, so a `Read + Seek` reader can
-//!   [`decode_chunk`](StreamDecompressor::decode_chunk) /
-//!   [`decode_range`](StreamDecompressor::decode_range) /
-//!   [`decode_rows`](StreamDecompressor::decode_rows) an arbitrary part of
-//!   a huge field reading only the header, the footer and the frames it
-//!   needs. Multi-chunk ranges decode chunk-parallel through the pool.
-//!   [`decode_dim`](StreamDecompressor::decode_dim) /
-//!   [`decode_cols`](StreamDecompressor::decode_cols) extend random access
-//!   to the non-leading axes (column/plane ranges): every chunk overlaps
-//!   such a range, so all chunks decode chunk-parallel in bounded batches
-//!   and the requested extent is gathered from each slab.
+//!   and encode config, so a `Read + Seek` reader can decode an arbitrary
+//!   part of a huge field reading only the header, the footer and the
+//!   frames it needs. Random access lives behind [`dataset::Dataset`]:
+//!   open the container once, then [`read`](dataset::Dataset::read) any
+//!   [`dataset::Region`] (`Chunk` / `Chunks` / `Rows` / `Dim` / `All`)
+//!   through a memory-bounded decoded-chunk LRU cache with single-flight,
+//!   chunk-parallel miss filling. The older per-call
+//!   `StreamDecompressor::decode_*` methods are deprecated thin wrappers
+//!   over the same resolution and gather core, so their results stay
+//!   bit-identical to `Dataset::read` at any thread count.
 //! * With [`StreamOptions::chunk_autotune`] the compressor re-runs the
 //!   §III-E autotune heuristic on each chunk's slab (size-gated), so the
 //!   (block size × lane width) configuration tracks non-stationary fields;
@@ -63,6 +62,10 @@ use crate::quant::CodesKind;
 use crate::util::crc32;
 use crate::util::{f32_as_bytes, f32_as_bytes_mut};
 
+pub mod dataset;
+
+pub use dataset::{ChunkCache, Dataset, DatasetOptions, Region};
+
 /// Upper bound on a single section payload accepted from a stream (guards
 /// allocations against forged lengths).
 const MAX_SECTION_LEN: u64 = 1 << 30;
@@ -89,6 +92,55 @@ pub struct StreamOptions {
 impl Default for StreamOptions {
     fn default() -> Self {
         Self { version: format::VERSION3, chunk_autotune: None, tune_widths: [8, 16] }
+    }
+}
+
+impl StreamOptions {
+    /// Start a [`StreamOptionsBuilder`] seeded with the defaults. The
+    /// struct-literal path (`StreamOptions { .. }`) keeps working; the
+    /// builder is the forward-compatible spelling — future codec presets
+    /// (`fast()` / `balanced()` / `best()`) will hang off the same shape.
+    pub fn builder() -> StreamOptionsBuilder {
+        StreamOptionsBuilder { opts: Self::default() }
+    }
+}
+
+/// Fluent constructor for [`StreamOptions`]:
+/// `StreamOptions::builder().version(3).chunk_autotune(true).build()`.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamOptionsBuilder {
+    opts: StreamOptions,
+}
+
+impl StreamOptionsBuilder {
+    /// Container version to write ([`format::VERSION3`] or
+    /// [`format::VERSION2`]).
+    pub fn version(mut self, version: u16) -> Self {
+        self.opts.version = version;
+        self
+    }
+
+    /// Toggle per-chunk autotuning with default [`TuneSettings`]; `false`
+    /// clears any settings set so far.
+    pub fn chunk_autotune(mut self, on: bool) -> Self {
+        self.opts.chunk_autotune = if on { Some(TuneSettings::default()) } else { None };
+        self
+    }
+
+    /// Enable per-chunk autotuning with explicit [`TuneSettings`].
+    pub fn chunk_autotune_with(mut self, settings: TuneSettings) -> Self {
+        self.opts.chunk_autotune = Some(settings);
+        self
+    }
+
+    /// Lane widths the per-chunk tuner considers.
+    pub fn tune_widths(mut self, widths: [usize; 2]) -> Self {
+        self.opts.tune_widths = widths;
+        self
+    }
+
+    pub fn build(self) -> StreamOptions {
+        self.opts
     }
 }
 
@@ -962,66 +1014,45 @@ impl<R: Read + Seek> StreamDecompressor<R> {
 
     /// Random access: decode chunk `k`, reading only the index footer
     /// (once) and that chunk's byte range.
+    #[deprecated(
+        since = "0.3.0",
+        note = "open a `stream::Dataset` and call `read(Region::Chunk(k))` — it caches \
+                decoded slabs across calls"
+    )]
     pub fn decode_chunk(&mut self, k: usize) -> Result<DecodedChunk> {
-        let n = self.load_index()?.n_chunks();
+        let idx = self.load_index()?;
+        let n = idx.n_chunks();
         if k >= n {
             return Err(VszError::config(format!("chunk {k} out of range (container has {n})")));
         }
-        let lead_offset = self.index.as_ref().unwrap().lead_offsets[k];
-        let (h, sections) = self.parse_indexed_frame(k)?;
-        let extent = h.dims.shape[0];
-        let data = decode_body(&h, &sections, 1)?;
-        Ok(DecodedChunk { index: k as u64, lead_offset, lead_extent: extent, data })
+        let lead_offset = idx.lead_offsets[k];
+        let lead_extent = idx.entries[k].lead_extent as usize;
+        let data = dataset::read_region_uncached(self, &Region::Chunk(k), 1)?;
+        Ok(DecodedChunk { index: k as u64, lead_offset, lead_extent, data })
     }
 
     /// Random access: decode the chunk range `chunks` and return the
     /// concatenated slabs in field order. Multi-chunk ranges decode
     /// chunk-parallel on a pool of `threads` workers.
+    #[deprecated(
+        since = "0.3.0",
+        note = "open a `stream::Dataset` and call `read(Region::Chunks(chunks))`; the \
+                per-call `threads` parameter moves to the Dataset"
+    )]
     pub fn decode_range(&mut self, chunks: Range<usize>, threads: usize) -> Result<Vec<f32>> {
-        let n = self.load_index()?.n_chunks();
-        if chunks.start >= chunks.end || chunks.end > n {
-            return Err(VszError::config(format!(
-                "chunk range {}..{} out of range (container has {n})",
-                chunks.start, chunks.end
-            )));
-        }
-        let mut batch = Vec::with_capacity(chunks.len());
-        for k in chunks {
-            batch.push(self.parse_indexed_frame(k)?);
-        }
-        let threads = threads.max(1);
-        let pool =
-            if threads > 1 && batch.len() > 1 { Some(ThreadPool::new(threads)) } else { None };
-        let slabs = decode_batch(batch, pool.as_ref())?;
-        Ok(slabs.concat())
+        dataset::read_region_uncached(self, &Region::Chunks(chunks), threads)
     }
 
     /// Random access by leading-dim position: decode rows `[rows.start,
     /// rows.end)` of the field, touching only the chunks that overlap the
-    /// range. Equivalent to [`decode_dim`](Self::decode_dim) with `dim = 0`.
+    /// range.
+    #[deprecated(
+        since = "0.3.0",
+        note = "open a `stream::Dataset` and call `read(Region::Rows(rows))`; the \
+                per-call `threads` parameter moves to the Dataset"
+    )]
     pub fn decode_rows(&mut self, rows: Range<usize>, threads: usize) -> Result<Vec<f32>> {
-        let total = self.header.header.dims.shape[0];
-        if rows.start >= rows.end || rows.end > total {
-            return Err(VszError::config(format!(
-                "row range {}..{} out of range (field has {total} rows)",
-                rows.start, rows.end
-            )));
-        }
-        let idx = self.load_index()?;
-        // lead_offsets is sorted and starts at 0, so the covering chunk of
-        // a row is the last offset <= it
-        let chunk_of = |row: usize| match idx.lead_offsets.binary_search(&row) {
-            Ok(i) => i,
-            Err(i) => i - 1,
-        };
-        let first = chunk_of(rows.start);
-        let last = chunk_of(rows.end - 1);
-        let skip_rows = rows.start - idx.lead_offsets[first];
-        let data = self.decode_range(first..last + 1, threads)?;
-        let row_elems = self.header.header.dims.shape[1] * self.header.header.dims.shape[2];
-        let skip = skip_rows * row_elems;
-        let take = (rows.end - rows.start) * row_elems;
-        Ok(data[skip..skip + take].to_vec())
+        dataset::read_region_uncached(self, &Region::Rows(rows), threads)
     }
 
     /// Random access along **any** dimension: return the sub-field whose
@@ -1033,61 +1064,30 @@ impl<R: Read + Seek> StreamDecompressor<R> {
     /// chunks are decoded — chunk-parallel, in pool-sized batches so memory
     /// stays bounded by the batch plus the gathered output, never the full
     /// field — and the requested extent is gathered from each slab.
+    #[deprecated(
+        since = "0.3.0",
+        note = "open a `stream::Dataset` and call `read(Region::Dim { dim, range })`; \
+                the per-call `threads` parameter moves to the Dataset"
+    )]
     pub fn decode_dim(
         &mut self,
         dim: usize,
         range: Range<usize>,
         threads: usize,
     ) -> Result<Vec<f32>> {
-        let dims = self.header.header.dims;
-        if dim >= dims.ndim {
-            return Err(VszError::config(format!(
-                "dim {dim} out of range (field has {} dims)",
-                dims.ndim
-            )));
-        }
-        if dim == 0 {
-            return self.decode_rows(range, threads);
-        }
-        let total = dims.shape[dim];
-        if range.start >= range.end || range.end > total {
-            return Err(VszError::config(format!(
-                "dim-{dim} range {}..{} out of range (extent {total})",
-                range.start, range.end
-            )));
-        }
-        let n = self.load_index()?.n_chunks();
-        let threads = threads.max(1);
-        let pool = if threads > 1 && n > 1 { Some(ThreadPool::new(threads)) } else { None };
-        let kept_row = match dim {
-            1 => range.len() * dims.shape[2],
-            _ => range.len(),
-        };
-        let mut out = Vec::with_capacity(dims.len() / dims.shape[dim] * range.len());
-        let mut k = 0usize;
-        while k < n {
-            let take = (n - k).min(threads.max(2));
-            let mut batch = Vec::with_capacity(take);
-            for kk in k..k + take {
-                batch.push(self.parse_indexed_frame(kk)?);
-            }
-            let extents: Vec<usize> = batch.iter().map(|(h, _)| h.dims.shape[0]).collect();
-            let slabs = decode_batch(batch, pool.as_ref())?;
-            for (slab, extent) in slabs.iter().zip(extents) {
-                gather_dim_range(slab, extent, dims, dim, &range, kept_row, &mut out);
-            }
-            k += take;
-        }
-        Ok(out)
+        dataset::read_region_uncached(self, &Region::Dim { dim, range }, threads)
     }
 
     /// Random access by column position: decode columns `[cols.start,
     /// cols.end)` — the last (fastest-varying) axis — of every row/plane.
-    /// Shorthand for [`decode_dim`](Self::decode_dim) with
-    /// `dim = ndim - 1`.
+    #[deprecated(
+        since = "0.3.0",
+        note = "open a `stream::Dataset` and call `read(Region::Dim { dim: ndim - 1, \
+                range: cols })`; the per-call `threads` parameter moves to the Dataset"
+    )]
     pub fn decode_cols(&mut self, cols: Range<usize>, threads: usize) -> Result<Vec<f32>> {
         let last = self.header.header.dims.ndim - 1;
-        self.decode_dim(last, cols, threads)
+        dataset::read_region_uncached(self, &Region::Dim { dim: last, range: cols }, threads)
     }
 }
 
@@ -1779,6 +1779,10 @@ pub fn resume_stream_with<R: Read, W: Write>(
 
 #[cfg(test)]
 mod tests {
+    // The deprecated decode_* wrappers stay covered on purpose: they must
+    // remain bit-identical to the Dataset region reads that replaced them.
+    #![allow(deprecated)]
+
     use super::*;
     use crate::compressor::{compress, decompress, BackendChoice, Config};
     use crate::padding::{PadGranularity, PadValue, PaddingPolicy};
@@ -2544,5 +2548,68 @@ mod tests {
         let mut out = Vec::new();
         let err = compress_stream(&raw[..raw.len() - 3], &mut out, field.dims, &cfg, 16);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn stream_options_builder_matches_struct_literal() {
+        let d = StreamOptions::builder().build();
+        let lit = StreamOptions::default();
+        assert_eq!(d.version, lit.version);
+        assert!(d.chunk_autotune.is_none());
+        assert_eq!(d.tune_widths, lit.tune_widths);
+
+        let b = StreamOptions::builder()
+            .version(format::VERSION2)
+            .chunk_autotune(true)
+            .tune_widths([4, 8])
+            .build();
+        assert_eq!(b.version, format::VERSION2);
+        assert!(b.chunk_autotune.is_some());
+        assert_eq!(b.tune_widths, [4, 8]);
+
+        // chunk_autotune(false) clears explicit settings again
+        let cleared = StreamOptions::builder()
+            .chunk_autotune_with(TuneSettings::default())
+            .chunk_autotune(false);
+        assert!(cleared.build().chunk_autotune.is_none());
+
+        // the struct-literal path still composes with the builder output
+        let mixed = StreamOptions { version: format::VERSION3, ..b };
+        assert_eq!(mixed.version, format::VERSION3);
+        assert_eq!(mixed.tune_widths, [4, 8]);
+    }
+
+    #[test]
+    fn deprecated_wrappers_match_dataset_reads() {
+        let field = smooth_field(Dims::d2(96, 40), 77);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (container, stats) = compress_chunked(&field, &cfg, 24).unwrap();
+        assert!(stats.n_chunks > 1);
+
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&container)).unwrap();
+        let n = dec.load_index().unwrap().n_chunks();
+        assert!(n > 1);
+        let ds = Dataset::open(std::io::Cursor::new(&container)).unwrap();
+        assert_eq!(ds.n_chunks(), n);
+        assert_eq!(ds.chunk_rows(0).unwrap().start, 0);
+        assert_eq!(ds.chunk_rows(n), None);
+
+        assert_eq!(ds.read(Region::Chunk(1)).unwrap(), dec.decode_chunk(1).unwrap().data);
+        assert_eq!(
+            ds.read(Region::Chunks(0..n)).unwrap(),
+            dec.decode_range(0..n, 2).unwrap()
+        );
+        assert_eq!(ds.read(Region::Rows(7..61)).unwrap(), dec.decode_rows(7..61, 2).unwrap());
+        assert_eq!(
+            ds.read(Region::Dim { dim: 1, range: 3..17 }).unwrap(),
+            dec.decode_cols(3..17, 2).unwrap()
+        );
+        assert_eq!(ds.read(Region::All).unwrap(), dec.decode_rows(0..96, 1).unwrap());
+
+        // invalid selections fail the same way through both paths
+        assert!(ds.read(Region::Chunk(n)).is_err());
+        assert!(ds.read(Region::Rows(50..40)).is_err());
+        assert!(ds.read(Region::Dim { dim: 2, range: 0..1 }).is_err());
+        assert!(dec.decode_dim(2, 0..1, 1).is_err());
     }
 }

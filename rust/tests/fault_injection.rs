@@ -18,6 +18,10 @@
 //! * truncation sweep: every prefix of a valid container either salvages
 //!   cleanly or errors — never panics.
 
+// Salvage verification reads chunks through the legacy (deprecated)
+// StreamDecompressor wrappers on purpose: they are the pinned v3 API.
+#![allow(deprecated)]
+
 use std::io::Cursor;
 use std::process::Command;
 use std::sync::{Mutex, MutexGuard};

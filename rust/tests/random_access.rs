@@ -2,7 +2,15 @@
 //! `decode_chunk(k)` is byte-identical to the corresponding slab of a full
 //! decode at 1/2/7 threads, reads only the header + footer + that chunk's
 //! byte range (counting-reader proof), and a corrupted or truncated footer
-//! is rejected with an error — never a panic.
+//! is rejected with an error — never a panic. The `Dataset` region API is
+//! held to the same standard: every `Region` variant bit-identical to the
+//! legacy method and the full decode (cold and warm cache), warm reads
+//! decode nothing, eviction respects the byte budget, and concurrent
+//! readers of a cold chunk decode it exactly once (single-flight).
+
+// The deprecated decode_* wrappers are exercised deliberately: the matrix
+// below pins them bit-identical to the Dataset reads that replace them.
+#![allow(deprecated)]
 
 use std::io::{Read, Seek, SeekFrom};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -11,7 +19,9 @@ use std::sync::Arc;
 use vecsz::blocks::Dims;
 use vecsz::compressor::{decompress, Config, EbMode};
 use vecsz::data::Field;
-use vecsz::stream::{compress_chunked, decompress_chunked, StreamDecompressor};
+use vecsz::stream::{
+    compress_chunked, decompress_chunked, Dataset, DatasetOptions, Region, StreamDecompressor,
+};
 
 /// `Read + Seek` wrapper that counts the bytes actually read.
 struct CountingReader {
@@ -154,4 +164,181 @@ fn footer_corruption_and_truncation_never_panic_via_public_api() {
     }
     // the pristine container still works after all that
     assert!(decompress(&container, 2).is_ok());
+}
+
+fn open_dataset(container: &[u8], threads: usize) -> Dataset<std::io::Cursor<Vec<u8>>> {
+    let opts = DatasetOptions { threads, ..DatasetOptions::default() };
+    Dataset::open_with(std::io::Cursor::new(container.to_vec()), opts).unwrap()
+}
+
+#[test]
+fn acceptance_region_matrix_bit_identical_to_legacy_cold_and_warm() {
+    let field = walk_field(160, 64, 31);
+    let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+    let (container, stats) = compress_chunked(&field, &cfg, 32).unwrap();
+    let n = stats.n_chunks;
+    assert!(n >= 5);
+    let full = decompress_chunked(&container, 1).unwrap();
+
+    for threads in [1usize, 2, 7] {
+        let ds = open_dataset(&container, threads);
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&container[..])).unwrap();
+        // two passes over the same handle: pass 0 fills the cache (cold),
+        // pass 1 reads resident slabs (warm) — results must not change
+        for pass in 0..2 {
+            let tag = if pass == 0 { "cold" } else { "warm" };
+            for k in 0..n {
+                let via_ds = ds.read(Region::Chunk(k)).unwrap();
+                let legacy = dec.decode_chunk(k).unwrap();
+                assert_eq!(via_ds, legacy.data, "Chunk({k}) {tag} {threads}T");
+                let lo = legacy.lead_offset * 64;
+                let hi = lo + legacy.lead_extent * 64;
+                assert_eq!(via_ds, &full.data[lo..hi], "Chunk({k}) vs slab {tag} {threads}T");
+            }
+            assert_eq!(
+                ds.read(Region::Chunks(1..n)).unwrap(),
+                dec.decode_range(1..n, threads).unwrap(),
+                "Chunks {tag} {threads}T"
+            );
+            let rows = ds.read(Region::Rows(13..131)).unwrap();
+            assert_eq!(rows, dec.decode_rows(13..131, threads).unwrap(), "Rows {tag} {threads}T");
+            assert_eq!(rows, &full.data[13 * 64..131 * 64], "Rows vs slab {tag} {threads}T");
+            assert_eq!(
+                ds.read(Region::Dim { dim: 1, range: 5..40 }).unwrap(),
+                dec.decode_cols(5..40, threads).unwrap(),
+                "Dim1 {tag} {threads}T"
+            );
+            assert_eq!(
+                ds.read(Region::Dim { dim: 0, range: 40..96 }).unwrap(),
+                dec.decode_rows(40..96, threads).unwrap(),
+                "Dim0 {tag} {threads}T"
+            );
+            assert_eq!(ds.read(Region::All).unwrap(), full.data, "All {tag} {threads}T");
+        }
+        let snap = ds.cache_stats();
+        assert!(snap.hits > 0, "warm pass must hit the cache ({threads}T)");
+        assert_eq!(snap.evictions, 0, "default budget must hold the whole field ({threads}T)");
+    }
+}
+
+#[test]
+fn acceptance_region_matrix_3d_dim_reads_match_legacy() {
+    let mut rng = vecsz::util::prng::Pcg32::seeded(41);
+    let mut x = 0.0f32;
+    let data: Vec<f32> = (0..24 * 10 * 12)
+        .map(|_| {
+            x += (rng.next_f32() - 0.5) * 0.1;
+            x
+        })
+        .collect();
+    let field = Field::new("walk3", Dims::d3(24, 10, 12), data);
+    let cfg = Config { eb: EbMode::Abs(1e-3), block_size: 4, ..Config::default() };
+    let (container, stats) = compress_chunked(&field, &cfg, 4).unwrap();
+    assert!(stats.n_chunks >= 4);
+
+    for threads in [1usize, 3] {
+        let ds = open_dataset(&container, threads);
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&container[..])).unwrap();
+        for _pass in 0..2 {
+            assert_eq!(
+                ds.read(Region::Dim { dim: 1, range: 3..8 }).unwrap(),
+                dec.decode_dim(1, 3..8, threads).unwrap()
+            );
+            assert_eq!(
+                ds.read(Region::Dim { dim: 2, range: 2..9 }).unwrap(),
+                dec.decode_cols(2..9, threads).unwrap()
+            );
+            assert_eq!(
+                ds.read(Region::Rows(5..17)).unwrap(),
+                dec.decode_rows(5..17, threads).unwrap()
+            );
+        }
+    }
+}
+
+#[test]
+fn warm_cache_reads_perform_zero_chunk_decodes() {
+    let field = walk_field(160, 64, 37);
+    let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+    let (container, _) = compress_chunked(&field, &cfg, 32).unwrap();
+    let full = decompress_chunked(&container, 1).unwrap();
+
+    let ds = open_dataset(&container, 2);
+    // rows 8..72 cover chunks 0..3 (span 32)
+    let first = ds.read(Region::Rows(8..72)).unwrap();
+    assert_eq!(first, &full.data[8 * 64..72 * 64]);
+    let decodes_after_fill = ds.decode_count();
+    assert_eq!(decodes_after_fill, 3, "rows 8..72 span exactly three chunks");
+
+    // identical and nested re-reads are served entirely from the cache:
+    // the decode counter must not move
+    assert_eq!(ds.read(Region::Rows(8..72)).unwrap(), first);
+    assert_eq!(ds.read(Region::Rows(16..40)).unwrap(), &full.data[16 * 64..40 * 64]);
+    assert_eq!(ds.read(Region::Chunk(1)).unwrap(), &full.data[32 * 64..64 * 64]);
+    assert_eq!(ds.read(Region::Chunks(0..3)).unwrap(), &full.data[..96 * 64]);
+    assert_eq!(ds.decode_count(), decodes_after_fill, "warm reads must decode nothing");
+    let snap = ds.cache_stats();
+    assert_eq!(snap.misses, 3);
+    assert!(snap.hits >= 6, "got {} hits", snap.hits);
+}
+
+#[test]
+fn eviction_under_pressure_bounds_residency_and_stays_correct() {
+    let field = walk_field(160, 64, 43);
+    let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+    let (container, stats) = compress_chunked(&field, &cfg, 32).unwrap();
+    assert_eq!(stats.n_chunks, 5);
+    let full = decompress_chunked(&container, 1).unwrap();
+
+    // one slab is 32 rows * 64 cols * 4 B = 8 KiB; budget fits two and a half
+    let budget = 20_480u64;
+    let opts = DatasetOptions { threads: 2, cache_bytes: budget };
+    let ds = Dataset::open_with(std::io::Cursor::new(container.clone()), opts).unwrap();
+    for round in 0..3 {
+        assert_eq!(ds.read(Region::All).unwrap(), full.data, "round {round}");
+        let snap = ds.cache_stats();
+        assert!(
+            snap.resident_bytes <= budget,
+            "round {round}: resident {} exceeds budget {budget}",
+            snap.resident_bytes
+        );
+    }
+    let snap = ds.cache_stats();
+    assert!(snap.evictions > 0, "a 2.5-slab budget over 5 slabs must evict");
+    assert!(snap.hits > 0, "surviving residents must serve later rounds");
+    // narrow reads under pressure stay correct as well
+    assert_eq!(ds.read(Region::Rows(150..160)).unwrap(), &full.data[150 * 64..]);
+}
+
+#[test]
+fn concurrent_readers_of_a_cold_chunk_decode_it_exactly_once() {
+    let field = walk_field(96, 32, 47);
+    let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+    let (container, _) = compress_chunked(&field, &cfg, 16).unwrap();
+    let full = decompress_chunked(&container, 1).unwrap();
+    let expect = &full.data[16 * 32..32 * 32];
+
+    const READERS: usize = 8;
+    let ds = open_dataset(&container, 1);
+    let barrier = std::sync::Barrier::new(READERS);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..READERS)
+            .map(|_| {
+                let (ds, barrier) = (&ds, &barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    ds.read(Region::Chunk(1)).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), expect);
+        }
+    });
+    // single-flight: one reader claimed the decode, everyone else was
+    // served that same slab (in flight or resident)
+    assert_eq!(ds.decode_count(), 1, "the cold chunk must decode exactly once");
+    let snap = ds.cache_stats();
+    assert_eq!(snap.misses, 1);
+    assert_eq!(snap.hits, (READERS - 1) as u64);
 }

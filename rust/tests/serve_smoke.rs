@@ -12,6 +12,15 @@
 //! * a `stats` request reflects the work done;
 //! * a server with a tiny admission cap rejects with `busy` and stays
 //!   usable afterwards.
+//!
+//! PR 8 adds the decoded-chunk cache gauges: a repeated extract of the
+//! same container must be served from warm slabs (cache hits > 0) and
+//! the `stats` JSON must expose the cache counters.
+
+// The legacy StreamDecompressor decode methods are kept as deprecated
+// wrappers over the Dataset region reads; this test pins the wire bytes
+// against them on purpose.
+#![allow(deprecated)]
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -111,6 +120,14 @@ fn concurrent_requests_roundtrip_bit_exactly() {
         assert_eq!(a.to_bits(), b.to_bits());
     }
 
+    // a repeated extract of the same container is served from the warm
+    // decoded-chunk cache and stays bit-identical
+    let (rows_warm, _) = c.extract(&container, 20, 52).expect("warm extract");
+    assert_eq!(rows_warm.len(), rows.len());
+    for (a, b) in rows_warm.iter().zip(rows.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "warm extract must match the cold one");
+    }
+
     // lifetime stats reflect everything the server has done
     let stats = c.stats().expect("stats");
     let j = vecsz::util::json::parse(&stats).expect("stats json parses");
@@ -118,8 +135,20 @@ fn concurrent_requests_roundtrip_bit_exactly() {
     let compress_ops = lifetime.get("compress_ops").and_then(|v| v.as_f64()).unwrap();
     assert!(compress_ops >= 6.0, "expected >= 6 compress ops, stats: {stats}");
     assert_eq!(lifetime.get("decompress_ops").and_then(|v| v.as_f64()), Some(1.0));
-    assert_eq!(lifetime.get("extract_ops").and_then(|v| v.as_f64()), Some(1.0));
+    assert_eq!(lifetime.get("extract_ops").and_then(|v| v.as_f64()), Some(2.0));
     assert_eq!(j.get("inflight_bytes").and_then(|v| v.as_f64()), Some(0.0));
+
+    // decoded-chunk cache gauges: the first container read filled the
+    // cache (misses), the repeated extract was served from warm slabs
+    let budget = j.get("cache_budget_bytes").and_then(|v| v.as_f64()).expect("budget gauge");
+    assert!(budget > 0.0, "default serve cache budget must be non-zero, stats: {stats}");
+    let cache = j.get("cache").expect("cache gauge object");
+    let hits = cache.get("hits").and_then(|v| v.as_f64()).unwrap();
+    let misses = cache.get("misses").and_then(|v| v.as_f64()).unwrap();
+    let resident = cache.get("resident_bytes").and_then(|v| v.as_f64()).unwrap();
+    assert!(misses >= 1.0, "cold extract must register cache misses, stats: {stats}");
+    assert!(hits >= 1.0, "warm extract must register cache hits, stats: {stats}");
+    assert!(resident > 0.0 && resident <= budget, "resident bytes must be bounded: {stats}");
 
     c.shutdown().expect("shutdown");
     drop(c);
