@@ -33,6 +33,7 @@ const SWITCHES: &[&str] = &[
     "verify-steps",
     "status",
     "resume",
+    "repair",
 ];
 
 impl Args {

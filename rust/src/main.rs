@@ -48,6 +48,7 @@ COMMANDS
              reverse-Lorenzo decode kernel too)
   stream     compress   --input F.f32 --dims NxM --out F.vsz
                         [--chunk-rows N] [--threads N] [--resume]
+                        [--parity G]
                         [--tune-chunks [--sample-pct P] [--iterations N]]
                         + compress flags
                         (absolute --eb required; bounded memory; chunk
@@ -56,7 +57,11 @@ COMMANDS
                         --resume scans a partial --out for its last
                         CRC-valid chunk, truncates after it and continues
                         — the finished container is byte-identical to an
-                        uninterrupted run)
+                        uninterrupted run; --parity G emits one XOR
+                        parity frame per G chunk frames (0 = off), so any
+                        single lost/corrupt frame per group is
+                        reconstructable by scrub/repair and the read
+                        paths)
              decompress --input F.vsz --out F.f32 [--threads N]
                         (chunk-parallel decode via the thread pool)
              inspect    --input F.vsz
@@ -77,7 +82,21 @@ COMMANDS
                         CRC-valid chunk, quarantines the rest and prints a
                         JSON hole report; --out writes the recovered field
                         with holes zero-filled. Needs an intact stream
-                        header)
+                        header. On parity-protected containers a chunk
+                        whose frame fails its CRC is rebuilt from parity
+                        instead of quarantined)
+             scrub      --input F.vsz [--repair]
+                        (walk every chunk and parity frame of an indexed
+                        container, CRC-check each one and print a JSON
+                        integrity report; exits nonzero when damage is
+                        found. --repair additionally rebuilds any single
+                        lost frame per parity group from the XOR of the
+                        survivors and rewrites the container via temp
+                        file + atomic rename)
+             repair     --input F.vsz
+                        (shorthand for scrub --repair: heal every
+                        single-loss parity group in place; exits nonzero
+                        when a group lost >= 2 frames)
   batch      --suite NAME|all [--out-dir D] [--threads N]
              [--stream [--chunk-rows N]] + compress flags
              (whole dataset suite through the pool, one field per worker)
@@ -235,12 +254,13 @@ fn cmd_stream(a: &Args) -> Result<()> {
                 a.get("dims").ok_or_else(|| VszError::config("--dims required"))?,
             )?;
             let chunk_rows = a.usize_or("chunk-rows", 0)?;
+            let parity = a.usize_or("parity", 0)?;
             let tune = TuneSettings {
                 sample_pct: a.f64_or("sample-pct", 5.0)?,
                 iterations: a.usize_or("iterations", 1)?,
                 ..TuneSettings::default()
             };
-            let mut builder = vecsz::stream::StreamOptions::builder();
+            let mut builder = vecsz::stream::StreamOptions::builder().parity(parity);
             if a.has("tune-chunks") {
                 builder = builder.chunk_autotune_with(tune);
             }
@@ -256,7 +276,7 @@ fn cmd_stream(a: &Args) -> Result<()> {
             }
             std::fs::create_dir_all(Path::new(&out).parent().unwrap_or(Path::new(".")))?;
             if a.has("resume") {
-                if let Some(state) = scan_partial(&out) {
+                if let Some(state) = scan_partial(&out, parity) {
                     if state.complete {
                         println!("{out}: container already complete; nothing to resume");
                         return Ok(());
@@ -453,9 +473,46 @@ fn cmd_stream(a: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "scrub" | "repair" => {
+            let repair = mode == "repair" || a.has("repair");
+            let mut bytes = std::fs::read(&input)?;
+            let report = vecsz::stream::scrub_container(&mut bytes, repair)?;
+            // JSON report on stdout, prose on stderr (same split as salvage)
+            println!("{}", report.to_json());
+            if !report.is_clean() {
+                // fsck-style exit: nonzero whenever the container is (still)
+                // damaged — repairable-but-unrepaired in report-only mode,
+                // or >= 2 losses in one parity group in either mode
+                let why = if report.unrepairable_groups.is_empty() {
+                    "damage found; run 'vsz stream repair' to rebuild from parity".to_string()
+                } else {
+                    format!(
+                        "unrepairable damage (parity groups {:?} lost >= 2 frames)",
+                        report.unrepairable_groups
+                    )
+                };
+                return Err(VszError::format(format!("{input}: {why}")));
+            }
+            let n_repairs = report.repaired_chunks.len()
+                + report.repaired_parity.len()
+                + usize::from(report.repaired_trailer);
+            if !repair || n_repairs == 0 {
+                if n_repairs == 0 {
+                    eprintln!("{input}: clean; nothing to repair");
+                }
+                return Ok(());
+            }
+            // temp file + atomic rename: a crash mid-rewrite leaves the
+            // original container untouched
+            let tmp = format!("{input}.tmp-repair");
+            std::fs::write(&tmp, &bytes)?;
+            std::fs::rename(&tmp, &input)?;
+            eprintln!("{input}: repaired {n_repairs} frame(s) in place");
+            Ok(())
+        }
         other => Err(VszError::config(format!(
-            "stream: expected 'compress', 'decompress', 'inspect', 'extract' or 'salvage', \
-             got '{other}'"
+            "stream: expected 'compress', 'decompress', 'inspect', 'extract', 'salvage', \
+             'scrub' or 'repair', got '{other}'"
         ))),
     }
 }
@@ -463,9 +520,9 @@ fn cmd_stream(a: &Args) -> Result<()> {
 /// `--resume` preflight: scan the partial output for its CRC-valid chunk
 /// prefix. `None` (missing file, unreadable header) means nothing is
 /// salvageable and the compression starts from scratch.
-fn scan_partial(path: &str) -> Option<vecsz::stream::ResumeState> {
+fn scan_partial(path: &str, parity_group: usize) -> Option<vecsz::stream::ResumeState> {
     let f = std::fs::File::open(path).ok()?;
-    vecsz::stream::scan_resumable(BufReader::new(f)).ok()
+    vecsz::stream::scan_resumable_with(BufReader::new(f), parity_group).ok()
 }
 
 fn cmd_batch(a: &Args) -> Result<()> {

@@ -243,6 +243,7 @@ pub struct CacheStats {
     misses: std::sync::atomic::AtomicU64,
     evictions: std::sync::atomic::AtomicU64,
     resident_bytes: std::sync::atomic::AtomicU64,
+    repaired_reads: std::sync::atomic::AtomicU64,
 }
 
 impl CacheStats {
@@ -256,6 +257,12 @@ impl CacheStats {
 
     pub fn record_eviction(&self) {
         self.evictions.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Record one chunk read that was transparently rebuilt from the
+    /// container's parity layer after its on-disk frame failed its CRC.
+    pub fn record_repair(&self) {
+        self.repaired_reads.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
 
     pub fn add_resident(&self, bytes: u64) {
@@ -273,6 +280,7 @@ impl CacheStats {
             misses: self.misses.load(Relaxed),
             evictions: self.evictions.load(Relaxed),
             resident_bytes: self.resident_bytes.load(Relaxed),
+            repaired_reads: self.repaired_reads.load(Relaxed),
         }
     }
 }
@@ -284,6 +292,9 @@ pub struct CacheSnapshot {
     pub misses: u64,
     pub evictions: u64,
     pub resident_bytes: u64,
+    /// Chunk reads that succeeded only because the frame was rebuilt
+    /// from parity (bit rot healed in-flight).
+    pub repaired_reads: u64,
 }
 
 impl CacheSnapshot {
@@ -300,8 +311,8 @@ impl CacheSnapshot {
     /// Render as a JSON object (nested into the `vsz serve` status payload).
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"hits\":{},\"misses\":{},\"evictions\":{},\"resident_bytes\":{}}}",
-            self.hits, self.misses, self.evictions, self.resident_bytes
+            "{{\"hits\":{},\"misses\":{},\"evictions\":{},\"resident_bytes\":{},\"repaired_reads\":{}}}",
+            self.hits, self.misses, self.evictions, self.resident_bytes, self.repaired_reads
         )
     }
 }
@@ -443,15 +454,19 @@ mod tests {
         s.record_eviction();
         s.add_resident(4096);
         s.sub_resident(1024);
+        s.record_repair();
+        s.record_repair();
         let snap = s.snapshot();
         assert_eq!(snap.hits, 3);
         assert_eq!(snap.misses, 1);
         assert_eq!(snap.evictions, 1);
         assert_eq!(snap.resident_bytes, 3072);
+        assert_eq!(snap.repaired_reads, 2);
         assert!((snap.hit_rate() - 0.75).abs() < 1e-12);
         let j = crate::util::json::parse(&snap.to_json()).unwrap();
         assert_eq!(j.get("hits").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("resident_bytes").unwrap().as_usize(), Some(3072));
+        assert_eq!(j.get("repaired_reads").unwrap().as_usize(), Some(2));
     }
 
     #[test]

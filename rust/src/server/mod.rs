@@ -28,7 +28,10 @@
 //! A **response** is one or more frames, each `u8 kind` + payload:
 //! `0 = data` (streamed result slices, may repeat), `1 = end` (terminal;
 //! JSON per-request stats), `2 = error` (terminal; message), `3 = busy`
-//! (terminal; admission control rejected the request).
+//! (terminal; admission control rejected the request — the payload is a
+//! JSON object `{"busy": reason, "retry_after_ms": hint}` whose hint
+//! scales with the current in-flight load, and clients floor their next
+//! backoff sleep at it).
 //!
 //! ## Admission control
 //!
@@ -193,6 +196,17 @@ fn admit(shared: &Shared, bytes: u64) -> Option<Admission<'_>> {
     } else {
         Some(Admission { gauge: &shared.inflight, bytes })
     }
+}
+
+/// JSON payload of a `busy` frame: the reason plus a `retry_after_ms`
+/// backoff hint scaled by how loaded the admission gauge is right now —
+/// a server pinned at its cap pushes clients further out than one that
+/// rejected a single oversized request.
+fn busy_payload(shared: &Shared, reason: &str) -> String {
+    let cap = shared.cfg.max_inflight_bytes.max(1);
+    let load = (shared.inflight.load(Ordering::SeqCst) as f64 / cap as f64).min(1.0);
+    let hint = (50.0 + 450.0 * load).round() as u64;
+    format!("{{\"busy\":\"{}\",\"retry_after_ms\":{hint}}}", json::escape(reason))
 }
 
 /// Lock the lifetime stats, recovering from poisoning: the aggregate is
@@ -372,7 +386,8 @@ impl Server {
                 Err(_) => continue,
             };
             if self.shared.active_conns.load(Ordering::SeqCst) >= self.shared.cfg.max_conns {
-                let _ = write_kind_frame(&mut stream, KIND_BUSY, b"connection limit reached");
+                let payload = busy_payload(&self.shared, "connection limit reached");
+                let _ = write_kind_frame(&mut stream, KIND_BUSY, payload.as_bytes());
                 continue;
             }
             // poll-interval read timeout (idle waits loop on it; mid-frame
@@ -465,7 +480,8 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
                              exceeding the {}-byte cap",
                             shared.cfg.max_inflight_bytes
                         );
-                        write_kind_frame(&mut stream, KIND_BUSY, msg.as_bytes())?;
+                        let payload = busy_payload(shared, &msg);
+                        write_kind_frame(&mut stream, KIND_BUSY, payload.as_bytes())?;
                         continue;
                     }
                 };
@@ -494,7 +510,8 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) -> Result<()> {
                             "request deadline exceeded ({} ms); {e}",
                             ctx.timeout_ms
                         );
-                        write_kind_frame(&mut stream, KIND_BUSY, msg.as_bytes())?;
+                        let payload = busy_payload(shared, &msg);
+                        write_kind_frame(&mut stream, KIND_BUSY, payload.as_bytes())?;
                     }
                     Err(e) => {
                         stats_lock(shared).record_error();
@@ -899,7 +916,14 @@ impl Client {
             match f(self) {
                 Ok(v) => return Ok(v),
                 Err(e) if is_retryable(&e) && attempt < policy.max_retries => {
-                    thread::sleep(policy.delay(attempt, rng.next_f32() as f64));
+                    let mut delay = policy.delay(attempt, rng.next_f32() as f64);
+                    // a server-sent retry_after_ms is a floor, not a
+                    // replacement: the server knows its own load better
+                    // than our blind exponential schedule does
+                    if let Some(ms) = busy_retry_after_ms(&e) {
+                        delay = delay.max(Duration::from_millis(ms));
+                    }
+                    thread::sleep(delay);
                     attempt += 1;
                 }
                 Err(e) => return Err(e),
@@ -920,6 +944,17 @@ fn bytes_to_f32(bytes: &[u8]) -> Result<Vec<f32>> {
 /// same `busy` channel, so they are also recognized here.
 pub fn is_busy(e: &VszError) -> bool {
     matches!(e, VszError::Runtime(m) if m.starts_with("server busy"))
+}
+
+/// The `retry_after_ms` backoff hint carried by a structured `busy`
+/// rejection, if any. Pre-hint servers send plain-text busy reasons;
+/// those (and every non-busy error) return `None`, so callers fall back
+/// to their own schedule.
+pub fn busy_retry_after_ms(e: &VszError) -> Option<u64> {
+    let VszError::Runtime(m) = e else { return None };
+    let body = m.strip_prefix("server busy: ")?;
+    let j = json::parse(body).ok()?;
+    j.get("retry_after_ms")?.as_usize().map(|v| v as u64)
 }
 
 /// True when `e` is a socket-level timeout (the peer stalled, or a client
@@ -1035,6 +1070,91 @@ mod tests {
         assert_eq!(p.delay(30, 0.0), Duration::from_secs(2), "exponent must cap, not overflow");
         assert_eq!(p.delay(1, 1.0), Duration::from_millis(75));
         assert_eq!(p.delay(2, 7.5), Duration::from_millis(150), "jitter factor clamps to [0,1]");
+    }
+
+    fn test_shared(cap: u64) -> Shared {
+        Shared {
+            cfg: ServeConfig { max_inflight_bytes: cap, ..ServeConfig::default() },
+            addr: "127.0.0.1:0".parse().unwrap(),
+            pool: Arc::new(ThreadPool::new(1)),
+            cache: Arc::new(ChunkCache::new(0)),
+            inflight: AtomicU64::new(0),
+            active_conns: AtomicUsize::new(0),
+            stats: Mutex::new(CompressionStats::new()),
+            stop: AtomicBool::new(false),
+            started: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn busy_payload_scales_hint_with_load_and_escapes_reason() {
+        let shared = test_shared(100);
+        let idle = json::parse(&busy_payload(&shared, "cap\nhit")).unwrap();
+        assert_eq!(idle.get("retry_after_ms").unwrap().as_usize(), Some(50));
+        assert_eq!(idle.get("busy").unwrap().as_str(), Some("cap\nhit"));
+        shared.inflight.store(100, Ordering::SeqCst);
+        let full = json::parse(&busy_payload(&shared, "cap")).unwrap();
+        assert_eq!(full.get("retry_after_ms").unwrap().as_usize(), Some(500));
+        // load saturates at the cap — an oversized reject can't push the
+        // hint past the full-load value
+        shared.inflight.store(1_000_000, Ordering::SeqCst);
+        let over = json::parse(&busy_payload(&shared, "cap")).unwrap();
+        assert_eq!(over.get("retry_after_ms").unwrap().as_usize(), Some(500));
+    }
+
+    #[test]
+    fn busy_hint_parses_from_structured_replies_only() {
+        let hinted =
+            VszError::runtime("server busy: {\"busy\":\"cap\",\"retry_after_ms\":120}");
+        assert!(is_busy(&hinted), "structured replies stay in the busy class");
+        assert_eq!(busy_retry_after_ms(&hinted), Some(120));
+        // pre-hint plain-text reasons and non-busy errors carry no hint
+        assert_eq!(busy_retry_after_ms(&VszError::runtime("server busy: cap")), None);
+        assert_eq!(busy_retry_after_ms(&VszError::runtime("server error: boom")), None);
+        assert_eq!(busy_retry_after_ms(&VszError::format("bad frame")), None);
+    }
+
+    #[test]
+    fn with_retry_floors_backoff_at_the_server_hint() {
+        // loopback listener only exists so a Client can be constructed;
+        // the closures never touch the socket
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut c = Client::connect(&listener.local_addr().unwrap().to_string()).unwrap();
+        let policy = RetryPolicy {
+            max_retries: 2,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(4),
+        };
+        let t = Instant::now();
+        let mut calls = 0u32;
+        let err = c
+            .with_retry(&policy, |_| -> Result<()> {
+                calls += 1;
+                Err(VszError::runtime(
+                    "server busy: {\"busy\":\"cap\",\"retry_after_ms\":80}",
+                ))
+            })
+            .unwrap_err();
+        assert!(is_busy(&err));
+        assert_eq!(calls, 3, "initial attempt + max_retries");
+        let hinted = t.elapsed();
+        assert!(
+            hinted >= Duration::from_millis(160),
+            "two sleeps floored at the 80 ms hint, got {hinted:?}"
+        );
+        // the same policy against a hint-less busy reply sleeps only the
+        // policy schedule (≤ ~9 ms with full jitter) — far under the floor
+        let t = Instant::now();
+        let _ = c
+            .with_retry(&policy, |_| -> Result<()> {
+                Err(VszError::runtime("server busy: cap"))
+            })
+            .unwrap_err();
+        let legacy = t.elapsed();
+        assert!(
+            legacy < Duration::from_millis(120),
+            "hint-less backoff must not inherit the floor, got {legacy:?}"
+        );
     }
 
     #[test]

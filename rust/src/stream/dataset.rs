@@ -605,7 +605,23 @@ impl<R: Read + Seek> Dataset<R> {
                 for &k in &claimed {
                     // On error the guard publishes the abandonment to any
                     // waiters of the remaining claims.
-                    frames.push(dec.parse_indexed_frame(k)?);
+                    match dec.parse_indexed_frame(k) {
+                        Ok(frame) => frames.push(frame),
+                        Err(err) if self.index.parity.is_some() => {
+                            // transparent recovery: a single lost frame per
+                            // parity group rebuilds from the XOR of the
+                            // survivors (CRC-gated); only a ≥2-loss group
+                            // still surfaces the original error
+                            match dec.rebuild_indexed_frame(k) {
+                                Ok(frame) => {
+                                    self.cache.stats().record_repair();
+                                    frames.push(frame);
+                                }
+                                Err(_) => return Err(err),
+                            }
+                        }
+                        Err(err) => return Err(err),
+                    }
                 }
             }
             let decodes = &self.decodes;

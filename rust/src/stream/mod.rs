@@ -87,11 +87,22 @@ pub struct StreamOptions {
     pub chunk_autotune: Option<TuneSettings>,
     /// Lane widths the per-chunk tuner considers.
     pub tune_widths: [usize; 2],
+    /// Data chunks per XOR parity group; `0` (the default) writes no
+    /// parity. With `G > 0` the compressor emits one parity frame per `G`
+    /// data frames (the last group may be shorter) after the data frames,
+    /// and records the group geometry in the footer-v2 index — any single
+    /// lost or corrupted frame per group becomes recoverable. v3 only.
+    pub parity_group: usize,
 }
 
 impl Default for StreamOptions {
     fn default() -> Self {
-        Self { version: format::VERSION3, chunk_autotune: None, tune_widths: [8, 16] }
+        Self {
+            version: format::VERSION3,
+            chunk_autotune: None,
+            tune_widths: [8, 16],
+            parity_group: 0,
+        }
     }
 }
 
@@ -139,6 +150,12 @@ impl StreamOptionsBuilder {
         self
     }
 
+    /// Data chunks per XOR parity group (`0` disables parity).
+    pub fn parity(mut self, group: usize) -> Self {
+        self.opts.parity_group = group;
+        self
+    }
+
     pub fn build(self) -> StreamOptions {
         self.opts
     }
@@ -171,6 +188,20 @@ pub fn default_chunk_span(dims: Dims, block_size: usize) -> usize {
     let target_rows = ((1usize << 20) / row_elems.max(1)).max(1); // 4 MiB / 4 B
     let span = target_rows.div_ceil(bs) * bs;
     span.max(bs)
+}
+
+/// Fold `frame` into a running XOR accumulator under the length-padding
+/// rule: the accumulator grows (zero-filled) to the longest frame seen, and
+/// shorter frames XOR as if zero-padded at the tail — so XOR-ing the
+/// accumulator with every *other* member of a parity group, then truncating
+/// to the missing member's frame length, reproduces that member's bytes.
+fn xor_into(acc: &mut Vec<u8>, frame: &[u8]) {
+    if acc.len() < frame.len() {
+        acc.resize(frame.len(), 0);
+    }
+    for (a, b) in acc.iter_mut().zip(frame) {
+        *a ^= *b;
+    }
 }
 
 /// Per-chunk numbers sent back from encode workers.
@@ -221,6 +252,12 @@ pub(crate) fn plan_chunks(
         return Err(VszError::config(
             "per-chunk autotuning needs the v3 container (the per-chunk \
              block size must be recorded in the frame and index)",
+        ));
+    }
+    if opts.parity_group > 0 && opts.version < format::VERSION3 {
+        return Err(VszError::config(
+            "parity needs the v3 container (the group geometry must be \
+             recorded in the index footer)",
         ));
     }
     let eb = match cfg.eb {
@@ -337,6 +374,12 @@ pub struct StreamCompressor<W: Write> {
     stats: StreamStats,
     /// One entry per written frame, in order — becomes the v3 footer.
     index: Vec<ChunkIndexEntry>,
+    /// Completed parity-group payloads, emitted as frames by `finish`.
+    parity_payloads: Vec<Vec<u8>>,
+    /// XOR of the length-padded frames of the group being accumulated.
+    parity_acc: Vec<u8>,
+    /// Data frames folded into `parity_acc` so far.
+    parity_members: usize,
     // chunk-pipeline state (threads > 1)
     pool: Option<ThreadPool>,
     tx: Sender<ChunkResult>,
@@ -393,6 +436,9 @@ impl<W: Write> StreamCompressor<W> {
                 ..StreamStats::default()
             },
             index: Vec::new(),
+            parity_payloads: Vec::new(),
+            parity_acc: Vec::new(),
+            parity_members: 0,
             pool,
             tx,
             rx,
@@ -429,6 +475,14 @@ impl<W: Write> StreamCompressor<W> {
         crate::failpoint::write_through("frame_write", &mut self.out, frame)?;
         self.stats.compressed_bytes += frame.len();
         self.next_write += 1;
+        if self.opts.parity_group > 0 {
+            xor_into(&mut self.parity_acc, frame);
+            self.parity_members += 1;
+            if self.parity_members == self.opts.parity_group {
+                self.parity_payloads.push(std::mem::take(&mut self.parity_acc));
+                self.parity_members = 0;
+            }
+        }
         Ok(())
     }
 
@@ -549,10 +603,41 @@ impl<W: Write> StreamCompressor<W> {
         self.write_ready()?;
         debug_assert!(self.ready.is_empty());
         debug_assert_eq!(self.next_write, self.chunk_index);
+        // flush the parity layer: the final (possibly short) group, then
+        // one frame per group, each indexed for the footer-v2 table
+        let mut parity_entries: Vec<format::ParityIndexEntry> = Vec::new();
+        if self.opts.parity_group > 0 {
+            if self.parity_members > 0 {
+                self.parity_payloads.push(std::mem::take(&mut self.parity_acc));
+                self.parity_members = 0;
+            }
+            let g_size = self.opts.parity_group as u64;
+            for (g, payload) in self.parity_payloads.iter().enumerate() {
+                let members =
+                    (self.chunk_index - g as u64 * g_size).min(g_size);
+                let mut frame = Vec::new();
+                format::write_parity_frame(&mut frame, g as u64, members, payload);
+                parity_entries.push(format::ParityIndexEntry {
+                    offset: self.stats.compressed_bytes as u64,
+                    frame_len: frame.len() as u64,
+                });
+                crate::failpoint::write_through("parity_write", &mut self.out, &frame)?;
+                self.stats.compressed_bytes += frame.len();
+            }
+        }
         let mut tail = Vec::new();
         format::write_trailer(&mut tail, self.chunk_index);
         if self.opts.version >= format::VERSION3 {
-            format::write_index_footer(&mut tail, &self.index);
+            if parity_entries.is_empty() {
+                // parity-less containers keep the v1 footer byte-for-byte
+                format::write_index_footer(&mut tail, &self.index);
+            } else {
+                let parity = format::ParityFooter {
+                    group_size: self.opts.parity_group as u64,
+                    entries: parity_entries,
+                };
+                format::write_index_footer_v2(&mut tail, &self.index, &parity);
+            }
         }
         self.out.write_all(&tail)?;
         self.stats.compressed_bytes += tail.len();
@@ -729,6 +814,26 @@ fn read_frame_io<R: Read>(r: &mut R, version: u16) -> Result<Frame> {
             }
             Ok(Frame::Chunk { index, lead_extent, meta, sections })
         }
+        format::PARITY_TAG => {
+            let group = read_uvarint_io(r)?;
+            let members = read_uvarint_io(r)?;
+            if members == 0 {
+                return Err(VszError::format("empty parity group"));
+            }
+            let len = read_uvarint_io(r)?;
+            if len > MAX_SECTION_LEN {
+                return Err(VszError::format(format!(
+                    "parity group {group}: implausible length {len}"
+                )));
+            }
+            let crc = read_u32_io(r)?;
+            let mut payload = vec![0u8; len as usize];
+            r.read_exact(&mut payload)?;
+            if crc32(&payload) != crc {
+                return Err(VszError::Integrity(format!("parity group {group}: crc mismatch")));
+            }
+            Ok(Frame::Parity { group, members, payload })
+        }
         format::END_TAG => {
             let n_chunks = read_uvarint_io(r)?;
             let crc = read_u32_io(r)?;
@@ -759,6 +864,8 @@ pub struct ChunkIndex {
     pub lead_offsets: Vec<usize>,
     /// Byte position where the footer begins (frames + trailer end here).
     pub footer_start: u64,
+    /// Parity geometry when the container carries a footer-v2 parity layer.
+    pub parity: Option<format::ParityFooter>,
 }
 
 impl ChunkIndex {
@@ -773,6 +880,7 @@ impl ChunkIndex {
 fn validate_index(
     header: &StreamHeader,
     entries: Vec<ChunkIndexEntry>,
+    parity: Option<format::ParityFooter>,
     footer_start: u64,
 ) -> Result<ChunkIndex> {
     let dims = header.header.dims;
@@ -814,7 +922,31 @@ fn validate_index(
     if lead_done != dims.shape[0] {
         return Err(VszError::format("index does not cover the field"));
     }
-    Ok(ChunkIndex { entries, lead_offsets, footer_start })
+    // parity frames are contiguous after the last data frame, and the last
+    // one still ends strictly before the END trailer — same checked
+    // arithmetic, so a forged parity entry cannot drive an allocation past
+    // the container either
+    if let Some(p) = &parity {
+        for (g, pe) in p.entries.iter().enumerate() {
+            if pe.offset != pos {
+                return Err(VszError::format(format!(
+                    "parity entry {g}: offset {} does not follow the previous frame",
+                    pe.offset
+                )));
+            }
+            pos = pe
+                .offset
+                .checked_add(pe.frame_len)
+                .ok_or_else(|| VszError::format("parity offset overflow"))?;
+            let end = pos
+                .checked_add(6)
+                .ok_or_else(|| VszError::format("parity offset overflow"))?;
+            if end > footer_start {
+                return Err(VszError::format(format!("parity entry {g} overruns the trailer")));
+            }
+        }
+    }
+    Ok(ChunkIndex { entries, lead_offsets, footer_start, parity })
 }
 
 /// Incremental decoder for v2/v3 chunked containers over any `Read`; with
@@ -878,26 +1010,32 @@ impl<R: Read> StreamDecompressor<R> {
         if self.finished {
             return Ok(None);
         }
-        match read_frame_io(&mut self.input, self.header.version)? {
-            Frame::Chunk { index, lead_extent, meta, sections } => {
-                let extent = self.check_chunk(index, lead_extent)?;
-                self.lead_done += extent;
-                self.next_index += 1;
-                Ok(Some((self.chunk_header(extent, meta), sections)))
-            }
-            Frame::End { n_chunks } => {
-                if n_chunks != self.next_index {
-                    return Err(VszError::format(format!(
-                        "trailer says {n_chunks} chunks, read {}",
-                        self.next_index
-                    )));
+        loop {
+            return match read_frame_io(&mut self.input, self.header.version)? {
+                Frame::Chunk { index, lead_extent, meta, sections } => {
+                    let extent = self.check_chunk(index, lead_extent)?;
+                    self.lead_done += extent;
+                    self.next_index += 1;
+                    Ok(Some((self.chunk_header(extent, meta), sections)))
                 }
-                if self.lead_done != self.header.header.dims.shape[0] {
-                    return Err(VszError::format("stream ended before the field was complete"));
+                // sequential decode does not need the parity layer
+                Frame::Parity { .. } => continue,
+                Frame::End { n_chunks } => {
+                    if n_chunks != self.next_index {
+                        return Err(VszError::format(format!(
+                            "trailer says {n_chunks} chunks, read {}",
+                            self.next_index
+                        )));
+                    }
+                    if self.lead_done != self.header.header.dims.shape[0] {
+                        return Err(VszError::format(
+                            "stream ended before the field was complete",
+                        ));
+                    }
+                    self.finished = true;
+                    Ok(None)
                 }
-                self.finished = true;
-                Ok(None)
-            }
+            };
         }
     }
 
@@ -969,8 +1107,8 @@ impl<R: Read + Seek> StreamDecompressor<R> {
         self.input.seek(SeekFrom::Start(footer_start))?;
         let mut buf = vec![0u8; len as usize];
         self.input.read_exact(&mut buf)?;
-        let entries = format::read_index_footer(&buf)?;
-        validate_index(&self.header, entries, footer_start)
+        let (entries, parity) = format::read_index_footer_any(&buf)?;
+        validate_index(&self.header, entries, parity, footer_start)
     }
 
     /// Fetch and parse one chunk's frame through the index, verifying the
@@ -981,13 +1119,34 @@ impl<R: Read + Seek> StreamDecompressor<R> {
     }
 
     fn parse_indexed_frame_inner(&mut self, k: usize) -> Result<(Header, Vec<Section>)> {
+        crate::failpoint::hit("frame_read")?;
         let e = self.index.as_ref().unwrap().entries[k];
-        self.input.seek(SeekFrom::Start(e.offset))?;
         // frame_len was bounded by the file size in `validate_index`, so
         // this allocation cannot be driven past the container itself
-        let mut buf = vec![0u8; e.frame_len as usize];
+        let buf = self.read_raw_span(e.offset, e.frame_len)?;
+        self.check_chunk_frame_bytes(k, &e, &buf)
+    }
+
+    /// Read `len` raw bytes at `offset` (no position restore — callers
+    /// wrap in [`Self::with_restored_position`]).
+    fn read_raw_span(&mut self, offset: u64, len: u64) -> Result<Vec<u8>> {
+        self.input.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len as usize];
         self.input.read_exact(&mut buf)?;
-        let mut c = crate::bitio::Cursor::new(&buf);
+        Ok(buf)
+    }
+
+    /// Parse `buf` as chunk `k`'s complete frame and cross-check it against
+    /// its index entry — the shared acceptance gate for frames read from
+    /// disk and frames rebuilt from parity (a rebuilt frame is accepted
+    /// only if its section CRCs and index geometry all check out).
+    fn check_chunk_frame_bytes(
+        &self,
+        k: usize,
+        e: &ChunkIndexEntry,
+        buf: &[u8],
+    ) -> Result<(Header, Vec<Section>)> {
+        let mut c = crate::bitio::Cursor::new(buf);
         match format::read_frame(&mut c, self.header.version)? {
             Frame::Chunk { index, lead_extent, meta, sections } => {
                 let meta_bs = meta.map(|m| m.block_size);
@@ -1006,10 +1165,79 @@ impl<R: Read + Seek> StreamDecompressor<R> {
                 }
                 Ok((self.chunk_header(lead_extent as usize, meta), sections))
             }
-            Frame::End { .. } => {
-                Err(VszError::format(format!("chunk {k}: index points at the trailer")))
-            }
+            Frame::Parity { .. } | Frame::End { .. } => Err(VszError::format(format!(
+                "chunk {k}: index points at a non-chunk frame"
+            ))),
         }
+    }
+
+    /// Reconstruct chunk `k`'s frame from its parity group: XOR the
+    /// group's parity payload with every *other* member's on-disk bytes,
+    /// truncate to `k`'s frame length, and accept the result only if it
+    /// parses CRC-clean and matches `k`'s index entry. Errors when the
+    /// container carries no parity layer, or when a second frame in the
+    /// group is also damaged — the rebuilt bytes then fail their CRCs.
+    pub(crate) fn rebuild_indexed_frame(&mut self, k: usize) -> Result<(Header, Vec<Section>)> {
+        self.with_restored_position(|this| this.rebuild_indexed_frame_inner(k))
+    }
+
+    fn rebuild_indexed_frame_inner(&mut self, k: usize) -> Result<(Header, Vec<Section>)> {
+        let idx = self.index.as_ref().ok_or_else(|| {
+            VszError::format("rebuild needs the chunk index loaded first")
+        })?;
+        let parity = match &idx.parity {
+            Some(p) => p.clone(),
+            None => {
+                return Err(VszError::format(format!(
+                    "chunk {k}: container has no parity layer to rebuild from"
+                )))
+            }
+        };
+        let e = idx.entries[k];
+        let n = idx.entries.len();
+        let g_size = parity.group_size as usize;
+        let g = k / g_size;
+        let lo = g * g_size;
+        let hi = (lo + g_size).min(n);
+        let member_entries: Vec<(usize, ChunkIndexEntry)> =
+            (lo..hi).map(|j| (j, idx.entries[j])).collect();
+        let pe = parity.entries[g];
+
+        // the parity frame itself must parse CRC-clean and agree with the
+        // (independently CRC'd) footer geometry
+        let praw = self.read_raw_span(pe.offset, pe.frame_len)?;
+        let mut c = crate::bitio::Cursor::new(&praw);
+        let mut acc = match format::read_frame(&mut c, self.header.version)? {
+            Frame::Parity { group, members, payload }
+                if group == g as u64 && members as usize == hi - lo && c.remaining() == 0 =>
+            {
+                payload
+            }
+            Frame::Parity { .. } => {
+                return Err(VszError::format(format!(
+                    "parity group {g}: frame does not match its footer entry"
+                )))
+            }
+            _ => {
+                return Err(VszError::format(format!(
+                    "parity group {g}: footer points at a non-parity frame"
+                )))
+            }
+        };
+        for (j, ej) in member_entries {
+            if j == k {
+                continue;
+            }
+            let raw = self.read_raw_span(ej.offset, ej.frame_len)?;
+            xor_into(&mut acc, &raw);
+        }
+        if acc.len() < e.frame_len as usize {
+            return Err(VszError::format(format!(
+                "parity group {g}: payload shorter than chunk {k}'s frame"
+            )));
+        }
+        acc.truncate(e.frame_len as usize);
+        self.check_chunk_frame_bytes(k, &e, &acc)
     }
 
     /// Random access: decode chunk `k`, reading only the index footer
@@ -1206,10 +1434,20 @@ pub fn decompress_chunked(bytes: &[u8], threads: usize) -> Result<Field> {
     let mut c = crate::bitio::Cursor::new(&bytes[format::STREAM_HEADER_LEN..]);
     let mut chunks: Vec<(Header, Vec<Section>)> = Vec::new();
     let mut observed: Vec<ChunkIndexEntry> = Vec::new();
+    let mut observed_parity: Vec<format::ParityIndexEntry> = Vec::new();
     let mut lead_done = 0usize;
     loop {
         let frame_start = format::STREAM_HEADER_LEN + c.pos();
         match format::read_frame(&mut c, header.version)? {
+            // sequential decode skips the parity layer (CRC already
+            // checked by read_frame); position is recorded so the footer
+            // cross-check below still covers the parity table
+            Frame::Parity { .. } => {
+                observed_parity.push(format::ParityIndexEntry {
+                    offset: frame_start as u64,
+                    frame_len: (format::STREAM_HEADER_LEN + c.pos() - frame_start) as u64,
+                });
+            }
             Frame::Chunk { index, lead_extent, meta, sections } => {
                 if index as usize != chunks.len() {
                     return Err(VszError::format(format!(
@@ -1263,9 +1501,13 @@ pub fn decompress_chunked(bytes: &[u8], threads: usize) -> Result<Field> {
         if len + 4 != rest {
             return Err(VszError::format("index footer length does not match the container"));
         }
-        let entries = format::read_index_footer(&footer[..rest - 4])?;
+        let (entries, parity) = format::read_index_footer_any(&footer[..rest - 4])?;
         if entries != observed {
             return Err(VszError::format("index footer disagrees with the chunk frames"));
+        }
+        let footer_parity = parity.map(|p| p.entries).unwrap_or_default();
+        if footer_parity != observed_parity {
+            return Err(VszError::format("index footer disagrees with the parity frames"));
         }
     } else if c.remaining() != 0 {
         return Err(VszError::format("trailing garbage after stream trailer"));
@@ -1340,7 +1582,7 @@ impl SalvageReport {
                     h.rows.start,
                     h.rows.end,
                     h.byte_offset,
-                    h.reason.replace('\\', "\\\\").replace('"', "\\\"")
+                    crate::util::json::escape(&h.reason)
                 )
             })
             .collect();
@@ -1404,15 +1646,22 @@ impl<R: Read + Seek> StreamDecompressor<R> {
                 // corrupt chunk quarantines alone and costs no resync
                 report.footer_ok = true;
                 report.trailer_found = true; // validate_index bounds the trailer
+                let has_parity = idx.parity.is_some();
                 self.index = Some(idx.clone());
                 for k in 0..idx.n_chunks() {
                     let e = idx.entries[k];
-                    match self
-                        .parse_indexed_frame(k)
-                        .and_then(|(h, sections)| {
-                            let extent = h.dims.shape[0];
-                            decode_body(&h, &sections, 1).map(|d| (extent, d))
-                        }) {
+                    let mut parsed = self.parse_indexed_frame(k);
+                    if parsed.is_err() && has_parity {
+                        // one lost frame per group is reconstructable; the
+                        // rebuilt bytes pass the same CRC acceptance gate
+                        if let Ok(rebuilt) = self.rebuild_indexed_frame(k) {
+                            parsed = Ok(rebuilt);
+                        }
+                    }
+                    match parsed.and_then(|(h, sections)| {
+                        let extent = h.dims.shape[0];
+                        decode_body(&h, &sections, 1).map(|d| (extent, d))
+                    }) {
                         Ok((extent, data)) => {
                             out.push(DecodedChunk {
                                 index: k as u64,
@@ -1504,6 +1753,10 @@ impl<R: Read + Seek> StreamDecompressor<R> {
                     expected = index + 1;
                     pos = end;
                 }
+                // parity frames carry no field data: step over them
+                Ok(Frame::Parity { .. }) => {
+                    pos = self.input.stream_position()?;
+                }
                 Ok(Frame::End { .. }) => {
                     report.trailer_found = true;
                     break;
@@ -1520,11 +1773,19 @@ impl<R: Read + Seek> StreamDecompressor<R> {
             }
         }
         // all chunks recovered: the loop exits before touching the
-        // trailer, so probe for it separately (report completeness only)
+        // trailer, so probe for it separately (report completeness only),
+        // stepping over any parity frames between the data and the trailer
         if !report.trailer_found && expected == total_chunks && pos < file_len {
             self.input.seek(SeekFrom::Start(pos))?;
-            if let Ok(Frame::End { .. }) = read_frame_io(&mut self.input, self.header.version) {
-                report.trailer_found = true;
+            loop {
+                match read_frame_io(&mut self.input, self.header.version) {
+                    Ok(Frame::Parity { .. }) => continue,
+                    Ok(Frame::End { .. }) => {
+                        report.trailer_found = true;
+                        break;
+                    }
+                    _ => break,
+                }
             }
         }
         close_hole(&mut report, &mut pending_hole, total_chunks);
@@ -1588,6 +1849,253 @@ impl<R: Read + Seek> StreamDecompressor<R> {
     }
 }
 
+// ------------------------------------------ integrity: scrub & repair
+
+/// Outcome of a [`scrub_container`] walk: what was checked, what was
+/// damaged, and (in repair mode) what was fixed in place.
+#[derive(Clone, Debug, Default)]
+pub struct ScrubReport {
+    /// Data chunks the footer indexes.
+    pub n_chunks: u64,
+    /// Parity groups (0 for a parity-less container).
+    pub n_parity: u64,
+    /// Parity group size from the footer (0 = no parity layer).
+    pub group_size: u64,
+    /// Data chunks whose frame failed its CRC / parse / index cross-check.
+    pub bad_chunks: Vec<u64>,
+    /// Parity groups whose parity frame failed the same checks.
+    pub bad_parity: Vec<u64>,
+    /// The END trailer matched its expected bytes at its expected offset.
+    pub trailer_ok: bool,
+    /// Chunks rebuilt in place from parity (repair mode).
+    pub repaired_chunks: Vec<u64>,
+    /// Parity frames regenerated in place from intact data (repair mode).
+    pub repaired_parity: Vec<u64>,
+    /// The trailer was rewritten in place (repair mode).
+    pub repaired_trailer: bool,
+    /// Groups with two or more damaged frames — beyond single-XOR parity.
+    pub unrepairable_groups: Vec<u64>,
+}
+
+impl ScrubReport {
+    /// Fully intact after this walk: every damaged frame was repaired (or
+    /// none was damaged) and no group is beyond repair.
+    pub fn is_clean(&self) -> bool {
+        self.unrepairable_groups.is_empty()
+            && (self.trailer_ok || self.repaired_trailer)
+            && self.bad_chunks.iter().all(|k| self.repaired_chunks.contains(k))
+            && self.bad_parity.iter().all(|g| self.repaired_parity.contains(g))
+    }
+
+    /// Integrity report as JSON (the `vsz stream scrub` output).
+    pub fn to_json(&self) -> String {
+        fn arr(v: &[u64]) -> String {
+            let items: Vec<String> = v.iter().map(|x| x.to_string()).collect();
+            format!("[{}]", items.join(","))
+        }
+        format!(
+            "{{\"n_chunks\":{},\"n_parity\":{},\"group_size\":{},\"trailer_ok\":{},\
+             \"bad_chunks\":{},\"bad_parity\":{},\"repaired_chunks\":{},\
+             \"repaired_parity\":{},\"repaired_trailer\":{},\
+             \"unrepairable_groups\":{},\"clean\":{}}}",
+            self.n_chunks,
+            self.n_parity,
+            self.group_size,
+            self.trailer_ok,
+            arr(&self.bad_chunks),
+            arr(&self.bad_parity),
+            arr(&self.repaired_chunks),
+            arr(&self.repaired_parity),
+            self.repaired_trailer,
+            arr(&self.unrepairable_groups),
+            self.is_clean(),
+        )
+    }
+}
+
+/// Does `buf` parse as chunk `k`'s complete, CRC-clean frame matching its
+/// index entry?
+fn chunk_frame_bytes_ok(buf: &[u8], version: u16, k: u64, e: &ChunkIndexEntry) -> bool {
+    let mut c = crate::bitio::Cursor::new(buf);
+    match format::read_frame(&mut c, version) {
+        Ok(Frame::Chunk { index, lead_extent, meta, .. }) => {
+            index == k
+                && lead_extent == e.lead_extent
+                && meta.map(|m| m.block_size) == Some(e.meta.block_size)
+                && c.remaining() == 0
+        }
+        _ => false,
+    }
+}
+
+/// Parse `buf` as group `g`'s complete, CRC-clean parity frame with the
+/// expected member count, returning its payload.
+fn parity_frame_payload(buf: &[u8], version: u16, g: u64, members: u64) -> Option<Vec<u8>> {
+    let mut c = crate::bitio::Cursor::new(buf);
+    match format::read_frame(&mut c, version) {
+        Ok(Frame::Parity { group, members: m, payload })
+            if group == g && m == members && c.remaining() == 0 =>
+        {
+            Some(payload)
+        }
+        _ => None,
+    }
+}
+
+/// Walk every data frame, parity frame and the trailer of an in-memory v3
+/// container against its (intact) header and index footer, reporting every
+/// CRC/parse/cross-check failure. With `repair` set, damage is fixed in
+/// place wherever the parity layer allows it: a single lost data frame per
+/// group is rebuilt from the XOR of the survivors (and accepted only once
+/// the rebuilt bytes pass their own CRCs), a lost parity frame is
+/// regenerated byte-identically from its intact members, and a damaged
+/// trailer is rewritten. Groups with two or more losses are reported as
+/// unrepairable — never patched, never a panic. The container length never
+/// changes, so callers can rewrite the file atomically from `bytes`.
+///
+/// The stream header and the index footer must be intact: they are the
+/// CRC-protected ground truth every frame is checked against.
+pub fn scrub_container(bytes: &mut [u8], repair: bool) -> Result<ScrubReport> {
+    if bytes.len() < format::STREAM_HEADER_LEN {
+        return Err(VszError::format("truncated stream header"));
+    }
+    let header = format::read_stream_header(&bytes[..format::STREAM_HEADER_LEN])?;
+    if header.version < format::VERSION3 {
+        return Err(VszError::format(
+            "scrub needs a v3 indexed container (v2 carries no index to check against)",
+        ));
+    }
+    let file_len = bytes.len() as u64;
+    let min = format::STREAM_HEADER_LEN as u64;
+    if file_len < min + 4 {
+        return Err(VszError::format("truncated container: no index footer"));
+    }
+    let flen = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap()) as u64;
+    if flen < 6 || flen > file_len - min - 4 {
+        return Err(VszError::format(format!("implausible index footer length {flen}")));
+    }
+    let footer_start = (file_len - 4 - flen) as usize;
+    let (entries, parity) =
+        format::read_index_footer_any(&bytes[footer_start..bytes.len() - 4])?;
+    let idx = validate_index(&header, entries, parity, footer_start as u64)?;
+    let version = header.version;
+    let n = idx.entries.len();
+    let g_size = idx.parity.as_ref().map(|p| p.group_size as usize).unwrap_or(0);
+
+    let mut report = ScrubReport {
+        n_chunks: n as u64,
+        n_parity: idx.parity.as_ref().map(|p| p.entries.len() as u64).unwrap_or(0),
+        group_size: g_size as u64,
+        ..ScrubReport::default()
+    };
+
+    let span = |off: u64, len: u64| off as usize..(off + len) as usize;
+    for (k, e) in idx.entries.iter().enumerate() {
+        if !chunk_frame_bytes_ok(&bytes[span(e.offset, e.frame_len)], version, k as u64, e) {
+            report.bad_chunks.push(k as u64);
+        }
+    }
+    let mut frames_end = idx
+        .entries
+        .last()
+        .map(|e| e.offset + e.frame_len)
+        .unwrap_or(format::STREAM_HEADER_LEN as u64);
+    if let Some(p) = &idx.parity {
+        for (g, pe) in p.entries.iter().enumerate() {
+            let lo = g * g_size;
+            let members = (n - lo).min(g_size) as u64;
+            let buf = &bytes[span(pe.offset, pe.frame_len)];
+            if parity_frame_payload(buf, version, g as u64, members).is_none() {
+                report.bad_parity.push(g as u64);
+            }
+        }
+        if let Some(pe) = p.entries.last() {
+            frames_end = pe.offset + pe.frame_len;
+        }
+    }
+
+    // the END trailer is fully determined by the (CRC'd) footer, so check
+    // it byte-for-byte and regenerate it outright in repair mode
+    let mut expect_trailer = Vec::new();
+    format::write_trailer(&mut expect_trailer, n as u64);
+    let trailer_span = frames_end as usize..footer_start;
+    let trailer_len_ok = trailer_span.len() == expect_trailer.len();
+    report.trailer_ok = trailer_len_ok && bytes[trailer_span.clone()] == expect_trailer[..];
+    if repair && !report.trailer_ok && trailer_len_ok {
+        bytes[trailer_span].copy_from_slice(&expect_trailer);
+        report.repaired_trailer = true;
+    }
+
+    // classify each group's losses; repair where exactly one frame is lost
+    if let Some(p) = idx.parity.clone() {
+        for (g, pe) in p.entries.iter().enumerate() {
+            let lo = g * g_size;
+            let hi = (lo + g_size).min(n);
+            let bad_members: Vec<usize> = (lo..hi)
+                .filter(|j| report.bad_chunks.contains(&(*j as u64)))
+                .collect();
+            let parity_bad = report.bad_parity.contains(&(g as u64));
+            let losses = bad_members.len() + parity_bad as usize;
+            if losses >= 2 {
+                report.unrepairable_groups.push(g as u64);
+                continue;
+            }
+            if losses == 0 || !repair {
+                continue;
+            }
+            if parity_bad {
+                // every member is intact: regenerate the parity frame
+                let mut payload = Vec::new();
+                for j in lo..hi {
+                    let e = idx.entries[j];
+                    xor_into(&mut payload, &bytes[span(e.offset, e.frame_len)]);
+                }
+                let mut frame = Vec::new();
+                format::write_parity_frame(&mut frame, g as u64, (hi - lo) as u64, &payload);
+                if frame.len() as u64 == pe.frame_len {
+                    bytes[span(pe.offset, pe.frame_len)].copy_from_slice(&frame);
+                    report.repaired_parity.push(g as u64);
+                } else {
+                    // geometry disagrees with the footer: not safe to patch
+                    report.unrepairable_groups.push(g as u64);
+                }
+            } else {
+                // one data frame lost: XOR the parity payload with every
+                // surviving member, truncate to the lost frame's length,
+                // and accept only if the rebuilt bytes check out fully
+                let k = bad_members[0];
+                let e = idx.entries[k];
+                let members = (hi - lo) as u64;
+                let pbuf = &bytes[span(pe.offset, pe.frame_len)];
+                let Some(mut acc) = parity_frame_payload(pbuf, version, g as u64, members)
+                else {
+                    report.unrepairable_groups.push(g as u64);
+                    continue;
+                };
+                for j in lo..hi {
+                    if j == k {
+                        continue;
+                    }
+                    let ej = idx.entries[j];
+                    xor_into(&mut acc, &bytes[span(ej.offset, ej.frame_len)]);
+                }
+                if acc.len() < e.frame_len as usize {
+                    report.unrepairable_groups.push(g as u64);
+                    continue;
+                }
+                acc.truncate(e.frame_len as usize);
+                if chunk_frame_bytes_ok(&acc, version, k as u64, &e) {
+                    bytes[span(e.offset, e.frame_len)].copy_from_slice(&acc);
+                    report.repaired_chunks.push(k as u64);
+                } else {
+                    report.unrepairable_groups.push(g as u64);
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
 // -------------------------------------------- crash recovery: resume
 
 /// What a scan of a partial container found: everything needed to truncate
@@ -1607,6 +2115,14 @@ pub struct ResumeState {
     pub index: Vec<ChunkIndexEntry>,
     /// The container already ends in a valid trailer: nothing to resume.
     pub complete: bool,
+    /// Parity group size the scan accumulated under (0 = no parity).
+    pub parity_group: usize,
+    /// XOR payloads of the parity groups the valid prefix completed.
+    pub parity_payloads: Vec<Vec<u8>>,
+    /// XOR accumulator of the trailing partial group.
+    pub parity_acc: Vec<u8>,
+    /// Valid frames folded into `parity_acc`.
+    pub parity_members: usize,
 }
 
 /// Scan a partial container for the longest CRC-valid chunk prefix.
@@ -1616,7 +2132,19 @@ pub struct ResumeState {
 /// one are ignored even if intact — resume rewrites everything past the
 /// truncation point, which is what makes the resumed output byte-identical
 /// to an uninterrupted run.
-pub fn scan_resumable<R: Read + Seek>(mut input: R) -> Result<ResumeState> {
+pub fn scan_resumable<R: Read + Seek>(input: R) -> Result<ResumeState> {
+    scan_resumable_with(input, 0)
+}
+
+/// [`scan_resumable`] for a run that writes parity: re-accumulates the XOR
+/// parity state of the valid prefix under groups of `parity_group`, so the
+/// resumed compressor emits the same parity frames an uninterrupted run
+/// would. `parity_group` must match the interrupted run's `--parity` (the
+/// partial file records no footer to recover it from); 0 skips parity.
+pub fn scan_resumable_with<R: Read + Seek>(
+    mut input: R,
+    parity_group: usize,
+) -> Result<ResumeState> {
     input.seek(SeekFrom::Start(0))?;
     let mut hdr = [0u8; format::STREAM_HEADER_LEN];
     input.read_exact(&mut hdr)?;
@@ -1634,6 +2162,10 @@ pub fn scan_resumable<R: Read + Seek>(mut input: R) -> Result<ResumeState> {
         truncate_at: format::STREAM_HEADER_LEN as u64,
         index: Vec::new(),
         complete: false,
+        parity_group,
+        parity_payloads: Vec::new(),
+        parity_acc: Vec::new(),
+        parity_members: 0,
     };
     loop {
         let frame_start = input.stream_position()?;
@@ -1657,10 +2189,27 @@ pub fn scan_resumable<R: Read + Seek>(mut input: R) -> Result<ResumeState> {
                         width: 0,
                     }),
                 });
+                if parity_group > 0 {
+                    // re-read the raw frame bytes to fold into the group
+                    // accumulator (the CRC checks above already passed)
+                    let mut raw = vec![0u8; (end - frame_start) as usize];
+                    input.seek(SeekFrom::Start(frame_start))?;
+                    input.read_exact(&mut raw)?;
+                    xor_into(&mut state.parity_acc, &raw);
+                    state.parity_members += 1;
+                    if state.parity_members == parity_group {
+                        state.parity_payloads.push(std::mem::take(&mut state.parity_acc));
+                        state.parity_members = 0;
+                    }
+                }
                 state.n_chunks_done += 1;
                 state.rows_done += extent;
                 state.truncate_at = end;
             }
+            // parity frames follow the last data frame: nothing to resume
+            // past them, and `truncate_at` must not advance over them —
+            // `finish` rewrites the whole parity layer
+            Ok(Frame::Parity { .. }) => continue,
             Ok(Frame::End { n_chunks }) => {
                 state.complete =
                     n_chunks == state.n_chunks_done && state.rows_done == total_rows;
@@ -1704,6 +2253,13 @@ impl<W: Write> StreamCompressor<W> {
         if state.complete {
             return Err(VszError::config("resume: container is already complete"));
         }
+        if opts.parity_group != state.parity_group {
+            return Err(VszError::config(format!(
+                "resume: parity group {} does not match the scan's {} — \
+                 rescan the partial container with the run's --parity",
+                opts.parity_group, state.parity_group
+            )));
+        }
         let ChunkPlan { cfg, span, header: _ } = plan;
         let threads = cfg.threads.max(1);
         let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
@@ -1735,6 +2291,9 @@ impl<W: Write> StreamCompressor<W> {
             } else {
                 Vec::new()
             },
+            parity_payloads: state.parity_payloads.clone(),
+            parity_acc: state.parity_acc.clone(),
+            parity_members: state.parity_members,
             pool,
             tx,
             rx,
@@ -2611,5 +3170,301 @@ mod tests {
         assert!(ds.read(Region::Rows(50..40)).is_err());
         assert!(ds.read(Region::Dim { dim: 2, range: 0..1 }).is_err());
         assert!(dec.decode_dim(2, 0..1, 1).is_err());
+    }
+
+    // ------------------------------------------------ v3 parity layer
+
+    /// 96x24 field in 6 chunks of 16 rows; parity groups of 4 give one
+    /// full group and one partial (2-member) group.
+    fn parity_container(seed: u64) -> (Field, Vec<u8>, Vec<u8>) {
+        let field = smooth_field(Dims::d2(96, 24), seed);
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let (plain, s0) = compress_chunked(&field, &cfg, 16).unwrap();
+        let opts = StreamOptions::builder().parity(4).build();
+        let (par, s1) = compress_chunked_with(&field, &cfg, 16, opts).unwrap();
+        assert_eq!(s0.n_chunks, 6);
+        assert_eq!(s1.n_chunks, 6);
+        (field, plain, par)
+    }
+
+    #[test]
+    fn parity_layer_is_strictly_additive() {
+        let (field, plain, par) = parity_container(301);
+        // the data frames are byte-identical: parity only appends frames
+        // after them and swaps the footer tag
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&par)).unwrap();
+        let idx = dec.load_index().unwrap().clone();
+        let p = idx.parity.as_ref().expect("parity footer missing");
+        assert_eq!(p.group_size, 4);
+        assert_eq!(p.entries.len(), 2);
+        let data_end = {
+            let e = idx.entries.last().unwrap();
+            (e.offset + e.frame_len) as usize
+        };
+        assert_eq!(par[..data_end], plain[..data_end], "data frames diverged");
+        assert!(par.len() > plain.len());
+        // a parity-less container keeps the legacy footer byte-for-byte
+        let mut dec0 = StreamDecompressor::new(std::io::Cursor::new(&plain)).unwrap();
+        assert!(dec0.load_index().unwrap().parity.is_none());
+
+        // every read path decodes the parity container identically
+        let a = decompress_chunked(&plain, 1).unwrap();
+        let b = decompress_chunked(&par, 2).unwrap();
+        assert_eq!(a.data, b.data);
+        assert!(max_err(&field.data, &b.data) <= 1e-3 + 1e-6);
+        let ds = Dataset::open(std::io::Cursor::new(&par)).unwrap();
+        assert_eq!(ds.read(Region::All).unwrap(), b.data);
+        assert_eq!(ds.cache_stats().repaired_reads, 0, "intact container repaired nothing");
+        // the sequential walker skips parity frames transparently
+        let mut walker = StreamDecompressor::new(&par[..]).unwrap();
+        let mut n = 0;
+        while walker.next_chunk().unwrap().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 6);
+        // scrub agrees the container is pristine
+        let mut copy = par.clone();
+        let report = scrub_container(&mut copy, false).unwrap();
+        assert!(report.is_clean(), "{}", report.to_json());
+        assert_eq!(report.n_chunks, 6);
+        assert_eq!(report.n_parity, 2);
+        assert!(report.trailer_ok);
+        assert_eq!(copy, par, "report-only scrub must not write");
+    }
+
+    #[test]
+    fn single_data_frame_loss_heals_through_every_path() {
+        let (_, _, par) = parity_container(307);
+        let reference = decompress_chunked(&par, 1).unwrap();
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&par)).unwrap();
+        let entries = dec.load_index().unwrap().entries.clone();
+        for (k, e) in entries.iter().enumerate() {
+            // three payload positions per frame (past the tiny preamble,
+            // inside the CRC-covered sections)
+            for frac in [4u64, 2, 1] {
+                let at = (e.offset + e.frame_len - e.frame_len / (frac + 1) - 1) as usize;
+                let mut bad = par.clone();
+                bad[at] ^= 0x5A;
+                // scrub --repair restores the exact original bytes
+                let mut healed = bad.clone();
+                let report = scrub_container(&mut healed, true).unwrap();
+                assert!(report.is_clean(), "chunk {k} at {at}: {}", report.to_json());
+                assert_eq!(report.repaired_chunks, vec![k as u64]);
+                assert_eq!(healed, par, "chunk {k} at {at}: repair not byte-identical");
+                // report-only scrub sees the damage but exits dirty
+                let mut looked = bad.clone();
+                let dry = scrub_container(&mut looked, false).unwrap();
+                assert!(!dry.is_clean());
+                assert_eq!(dry.bad_chunks, vec![k as u64]);
+                assert_eq!(looked, bad);
+                // Dataset::read rebuilds transparently and counts it
+                let ds = Dataset::open(std::io::Cursor::new(&bad)).unwrap();
+                assert_eq!(
+                    ds.read(Region::All).unwrap(),
+                    reference.data,
+                    "chunk {k} at {at}: healed read not bit-identical"
+                );
+                assert!(ds.cache_stats().repaired_reads > 0, "chunk {k} at {at}");
+                // salvage rebuilds from parity instead of quarantining
+                let mut sdec = StreamDecompressor::new(std::io::Cursor::new(&bad)).unwrap();
+                let (chunks, sreport) = sdec.salvage().unwrap();
+                assert!(sreport.is_complete(), "chunk {k} at {at}: salvage left holes");
+                assert_eq!(chunks.len(), 6);
+            }
+        }
+    }
+
+    #[test]
+    fn parity_frame_corruption_is_detected_and_regenerated() {
+        let (_, _, par) = parity_container(311);
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&par)).unwrap();
+        let pentries = dec.load_index().unwrap().parity.as_ref().unwrap().entries.clone();
+        for (g, pe) in pentries.iter().enumerate() {
+            // sweep every byte of the parity frame: tag, geometry, length,
+            // CRC and payload are all covered (geometry mismatches fail the
+            // footer cross-check even where the CRC cannot see them)
+            for off in 0..pe.frame_len {
+                let at = (pe.offset + off) as usize;
+                let mut bad = par.clone();
+                bad[at] ^= 0xA5;
+                let mut healed = bad.clone();
+                let report = scrub_container(&mut healed, true).unwrap();
+                assert!(report.is_clean(), "group {g} at {at}: {}", report.to_json());
+                assert_eq!(report.repaired_parity, vec![g as u64]);
+                assert!(report.bad_chunks.is_empty());
+                assert_eq!(healed, par, "group {g} at {at}: repair not byte-identical");
+            }
+        }
+        // a corrupt parity frame never disturbs plain decodes of the data
+        let mut bad = par.clone();
+        bad[(pentries[0].offset + 3) as usize] ^= 0xFF;
+        // ... though the strict full decoder rejects the inconsistency
+        assert!(decompress_chunked(&bad, 1).is_err());
+        // while Dataset reads (which only consult parity on demand) succeed
+        let ds = Dataset::open(std::io::Cursor::new(&bad)).unwrap();
+        assert_eq!(ds.read(Region::All).unwrap().len(), 96 * 24);
+    }
+
+    #[test]
+    fn two_losses_in_one_group_error_cleanly() {
+        let (_, _, par) = parity_container(313);
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&par)).unwrap();
+        let entries = dec.load_index().unwrap().entries.clone();
+        // chunks 0 and 1 share parity group 0 (group size 4)
+        let mut bad = par.clone();
+        for k in [0usize, 1] {
+            let e = &entries[k];
+            bad[(e.offset + e.frame_len / 2) as usize] ^= 0x5A;
+        }
+        let mut looked = bad.clone();
+        let report = scrub_container(&mut looked, true).unwrap();
+        assert!(!report.is_clean());
+        assert_eq!(report.unrepairable_groups, vec![0]);
+        assert_eq!(report.bad_chunks, vec![0, 1]);
+        assert!(report.repaired_chunks.is_empty(), "must not patch a 2-loss group");
+        assert_eq!(looked, bad, "2-loss group must stay untouched");
+        // the read paths surface an error instead of wrong data (or a hang)
+        assert!(decompress_chunked(&bad, 1).is_err());
+        let ds = Dataset::open(std::io::Cursor::new(&bad)).unwrap();
+        assert!(ds.read(Region::All).is_err());
+        // salvage still recovers the other group's chunks
+        let mut sdec = StreamDecompressor::new(std::io::Cursor::new(&bad)).unwrap();
+        let (chunks, sreport) = sdec.salvage().unwrap();
+        assert!(!sreport.is_complete());
+        assert_eq!(chunks.len(), 4);
+        // a loss in each of two DIFFERENT groups still heals completely
+        let mut split = par.clone();
+        for k in [1usize, 5] {
+            let e = &entries[k];
+            split[(e.offset + e.frame_len / 2) as usize] ^= 0x5A;
+        }
+        let report = scrub_container(&mut split, true).unwrap();
+        assert!(report.is_clean(), "{}", report.to_json());
+        assert_eq!(split, par);
+    }
+
+    #[test]
+    fn scrub_rewrites_a_damaged_trailer_and_rejects_v2() {
+        let (field, _, par) = parity_container(317);
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&par)).unwrap();
+        let idx = dec.load_index().unwrap().clone();
+        let pe = *idx.parity.as_ref().unwrap().entries.last().unwrap();
+        // the END trailer sits between the last parity frame and the footer
+        let at = (pe.offset + pe.frame_len) as usize + 2;
+        let mut bad = par.clone();
+        bad[at] ^= 0x77;
+        let mut healed = bad.clone();
+        let report = scrub_container(&mut healed, true).unwrap();
+        assert!(report.repaired_trailer);
+        assert!(report.is_clean());
+        assert_eq!(healed, par);
+        // v2 containers carry no footer to check against
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let opts = StreamOptions { version: format::VERSION2, ..StreamOptions::default() };
+        let (mut v2, _) = compress_chunked_with(&field, &cfg, 16, opts).unwrap();
+        let err = scrub_container(&mut v2, false).unwrap_err();
+        assert!(err.to_string().contains("v3"), "{err}");
+    }
+
+    #[test]
+    fn parity_requires_v3() {
+        let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
+        let opts = StreamOptions {
+            version: format::VERSION2,
+            parity_group: 8,
+            ..StreamOptions::default()
+        };
+        let err =
+            StreamCompressor::with_options(Vec::new(), Dims::d1(512), &cfg, 0, opts).unwrap_err();
+        assert!(err.to_string().contains("v3"), "{err}");
+    }
+
+    #[test]
+    fn resume_with_parity_is_byte_identical() {
+        let (field, _, par) = parity_container(331);
+        let cfg = Config { eb: EbMode::Abs(1e-3), threads: 1, ..Config::default() };
+        let opts = StreamOptions::builder().parity(4).build();
+        let mut dec = StreamDecompressor::new(std::io::Cursor::new(&par)).unwrap();
+        let idx = dec.load_index().unwrap().clone();
+        let raw: Vec<u8> = field.data.iter().flat_map(|x| x.to_le_bytes()).collect();
+
+        let mut cuts = vec![format::STREAM_HEADER_LEN as u64];
+        for e in &idx.entries {
+            cuts.push(e.offset + e.frame_len);
+            cuts.push(e.offset + e.frame_len / 2);
+        }
+        // cuts inside the parity region: the scan must not advance
+        // truncate_at past the data frames (finish rewrites the layer)
+        for pe in &idx.parity.as_ref().unwrap().entries {
+            cuts.push(pe.offset + pe.frame_len / 2);
+            cuts.push(pe.offset + pe.frame_len);
+        }
+        for cut in cuts {
+            let prefix = &par[..cut as usize];
+            let state = scan_resumable_with(std::io::Cursor::new(prefix), 4).unwrap();
+            assert!(!state.complete, "cut {cut}");
+            assert_eq!(state.parity_group, 4);
+            let mut out = par[..state.truncate_at as usize].to_vec();
+            resume_stream_with(
+                std::io::Cursor::new(&raw[..]),
+                &mut out,
+                field.dims,
+                &cfg,
+                16,
+                opts,
+                &state,
+            )
+            .unwrap();
+            assert_eq!(out, par, "cut {cut}: resumed parity container differs");
+        }
+        // a finished parity container scans as complete
+        let state = scan_resumable_with(std::io::Cursor::new(&par[..]), 4).unwrap();
+        assert!(state.complete);
+        // a parity-group mismatch between scan and run is rejected
+        let cutoff = (idx.entries[2].offset + idx.entries[2].frame_len) as usize;
+        let plain_scan =
+            scan_resumable(std::io::Cursor::new(&par[..cutoff])).unwrap();
+        let err = StreamCompressor::resume(
+            Vec::new(),
+            field.dims,
+            &cfg,
+            16,
+            opts,
+            &plain_scan,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("parity group"), "{err}");
+    }
+
+    #[test]
+    fn salvage_report_json_escapes_control_characters() {
+        let report = SalvageReport {
+            total_chunks: 2,
+            total_rows: 32,
+            recovered: vec![0],
+            holes: vec![SalvageHole {
+                chunk_index: 1,
+                n_chunks: 1,
+                rows: 16..32,
+                byte_offset: 99,
+                reason: "l1\nl2\rtab\there \"q\" back\\slash \u{0}nul \u{1b}esc \u{1f}us"
+                    .into(),
+            }],
+            rows_recovered: 16,
+            footer_ok: true,
+            trailer_found: true,
+        };
+        let json = report.to_json();
+        assert!(
+            json.chars().all(|c| c as u32 >= 0x20),
+            "raw control characters leaked into the report: {json:?}"
+        );
+        let parsed = crate::util::json::parse(&json).unwrap();
+        let holes = parsed.get("holes").unwrap().as_array().unwrap();
+        assert_eq!(
+            holes[0].get("reason").unwrap().as_str(),
+            Some("l1\nl2\rtab\there \"q\" back\\slash \u{0}nul \u{1b}esc \u{1f}us"),
+            "reason must round-trip through the JSON parser"
+        );
     }
 }

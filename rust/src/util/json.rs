@@ -55,6 +55,26 @@ impl Json {
     }
 }
 
+/// Escape `s` for embedding in a JSON string literal: `\` and `"` get a
+/// backslash, `\n`/`\r`/`\t` their short escapes, and every other control
+/// character below 0x20 the `\u00XX` form — so error messages containing
+/// newlines or tabs stay valid JSON. Round-trips through [`parse`].
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 pub fn parse(text: &str) -> Result<Json> {
     let bytes = text.as_bytes();
     let mut p = Parser { b: bytes, i: 0 };
@@ -301,5 +321,21 @@ mod tests {
     fn unicode_passthrough() {
         let j = parse("\"héllo → 世界\"").unwrap();
         assert_eq!(j.as_str(), Some("héllo → 世界"));
+    }
+
+    #[test]
+    fn escape_covers_quotes_backslashes_and_every_control_char() {
+        // the full hostile set: quote, backslash, the named control chars,
+        // and raw control bytes with no short escape
+        let nasty = "a\"b\\c\nd\re\tf\u{0}g\u{1b}h\u{1f}i";
+        let escaped = escape(nasty);
+        assert_eq!(escaped, "a\\\"b\\\\c\\nd\\re\\tf\\u0000g\\u001bh\\u001fi");
+        // no raw control characters survive — the escaped text is a legal
+        // JSON string body
+        assert!(escaped.chars().all(|c| c as u32 >= 0x20));
+        let back = parse(&format!("\"{escaped}\"")).unwrap();
+        assert_eq!(back.as_str(), Some(nasty));
+        // plain text passes through untouched
+        assert_eq!(escape("plain text"), "plain text");
     }
 }

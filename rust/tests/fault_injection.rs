@@ -31,7 +31,7 @@ use vecsz::compressor::{Config, EbMode};
 use vecsz::data::Field;
 use vecsz::failpoint;
 use vecsz::server::{is_busy, Client, ServeConfig, Server};
-use vecsz::stream::{self, StreamDecompressor};
+use vecsz::stream::{self, Dataset, Region, StreamDecompressor};
 use vecsz::util::prng::Pcg32;
 
 /// Failpoints are process-global state: serialize every test in this
@@ -323,4 +323,292 @@ fn every_prefix_of_a_container_salvages_or_errors_never_panics() {
             Err(_) => {} // clean errors are acceptable; panics are not
         }
     }
+}
+
+#[test]
+fn failed_cold_read_leaves_no_resident_slab_and_retries_clean() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    let field = smooth_field("cold", 48, 32, 0x3A); // span 8 -> 6 chunks
+    let cfg = serial_cfg(1e-3);
+    let (container, _) = stream::compress_chunked(&field, &cfg, 8).unwrap();
+    let reference = stream::decompress_chunked(&container, 1).unwrap();
+
+    let ds = Dataset::open(Cursor::new(&container)).unwrap();
+    failpoint::set_config_for_tests("chunk_decode:1=err");
+    let err = ds.read(Region::Chunk(0)).unwrap_err();
+    assert!(err.to_string().contains("failpoint"), "unexpected error: {err}");
+    // the failed decode must not become resident, in the map or the gauge
+    assert_eq!(ds.cache().resident_chunks(), 0, "failed decode left a resident slab");
+    assert_eq!(ds.cache_stats().resident_bytes, 0);
+    // with the fault gone the same handle recovers, bit-identically
+    failpoint::set_config_for_tests("");
+    assert_eq!(ds.read(Region::All).unwrap(), reference.data);
+    assert!(ds.cache().resident_chunks() > 0);
+    assert_eq!(ds.cache_stats().repaired_reads, 0, "no parity layer, nothing to repair");
+}
+
+#[test]
+fn corrupt_chunk_errors_every_single_flight_waiter_without_hanging() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    let field = smooth_field("sf", 48, 32, 0x4B); // span 8 -> 6 chunks
+    let cfg = serial_cfg(1e-3);
+    let (container, _) = stream::compress_chunked(&field, &cfg, 8).unwrap();
+    let mut dec = StreamDecompressor::new(Cursor::new(&container[..])).unwrap();
+    let e0 = dec.load_index().unwrap().entries[0];
+
+    // flip a payload byte of chunk 0's frame: a parity-less container
+    // cannot rebuild it, so every reader must see the CRC failure
+    let mut bad = container.clone();
+    bad[(e0.offset + e0.frame_len * 3 / 4) as usize] ^= 0x5A;
+    let ds = Dataset::open(Cursor::new(&bad)).unwrap();
+
+    // two concurrent cold reads of the same chunk: one claims the decode,
+    // the other waits on the claim. The claimer bails at frame parse, so
+    // the waiter must be released by the ClaimGuard abandonment — an
+    // error, not a hang.
+    let barrier = std::sync::Barrier::new(2);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                s.spawn(|| {
+                    barrier.wait();
+                    ds.read(Region::Chunk(0))
+                })
+            })
+            .collect();
+        for h in handles {
+            let res = h.join().expect("reader must not panic");
+            assert!(res.is_err(), "a CRC-failed chunk must never decode");
+        }
+    });
+    assert_eq!(ds.cache().resident_chunks(), 0);
+    // undamaged chunks still serve through the same handle
+    assert!(ds.read(Region::Chunk(3)).is_ok());
+}
+
+#[test]
+fn transient_frame_read_error_heals_through_parity() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    let field = smooth_field("fr", 48, 32, 0x5C); // span 8 -> 6 chunks
+    let cfg = serial_cfg(1e-3);
+    let opts = stream::StreamOptions::builder().parity(3).build();
+    let (par, _) = stream::compress_chunked_with(&field, &cfg, 8, opts).unwrap();
+    let reference = stream::decompress_chunked(&par, 1).unwrap();
+
+    // an injected read error on one frame is indistinguishable from bit
+    // rot to the Dataset — with a parity layer it rebuilds and serves
+    let ds = Dataset::open(Cursor::new(&par)).unwrap();
+    failpoint::set_config_for_tests("frame_read:1=err");
+    let data = ds.read(Region::All).expect("parity absorbs a single read fault");
+    failpoint::set_config_for_tests("");
+    assert_eq!(data, reference.data);
+    assert!(ds.cache_stats().repaired_reads >= 1);
+
+    // without parity the same fault surfaces as an error
+    let (plain, _) = stream::compress_chunked(&field, &cfg, 8).unwrap();
+    let ds2 = Dataset::open(Cursor::new(&plain)).unwrap();
+    failpoint::set_config_for_tests("frame_read:1=err");
+    assert!(ds2.read(Region::All).is_err());
+    failpoint::set_config_for_tests("");
+    assert!(ds2.read(Region::All).is_ok());
+}
+
+#[test]
+fn killed_parity_compress_resumes_to_byte_identical_container() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    let dir = scratch("parity_resume");
+    let field = smooth_field("pr", 64, 48, 0xD4);
+    let input = dir.join("pr.f32");
+    std::fs::write(&input, f32_le_bytes(&field.data)).unwrap();
+    let out = dir.join("pr.vsz");
+    let reference_out = dir.join("pr_ref.vsz");
+    let _ = std::fs::remove_file(&out);
+
+    let base_args = |out: &std::path::Path| {
+        vec![
+            "stream".to_string(),
+            "compress".to_string(),
+            "--input".into(),
+            input.to_str().unwrap().into(),
+            "--dims".into(),
+            "64x48".into(),
+            "--out".into(),
+            out.to_str().unwrap().to_string(),
+            "--eb".into(),
+            "1e-3".into(),
+            "--chunk-rows".into(),
+            "8".into(),
+            "--parity".into(),
+            "4".into(),
+        ]
+    };
+
+    // die on the first parity frame write: all data frames are on disk,
+    // the parity layer is torn mid-frame
+    let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+        .args(base_args(&out))
+        .env("VECSZ_FAILPOINTS", "parity_write:1=torn")
+        .status()
+        .expect("spawn vsz");
+    assert!(!status.success(), "torn parity write should abort the compress");
+
+    let mut resume_args = base_args(&out);
+    resume_args.push("--resume".into());
+    let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+        .args(&resume_args)
+        .env_remove("VECSZ_FAILPOINTS")
+        .status()
+        .expect("spawn vsz resume");
+    assert!(status.success(), "resume must rebuild the parity layer");
+
+    let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+        .args(base_args(&reference_out))
+        .env_remove("VECSZ_FAILPOINTS")
+        .status()
+        .expect("spawn vsz reference");
+    assert!(status.success());
+    assert_eq!(
+        std::fs::read(&out).unwrap(),
+        std::fs::read(&reference_out).unwrap(),
+        "resumed parity container must be byte-identical to an uninterrupted run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The CI fault-injection matrix entry point (ISSUE-9): compress with
+/// parity, flip one byte in every data and parity frame in turn, and
+/// prove `vsz stream repair` restores the container byte-identically
+/// while reads heal transparently and a two-loss group fails cleanly.
+#[test]
+fn parity_cli_scrubs_repairs_and_serves_through_bit_rot() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    let dir = scratch("parity_e2e");
+    let field = smooth_field("e2e", 96, 24, 0xE2);
+    let input = dir.join("e2e.f32");
+    std::fs::write(&input, f32_le_bytes(&field.data)).unwrap();
+    let out = dir.join("e2e.vsz");
+
+    let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+        .args([
+            "stream",
+            "compress",
+            "--input",
+            input.to_str().unwrap(),
+            "--dims",
+            "96x24",
+            "--out",
+            out.to_str().unwrap(),
+            "--eb",
+            "1e-3",
+            "--chunk-rows",
+            "16",
+            "--parity",
+            "4",
+        ])
+        .env_remove("VECSZ_FAILPOINTS")
+        .status()
+        .expect("spawn vsz compress");
+    assert!(status.success());
+    let reference = std::fs::read(&out).unwrap();
+    let decoded = stream::decompress_chunked(&reference, 1).unwrap();
+
+    let mut dec = StreamDecompressor::new(Cursor::new(&reference[..])).unwrap();
+    let idx = dec.load_index().unwrap().clone();
+    assert_eq!(idx.entries.len(), 6, "6 chunks -> groups of 4 + 2");
+    let parity = idx.parity.as_ref().expect("parity footer");
+    let mut frames: Vec<(u64, u64)> =
+        idx.entries.iter().map(|e| (e.offset, e.frame_len)).collect();
+    frames.extend(parity.entries.iter().map(|p| (p.offset, p.frame_len)));
+
+    let scrub = |mode: &str| {
+        Command::new(env!("CARGO_BIN_EXE_vsz"))
+            .args(["stream", mode, "--input", out.to_str().unwrap()])
+            .env_remove("VECSZ_FAILPOINTS")
+            .status()
+            .expect("spawn vsz scrub/repair")
+    };
+
+    // one flipped byte per frame, every frame in turn: scrub reports the
+    // damage (nonzero exit, file untouched), repair restores byte-identity
+    for &(offset, frame_len) in &frames {
+        let mut damaged = reference.clone();
+        damaged[(offset + frame_len / 2) as usize] ^= 0xA5;
+        std::fs::write(&out, &damaged).unwrap();
+        let status = scrub("scrub");
+        assert!(!status.success(), "scrub must flag the damage at {offset}");
+        assert_eq!(std::fs::read(&out).unwrap(), damaged, "scrub must not write");
+        let status = scrub("repair");
+        assert!(status.success(), "repair must heal a single loss at {offset}");
+        assert_eq!(
+            std::fs::read(&out).unwrap(),
+            reference,
+            "repair at {offset} is not byte-identical"
+        );
+    }
+
+    // transparent read-path recovery: a damaged chunk frame decodes
+    // bit-identically through Dataset, counting the repair
+    let (offset, frame_len) = frames[2];
+    let mut damaged = reference.clone();
+    damaged[(offset + frame_len / 2) as usize] ^= 0xA5;
+    let ds = Dataset::open(Cursor::new(&damaged)).unwrap();
+    assert_eq!(ds.read(Region::All).unwrap(), decoded.data);
+    assert!(ds.cache_stats().repaired_reads > 0);
+
+    // the server keeps answering through the same bit rot
+    let (addr, server) = start_server(vecsz::server::ServeConfig::default());
+    let mut c = Client::connect(&addr).expect("connect");
+    let (data, _) = c.decompress(&damaged).expect("serve decompresses damaged container");
+    assert_eq!(data, decoded.data);
+    let stats = c.stats().unwrap();
+    let j = vecsz::util::json::parse(&stats).unwrap();
+    let repaired = j
+        .get("cache")
+        .and_then(|c| c.get("repaired_reads"))
+        .and_then(|v| v.as_usize())
+        .expect("status must carry the repair gauge");
+    assert!(repaired >= 1, "{stats}");
+
+    // two losses in one parity group: repair refuses (nonzero exit, no
+    // panic, file untouched) and reads fail cleanly server-side too
+    let mut two_loss = reference.clone();
+    for k in [0usize, 1] {
+        let (offset, frame_len) = frames[k];
+        two_loss[(offset + frame_len / 2) as usize] ^= 0xA5;
+    }
+    std::fs::write(&out, &two_loss).unwrap();
+    let status = scrub("repair");
+    assert!(!status.success(), "a 2-loss group is beyond single-XOR parity");
+    assert!(status.code().is_some(), "must exit, not die on a signal/panic");
+    assert_eq!(std::fs::read(&out).unwrap(), two_loss, "failed repair must not write");
+    assert!(c.decompress(&two_loss).is_err(), "2 losses must error, not fabricate data");
+    assert!(c.stats().is_ok(), "the connection survives the failed decompress");
+
+    c.shutdown().expect("shutdown");
+    drop(c);
+    server.join().expect("server exits");
+
+    // the repaired container round-trips through the plain CLI decoder
+    std::fs::write(&out, &reference).unwrap();
+    let raw_out = dir.join("e2e_rt.f32");
+    let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+        .args([
+            "stream",
+            "decompress",
+            "--input",
+            out.to_str().unwrap(),
+            "--out",
+            raw_out.to_str().unwrap(),
+        ])
+        .env_remove("VECSZ_FAILPOINTS")
+        .status()
+        .expect("spawn vsz decompress");
+    assert!(status.success());
+    assert_eq!(std::fs::read(&raw_out).unwrap(), f32_le_bytes(&decoded.data));
+    let _ = std::fs::remove_dir_all(&dir);
 }
