@@ -128,6 +128,52 @@ fn main() {
         println!("{}", s.row());
         entropy_rows.push(json_row("decode", "huf2", threads, &s));
     }
+
+    // HUF3: per-chunk tables + gap arrays. The decode rows are the
+    // headline numbers — the gap array lets one chunk's bitstream fan out
+    // across pool workers, so decode scales on threads even below one
+    // HUF2 chunk of symbols.
+    let entropy_opts = huffman::EntropyOptions::default();
+    let huf3 = huffman::compress_u16_framed(&codes, 1024, None, &entropy_opts);
+    println!("    (huf3: {:.2} bits/code)", huf3.len() as f64 * 8.0 / n as f64);
+    for threads in [1usize, 2, 4, 8] {
+        let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
+        let s = bench(&format!("huffman encode HUF3 {threads}T"), n * 2, opts, || {
+            std::hint::black_box(huffman::compress_u16_framed(
+                &codes,
+                1024,
+                pool.as_ref(),
+                &entropy_opts,
+            ));
+        });
+        println!("{}", s.row());
+        entropy_rows.push(json_row("encode", "huf3", threads, &s));
+        let s = bench(&format!("huffman decode HUF3 gap-array {threads}T"), n * 2, opts, || {
+            std::hint::black_box(huffman::decompress_u16_pooled(&huf3, pool.as_ref()).unwrap());
+        });
+        println!("{}", s.row());
+        entropy_rows.push(json_row("decode", "huf3-gap", threads, &s));
+    }
+
+    // the acceptance case: ONE HUF2-chunk's worth of symbols — a single
+    // bitstream — still decodes thread-parallel via its gap array
+    let one = &codes[..huffman::CHUNK_SYMS];
+    let huf3_one = huffman::compress_u16_framed(one, 1024, None, &entropy_opts);
+    for threads in [1usize, 2, 4, 8] {
+        let pool = if threads > 1 { Some(ThreadPool::new(threads)) } else { None };
+        let s = bench(
+            &format!("huffman decode HUF3 single-chunk {threads}T"),
+            one.len() * 2,
+            opts,
+            || {
+                std::hint::black_box(
+                    huffman::decompress_u16_pooled(&huf3_one, pool.as_ref()).unwrap(),
+                );
+            },
+        );
+        println!("{}", s.row());
+        entropy_rows.push(json_row("decode", "huf3-gap-1chunk", threads, &s));
+    }
     write_entropy_json(n, &entropy_rows);
 
     // outlier-value-like f32 stream for the lossless pass

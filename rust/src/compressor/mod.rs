@@ -245,7 +245,7 @@ const ENTROPY_OVERLAP_MIN: usize = 1 << 12;
 ///
 /// The entropy tail is parallel two ways, both opt-in so a single-threaded
 /// configuration spawns no threads at all: with `entropy_threads > 1` the
-/// quant codes fan out across a pool through the chunked HUF2 encoder
+/// quant codes fan out across a pool through the framed HUF3 encoder
 /// (the pool is only built when the stream is long enough to split), and
 /// with `overlap_aux` the three independent `lossless` streams (outlier
 /// positions, outlier values, pad scalars) compress on scoped helper
@@ -253,8 +253,9 @@ const ENTROPY_OVERLAP_MIN: usize = 1 << 12;
 /// tiny and the spawn overhead would dominate. The streaming engine sets
 /// `entropy_threads = 1` but `overlap_aux = true` for its pipelined chunk
 /// jobs (its parallelism axis is across chunks). Neither axis changes the
-/// output bytes: every payload is a pure function of its input, and HUF2
-/// chunk geometry is worker-count independent.
+/// output bytes: every payload is a pure function of its input, and HUF3
+/// chunk geometry plus its local-table/gap gates are worker-count
+/// independent.
 pub(crate) fn encode_body(
     field: &Field,
     cfg: &Config,
@@ -313,12 +314,13 @@ pub(crate) fn encode_body(
     let pool = pool.as_ref();
     let overlap =
         overlap_aux && pos_bytes.len() + val_bytes.len() + pad_bytes.len() >= ENTROPY_OVERLAP_MIN;
+    let entropy_opts = huffman::EntropyOptions::default();
     let (codes_payload, pos_payload, val_payload, pad_payload) = if overlap {
         std::thread::scope(|s| {
             let h_pos = s.spawn(|| lossless::compress(&pos_bytes));
             let h_val = s.spawn(|| lossless::compress(val_bytes));
             let h_pad = s.spawn(|| lossless::compress(pad_bytes));
-            let codes_payload = huffman::compress_u16_chunked(&codes, alphabet, pool);
+            let codes_payload = huffman::compress_u16_framed(&codes, alphabet, pool, &entropy_opts);
             (
                 codes_payload,
                 h_pos.join().expect("lossless worker panicked"),
@@ -328,7 +330,7 @@ pub(crate) fn encode_body(
         })
     } else {
         (
-            huffman::compress_u16_chunked(&codes, alphabet, pool),
+            huffman::compress_u16_framed(&codes, alphabet, pool, &entropy_opts),
             lossless::compress(&pos_bytes),
             lossless::compress(val_bytes),
             lossless::compress(pad_bytes),
@@ -397,6 +399,16 @@ pub fn compress(field: &Field, cfg: &Config) -> Result<(Vec<u8>, CompressStats)>
 /// setup, mirroring `pq_stage`'s gather batch.
 const DECODE_BATCH: usize = 64;
 
+/// Would this CODES payload actually fan out on a decode pool? HUF2 splits
+/// at chunk granularity; HUF3 gap arrays split down to the gap interval,
+/// so even a single-chunk container scales on threads.
+fn payload_splits(payload: &[u8], need: usize) -> bool {
+    if payload.starts_with(&huffman::HUF3_MAGIC) {
+        return need > huffman::GAP_INTERVAL_SYMS;
+    }
+    payload.starts_with(&huffman::HUF2_MAGIC) && need > huffman::CHUNK_SYMS
+}
+
 /// Reconstruct a field payload from its parsed header + sections.
 ///
 /// Shared by the v1 decompressor and the per-chunk streaming decoder
@@ -424,26 +436,35 @@ pub(crate) fn decode_body(header: &Header, sections: &[Section], threads: usize)
         .ok_or_else(|| VszError::format("block geometry overflow"))?;
     let dq = DqConfig::new(header.eb, header.radius, shape);
 
-    // sections; a HUF2-framed CODES payload decodes chunk-parallel on the
-    // pool, while legacy unframed or single-chunk payloads decode serially
-    // on this thread (no pool spawned for them; `need` is the exact code
-    // count, so this mirrors the encoder's fan-out gate)
-    let codes = {
-        let payload = &format::find_section(sections, tag::CODES)?.payload;
-        let splits = payload.starts_with(&huffman::HUF2_MAGIC) && need > huffman::CHUNK_SYMS;
-        let pool = if threads > 1 && splits { Some(ThreadPool::new(threads)) } else { None };
-        huffman::decompress_u16_pooled(payload, pool.as_ref())?
-    };
+    // sections; a framed CODES payload decodes chunk-parallel (HUF2) or
+    // segment-parallel (HUF3 gap arrays — splitting pays below one whole
+    // chunk, down to the gap interval) on the pool, and framed lossless
+    // side-streams reuse the same pool. Legacy unframed payloads decode
+    // serially on this thread, and no pool is spawned unless something
+    // actually fans out.
+    let codes_payload = &format::find_section(sections, tag::CODES)?.payload;
+    let splits = payload_splits(codes_payload, need)
+        || [tag::OUTLIER_POS, tag::OUTLIER_VAL, tag::PAD_SCALARS].iter().any(|&t| {
+            format::find_section(sections, t)
+                .map(|s| lossless::is_framed(&s.payload))
+                .unwrap_or(false)
+        });
+    let pool = if threads > 1 && splits { Some(ThreadPool::new(threads)) } else { None };
+    let pool = pool.as_ref();
+    let codes = huffman::decompress_u16_pooled(codes_payload, pool)?;
     if codes.len() != need {
         return Err(VszError::format("codes length mismatch"));
     }
-    let pos_bytes = lossless::decompress(&format::find_section(sections, tag::OUTLIER_POS)?.payload)?;
-    let val_bytes = lossless::decompress(&format::find_section(sections, tag::OUTLIER_VAL)?.payload)?;
+    let pos_sec = format::find_section(sections, tag::OUTLIER_POS)?;
+    let pos_bytes = lossless::decompress_pooled(&pos_sec.payload, pool)?;
+    let val_sec = format::find_section(sections, tag::OUTLIER_VAL)?;
+    let val_bytes = lossless::decompress_pooled(&val_sec.payload, pool)?;
     if val_bytes.len() % 4 != 0 {
         return Err(VszError::format("outlier values not a whole number of f32s"));
     }
     let out_values = bytes_to_f32(&val_bytes);
-    let pad_bytes = lossless::decompress(&format::find_section(sections, tag::PAD_SCALARS)?.payload)?;
+    let pad_sec = format::find_section(sections, tag::PAD_SCALARS)?;
+    let pad_bytes = lossless::decompress_pooled(&pad_sec.payload, pool)?;
     if pad_bytes.len() % 4 != 0 {
         return Err(VszError::format("padding scalars not a whole number of f32s"));
     }
@@ -738,24 +759,33 @@ mod tests {
     #[test]
     fn legacy_unframed_codes_payload_still_decodes() {
         // Pre-HUF2 containers carried the CODES section as one unframed
-        // Huffman stream (`huffman::compress_u16`); the v1 container
-        // framing itself is unchanged, so rebuilding a container with a
-        // legacy payload reproduces the pre-PR on-disk format exactly.
+        // Huffman stream (`huffman::compress_u16`), and the first parallel
+        // entropy stage wrote HUF2; the v1 container framing itself is
+        // unchanged, so rebuilding a container with either older payload
+        // reproduces the corresponding historical on-disk format exactly.
         let field = smooth_field(Dims::d2(40, 30), 101);
         let cfg = Config { eb: EbMode::Abs(1e-3), ..Config::default() };
         let (bytes, _) = compress(&field, &cfg).unwrap();
-        let (header, mut sections) = format::read_container(&bytes).unwrap();
+        let (header, sections) = format::read_container(&bytes).unwrap();
         let idx = sections.iter().position(|s| s.tag == tag::CODES).unwrap();
         assert!(
-            sections[idx].payload.starts_with(&huffman::HUF2_MAGIC),
-            "new containers should carry HUF2-framed codes"
+            sections[idx].payload.starts_with(&huffman::HUF3_MAGIC),
+            "new containers should carry HUF3-framed codes"
         );
         let syms = huffman::decompress_u16(&sections[idx].payload).unwrap();
-        sections[idx].payload = huffman::compress_u16(&syms, 2 * header.radius as usize);
-        let legacy = format::write_container(&header, &sections);
         let modern = decompress(&bytes, 2).unwrap();
-        let old = decompress(&legacy, 2).unwrap();
-        assert_eq!(modern.data, old.data, "legacy CODES payload must decode bit-exactly");
+        let alphabet = 2 * header.radius as usize;
+        let older_payloads = [
+            huffman::compress_u16(&syms, alphabet),
+            huffman::compress_u16_chunked(&syms, alphabet, None),
+        ];
+        for (kind, payload) in ["legacy", "huf2"].iter().zip(older_payloads) {
+            let mut sections = sections.clone();
+            sections[idx].payload = payload;
+            let legacy = format::write_container(&header, &sections);
+            let old = decompress(&legacy, 2).unwrap();
+            assert_eq!(modern.data, old.data, "{kind} CODES payload must decode bit-exactly");
+        }
     }
 
     #[test]

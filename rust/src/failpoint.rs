@@ -1,7 +1,8 @@
 //! Deterministic fault injection for crash/corruption testing.
 //!
 //! A *failpoint* is a named site in the code (e.g. `chunk_encode`,
-//! `chunk_decode`, `frame_write`, `frame_read`, `parity_write`,
+//! `chunk_decode`, `huffman_decode` — hit once per HUF3 gap-array
+//! segment — `frame_write`, `frame_read`, `parity_write`,
 //! `serve_frame_write`, `serve_frame_read`) that consults this module
 //! on every pass. With no configuration the check is a single relaxed atomic
 //! load of a `false` flag — zero allocation, no locks, no syscalls —

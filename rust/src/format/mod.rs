@@ -125,11 +125,11 @@
 //! skip parity frames they don't need. A group with **two or more**
 //! lost/corrupt frames is beyond the parity's reach and stays an error.
 //!
-//! # CODES payload framing (`HUF2`)
+//! # CODES payload framing (`HUF2` / `HUF3`)
 //!
 //! Since the parallel entropy stage, the CODES section of **both**
-//! container versions carries a chunked Huffman payload
-//! ([`crate::huffman::compress_u16_chunked`]):
+//! container versions carries a chunked Huffman payload. The first
+//! framing revision ([`crate::huffman::compress_u16_chunked`]):
 //!
 //! ```text
 //! magic 0xF5 'H' 'F' '2'
@@ -145,14 +145,51 @@
 //! count — and each chunk is an independently decodable bitstream, which
 //! is what lets encode and decode fan out across the thread pool.
 //!
-//! **Backward compatibility:** the decoder dispatches on the magic; a
-//! CODES payload that does not start with it is parsed as the legacy
-//! pre-HUF2 unframed stream (one code-table header, varint count, one
-//! monolithic bitstream), so every container written before this framing
-//! existed still decodes bit-exactly. Legacy payloads begin with the
-//! uvarint of the alphabet size — always even (`2 * radius`, or 256 for
-//! lossless token streams) — while the magic's first byte is odd, so the
-//! dispatch is unambiguous for every payload this crate has ever written.
+//! The entropy engine v2 revision (`HUF3`,
+//! [`crate::huffman::compress_u16_framed`]) is what new containers write.
+//! It keeps the HUF2 chunk geometry and adds two per-chunk options, each
+//! announced by a flag bit in the chunk's entry (unknown flag bits reject
+//! the payload):
+//!
+//! ```text
+//! magic 0xF7 'H' 'F' '3'
+//! shared code-table header (as above)
+//! uvarint chunk_syms | uvarint gap_interval (0 = none) | uvarint n_chunks
+//! n_chunks x ( u8 flags                 -- bit0 local table, bit1 gap array
+//!            | uvarint sym_count | uvarint bit_len
+//!            | uvarint table_len  when bit0
+//!            | uvarint gap_len    when bit1 )
+//! per chunk, concatenated:
+//!   [local code table: table_len bytes, same header format]
+//!   [gap blob: u32-LE crc32 | uvarint n_points | ascending bit-offset
+//!    delta uvarints]
+//!   bitstream (ceil(bit_len/8) bytes)
+//! ```
+//!
+//! * **Gap array** — gap point `k` is the absolute bit offset where chunk
+//!   symbol `(k+1) * gap_interval` starts, so the decoder can split one
+//!   chunk's bitstream into independently-decoded segments across the
+//!   pool (a single-chunk container scales on threads). The blob is CRC32
+//!   guarded and each segment must consume exactly its bit span, so a
+//!   corrupt resync point errors instead of mis-decoding.
+//! * **Per-chunk code table** — carried only when the chunk-local
+//!   canonical table beats the shared one by at least
+//!   [`crate::huffman::LOCAL_TABLE_MIN_GAIN`] bytes including its own
+//!   header (size gate), which pays on non-stationary streams and costs
+//!   stationary streams nothing.
+//!
+//! **Backward compatibility:** the decoder dispatches on the magic
+//! (`HUF2` → chunked, `HUF3` → framed); a CODES payload that starts with
+//! neither is parsed as the legacy pre-HUF2 unframed stream (one
+//! code-table header, varint count, one monolithic bitstream), so every
+//! container written before these framings existed still decodes
+//! bit-exactly. Legacy payloads begin with the uvarint of the alphabet
+//! size — always even (`2 * radius`, or 256 for lossless token streams)
+//! — while both magics' first bytes are odd, so the dispatch is
+//! unambiguous for every payload this crate has ever written. Large
+//! lossless side-streams (outlier positions/values, pad scalars) adopt
+//! the same HUF3 framing above a size threshold via their own container
+//! tag (see [`crate::lossless`]).
 
 use crate::bitio::{put_uvarint, Cursor};
 use crate::blocks::Dims;
@@ -202,9 +239,9 @@ pub fn check_block_size(bs: u64) -> Result<u32> {
 
 /// Section tags.
 pub mod tag {
-    /// Huffman-coded quant codes (HUF2 chunked framing; legacy unframed
-    /// payloads from pre-HUF2 containers are still accepted — see the
-    /// module doc).
+    /// Huffman-coded quant codes (HUF3 framed; HUF2 chunked and legacy
+    /// unframed payloads from older containers are still accepted — see
+    /// the module doc).
     pub const CODES: u8 = 1;
     /// Outlier positions (delta varints, lossless-compressed).
     pub const OUTLIER_POS: u8 = 2;

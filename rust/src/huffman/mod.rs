@@ -21,28 +21,74 @@
 //!
 //! # Payload formats
 //!
-//! Two stream formats share the code-table header and the bitstream coder:
+//! Three stream formats share the code-table header and the bitstream
+//! coder:
 //!
 //! * **legacy unframed** ([`compress_u16`]) — header, varint count, one
 //!   monolithic bitstream. Still written for the small internal token
 //!   streams of [`crate::lossless`], still decoded everywhere.
 //! * **`HUF2` chunked** ([`compress_u16_chunked`]) — the container CODES
-//!   format since the parallel entropy stage: a 4-byte magic, the shared
+//!   format of the first parallel entropy stage: a 4-byte magic, the shared
 //!   code-table header, and the symbol stream split into fixed-size
 //!   [`CHUNK_SYMS`] chunks, each encoded as an independent byte-aligned
 //!   bitstream. A per-chunk (symbol-count, bit-length) offset table lets
 //!   [`decompress_u16_pooled`] decode chunks concurrently on the
-//!   [`ThreadPool`] (the gap-array idea of Rivera et al.). Chunk geometry
-//!   is fixed by `CHUNK_SYMS`, never by the worker count, so the output
-//!   bytes are identical for every thread count.
+//!   [`ThreadPool`]. Chunk geometry is fixed by `CHUNK_SYMS`, never by the
+//!   worker count, so the output bytes are identical for every thread
+//!   count. Still decoded everywhere; no longer written by the container.
+//! * **`HUF3` framed** ([`compress_u16_framed`]) — the entropy engine v2
+//!   revision, written for the container CODES sections and the large
+//!   [`crate::lossless`] token streams. Same fixed chunk geometry as HUF2
+//!   plus two per-chunk options, each announced by a flag byte in the
+//!   chunk entry:
+//!   - a **gap array** (Rivera et al.: self-synchronizing Huffman
+//!     streams): a CRC32-guarded side index of the bit offsets where every
+//!     [`GAP_INTERVAL_SYMS`]-th symbol starts, so the decoder can split
+//!     *one chunk's* bitstream across pool workers — each segment decodes
+//!     independently into its pre-sized output slice and a single-chunk
+//!     payload finally scales on threads;
+//!   - a **local code table** for non-stationary streams, carried only
+//!     when the chunk-local canonical table beats the shared one by at
+//!     least [`LOCAL_TABLE_MIN_GAIN`] bytes including its own header
+//!     (size-gated, so stationary streams pay nothing).
 //!
-//! [`decompress_u16`] dispatches on the `HUF2` magic: real legacy payloads
-//! can never collide with it (their first byte is the uvarint of the
-//! alphabet size, and every alphabet this crate ever wrote — `2 * radius`
-//! for quant codes, 256 for lossless token bytes — is even, while
-//! `HUF2_MAGIC[0]` is odd; the three magic bytes that follow make an
-//! accidental match with a hand-rolled odd alphabet practically
-//! impossible).
+//! [`decompress_u16`] dispatches on the `HUF2`/`HUF3` magics: real legacy
+//! payloads can never collide with them (their first byte is the uvarint
+//! of the alphabet size, and every alphabet this crate ever wrote —
+//! `2 * radius` for quant codes, 256 for lossless token bytes — is even,
+//! while `HUF2_MAGIC[0]` and `HUF3_MAGIC[0]` are odd; the three magic
+//! bytes that follow make an accidental match with a hand-rolled odd
+//! alphabet practically impossible). Every payload ever written by any
+//! revision of this crate therefore keeps decoding bit-exactly through the
+//! same entry point.
+//!
+//! # HUF3 layout
+//!
+//! ```text
+//! magic [0xF7 'H' 'F' '3']
+//! shared code table            (write_lengths: sparse varint pairs)
+//! uvarint chunk_syms           (always CHUNK_SYMS when written by us)
+//! uvarint gap_interval         (0 = no gap arrays anywhere)
+//! uvarint n_chunks
+//! per chunk:                   (the chunk entry table)
+//!   u8 flags                   (bit0 = local table, bit1 = gap array;
+//!                               unknown bits reject the payload)
+//!   uvarint sym_count
+//!   uvarint bit_len
+//!   uvarint table_len          (only when flags bit0)
+//!   uvarint gap_len            (only when flags bit1)
+//! per chunk, concatenated:
+//!   [local code table: table_len bytes, write_lengths format]
+//!   [gap blob: gap_len bytes = u32-LE CRC32 | uvarint n_points |
+//!    n_points ascending uvarint bit-offset deltas]
+//!   bitstream: ceil(bit_len / 8) bytes
+//! ```
+//!
+//! Gap point `k` (0-based) is the absolute bit offset where symbol
+//! `(k + 1) * gap_interval` of the chunk starts; segment boundaries are
+//! validated against the same per-segment `[count, count * MAX_BITS]` bit
+//! bounds as chunks, and each segment must consume exactly its bit span —
+//! the HUF2 integrity check, applied per segment.
 
 use crate::bitio::{BitReader, BitWriter, get_uvarint, put_uvarint};
 use crate::coordinator::pool::ThreadPool;
@@ -63,13 +109,56 @@ pub const CHUNK_SYMS: usize = 1 << 16;
 /// cannot collide with a legacy payload).
 pub const HUF2_MAGIC: [u8; 4] = [0xF5, b'H', b'F', b'2'];
 
+/// Magic prefix of the framed HUF3 payload (odd first byte for the same
+/// legacy-collision argument as [`HUF2_MAGIC`]).
+pub const HUF3_MAGIC: [u8; 4] = [0xF7, b'H', b'F', b'3'];
+
 /// Symbol-count floor below which the parallel histogram is not worth the
 /// fan-out.
 const PAR_HIST_MIN: usize = 2 * CHUNK_SYMS;
 
 /// Symbol-count floor below which the 4-way interleaved histogram is not
-/// worth its `4 × alphabet` counter allocation.
-const UNROLL_HIST_MIN: usize = 4096;
+/// worth its `4 × alphabet` counter allocation. Shared with
+/// [`GAP_INTERVAL_SYMS`]: both mark the same tipping point where
+/// per-symbol work starts to dominate fixed per-block overhead.
+pub const UNROLL_HIST_MIN: usize = 4096;
+
+/// Default gap-array resync interval: a segment of this many symbols is
+/// the smallest unit worth an independent decode lane. Reuses
+/// [`UNROLL_HIST_MIN`] (the same work-vs-overhead tipping point measured
+/// for the interleaved histogram) and must stay **even** so a resync point
+/// never lands inside the encoder's two-symbol `put`.
+pub const GAP_INTERVAL_SYMS: usize = UNROLL_HIST_MIN;
+
+/// Minimum whole-payload saving (bytes, including the local table's own
+/// header) before a HUF3 chunk carries a chunk-local code table instead of
+/// using the shared one. Keeps stationary streams on the shared table —
+/// one decoder LUT build instead of one per chunk.
+pub const LOCAL_TABLE_MIN_GAIN: u64 = 64;
+
+/// HUF3 chunk entry flag: the chunk carries its own canonical code table.
+const CHUNK_LOCAL_TABLE: u8 = 1 << 0;
+/// HUF3 chunk entry flag: the chunk carries a gap array.
+const CHUNK_GAP_ARRAY: u8 = 1 << 1;
+
+/// Knobs of the HUF3 encoder ([`compress_u16_framed`]). The defaults are
+/// what the container writes; both knobs only change the encoded layout,
+/// never the decoded symbols.
+#[derive(Clone, Debug)]
+pub struct EntropyOptions {
+    /// Symbols between gap-array resync points; 0 disables gap arrays.
+    /// Rounded up to the next even value (pair-encode alignment).
+    pub gap_interval: usize,
+    /// Allow chunks to carry local code tables when the size gate
+    /// ([`LOCAL_TABLE_MIN_GAIN`]) says they pay for themselves.
+    pub per_chunk_tables: bool,
+}
+
+impl Default for EntropyOptions {
+    fn default() -> Self {
+        Self { gap_interval: GAP_INTERVAL_SYMS, per_chunk_tables: true }
+    }
+}
 
 /// Frequency histogram over a u16-symbol stream.
 ///
@@ -300,12 +389,14 @@ impl Encoder {
         w.put(code as u64, len as u32);
     }
 
-    /// Encode `symbols` into a byte-aligned bitstream; returns the bytes
-    /// and the exact bit length before padding. Symbols are written two at
-    /// a time (2 × `MAX_BITS` ≤ 30 bits fits one `put`), which is
-    /// bit-identical to the one-at-a-time loop.
-    pub fn encode_chunk(&self, symbols: &[u16]) -> (Vec<u8>, u64) {
-        let mut w = BitWriter::with_capacity(symbols.len() / 2 + 16);
+    /// The pair-batched hot loop shared by [`encode_chunk`] and
+    /// [`encode_chunk_gaps`]: symbols are written two at a time
+    /// (2 × `MAX_BITS` ≤ 30 bits fits one `put`), which is bit-identical
+    /// to the one-at-a-time loop.
+    ///
+    /// [`encode_chunk`]: Encoder::encode_chunk
+    /// [`encode_chunk_gaps`]: Encoder::encode_chunk_gaps
+    fn encode_seg(&self, w: &mut BitWriter, symbols: &[u16]) {
         let mut pairs = symbols.chunks_exact(2);
         for p in &mut pairs {
             let (c0, l0) = self.table[p[0] as usize];
@@ -314,10 +405,44 @@ impl Encoder {
             w.put((c0 as u64) | ((c1 as u64) << l0), l0 as u32 + l1 as u32);
         }
         for &s in pairs.remainder() {
-            self.encode_symbol(&mut w, s);
+            self.encode_symbol(w, s);
         }
+    }
+
+    /// Encode `symbols` into a byte-aligned bitstream; returns the bytes
+    /// and the exact bit length before padding.
+    pub fn encode_chunk(&self, symbols: &[u16]) -> (Vec<u8>, u64) {
+        let mut w = BitWriter::with_capacity(symbols.len() / 2 + 16);
+        self.encode_seg(&mut w, symbols);
         let bits = w.bit_len();
         (w.finish(), bits)
+    }
+
+    /// Like [`encode_chunk`](Encoder::encode_chunk), additionally recording
+    /// the gap array: the absolute bit offset where every
+    /// `gap_interval`-th symbol starts (the first segment's offset 0 is
+    /// implicit and not recorded). `gap_interval` must be even so a resync
+    /// point never splits a two-symbol `put`; the bitstream is then
+    /// bit-identical to `encode_chunk` — only pair boundaries are ever
+    /// segment boundaries.
+    pub fn encode_chunk_gaps(
+        &self,
+        symbols: &[u16],
+        gap_interval: usize,
+    ) -> (Vec<u8>, u64, Vec<u64>) {
+        debug_assert!(gap_interval >= 2 && gap_interval % 2 == 0, "gap interval must be even");
+        let mut w = BitWriter::with_capacity(symbols.len() / 2 + 16);
+        let mut gaps = Vec::with_capacity(symbols.len() / gap_interval + 1);
+        let mut segs = symbols.chunks(gap_interval);
+        if let Some(first) = segs.next() {
+            self.encode_seg(&mut w, first);
+        }
+        for seg in segs {
+            gaps.push(w.bit_len());
+            self.encode_seg(&mut w, seg);
+        }
+        let bits = w.bit_len();
+        (w.finish(), bits, gaps)
     }
 
     pub fn encode_all(&self, symbols: &[u16]) -> Vec<u8> {
@@ -408,17 +533,21 @@ impl Decoder {
         Ok(Self { lut, max_len })
     }
 
-    /// Decode exactly `count` symbols from `r` into `out`.
-    fn decode_into(&self, r: &mut BitReader, count: usize, out: &mut Vec<u16>) -> Result<()> {
-        if count == 0 {
+    /// Decode exactly `out.len()` symbols from `r` into `out`. Writing
+    /// into a caller-sized slice (instead of pushing to a `Vec`) is what
+    /// lets gap-array segments of one chunk decode concurrently into
+    /// disjoint windows of the final output.
+    fn decode_into_slice(&self, r: &mut BitReader, out: &mut [u16]) -> Result<()> {
+        let n = out.len();
+        if n == 0 {
             return Ok(());
         }
         if self.max_len == 0 {
             return Err(VszError::format("huffman: truncated stream"));
         }
         let mask = (1usize << self.max_len) - 1;
-        let want = out.len() + count;
-        while out.len() < want {
+        let mut i = 0usize;
+        while i < n {
             // peek wide enough that a pair consume never outruns the
             // refill window (PAIR_PEEK_BITS >= len_pair)
             let idx = (r.peek(PAIR_PEEK_BITS) as usize) & mask;
@@ -426,12 +555,13 @@ impl Decoder {
             if e == 0 {
                 return Err(VszError::format("huffman: invalid code"));
             }
-            if (e >> 48) == 2 && want - out.len() >= 2 {
+            if (e >> 48) == 2 && n - i >= 2 {
                 let lp = ((e >> 40) & 0xFF) as u32;
                 if r.remaining_bits() >= lp as u64 {
                     r.consume(lp);
-                    out.push(e as u16);
-                    out.push((e >> 16) as u16);
+                    out[i] = e as u16;
+                    out[i + 1] = (e >> 16) as u16;
+                    i += 2;
                     continue;
                 }
             }
@@ -440,16 +570,17 @@ impl Decoder {
                 return Err(VszError::format("huffman: stream underrun"));
             }
             r.consume(l1);
-            out.push(e as u16);
+            out[i] = e as u16;
+            i += 1;
         }
         Ok(())
     }
 
     /// Decode exactly `count` symbols.
     pub fn decode_all(&self, bytes: &[u8], count: usize) -> Result<Vec<u16>> {
-        let mut out = Vec::with_capacity(count);
+        let mut out = vec![0u16; count];
         let mut r = BitReader::new(bytes);
-        self.decode_into(&mut r, count, &mut out)?;
+        self.decode_into_slice(&mut r, &mut out)?;
         Ok(out)
     }
 
@@ -457,14 +588,35 @@ impl Decoder {
     /// exactly `bit_len` bits (the length the encoder recorded in the
     /// chunk offset table) — a strong cheap integrity check.
     pub fn decode_chunk(&self, bytes: &[u8], count: usize, bit_len: u64) -> Result<Vec<u16>> {
-        let mut out = Vec::with_capacity(count);
-        let mut r = BitReader::new(bytes);
-        self.decode_into(&mut r, count, &mut out)?;
-        let consumed = bytes.len() as u64 * 8 - r.remaining_bits();
-        if consumed != bit_len {
-            return Err(VszError::format("huffman: chunk bit length mismatch"));
-        }
+        let mut out = vec![0u16; count];
+        self.decode_segment(bytes, 0, bit_len, &mut out)?;
         Ok(out)
+    }
+
+    /// Decode one gap-array segment into `out` (exactly `out.len()`
+    /// symbols). `bytes` must start at the byte containing the segment's
+    /// first bit; `skip_bits` (< 8) discards the tail of the previous
+    /// segment sharing that byte. Decoding must consume exactly
+    /// `span_bits` bits past the skip — the HUF2 chunk integrity check,
+    /// applied per segment, so a corrupt gap offset can never mis-decode
+    /// silently.
+    pub fn decode_segment(
+        &self,
+        bytes: &[u8],
+        skip_bits: u32,
+        span_bits: u64,
+        out: &mut [u16],
+    ) -> Result<()> {
+        let mut r = BitReader::new(bytes);
+        if skip_bits > 0 && r.get(skip_bits).is_none() {
+            return Err(VszError::format("huffman: truncated segment"));
+        }
+        self.decode_into_slice(&mut r, out)?;
+        let consumed = bytes.len() as u64 * 8 - r.remaining_bits() - skip_bits as u64;
+        if consumed != span_bits {
+            return Err(VszError::format("huffman: segment bit length mismatch"));
+        }
+        Ok(())
     }
 }
 
@@ -573,18 +725,131 @@ pub fn compress_u16_chunked(
     out
 }
 
-/// Inverse of [`compress_u16`]/[`compress_u16_chunked`] (dispatches on the
-/// HUF2 magic), serial.
+/// Everything one HUF3 chunk contributes to the payload.
+struct FramedChunk {
+    flags: u8,
+    table: Vec<u8>, // serialized local code table (empty = shared table)
+    gaps: Vec<u8>,  // CRC-guarded gap blob (empty = no gap array)
+    stream: Vec<u8>,
+    bits: u64,
+    sym_count: usize,
+}
+
+/// Framed HUF3 compression (see the module doc for the layout): the HUF2
+/// chunk geometry plus per-chunk gap arrays and size-gated local code
+/// tables. Chunks encode concurrently on `pool` when given; geometry and
+/// the local-table gate depend only on the input, so the output bytes are
+/// identical for every `pool` width (including `None`).
+pub fn compress_u16_framed(
+    symbols: &[u16],
+    alphabet: usize,
+    pool: Option<&ThreadPool>,
+    opts: &EntropyOptions,
+) -> Vec<u8> {
+    // pair-encode alignment: resync points may only sit on even symbol
+    // boundaries, so an odd requested interval rounds up
+    let gap_interval =
+        if opts.gap_interval == 0 { 0 } else { opts.gap_interval.max(2).next_multiple_of(2) };
+    let hist = histogram_pooled(symbols, alphabet, pool);
+    let lens = code_lengths(&hist, MAX_BITS);
+    let shared = Encoder::from_lengths(&lens);
+    let n_chunks = symbols.len().div_ceil(CHUNK_SYMS);
+
+    let encode_one = |i: usize| -> FramedChunk {
+        let lo = i * CHUNK_SYMS;
+        let hi = (lo + CHUNK_SYMS).min(symbols.len());
+        let chunk = &symbols[lo..hi];
+        let mut flags = 0u8;
+        let mut table = Vec::new();
+        let mut local_enc = None;
+        if opts.per_chunk_tables {
+            // size gate: the local table pays its own header and must
+            // still beat the shared table by LOCAL_TABLE_MIN_GAIN bytes
+            let ch_hist = histogram(chunk, alphabet);
+            let shared_bytes = shared.cost_bits(&ch_hist).div_ceil(8);
+            let local_lens = code_lengths(&ch_hist, MAX_BITS);
+            let mut hdr = Vec::new();
+            write_lengths(&mut hdr, &local_lens);
+            let local = Encoder::from_lengths(&local_lens);
+            let local_bytes = local.cost_bits(&ch_hist).div_ceil(8) + hdr.len() as u64;
+            if local_bytes + LOCAL_TABLE_MIN_GAIN <= shared_bytes {
+                flags |= CHUNK_LOCAL_TABLE;
+                table = hdr;
+                local_enc = Some(local);
+            }
+        }
+        let enc = local_enc.as_ref().unwrap_or(&shared);
+        let (stream, bits, gap_offsets) = if gap_interval != 0 && chunk.len() > gap_interval {
+            enc.encode_chunk_gaps(chunk, gap_interval)
+        } else {
+            let (s, b) = enc.encode_chunk(chunk);
+            (s, b, Vec::new())
+        };
+        let mut gaps = Vec::new();
+        if !gap_offsets.is_empty() {
+            flags |= CHUNK_GAP_ARRAY;
+            let mut blob = Vec::with_capacity(3 * gap_offsets.len() + 4);
+            put_uvarint(&mut blob, gap_offsets.len() as u64);
+            let mut prev = 0u64;
+            for &off in &gap_offsets {
+                put_uvarint(&mut blob, off - prev);
+                prev = off;
+            }
+            gaps.reserve(blob.len() + 4);
+            gaps.extend_from_slice(&crate::util::crc32(&blob).to_le_bytes());
+            gaps.extend_from_slice(&blob);
+        }
+        FramedChunk { flags, table, gaps, stream, bits, sym_count: chunk.len() }
+    };
+    let chunks: Vec<FramedChunk> = match pool {
+        Some(pool) if n_chunks > 1 && pool.threads() > 1 => {
+            pool.scoped_scatter_gather(n_chunks, encode_one)
+        }
+        _ => (0..n_chunks).map(encode_one).collect(),
+    };
+
+    let payload_len: usize =
+        chunks.iter().map(|c| c.table.len() + c.gaps.len() + c.stream.len()).sum();
+    let mut out = Vec::with_capacity(payload_len + 12 * n_chunks + 64);
+    out.extend_from_slice(&HUF3_MAGIC);
+    write_lengths(&mut out, &lens);
+    put_uvarint(&mut out, CHUNK_SYMS as u64);
+    put_uvarint(&mut out, gap_interval as u64);
+    put_uvarint(&mut out, n_chunks as u64);
+    for c in &chunks {
+        out.push(c.flags);
+        put_uvarint(&mut out, c.sym_count as u64);
+        put_uvarint(&mut out, c.bits);
+        if c.flags & CHUNK_LOCAL_TABLE != 0 {
+            put_uvarint(&mut out, c.table.len() as u64);
+        }
+        if c.flags & CHUNK_GAP_ARRAY != 0 {
+            put_uvarint(&mut out, c.gaps.len() as u64);
+        }
+    }
+    for c in &chunks {
+        out.extend_from_slice(&c.table);
+        out.extend_from_slice(&c.gaps);
+        out.extend_from_slice(&c.stream);
+    }
+    out
+}
+
+/// Inverse of [`compress_u16`]/[`compress_u16_chunked`]/
+/// [`compress_u16_framed`] (dispatches on the HUF2/HUF3 magics), serial.
 pub fn decompress_u16(data: &[u8]) -> Result<Vec<u16>> {
     decompress_u16_pooled(data, None)
 }
 
-/// Like [`decompress_u16`], but HUF2 chunks are decoded concurrently on
-/// `pool` when given (legacy payloads are one bit-serial stream, so they
-/// always decode on the calling thread).
+/// Like [`decompress_u16`], but HUF2 chunks and HUF3 gap-array segments
+/// are decoded concurrently on `pool` when given (legacy payloads are one
+/// bit-serial stream, so they always decode on the calling thread).
 pub fn decompress_u16_pooled(data: &[u8], pool: Option<&ThreadPool>) -> Result<Vec<u16>> {
     if data.starts_with(&HUF2_MAGIC) {
         return decompress_huf2(data, pool);
+    }
+    if data.starts_with(&HUF3_MAGIC) {
+        return decompress_huf3(data, pool);
     }
     let (lens, mut pos) = read_lengths(data)?;
     let (count, n) =
@@ -667,6 +932,334 @@ fn decompress_huf2(data: &[u8], pool: Option<&ThreadPool>) -> Result<Vec<u16>> {
         out.extend_from_slice(&part?);
     }
     Ok(out)
+}
+
+/// One chunk entry of a HUF3 payload header.
+struct Huf3Entry {
+    flags: u8,
+    sym_count: usize,
+    bit_len: u64,
+    table_len: usize,
+    gap_len: usize,
+}
+
+/// Parsed HUF3 header: shared lengths, geometry, chunk entries, and the
+/// absolute offset where the concatenated per-chunk payload starts.
+struct Huf3Header {
+    lens: Vec<u8>,
+    gap_interval: usize,
+    entries: Vec<Huf3Entry>,
+    payload_start: usize,
+}
+
+/// Validate and parse everything before the HUF3 payload bytes. Shared by
+/// [`decompress_u16_pooled`] and [`inspect_payload`] so the two can never
+/// disagree on what a well-formed header is.
+fn parse_huf3_header(data: &[u8]) -> Result<Huf3Header> {
+    let body = &data[HUF3_MAGIC.len()..];
+    let (lens, mut pos) = read_lengths(body)?;
+    let varint = |pos: &mut usize| -> Result<u64> {
+        let (v, n) =
+            get_uvarint(&body[*pos..]).ok_or_else(|| VszError::format("HUF3 header EOF"))?;
+        *pos += n;
+        Ok(v)
+    };
+    let chunk_syms = varint(&mut pos)? as usize;
+    if chunk_syms == 0 || chunk_syms > 1 << 28 {
+        return Err(VszError::format("huffman: bad HUF3 chunk size"));
+    }
+    // odd intervals can never come from the pair-aligned encoder
+    let gap_interval = varint(&mut pos)? as usize;
+    if gap_interval % 2 != 0 {
+        return Err(VszError::format("huffman: bad HUF3 gap interval"));
+    }
+    let n_chunks = varint(&mut pos)?;
+    // every chunk entry takes at least three bytes (flags + two varints),
+    // so a forged count can never exceed the remaining header bytes
+    if n_chunks > (body.len() - pos) as u64 / 3 {
+        return Err(VszError::format("huffman: HUF3 chunk count exceeds payload"));
+    }
+    let n_chunks = n_chunks as usize;
+    let mut entries: Vec<Huf3Entry> = Vec::with_capacity(n_chunks.min(1 << 16));
+    for i in 0..n_chunks {
+        let flags = *body.get(pos).ok_or_else(|| VszError::format("HUF3 header EOF"))?;
+        pos += 1;
+        if flags & !(CHUNK_LOCAL_TABLE | CHUNK_GAP_ARRAY) != 0 {
+            return Err(VszError::format("huffman: unknown HUF3 chunk flags"));
+        }
+        let sym_count = varint(&mut pos)? as usize;
+        let bit_len = varint(&mut pos)?;
+        let last = i + 1 == n_chunks;
+        if sym_count == 0 || sym_count > chunk_syms || (!last && sym_count != chunk_syms) {
+            return Err(VszError::format("huffman: bad HUF3 chunk symbol count"));
+        }
+        if bit_len < sym_count as u64 || bit_len > sym_count as u64 * MAX_BITS as u64 {
+            return Err(VszError::format("huffman: bad HUF3 chunk bit length"));
+        }
+        let table_len =
+            if flags & CHUNK_LOCAL_TABLE != 0 { varint(&mut pos)? as usize } else { 0 };
+        let gap_len = if flags & CHUNK_GAP_ARRAY != 0 {
+            if gap_interval == 0 || sym_count <= gap_interval {
+                return Err(VszError::format("huffman: HUF3 gap array on unsplittable chunk"));
+            }
+            varint(&mut pos)? as usize
+        } else {
+            0
+        };
+        entries.push(Huf3Entry { flags, sym_count, bit_len, table_len, gap_len });
+    }
+    Ok(Huf3Header { lens, gap_interval, entries, payload_start: HUF3_MAGIC.len() + pos })
+}
+
+/// One decode unit of a HUF3 payload: a whole chunk when it has no gap
+/// array, otherwise one gap segment of a chunk.
+struct Huf3Seg {
+    chunk: usize,   // selects the decoder (shared vs chunk-local)
+    out_off: usize, // absolute symbol offset into the output
+    count: usize,
+    byte_lo: usize, // absolute payload byte range holding the bits
+    byte_hi: usize,
+    skip_bits: u32, // sub-byte start position inside byte_lo
+    span_bits: u64, // exact bits the segment must consume
+}
+
+fn decompress_huf3(data: &[u8], pool: Option<&ThreadPool>) -> Result<Vec<u16>> {
+    let h = parse_huf3_header(data)?;
+    let payload = &data[h.payload_start..];
+    let gap_interval = h.gap_interval;
+
+    // region walk: per chunk [local table][gap blob][bitstream], with
+    // overflow-safe bounds so forged lengths reject instead of wrapping
+    struct ChunkRegions {
+        table: std::ops::Range<usize>,
+        gaps: std::ops::Range<usize>,
+        stream_start: usize,
+        sym_off: usize,
+    }
+    let mut regions: Vec<ChunkRegions> = Vec::with_capacity(h.entries.len());
+    let mut off = 0usize;
+    let mut total_syms = 0usize;
+    for e in &h.entries {
+        let stream_len = e.bit_len.div_ceil(8) as usize;
+        let need = e
+            .table_len
+            .checked_add(e.gap_len)
+            .and_then(|v| v.checked_add(stream_len))
+            .filter(|&v| v <= payload.len() - off)
+            .ok_or_else(|| VszError::format("huffman: HUF3 payload overrun"))?;
+        let t0 = off;
+        let g0 = t0 + e.table_len;
+        let s0 = g0 + e.gap_len;
+        regions.push(ChunkRegions {
+            table: t0..g0,
+            gaps: g0..s0,
+            stream_start: s0,
+            sym_off: total_syms,
+        });
+        off += need;
+        total_syms += e.sym_count;
+    }
+    if off != payload.len() {
+        return Err(VszError::format("huffman: HUF3 payload length mismatch"));
+    }
+    if h.entries.is_empty() {
+        return Ok(Vec::new());
+    }
+
+    // decoders: the shared table once (when any chunk uses it), plus one
+    // per local-table chunk — the LUT build is the real per-chunk cost,
+    // so local tables build concurrently on the pool
+    let needs_shared = h.entries.iter().any(|e| e.flags & CHUNK_LOCAL_TABLE == 0);
+    let shared_dec = if needs_shared { Some(Decoder::from_lengths(&h.lens)?) } else { None };
+    let local_idx: Vec<usize> =
+        (0..h.entries.len()).filter(|&i| h.entries[i].flags & CHUNK_LOCAL_TABLE != 0).collect();
+    let build_one = |k: usize| -> Result<Decoder> {
+        let ci = local_idx[k];
+        let (llens, used) = read_lengths(&payload[regions[ci].table.clone()])?;
+        if used != h.entries[ci].table_len {
+            return Err(VszError::format("huffman: HUF3 local table length mismatch"));
+        }
+        Decoder::from_lengths(&llens)
+    };
+    let built: Vec<Result<Decoder>> = match pool {
+        Some(pool) if local_idx.len() > 1 && pool.threads() > 1 => {
+            pool.scoped_scatter_gather(local_idx.len(), build_one)
+        }
+        _ => (0..local_idx.len()).map(build_one).collect(),
+    };
+    let mut decoders: Vec<Option<Decoder>> = (0..h.entries.len()).map(|_| None).collect();
+    for (k, d) in built.into_iter().enumerate() {
+        decoders[local_idx[k]] = Some(d?);
+    }
+
+    // flatten every chunk into its decode segments; gap blobs are CRC- and
+    // bounds-checked here, before any worker touches the bitstream
+    let mut segs: Vec<Huf3Seg> = Vec::new();
+    for (ci, (e, c)) in h.entries.iter().zip(&regions).enumerate() {
+        let mut bounds: Vec<u64> = vec![0];
+        if e.flags & CHUNK_GAP_ARRAY != 0 {
+            let blob = &payload[c.gaps.clone()];
+            if blob.len() < 5 {
+                return Err(VszError::format("huffman: HUF3 gap blob truncated"));
+            }
+            let stored = u32::from_le_bytes(blob[..4].try_into().unwrap());
+            if crate::util::crc32(&blob[4..]) != stored {
+                return Err(VszError::format("huffman: HUF3 gap array CRC mismatch"));
+            }
+            let mut gpos = 4usize;
+            let gvar = |gpos: &mut usize| -> Result<u64> {
+                let (v, n) = get_uvarint(&blob[*gpos..])
+                    .ok_or_else(|| VszError::format("huffman: HUF3 gap blob EOF"))?;
+                *gpos += n;
+                Ok(v)
+            };
+            let n_points = gvar(&mut gpos)? as usize;
+            if n_points != e.sym_count.div_ceil(gap_interval) - 1 {
+                return Err(VszError::format("huffman: HUF3 gap point count mismatch"));
+            }
+            bounds.reserve(n_points + 1);
+            let mut prev = 0u64;
+            for _ in 0..n_points {
+                let delta = gvar(&mut gpos)?;
+                if delta == 0 {
+                    return Err(VszError::format("huffman: HUF3 gap offsets not increasing"));
+                }
+                prev = prev
+                    .checked_add(delta)
+                    .filter(|&v| v < e.bit_len)
+                    .ok_or_else(|| VszError::format("huffman: HUF3 gap offset out of range"))?;
+                bounds.push(prev);
+            }
+            if gpos != blob.len() {
+                return Err(VszError::format("huffman: HUF3 gap blob trailing bytes"));
+            }
+        }
+        bounds.push(e.bit_len);
+        let seg_syms = if bounds.len() > 2 { gap_interval } else { e.sym_count };
+        for (j, w) in bounds.windows(2).enumerate() {
+            let count = seg_syms.min(e.sym_count - j * seg_syms);
+            let span = w[1] - w[0];
+            if span < count as u64 || span > count as u64 * MAX_BITS as u64 {
+                return Err(VszError::format("huffman: bad HUF3 gap segment span"));
+            }
+            segs.push(Huf3Seg {
+                chunk: ci,
+                out_off: c.sym_off + j * seg_syms,
+                count,
+                byte_lo: c.stream_start + (w[0] / 8) as usize,
+                byte_hi: c.stream_start + w[1].div_ceil(8) as usize,
+                skip_bits: (w[0] % 8) as u32,
+                span_bits: span,
+            });
+        }
+    }
+
+    let mut out = vec![0u16; total_syms];
+    let base = crate::util::SendPtr::new(out.as_mut_ptr());
+    let decode_one = |i: usize| -> Result<()> {
+        crate::failpoint::hit("huffman_decode")?;
+        let s = &segs[i];
+        let dec = decoders[s.chunk]
+            .as_ref()
+            .or(shared_dec.as_ref())
+            .expect("decoder exists for every chunk by construction");
+        // SAFETY: segment output windows [out_off, out_off + count) are
+        // disjoint and partition [0, total_syms) by construction, so
+        // concurrent writers never alias
+        let window =
+            unsafe { std::slice::from_raw_parts_mut(base.get().add(s.out_off), s.count) };
+        dec.decode_segment(&payload[s.byte_lo..s.byte_hi], s.skip_bits, s.span_bits, window)
+    };
+    let results: Vec<Result<()>> = match pool {
+        Some(pool) if segs.len() > 1 && pool.threads() > 1 => {
+            pool.scoped_scatter_gather(segs.len(), decode_one)
+        }
+        _ => (0..segs.len()).map(decode_one).collect(),
+    };
+    for r in results {
+        r?;
+    }
+    Ok(out)
+}
+
+/// Summary of an entropy payload's framing for `vsz stream inspect` and
+/// the chunk autotuner — a header-only walk, no symbol decode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EntropyInfo {
+    /// `"legacy"`, `"huf2"` or `"huf3"`.
+    pub framing: &'static str,
+    /// Huffman chunk count (1 for a legacy payload).
+    pub n_chunks: usize,
+    /// HUF3 chunks carrying their own code table (0 elsewhere).
+    pub local_tables: usize,
+    /// Independent decode units: chunks, with gap-array chunks counting
+    /// one unit per gap segment.
+    pub segments: usize,
+    /// Total symbol count.
+    pub total_syms: u64,
+}
+
+/// Classify and summarize any payload this module ever wrote (legacy
+/// unframed, HUF2, HUF3) without decoding it.
+pub fn inspect_payload(data: &[u8]) -> Result<EntropyInfo> {
+    if data.starts_with(&HUF3_MAGIC) {
+        let h = parse_huf3_header(data)?;
+        let mut info = EntropyInfo {
+            framing: "huf3",
+            n_chunks: h.entries.len(),
+            local_tables: 0,
+            segments: 0,
+            total_syms: 0,
+        };
+        for e in &h.entries {
+            info.total_syms += e.sym_count as u64;
+            info.local_tables += (e.flags & CHUNK_LOCAL_TABLE != 0) as usize;
+            info.segments += if e.flags & CHUNK_GAP_ARRAY != 0 {
+                e.sym_count.div_ceil(h.gap_interval)
+            } else {
+                1
+            };
+        }
+        return Ok(info);
+    }
+    if data.starts_with(&HUF2_MAGIC) {
+        let body = &data[HUF2_MAGIC.len()..];
+        let (_, mut pos) = read_lengths(body)?;
+        let varint = |pos: &mut usize| -> Result<u64> {
+            let (v, n) =
+                get_uvarint(&body[*pos..]).ok_or_else(|| VszError::format("HUF2 header EOF"))?;
+            *pos += n;
+            Ok(v)
+        };
+        varint(&mut pos)?; // chunk size
+        let n_chunks = varint(&mut pos)?;
+        if n_chunks > (body.len() - pos) as u64 / 2 {
+            return Err(VszError::format("huffman: HUF2 chunk count exceeds payload"));
+        }
+        let mut total_syms = 0u64;
+        for _ in 0..n_chunks {
+            total_syms += varint(&mut pos)?;
+            varint(&mut pos)?; // bit length
+        }
+        let n_chunks = n_chunks as usize;
+        return Ok(EntropyInfo {
+            framing: "huf2",
+            n_chunks,
+            local_tables: 0,
+            segments: n_chunks,
+            total_syms,
+        });
+    }
+    let (_, pos) = read_lengths(data)?;
+    let (count, _) =
+        get_uvarint(&data[pos..]).ok_or_else(|| VszError::format("huffman count EOF"))?;
+    Ok(EntropyInfo {
+        framing: "legacy",
+        n_chunks: 1,
+        local_tables: 0,
+        segments: 1,
+        total_syms: count,
+    })
 }
 
 #[cfg(test)]
@@ -1004,5 +1597,200 @@ mod tests {
         assert!(dec.decode_chunk(&payload, syms.len(), bits).is_ok());
         assert!(dec.decode_chunk(&payload, syms.len(), bits + 1).is_err());
         assert!(dec.decode_chunk(&payload, syms.len() - 1, bits).is_err());
+    }
+
+    // ------------------------------------------------------- HUF3 framed
+
+    /// A deliberately non-stationary stream: each chunk concentrates on a
+    /// different symbol neighborhood, so chunk-local code tables beat the
+    /// shared table and the size gate must engage.
+    fn nonstationary_codes(n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n)
+            .map(|i| {
+                let center = [128u16, 512, 900][(i / CHUNK_SYMS) % 3];
+                let r = rng.next_f32();
+                if r < 0.8 {
+                    center
+                } else if r < 0.95 {
+                    center + 1 - (rng.bounded(3) as u16)
+                } else {
+                    center - 8 + rng.bounded(16) as u16
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn huf3_roundtrip_with_local_tables_and_gap_arrays() {
+        let syms = nonstationary_codes(2 * CHUNK_SYMS + 4321, 41);
+        let blob = compress_u16_framed(&syms, 1024, None, &EntropyOptions::default());
+        assert_eq!(decompress_u16(&blob).unwrap(), syms);
+        for nthreads in [2usize, 7] {
+            let pool = ThreadPool::new(nthreads);
+            assert_eq!(decompress_u16_pooled(&blob, Some(&pool)).unwrap(), syms);
+        }
+        let info = inspect_payload(&blob).unwrap();
+        assert_eq!(info.framing, "huf3");
+        assert_eq!(info.n_chunks, 3);
+        assert_eq!(info.total_syms, syms.len() as u64);
+        assert!(info.local_tables >= 1, "size gate never engaged on a non-stationary stream");
+        assert!(info.segments > info.n_chunks, "no chunk carried a gap array");
+        // the local tables must pay for themselves vs the shared-table form
+        let huf2 = compress_u16_chunked(&syms, 1024, None);
+        assert!(blob.len() < huf2.len(), "huf3 {} >= huf2 {}", blob.len(), huf2.len());
+    }
+
+    #[test]
+    fn huf3_stationary_stream_keeps_the_shared_table() {
+        let syms = skewed_codes(2 * CHUNK_SYMS + 99, 43);
+        let blob = compress_u16_framed(&syms, 1024, None, &EntropyOptions::default());
+        assert_eq!(decompress_u16(&blob).unwrap(), syms);
+        let info = inspect_payload(&blob).unwrap();
+        assert_eq!(info.local_tables, 0, "local table carried where it cannot pay");
+    }
+
+    #[test]
+    fn huf3_single_chunk_decodes_segment_parallel_bit_identical() {
+        // the acceptance case: ONE chunk, yet the gap array lets the pool
+        // split its bitstream — output must match the serial decode at
+        // 1, 2 and 7 threads exactly
+        let syms = skewed_codes(CHUNK_SYMS, 45);
+        let blob = compress_u16_framed(&syms, 1024, None, &EntropyOptions::default());
+        let info = inspect_payload(&blob).unwrap();
+        assert_eq!(info.n_chunks, 1);
+        assert_eq!(info.segments, CHUNK_SYMS.div_ceil(GAP_INTERVAL_SYMS));
+        let serial = decompress_u16(&blob).unwrap();
+        assert_eq!(serial, syms);
+        for nthreads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(nthreads);
+            assert_eq!(
+                decompress_u16_pooled(&blob, Some(&pool)).unwrap(),
+                serial,
+                "{nthreads} threads diverged from the serial decode"
+            );
+        }
+    }
+
+    #[test]
+    fn huf3_encode_is_thread_count_deterministic() {
+        let syms = nonstationary_codes(2 * CHUNK_SYMS + 777, 47);
+        let serial = compress_u16_framed(&syms, 1024, None, &EntropyOptions::default());
+        for nthreads in [2usize, 7] {
+            let pool = ThreadPool::new(nthreads);
+            let par = compress_u16_framed(&syms, 1024, Some(&pool), &EntropyOptions::default());
+            assert_eq!(serial, par, "{nthreads} workers changed the payload bytes");
+        }
+    }
+
+    #[test]
+    fn huf3_empty_tiny_and_option_edge_streams() {
+        let blob = compress_u16_framed(&[], 16, None, &EntropyOptions::default());
+        assert_eq!(decompress_u16(&blob).unwrap(), Vec::<u16>::new());
+        let syms = vec![7u16; 3];
+        let blob = compress_u16_framed(&syms, 16, None, &EntropyOptions::default());
+        assert_eq!(decompress_u16(&blob).unwrap(), syms);
+        // gap arrays off, local tables off: plain chunked layout under HUF3
+        let syms = skewed_codes(CHUNK_SYMS + 50, 49);
+        let opts = EntropyOptions { gap_interval: 0, per_chunk_tables: false };
+        let blob = compress_u16_framed(&syms, 1024, None, &opts);
+        assert_eq!(decompress_u16(&blob).unwrap(), syms);
+        let info = inspect_payload(&blob).unwrap();
+        assert_eq!((info.local_tables, info.segments), (0, 2));
+        // odd interval rounds up to even (pair alignment) and still decodes
+        let opts = EntropyOptions { gap_interval: 4097, per_chunk_tables: true };
+        let blob = compress_u16_framed(&syms, 1024, None, &opts);
+        assert_eq!(decompress_u16(&blob).unwrap(), syms);
+    }
+
+    #[test]
+    fn huf3_gap_interval_shares_the_interleave_floor() {
+        // the gap segment size and the interleaved-histogram floor are the
+        // same measured tipping point — pin the tie so one cannot drift
+        // from the other silently
+        assert_eq!(GAP_INTERVAL_SYMS, UNROLL_HIST_MIN);
+        // boundary equivalence: exactly at the shared constant the two
+        // subsystems flip together — the histogram switches to the
+        // interleaved path and the chunk stops being splittable
+        for n in [UNROLL_HIST_MIN - 1, UNROLL_HIST_MIN, UNROLL_HIST_MIN + 1] {
+            let syms = skewed_codes(n, 51);
+            let mut reference = vec![0u64; 1024];
+            for &s in &syms {
+                reference[s as usize] += 1;
+            }
+            assert_eq!(histogram(&syms, 1024), reference, "histogram diverged at n={n}");
+            let blob = compress_u16_framed(&syms, 1024, None, &EntropyOptions::default());
+            let info = inspect_payload(&blob).unwrap();
+            let want_segs = if n > GAP_INTERVAL_SYMS { 2 } else { 1 };
+            assert_eq!(info.segments, want_segs, "gap split diverged at n={n}");
+            assert_eq!(decompress_u16(&blob).unwrap(), syms);
+        }
+    }
+
+    #[test]
+    fn huf3_gap_array_corruption_always_rejected() {
+        let syms = skewed_codes(CHUNK_SYMS, 53);
+        let blob = compress_u16_framed(&syms, 1024, None, &EntropyOptions::default());
+        let h = parse_huf3_header(&blob).unwrap();
+        assert_eq!(h.entries.len(), 1);
+        let gap_lo = h.payload_start + h.entries[0].table_len;
+        let gap_hi = gap_lo + h.entries[0].gap_len;
+        assert!(h.entries[0].gap_len >= 5, "fixture chunk lost its gap array");
+        // every byte of the side index is under the CRC (or is the CRC):
+        // any flip must be rejected, never panic, never mis-decode
+        for at in gap_lo..gap_hi {
+            let mut bad = blob.clone();
+            bad[at] ^= 0xA5;
+            assert!(decompress_u16(&bad).is_err(), "gap-blob flip at {at} accepted");
+        }
+    }
+
+    #[test]
+    fn huf3_corruption_sweep_over_header_never_panics() {
+        // same contract as the HUF2 sweep: flips over the header + entry
+        // table must error or keep the symbol count (content integrity is
+        // the container CRC's job, one layer up)
+        let syms = nonstationary_codes(2 * CHUNK_SYMS + 500, 55);
+        let blob = compress_u16_framed(&syms, 1024, None, &EntropyOptions::default());
+        let header_end = parse_huf3_header(&blob).unwrap().payload_start;
+        for at in 0..header_end {
+            let mut bad = blob.clone();
+            bad[at] ^= 0xA5;
+            match decompress_u16(&bad) {
+                Err(_) => {}
+                Ok(out) => assert_eq!(
+                    out.len(),
+                    syms.len(),
+                    "flip at {at} silently changed the symbol count"
+                ),
+            }
+        }
+        for cut in [0, 2, 5, header_end - 1, header_end, blob.len() / 2, blob.len() - 1] {
+            assert!(decompress_u16(&blob[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_framed_matches_input() {
+        check("huffman-huf3-roundtrip", 40, |g| {
+            let n = g.len() * 50;
+            let alphabet = *g.choose(&[2usize, 17, 256, 1024]);
+            let syms: Vec<u16> = (0..n)
+                .map(|_| {
+                    let u = g.rng.next_f32();
+                    ((u * u * (alphabet as f32 - 1.0)) as u16).min(alphabet as u16 - 1)
+                })
+                .collect();
+            let gap = *g.choose(&[0usize, 2, 64, GAP_INTERVAL_SYMS]);
+            let per_chunk_tables = g.rng.bounded(2) == 0;
+            let opts = EntropyOptions { gap_interval: gap, per_chunk_tables };
+            let blob = compress_u16_framed(&syms, alphabet, None, &opts);
+            let back = decompress_u16(&blob).map_err(|e| e.to_string())?;
+            if back == syms {
+                Ok(())
+            } else {
+                Err("framed roundtrip mismatch".into())
+            }
+        });
     }
 }

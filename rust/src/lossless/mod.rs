@@ -8,8 +8,18 @@
 //! expands input by more than the 6-byte header.
 //!
 //! Container: `tag u8 | uvarint raw_len | payload`.
+//!
+//! Since entropy engine v2 the Huffman pass over a **large** LZSS token
+//! stream (≥ [`FRAMED_TOKENS_MIN`] bytes) uses the chunk-framed HUF3 coder
+//! under its own tag, so the big side-streams of the container (outlier
+//! positions/values, pad scalars) encode and decode on the same
+//! chunk/segment-parallel path as the CODES section instead of one
+//! bit-serial stream. Small streams keep the legacy unframed format
+//! byte-for-byte; both tags decode everywhere, so every blob ever written
+//! stays readable.
 
 use crate::bitio::{get_uvarint, put_uvarint};
+use crate::coordinator::pool::ThreadPool;
 use crate::error::{Result, VszError};
 use crate::huffman;
 
@@ -17,6 +27,14 @@ const TAG_STORE: u8 = 0;
 const TAG_RLE: u8 = 1;
 const TAG_LZSS: u8 = 2;
 const TAG_LZSS_HUFF: u8 = 3;
+/// LZSS tokens entropy-coded with the framed HUF3 coder (parallel path).
+const TAG_LZSS_HUF2: u8 = 4;
+
+/// Token-stream byte floor above which the Huffman pass over the LZSS
+/// tokens switches from the legacy unframed coder to the framed one: one
+/// full Huffman chunk — below that the framing could not split anything
+/// and would only pay header bytes.
+pub const FRAMED_TOKENS_MIN: usize = huffman::CHUNK_SYMS;
 
 const MIN_MATCH: usize = 4;
 const MAX_MATCH: usize = 258;
@@ -168,13 +186,28 @@ fn rle_decode(data: &[u8], raw_len: usize) -> Result<Vec<u8>> {
     Ok(out)
 }
 
-fn huff_bytes(data: &[u8]) -> Vec<u8> {
-    let syms: Vec<u16> = data.iter().map(|&b| b as u16).collect();
-    huffman::compress_u16(&syms, 256)
+/// Entropy-code the LZSS token bytes: framed HUF3 above
+/// [`FRAMED_TOKENS_MIN`] (parallel encode on `pool`, parallel decode later),
+/// legacy unframed below. The cut is a pure function of the token length,
+/// so the chosen bytes never depend on the pool width.
+fn huff_tokens(tokens: &[u8], pool: Option<&ThreadPool>) -> (u8, Vec<u8>) {
+    let syms: Vec<u16> = tokens.iter().map(|&b| b as u16).collect();
+    if tokens.len() >= FRAMED_TOKENS_MIN {
+        let opts = huffman::EntropyOptions::default();
+        (TAG_LZSS_HUF2, huffman::compress_u16_framed(&syms, 256, pool, &opts))
+    } else {
+        (TAG_LZSS_HUFF, huffman::compress_u16(&syms, 256))
+    }
 }
 
-fn unhuff_bytes(data: &[u8]) -> Result<Vec<u8>> {
-    Ok(huffman::decompress_u16(data)?.into_iter().map(|s| s as u8).collect())
+fn unhuff_bytes(data: &[u8], pool: Option<&ThreadPool>) -> Result<Vec<u8>> {
+    Ok(huffman::decompress_u16_pooled(data, pool)?.into_iter().map(|s| s as u8).collect())
+}
+
+/// Does this blob carry a framed (chunk/segment-parallel) token stream —
+/// i.e. would [`decompress_pooled`] actually fan out on a pool?
+pub fn is_framed(blob: &[u8]) -> bool {
+    blob.first() == Some(&TAG_LZSS_HUF2)
 }
 
 /// Compress `data`, choosing the smallest of {store, rle, lzss, lzss+huff}.
@@ -184,6 +217,13 @@ fn unhuff_bytes(data: &[u8]) -> Result<Vec<u8>> {
 /// Ties resolve exactly as the old candidate ordering did: store, then
 /// rle, then lzss+huff, then lzss.
 pub fn compress(data: &[u8]) -> Vec<u8> {
+    compress_pooled(data, None)
+}
+
+/// [`compress`] with the Huffman pass over a large token stream encoded
+/// concurrently on `pool`. Output bytes are identical for every pool width
+/// (including `None`).
+pub fn compress_pooled(data: &[u8], pool: Option<&ThreadPool>) -> Vec<u8> {
     let mut best: Option<(u8, Vec<u8>)> = None;
     let mut best_len = data.len(); // the implicit STORE candidate
     let rle = rle_encode(data);
@@ -193,9 +233,9 @@ pub fn compress(data: &[u8]) -> Vec<u8> {
     }
     if data.len() >= MIN_MATCH {
         let tokens = lzss_tokens(data);
-        let hufftok = huff_bytes(&tokens);
+        let (htag, hufftok) = huff_tokens(&tokens, pool);
         if hufftok.len() < tokens.len() && hufftok.len() < best_len {
-            best = Some((TAG_LZSS_HUFF, hufftok));
+            best = Some((htag, hufftok));
         } else if tokens.len() < best_len {
             best = Some((TAG_LZSS, tokens));
         }
@@ -210,6 +250,12 @@ pub fn compress(data: &[u8]) -> Vec<u8> {
 
 /// Inverse of [`compress`].
 pub fn decompress(blob: &[u8]) -> Result<Vec<u8>> {
+    decompress_pooled(blob, None)
+}
+
+/// [`decompress`] with framed token streams decoded concurrently on
+/// `pool` (all other tags are serial by nature and ignore it).
+pub fn decompress_pooled(blob: &[u8], pool: Option<&ThreadPool>) -> Result<Vec<u8>> {
     if blob.is_empty() {
         return Err(VszError::format("lossless: empty blob"));
     }
@@ -227,8 +273,8 @@ pub fn decompress(blob: &[u8]) -> Result<Vec<u8>> {
         }
         TAG_RLE => rle_decode(payload, raw_len),
         TAG_LZSS => lzss_expand(payload, raw_len),
-        TAG_LZSS_HUFF => {
-            let tokens = unhuff_bytes(payload)?;
+        TAG_LZSS_HUFF | TAG_LZSS_HUF2 => {
+            let tokens = unhuff_bytes(payload, pool)?;
             lzss_expand(&tokens, raw_len)
         }
         _ => Err(VszError::format(format!("lossless: unknown tag {tag}"))),
@@ -310,6 +356,49 @@ mod tests {
         assert!(decompress(&[]).is_err());
         // truncation
         assert!(decompress(&blob[..blob.len().saturating_sub(3)]).is_err());
+    }
+
+    #[test]
+    fn huf3_framed_side_stream_roundtrips_and_scales() {
+        // big run-free stream of ~6-bit-entropy bytes: RLE expands (every
+        // run has length ~1) and LZSS stays literal-heavy, so the token
+        // stream dwarfs FRAMED_TOKENS_MIN while the Huffman pass (~6 bits
+        // per token byte) beats the store candidate outright — the huff
+        // candidate must carry the framed tag and decode identically on
+        // any pool width
+        let mut rng = Pcg32::seeded(61);
+        let data: Vec<u8> = (0..600_000).map(|_| rng.bounded(64) as u8).collect();
+        let blob = compress(&data);
+        assert!(is_framed(&blob), "large token stream did not take the framed path");
+        assert_eq!(decompress(&blob).unwrap(), data);
+        for nthreads in [2usize, 7] {
+            let pool = ThreadPool::new(nthreads);
+            // decode fans out over the pool, output identical
+            assert_eq!(decompress_pooled(&blob, Some(&pool)).unwrap(), data);
+            // encode over the pool is byte-identical
+            assert_eq!(compress_pooled(&data, Some(&pool)), blob);
+        }
+    }
+
+    #[test]
+    fn huf3_small_streams_keep_the_legacy_unframed_bytes() {
+        // below the cut nothing may change: the pre-v2 encoder's exact
+        // bytes (legacy unframed huff tag) must still come out. 20 KB of
+        // run-free 4-bit-entropy bytes keeps the token stream well under
+        // FRAMED_TOKENS_MIN yet big enough that the Huffman pass clearly
+        // beats both the raw tokens and the store candidate.
+        let mut rng = Pcg32::seeded(62);
+        let data: Vec<u8> = (0..20_000).map(|_| rng.bounded(16) as u8).collect();
+        let blob = compress(&data);
+        assert_eq!(blob[0], TAG_LZSS_HUFF, "small stream left the legacy format");
+        assert!(!is_framed(&blob));
+        // and a hand-built legacy blob decodes through the same entry point
+        let tokens = lzss_tokens(&data);
+        let syms: Vec<u16> = tokens.iter().map(|&b| b as u16).collect();
+        let mut legacy = vec![TAG_LZSS_HUFF];
+        put_uvarint(&mut legacy, data.len() as u64);
+        legacy.extend_from_slice(&huffman::compress_u16(&syms, 256));
+        assert_eq!(decompress(&legacy).unwrap(), data);
     }
 
     #[test]

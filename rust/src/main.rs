@@ -66,7 +66,9 @@ COMMANDS
                         (chunk-parallel decode via the thread pool)
              inspect    --input F.vsz
                         (print the header and the per-chunk index of a
-                        VSZ3 container: offsets, sizes, rows, config)
+                        VSZ3 container: offsets, sizes, rows, config —
+                        plus each chunk's entropy framing: legacy/huf2/
+                        huf3, local-table count and gap-array segments)
              extract    --input F.vsz --out F.f32 [--threads N]
                         (--chunk K | --rows LO:HI | --cols LO:HI |
                          --planes LO:HI)
@@ -327,6 +329,27 @@ fn cmd_stream(a: &Args) -> Result<()> {
                 vecsz::util::timer::mb_per_s(stats.n_elements * 4, stats.pq_seconds),
                 stats.n_outliers,
             );
+            if a.has("tune-chunks") {
+                // per-chunk tuning report, entropy side: how often the
+                // HUF3 local-table size gate actually paid off, and how
+                // many gap-array segments decode can fan out over
+                let fin = std::fs::File::open(&out)?;
+                let mut raw = vecsz::stream::StreamDecompressor::new(BufReader::new(fin))?;
+                let (mut locals, mut hchunks, mut segments) = (0usize, 0usize, 0usize);
+                while let Some((_, sections)) = raw.next_raw_chunk()? {
+                    let codes = sections.iter().find(|s| s.tag == vecsz::format::tag::CODES);
+                    let info = codes.map(|s| vecsz::huffman::inspect_payload(&s.payload));
+                    if let Some(Ok(info)) = info {
+                        locals += info.local_tables;
+                        hchunks += info.n_chunks;
+                        segments += info.segments;
+                    }
+                }
+                println!(
+                    "entropy: {locals}/{hchunks} Huffman chunks took a local code table, \
+                     {segments} gap-array decode segments"
+                );
+            }
             Ok(())
         }
         "decompress" => {
@@ -375,6 +398,31 @@ fn cmd_stream(a: &Args) -> Result<()> {
                     }
                 }
                 Err(e) => println!("no random-access index: {e}"),
+            }
+            // entropy framing per chunk: a header-only walk of each chunk's
+            // CODES payload (no decode) reporting the table mode — how many
+            // Huffman chunks carry their own code table — and the gap-array
+            // segment count the decoder can fan out over
+            let fin = std::fs::File::open(&input)?;
+            let mut raw = vecsz::stream::StreamDecompressor::new(BufReader::new(fin))?;
+            println!("entropy (CODES section):");
+            println!(
+                "{:>6} {:>8} {:>8} {:>12} {:>9} {:>10}",
+                "chunk", "framing", "hchunks", "local-tables", "segments", "symbols"
+            );
+            let mut k = 0usize;
+            while let Some((_, sections)) = raw.next_raw_chunk()? {
+                let codes = sections.iter().find(|s| s.tag == vecsz::format::tag::CODES);
+                match codes.map(|s| vecsz::huffman::inspect_payload(&s.payload)) {
+                    Some(Ok(info)) => println!(
+                        "{k:>6} {:>8} {:>8} {:>12} {:>9} {:>10}",
+                        info.framing, info.n_chunks, info.local_tables, info.segments,
+                        info.total_syms,
+                    ),
+                    Some(Err(e)) => println!("{k:>6} unreadable CODES payload: {e}"),
+                    None => println!("{k:>6} no CODES section"),
+                }
+                k += 1;
             }
             Ok(())
         }

@@ -1039,6 +1039,15 @@ impl<R: Read> StreamDecompressor<R> {
         }
     }
 
+    /// Read and validate the next chunk frame **without decoding its
+    /// payload**: the chunk's decode header and raw sections, or `None`
+    /// after the trailer. This is the introspection surface `vsz stream
+    /// inspect` uses to report per-chunk entropy framing (via
+    /// [`crate::huffman::inspect_payload`]) without paying for a decode.
+    pub fn next_raw_chunk(&mut self) -> Result<Option<(Header, Vec<Section>)>> {
+        self.next_frame()
+    }
+
     /// Decode the next chunk, or `None` after the trailer.
     pub fn next_chunk(&mut self) -> Result<Option<DecodedChunk>> {
         match self.next_frame()? {

@@ -1,0 +1,200 @@
+//! Committed-bytes backward-compatibility sweep for the entropy engine
+//! (ISSUE-10): the three payload formats ever written by `vecsz::huffman`
+//! — legacy unframed, HUF2 shared-table chunked, HUF3 framed (per-chunk
+//! tables + gap arrays) — must all decode bit-exactly through the one
+//! `decompress_u16` entry point, forever.
+//!
+//! The fixtures under `tests/fixtures/entropy/` are committed bytes, not
+//! regenerated at test time: a format change that silently breaks old
+//! containers cannot also silently rewrite the fixtures. They were
+//! produced (and independently decode-verified) by `generate.py` next to
+//! them, a bit-exact Python replica of the encoders; the
+//! [`reencoding_reproduces_the_committed_bytes`] test closes the loop by
+//! asserting today's Rust encoders still produce exactly these bytes.
+//!
+//! The fixture stream uses an inline integer-only LCG rather than the
+//! crate's `Pcg32` so that the replica needs no float semantics.
+
+use vecsz::bitio::get_uvarint;
+use vecsz::coordinator::pool::ThreadPool;
+use vecsz::huffman::{self, EntropyOptions, CHUNK_SYMS, GAP_INTERVAL_SYMS, HUF3_MAGIC};
+
+const LEGACY: &[u8] = include_bytes!("fixtures/entropy/legacy.bin");
+const HUF2: &[u8] = include_bytes!("fixtures/entropy/huf2.bin");
+const HUF3: &[u8] = include_bytes!("fixtures/entropy/huf3.bin");
+
+const ALPHABET: usize = 1024;
+
+/// The non-stationary fixture stream: three Huffman chunks, each
+/// concentrated on a different symbol neighborhood (so the HUF3 local
+///-table gate engages), the last one a partial chunk barely past one gap
+/// interval. Mirrored line for line by `fixture_stream()` in generate.py.
+fn fixture_stream() -> Vec<u16> {
+    let n = 2 * CHUNK_SYMS + 4321;
+    let mut state: u64 = 0x5EED_2026;
+    (0..n)
+        .map(|i| {
+            state = state
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let r = (state >> 33) as u32;
+            let center = [512u16, 200, 800][i / CHUNK_SYMS];
+            match r % 100 {
+                0..=79 => center,
+                80..=94 => center - 1 + (r / 100 % 3) as u16,
+                _ => center - 8 + (r / 1000 % 16) as u16,
+            }
+        })
+        .collect()
+}
+
+/// Walk a HUF3 header with the public primitives only and return, per
+/// chunk, the absolute byte range of its gap blob (empty when the chunk
+/// has none) plus the payload end. A deliberately independent re-parse:
+/// the corruption sweep must not trust the decoder under test to locate
+/// the bytes it is about to corrupt.
+fn huf3_gap_regions(blob: &[u8]) -> (Vec<std::ops::Range<usize>>, usize) {
+    assert!(blob.starts_with(&HUF3_MAGIC));
+    let body = &blob[HUF3_MAGIC.len()..];
+    let (_, mut pos) = huffman::read_lengths(body).unwrap();
+    let mut varint = |pos: &mut usize| {
+        let (v, n) = get_uvarint(&body[*pos..]).unwrap();
+        *pos += n;
+        v
+    };
+    let _chunk_syms = varint(&mut pos);
+    let _gap_interval = varint(&mut pos);
+    let n_chunks = varint(&mut pos) as usize;
+    // entry fields: flags u8, sym_count, bit_len, [table_len], [gap_len]
+    let mut entries = Vec::with_capacity(n_chunks);
+    for _ in 0..n_chunks {
+        let flags = body[pos];
+        pos += 1;
+        let _sym_count = varint(&mut pos);
+        let bit_len = varint(&mut pos);
+        let table_len = if flags & 1 != 0 { varint(&mut pos) as usize } else { 0 };
+        let gap_len = if flags & 2 != 0 { varint(&mut pos) as usize } else { 0 };
+        entries.push((table_len, gap_len, bit_len.div_ceil(8) as usize));
+    }
+    let mut off = HUF3_MAGIC.len() + pos;
+    let mut regions = Vec::with_capacity(n_chunks);
+    for (table_len, gap_len, stream_len) in entries {
+        let gap_lo = off + table_len;
+        regions.push(gap_lo..gap_lo + gap_len);
+        off = gap_lo + gap_len + stream_len;
+    }
+    (regions, off)
+}
+
+#[test]
+fn committed_payloads_decode_bit_exactly_through_one_entry_point() {
+    let want = fixture_stream();
+    for (name, blob) in [("legacy", LEGACY), ("huf2", HUF2), ("huf3", HUF3)] {
+        assert_eq!(
+            huffman::decompress_u16(blob).unwrap(),
+            want,
+            "{name} fixture diverged under the serial decode"
+        );
+        for nthreads in [1usize, 2, 7] {
+            let pool = ThreadPool::new(nthreads);
+            assert_eq!(
+                huffman::decompress_u16_pooled(blob, Some(&pool)).unwrap(),
+                want,
+                "{name} fixture diverged at {nthreads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn reencoding_reproduces_the_committed_bytes() {
+    let syms = fixture_stream();
+    assert_eq!(huffman::compress_u16(&syms, ALPHABET), LEGACY, "legacy encoder drifted");
+    assert_eq!(
+        huffman::compress_u16_chunked(&syms, ALPHABET, None),
+        HUF2,
+        "HUF2 encoder drifted"
+    );
+    let framed = huffman::compress_u16_framed(&syms, ALPHABET, None, &EntropyOptions::default());
+    assert_eq!(framed, HUF3, "HUF3 encoder (default options) drifted");
+    // and pooled encode stays byte-identical to the committed bytes too
+    let pool = ThreadPool::new(3);
+    assert_eq!(
+        huffman::compress_u16_framed(&syms, ALPHABET, Some(&pool), &EntropyOptions::default()),
+        HUF3,
+        "pooled HUF3 encode diverged from the committed bytes"
+    );
+}
+
+#[test]
+fn huf3_fixture_carries_local_tables_and_gap_arrays() {
+    let info = huffman::inspect_payload(HUF3).unwrap();
+    assert_eq!(info.framing, "huf3");
+    assert_eq!(info.n_chunks, 3);
+    assert_eq!(info.total_syms, (2 * CHUNK_SYMS + 4321) as u64);
+    // every chunk of the non-stationary stream beats the shared table
+    assert_eq!(info.local_tables, 3);
+    // two full chunks split at every gap interval, the 4321-symbol tail
+    // still splits once (4321 > GAP_INTERVAL_SYMS)
+    let want_segments = 2 * CHUNK_SYMS.div_ceil(GAP_INTERVAL_SYMS) + 2;
+    assert_eq!(info.segments, want_segments);
+    // the other fixtures classify as what they are
+    assert_eq!(huffman::inspect_payload(HUF2).unwrap().framing, "huf2");
+    assert_eq!(huffman::inspect_payload(LEGACY).unwrap().framing, "legacy");
+}
+
+#[test]
+fn gap_array_corruption_always_errors_never_panics_or_misdecodes() {
+    let (regions, payload_end) = huf3_gap_regions(HUF3);
+    assert_eq!(payload_end, HUF3.len(), "independent header walk lost sync");
+    assert_eq!(regions.len(), 3);
+    for (ci, r) in regions.iter().enumerate() {
+        assert!(r.len() >= 5, "chunk {ci} lost its gap array");
+        for at in r.clone() {
+            let mut bad = HUF3.to_vec();
+            bad[at] ^= 0xA5;
+            // serial and pooled alike: a flipped resync point (or its CRC)
+            // must be rejected before any segment decodes
+            assert!(
+                huffman::decompress_u16(&bad).is_err(),
+                "chunk {ci}: gap-blob flip at byte {at} accepted"
+            );
+            let pool = ThreadPool::new(2);
+            assert!(
+                huffman::decompress_u16_pooled(&bad, Some(&pool)).is_err(),
+                "chunk {ci}: gap-blob flip at byte {at} accepted (pooled)"
+            );
+        }
+    }
+}
+
+#[test]
+fn truncated_fixtures_error_cleanly() {
+    for (name, blob) in [("legacy", LEGACY), ("huf2", HUF2), ("huf3", HUF3)] {
+        for cut in [0usize, 1, 3, 4, 16, blob.len() / 4, blob.len() / 2, blob.len() - 1] {
+            assert!(
+                huffman::decompress_u16(&blob[..cut]).is_err(),
+                "{name} cut at {cut} accepted"
+            );
+        }
+    }
+}
+
+/// Rewrite the fixtures from the Rust encoders. Ignored: committed bytes
+/// must never move silently — run it on purpose
+/// (`cargo test --test entropy_compat regenerate -- --ignored`) after an
+/// intentional format revision, and update generate.py to match.
+#[test]
+#[ignore]
+fn regenerate_fixtures() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/entropy");
+    let syms = fixture_stream();
+    std::fs::write(dir.join("legacy.bin"), huffman::compress_u16(&syms, ALPHABET)).unwrap();
+    std::fs::write(dir.join("huf2.bin"), huffman::compress_u16_chunked(&syms, ALPHABET, None))
+        .unwrap();
+    std::fs::write(
+        dir.join("huf3.bin"),
+        huffman::compress_u16_framed(&syms, ALPHABET, None, &EntropyOptions::default()),
+    )
+    .unwrap();
+}

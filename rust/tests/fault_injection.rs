@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 use vecsz::compressor::{Config, EbMode};
 use vecsz::data::Field;
 use vecsz::failpoint;
+use vecsz::huffman;
 use vecsz::server::{is_busy, Client, ServeConfig, Server};
 use vecsz::stream::{self, Dataset, Region, StreamDecompressor};
 use vecsz::util::prng::Pcg32;
@@ -96,9 +97,14 @@ fn killed_compress_resumes_to_byte_identical_container() {
     let _ = std::fs::remove_file(&out);
 
     // the CI matrix can swap in any crash point; default: panic (simulated
-    // kill) while encoding the third chunk of eight
+    // kill) while encoding the third chunk of eight. Decode-side sites
+    // (e.g. `huffman_decode`, hit by the HUF3 gap-array segment loop)
+    // cannot abort a compress — those entries instead abort a
+    // `vsz stream decompress` of a cleanly-written container, which must
+    // then succeed once the fault is lifted.
     let fp = std::env::var("VECSZ_FAILPOINTS_MATRIX")
         .unwrap_or_else(|_| "chunk_encode:3=panic".into());
+    let decode_site = fp.starts_with("huffman_decode") || fp.starts_with("chunk_decode");
     let base_args = |out: &std::path::Path| {
         vec![
             "stream".to_string(),
@@ -115,6 +121,47 @@ fn killed_compress_resumes_to_byte_identical_container() {
             "8".into(),
         ]
     };
+
+    if decode_site {
+        // decode-site leg: compress cleanly, prove the failpoint aborts a
+        // stream decompress, then that the same container decodes once the
+        // fault is gone and the round-trip respects the bound
+        let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+            .args(base_args(&out))
+            .env_remove("VECSZ_FAILPOINTS")
+            .status()
+            .expect("spawn vsz");
+        assert!(status.success(), "clean compress must succeed for a decode-site entry");
+        let raw = dir.join("kr.out.f32");
+        let dec_args = [
+            "stream",
+            "decompress",
+            "--input",
+            out.to_str().unwrap(),
+            "--out",
+            raw.to_str().unwrap(),
+        ];
+        let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+            .args(dec_args)
+            .env("VECSZ_FAILPOINTS", &fp)
+            .status()
+            .expect("spawn vsz decompress");
+        assert!(!status.success(), "failpoint '{fp}' should have aborted the decompress");
+        let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
+            .args(dec_args)
+            .env_remove("VECSZ_FAILPOINTS")
+            .status()
+            .expect("spawn vsz decompress retry");
+        assert!(status.success(), "decompress must succeed once the fault is gone");
+        let decoded = std::fs::read(&raw).unwrap();
+        assert_eq!(decoded.len(), field.data.len() * 4);
+        for (chunk, b) in decoded.chunks_exact(4).zip(field.data.iter()) {
+            let a = f32::from_le_bytes(chunk.try_into().unwrap());
+            assert!((a as f64 - *b as f64).abs() <= 1.0001e-3, "decode breaks the bound");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        return;
+    }
 
     // 1. the run dies at the injected fault, leaving a partial container
     let status = Command::new(env!("CARGO_BIN_EXE_vsz"))
@@ -346,6 +393,29 @@ fn failed_cold_read_leaves_no_resident_slab_and_retries_clean() {
     assert_eq!(ds.read(Region::All).unwrap(), reference.data);
     assert!(ds.cache().resident_chunks() > 0);
     assert_eq!(ds.cache_stats().repaired_reads, 0, "no parity layer, nothing to repair");
+}
+
+#[test]
+fn huffman_decode_failpoint_aborts_gap_array_segments_then_clears() {
+    let _g = fp_lock();
+    failpoint::set_config_for_tests("");
+    // a stream long enough to carry a gap array: the HUF3 decoder hits the
+    // `huffman_decode` site once per segment, pooled or serial
+    let mut rng = Pcg32::seeded(0x9D);
+    let syms: Vec<u16> = (0..huffman::CHUNK_SYMS + 999)
+        .map(|_| if rng.next_f32() < 0.9 { 7 } else { rng.bounded(256) as u16 })
+        .collect();
+    let opts = huffman::EntropyOptions::default();
+    let blob = huffman::compress_u16_framed(&syms, 256, None, &opts);
+    let info = huffman::inspect_payload(&blob).unwrap();
+    assert_eq!(info.framing, "huf3");
+    assert!(info.segments > 1, "workload must exercise the gap-array split");
+
+    failpoint::set_config_for_tests("huffman_decode:1=err");
+    let err = huffman::decompress_u16_pooled(&blob, None).unwrap_err();
+    assert!(err.to_string().contains("failpoint"), "unexpected error: {err}");
+    failpoint::set_config_for_tests("");
+    assert_eq!(huffman::decompress_u16_pooled(&blob, None).unwrap(), syms);
 }
 
 #[test]

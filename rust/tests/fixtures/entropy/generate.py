@@ -1,0 +1,477 @@
+#!/usr/bin/env python3
+"""Regenerate the committed entropy-compat fixtures.
+
+Bit-exact Python replica of the three payload formats written by
+`rust/src/huffman` (legacy unframed, HUF2 chunked, HUF3 framed), used to
+produce `legacy.bin` / `huf2.bin` / `huf3.bin` from the deterministic
+fixture stream defined in `rust/tests/entropy_compat.rs`. The Rust test
+asserts the committed bytes equal the Rust encoders' output AND decode to
+the fixture stream, so any honest drift between this replica and the Rust
+implementation fails CI loudly.
+
+The replica mirrors, exactly:
+  * the LCG fixture stream (same multiplier/increment/seed as the test),
+  * heap Huffman code lengths (heapq over (weight, node) tuples pops in
+    the same order as Rust's BinaryHeap<Reverse<(u64, usize)>>; internal
+    node ids count up from `alphabet` in merge order),
+  * canonical code assignment + LSB-first bit packing,
+  * the sparse (delta-symbol, length) table header and LEB128 varints,
+  * HUF2/HUF3 framing incl. the per-chunk local-table size gate
+    (LOCAL_TABLE_MIN_GAIN) and CRC32-guarded gap arrays.
+
+The generator refuses to write fixtures whose code depths exceed MAX_BITS:
+the Rust Kraft-repair path is NOT replicated here, and the fixture stream
+is chosen so it never runs.
+
+Every fixture is decoded back and compared against the stream before
+anything is written.
+"""
+
+import struct
+import zlib
+from heapq import heappush, heappop
+from pathlib import Path
+
+MAX_BITS = 15
+CHUNK_SYMS = 1 << 16
+GAP_INTERVAL = 4096
+LOCAL_TABLE_MIN_GAIN = 64
+ALPHABET = 1024
+HUF2_MAGIC = bytes([0xF5, ord("H"), ord("F"), ord("2")])
+HUF3_MAGIC = bytes([0xF7, ord("H"), ord("F"), ord("3")])
+MASK64 = (1 << 64) - 1
+
+
+def fixture_stream():
+    """Mirror of `fixture_stream()` in entropy_compat.rs (integer-only)."""
+    n = 2 * CHUNK_SYMS + 4321
+    state = 0x5EED2026
+    out = []
+    for i in range(n):
+        state = (state * 6364136223846793005 + 1442695040888963407) & MASK64
+        r = state >> 33
+        center = (512, 200, 800)[i // CHUNK_SYMS]
+        m = r % 100
+        if m <= 79:
+            sym = center
+        elif m <= 94:
+            sym = center - 1 + (r // 100) % 3
+        else:
+            sym = center - 8 + (r // 1000) % 16
+        out.append(sym)
+    return out
+
+
+def put_uvarint(out, v):
+    while v >= 0x80:
+        out.append((v & 0x7F) | 0x80)
+        v >>= 7
+    out.append(v)
+
+
+def histogram(syms):
+    h = [0] * ALPHABET
+    for s in syms:
+        h[s] += 1
+    return h
+
+
+def code_lengths(freqs):
+    n = len(freqs)
+    lens = [0] * n
+    present = [i for i in range(n) if freqs[i] > 0]
+    if not present:
+        return lens
+    if len(present) == 1:
+        lens[present[0]] = 1
+        return lens
+    heap = []
+    parent = {}
+    next_internal = n
+    for i in present:
+        heappush(heap, (freqs[i], i))
+    while len(heap) > 1:
+        wa, a = heappop(heap)
+        wb, b = heappop(heap)
+        p = next_internal
+        next_internal += 1
+        parent[a] = p
+        parent[b] = p
+        heappush(heap, (wa + wb, p))
+    root = heap[0][1]
+    for i in present:
+        d, node = 0, i
+        while node != root:
+            node = parent[node]
+            d += 1
+        lens[i] = d
+    assert all(lens[i] <= MAX_BITS for i in present), (
+        "fixture stream needs the Kraft repair path, which this replica "
+        "does not implement — pick a tamer distribution"
+    )
+    return lens
+
+
+def canonical_codes(lens):
+    max_len = max(lens) if lens else 0
+    bl_count = [0] * (max_len + 1)
+    for l in lens:
+        if l > 0:
+            bl_count[l] += 1
+    next_code = [0] * (max_len + 2)
+    code = 0
+    for bits in range(1, max_len + 1):
+        code = (code + bl_count[bits - 1]) << 1
+        next_code[bits] = code
+    out = [(0, 0)] * len(lens)
+    for bits in range(1, max_len + 1):
+        for sym, l in enumerate(lens):
+            if l == bits:
+                out[sym] = (next_code[bits], l)
+                next_code[bits] += 1
+    return out
+
+
+def reverse_bits(v, n):
+    r = 0
+    for _ in range(n):
+        r = (r << 1) | (v & 1)
+        v >>= 1
+    return r
+
+
+class Enc:
+    """symbol -> (LSB-first reversed code, length), plus cost accounting."""
+
+    def __init__(self, lens):
+        self.lens = lens
+        self.table = [
+            (reverse_bits(c, l), l) if l else (0, 0) for c, l in canonical_codes(lens)
+        ]
+
+    def cost_bits(self, hist):
+        return sum(f * self.table[s][1] for s, f in enumerate(hist))
+
+
+class BitW:
+    """LSB-first bit writer (semantically identical to bitio::BitWriter)."""
+
+    def __init__(self):
+        self.out = bytearray()
+        self.acc = 0
+        self.nbits = 0
+
+    def put(self, v, n):
+        self.acc |= v << self.nbits
+        self.nbits += n
+        while self.nbits >= 8:
+            self.out.append(self.acc & 0xFF)
+            self.acc >>= 8
+            self.nbits -= 8
+
+    def bit_len(self):
+        return len(self.out) * 8 + self.nbits
+
+    def finish(self):
+        if self.nbits:
+            self.out.append(self.acc & 0xFF)
+            self.acc = 0
+            self.nbits = 0
+        return bytes(self.out)
+
+
+def encode_chunk_gaps(enc, syms, gap_interval):
+    """Returns (stream bytes, exact bit length, gap offsets)."""
+    w = BitW()
+    gaps = []
+    for lo in range(0, len(syms), gap_interval) if gap_interval else [0]:
+        if lo > 0:
+            gaps.append(w.bit_len())
+        for s in syms[lo : lo + gap_interval] if gap_interval else syms:
+            code, l = enc.table[s]
+            assert l > 0
+            w.put(code, l)
+    bits = w.bit_len()
+    return w.finish(), bits, gaps
+
+
+def write_lengths(out, lens):
+    pairs = [(s, l) for s, l in enumerate(lens) if l > 0]
+    put_uvarint(out, len(lens))
+    put_uvarint(out, len(pairs))
+    prev = 0
+    for s, l in pairs:
+        put_uvarint(out, s - prev)
+        out.append(l)
+        prev = s
+
+
+def compress_legacy(syms):
+    lens = code_lengths(histogram(syms))
+    enc = Enc(lens)
+    out = bytearray()
+    write_lengths(out, lens)
+    put_uvarint(out, len(syms))
+    stream, _, _ = encode_chunk_gaps(enc, syms, 0)
+    out += stream
+    return bytes(out)
+
+
+def compress_huf2(syms):
+    lens = code_lengths(histogram(syms))
+    enc = Enc(lens)
+    chunks = [
+        encode_chunk_gaps(enc, syms[lo : lo + CHUNK_SYMS], 0)
+        for lo in range(0, len(syms), CHUNK_SYMS)
+    ]
+    out = bytearray(HUF2_MAGIC)
+    write_lengths(out, lens)
+    put_uvarint(out, CHUNK_SYMS)
+    put_uvarint(out, len(chunks))
+    for i, (_, bits, _) in enumerate(chunks):
+        lo = i * CHUNK_SYMS
+        put_uvarint(out, min(lo + CHUNK_SYMS, len(syms)) - lo)
+        put_uvarint(out, bits)
+    for stream, _, _ in chunks:
+        out += stream
+    return bytes(out)
+
+
+def compress_huf3(syms):
+    shared_lens = code_lengths(histogram(syms))
+    shared = Enc(shared_lens)
+    framed = []  # (flags, table bytes, gap bytes, stream bytes, bits, count)
+    for lo in range(0, len(syms), CHUNK_SYMS):
+        chunk = syms[lo : lo + CHUNK_SYMS]
+        ch_hist = histogram(chunk)
+        flags, table, enc = 0, b"", shared
+        # the size gate, byte for byte as in compress_u16_framed
+        shared_bytes = -(-shared.cost_bits(ch_hist) // 8)
+        local_lens = code_lengths(ch_hist)
+        hdr = bytearray()
+        write_lengths(hdr, local_lens)
+        local = Enc(local_lens)
+        local_bytes = -(-local.cost_bits(ch_hist) // 8) + len(hdr)
+        if local_bytes + LOCAL_TABLE_MIN_GAIN <= shared_bytes:
+            flags |= 1
+            table = bytes(hdr)
+            enc = local
+        gap = GAP_INTERVAL if len(chunk) > GAP_INTERVAL else 0
+        stream, bits, gaps = encode_chunk_gaps(enc, chunk, gap)
+        gapbytes = b""
+        if gaps:
+            flags |= 2
+            blob = bytearray()
+            put_uvarint(blob, len(gaps))
+            prev = 0
+            for off in gaps:
+                put_uvarint(blob, off - prev)
+                prev = off
+            gapbytes = struct.pack("<I", zlib.crc32(bytes(blob))) + bytes(blob)
+        framed.append((flags, table, gapbytes, stream, bits, len(chunk)))
+    out = bytearray(HUF3_MAGIC)
+    write_lengths(out, shared_lens)
+    put_uvarint(out, CHUNK_SYMS)
+    put_uvarint(out, GAP_INTERVAL)
+    put_uvarint(out, len(framed))
+    for flags, table, gapbytes, _, bits, count in framed:
+        out.append(flags)
+        put_uvarint(out, count)
+        put_uvarint(out, bits)
+        if flags & 1:
+            put_uvarint(out, len(table))
+        if flags & 2:
+            put_uvarint(out, len(gapbytes))
+    for flags, table, gapbytes, stream, _, _ in framed:
+        out += table + gapbytes + stream
+    return bytes(out)
+
+
+# ---------------------------------------------------------------- verify
+
+
+class BitR:
+    def __init__(self, data, skip_bits=0):
+        self.data = data
+        self.pos = 0
+        self.acc = 0
+        self.nbits = 0
+        if skip_bits:
+            assert self.get(skip_bits) is not None
+
+    def get(self, n):
+        while self.nbits < n and self.pos < len(self.data):
+            self.acc |= self.data[self.pos] << self.nbits
+            self.pos += 1
+            self.nbits += 8
+        if self.nbits < n:
+            return None
+        v = self.acc & ((1 << n) - 1)
+        self.acc >>= n
+        self.nbits -= n
+        return v
+
+    def consumed_bits(self):
+        return self.pos * 8 - self.nbits
+
+
+def decode_stream(lens, data, count, skip_bits=0):
+    """Slow reference decode; returns (symbols, bits consumed past skip)."""
+    by_rev = {
+        (reverse_bits(c, l), l): s
+        for s, (c, l) in enumerate(canonical_codes(lens))
+        if l > 0
+    }
+    r = BitR(data, skip_bits)
+    out = []
+    while len(out) < count:
+        code, ok = 0, False
+        for l in range(1, MAX_BITS + 1):
+            code |= r.get(1) << (l - 1)
+            if (code, l) in by_rev:
+                out.append(by_rev[(code, l)])
+                ok = True
+                break
+        assert ok, "reference decode lost sync"
+    return out, r.consumed_bits() - skip_bits
+
+
+def get_uvarint_at(data, pos):
+    v, shift = 0, 0
+    while True:
+        b = data[pos]
+        pos += 1
+        v |= (b & 0x7F) << shift
+        if not b & 0x80:
+            return v, pos
+        shift += 7
+
+
+def read_lengths_at(data, pos):
+    alphabet, pos = get_uvarint_at(data, pos)
+    npairs, pos = get_uvarint_at(data, pos)
+    lens, sym = [0] * alphabet, 0
+    for i in range(npairs):
+        delta, pos = get_uvarint_at(data, pos)
+        sym = delta if i == 0 else sym + delta
+        lens[sym] = data[pos]
+        pos += 1
+    return lens, pos
+
+
+def verify_legacy(blob, syms):
+    lens, pos = read_lengths_at(blob, 0)
+    count, pos = get_uvarint_at(blob, pos)
+    assert count == len(syms)
+    out, _ = decode_stream(lens, blob[pos:], count)
+    assert out == syms, "legacy fixture does not decode to the stream"
+
+
+def verify_huf2(blob, syms):
+    assert blob[:4] == HUF2_MAGIC
+    lens, pos = read_lengths_at(blob, 4)
+    chunk_syms, pos = get_uvarint_at(blob, pos)
+    n_chunks, pos = get_uvarint_at(blob, pos)
+    assert chunk_syms == CHUNK_SYMS
+    table = []
+    for _ in range(n_chunks):
+        count, pos = get_uvarint_at(blob, pos)
+        bits, pos = get_uvarint_at(blob, pos)
+        table.append((count, bits))
+    out, off = [], pos
+    for count, bits in table:
+        nbytes = -(-bits // 8)
+        part, used = decode_stream(lens, blob[off : off + nbytes], count)
+        assert used == bits, "chunk bit length mismatch"
+        out += part
+        off += nbytes
+    assert off == len(blob) and out == syms, "huf2 fixture does not decode"
+
+
+def verify_huf3(blob, syms):
+    assert blob[:4] == HUF3_MAGIC
+    shared_lens, pos = read_lengths_at(blob, 4)
+    chunk_syms, pos = get_uvarint_at(blob, pos)
+    gap_interval, pos = get_uvarint_at(blob, pos)
+    n_chunks, pos = get_uvarint_at(blob, pos)
+    assert (chunk_syms, gap_interval) == (CHUNK_SYMS, GAP_INTERVAL)
+    entries = []
+    for _ in range(n_chunks):
+        flags = blob[pos]
+        pos += 1
+        count, pos = get_uvarint_at(blob, pos)
+        bits, pos = get_uvarint_at(blob, pos)
+        table_len = gap_len = 0
+        if flags & 1:
+            table_len, pos = get_uvarint_at(blob, pos)
+        if flags & 2:
+            gap_len, pos = get_uvarint_at(blob, pos)
+        entries.append((flags, count, bits, table_len, gap_len))
+    out, off = [], pos
+    local_tables = segments = 0
+    for flags, count, bits, table_len, gap_len in entries:
+        lens = shared_lens
+        if flags & 1:
+            local_tables += 1
+            lens, used = read_lengths_at(blob[off : off + table_len], 0)
+            assert used == table_len
+            off += table_len
+        bounds = [0]
+        if flags & 2:
+            gapblob = blob[off : off + gap_len]
+            off += gap_len
+            assert struct.unpack("<I", gapblob[:4])[0] == zlib.crc32(gapblob[4:])
+            n_points, gpos = get_uvarint_at(gapblob, 4)
+            assert n_points == -(-count // gap_interval) - 1
+            prev = 0
+            for _ in range(n_points):
+                delta, gpos = get_uvarint_at(gapblob, gpos)
+                prev += delta
+                bounds.append(prev)
+            assert gpos == len(gapblob)
+        bounds.append(bits)
+        nbytes = -(-bits // 8)
+        stream = blob[off : off + nbytes]
+        off += nbytes
+        seg_syms = gap_interval if len(bounds) > 2 else count
+        # decode every gap segment independently, as the parallel Rust
+        # decoder does, proving the resync points are genuine
+        for j in range(len(bounds) - 1):
+            seg_count = min(seg_syms, count - j * seg_syms)
+            span = bounds[j + 1] - bounds[j]
+            part, used = decode_stream(
+                lens,
+                stream[bounds[j] // 8 : -(-bounds[j + 1] // 8)],
+                seg_count,
+                bounds[j] % 8,
+            )
+            assert used == span, "segment bit span mismatch"
+            out += part
+            segments += 1
+    assert off == len(blob) and out == syms, "huf3 fixture does not decode"
+    assert local_tables >= 1, "local-table gate never engaged"
+    assert segments > n_chunks, "no chunk carried a gap array"
+    return local_tables, segments
+
+
+def main():
+    here = Path(__file__).resolve().parent
+    syms = fixture_stream()
+    legacy = compress_legacy(syms)
+    huf2 = compress_huf2(syms)
+    huf3 = compress_huf3(syms)
+    verify_legacy(legacy, syms)
+    verify_huf2(huf2, syms)
+    local_tables, segments = verify_huf3(huf3, syms)
+    (here / "legacy.bin").write_bytes(legacy)
+    (here / "huf2.bin").write_bytes(huf2)
+    (here / "huf3.bin").write_bytes(huf3)
+    print(
+        f"wrote legacy={len(legacy)}B huf2={len(huf2)}B huf3={len(huf3)}B "
+        f"(local_tables={local_tables}, segments={segments}, "
+        f"n={len(syms)} symbols)"
+    )
+
+
+if __name__ == "__main__":
+    main()
